@@ -1,0 +1,82 @@
+//! §4.2's critique, quantified: random gossip (Jin et al. / Blot et al.)
+//! vs GossipGraD's dissemination exchange.
+//!
+//!     cargo run --release --example gossip_imbalance
+//!
+//! Three measurements per topology:
+//! 1. per-step receive histogram (balanced ⇔ every rank receives exactly 1);
+//! 2. diffusion time of one rank's update to all ranks;
+//! 3. distinct direct partners over a training horizon (rotation's win).
+
+use gossipgrad::topology::{
+    diffusion_time, random::recv_histogram, Dissemination, RandomGossip,
+    Rotation, Topology,
+};
+use gossipgrad::util::bench::Table;
+use gossipgrad::util::ceil_log2;
+use std::collections::HashSet;
+
+fn main() {
+    let p = 64;
+    let steps = 200;
+
+    // --- 1. receive balance -------------------------------------------
+    let rnd = RandomGossip::new(p, 3);
+    let mut max_load = 0usize;
+    let mut starved = 0usize;
+    for step in 0..steps {
+        let h = recv_histogram(&rnd, step);
+        max_load = max_load.max(*h.iter().max().unwrap());
+        starved += h.iter().filter(|&&c| c == 0).count();
+    }
+    println!("random gossip, p={p}, {steps} steps:");
+    println!("  worst per-step receive load: {max_load} (balanced = 1)");
+    println!(
+        "  starved rank-steps (received nothing): {starved} ({:.1}%)",
+        100.0 * starved as f64 / (p * steps) as f64
+    );
+    println!("  dissemination: every step is a permutation — load 1, starvation 0 (checked by `cargo test prop_dissemination_balanced`)\n");
+
+    // --- 2. diffusion -------------------------------------------------
+    let dis = Dissemination::new(p);
+    let t_dis = diffusion_time(&dis, 0, 10 * p).unwrap();
+    // random gossip diffusion: measure empirically (expected O(log p),
+    // but with a tail)
+    let mut t_rnd_worst = 0usize;
+    for seed in 0..20u64 {
+        let r = RandomGossip::new(p, seed);
+        let t = diffusion_time(&r, 0, 10 * p).unwrap_or(10 * p);
+        t_rnd_worst = t_rnd_worst.max(t);
+    }
+    let mut t = Table::new(&["topology", "diffusion steps (p=64)", "bound"]);
+    t.row(&[
+        "dissemination".into(),
+        t_dis.to_string(),
+        format!("⌈log2 p⌉ = {}", ceil_log2(p)),
+    ]);
+    t.row(&[
+        "random (worst of 20 seeds)".into(),
+        t_rnd_worst.to_string(),
+        "O(log p) w.h.p., unbounded tail".into(),
+    ]);
+    t.print("indirect diffusion of one rank's update");
+
+    // --- 3. direct partner coverage (rotation, §4.5.1) -----------------
+    let horizon = 50 * ceil_log2(p);
+    let direct = |t: &dyn Topology| {
+        let mut s = HashSet::new();
+        for step in 0..horizon {
+            let e = t.exchange(0, step);
+            s.insert(e.send_to);
+            s.insert(e.recv_from);
+        }
+        s.len()
+    };
+    let plain = Dissemination::new(p);
+    let rot = Rotation::new(Dissemination::new(p), 9);
+    let mut t = Table::new(&["topology", &format!("direct partners of rank 0 in {horizon} steps")]);
+    t.row(&["dissemination (no rotation)".into(), direct(&plain).to_string()]);
+    t.row(&["dissemination + rotation".into(), direct(&rot).to_string()]);
+    t.print("partner rotation widens direct diffusion (§4.5.1)");
+    assert!(direct(&rot) > 3 * direct(&plain));
+}

@@ -1,0 +1,117 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* + meta.json.
+
+Run once via ``make artifacts``; Python never touches the training path.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (proto.id() <= INT_MAX); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model family m in {mlp, cnn, transformer} this emits:
+
+    artifacts/grad_{m}.hlo.txt        (params, x, y)            -> (grads, loss)
+    artifacts/train_step_{m}.hlo.txt  (params, mom, x, y, lr)   -> (p', m', loss)
+    artifacts/eval_{m}.hlo.txt        (params, x, y)            -> (loss, correct)
+    artifacts/update_{m}.hlo.txt      (params, mom, grads, lr)  -> (p', m')
+    artifacts/mix_{m}.hlo.txt         (a, b)                    -> ((a+b)/2,)
+    artifacts/init_{m}.f32            raw little-endian f32 initial params
+    artifacts/{m}.meta.json           shapes, layer table, artifact index
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower(fn, *specs):
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def write(path, text):
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def emit_model(m: M.Model, outdir: str):
+    n = m.spec.total
+    pv = jax.ShapeDtypeStruct((n,), jnp.float32)
+    xs = jax.ShapeDtypeStruct(m.x_shape, m.x_dtype)
+    ys = jax.ShapeDtypeStruct((m.labels_rows,), jnp.int32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+
+    print(f"[{m.name}] {n} params, batch {m.batch}, x{m.x_shape}")
+    write(f"{outdir}/grad_{m.name}.hlo.txt", lower(m.grad_fn(), pv, xs, ys))
+    write(
+        f"{outdir}/train_step_{m.name}.hlo.txt",
+        lower(m.train_step_fn(), pv, pv, xs, ys, lr),
+    )
+    write(f"{outdir}/eval_{m.name}.hlo.txt", lower(m.eval_fn(), pv, xs, ys))
+    write(
+        f"{outdir}/update_{m.name}.hlo.txt",
+        lower(M.update_fn, pv, pv, pv, lr),
+    )
+    write(f"{outdir}/mix_{m.name}.hlo.txt", lower(M.mix_fn, pv, pv))
+
+    init = m.spec.init(seed=0)
+    raw = struct.pack(f"<{n}f", *map(float, init))
+    with open(f"{outdir}/init_{m.name}.f32", "wb") as f:
+        f.write(raw)
+    print(f"  wrote {outdir}/init_{m.name}.f32 ({len(raw)} bytes)")
+
+    meta = {
+        "model": m.name,
+        "param_count": n,
+        "batch": m.batch,
+        "x_shape": list(m.x_shape),
+        "x_dtype": "i32" if m.x_dtype == jnp.int32 else "f32",
+        "labels_rows": m.labels_rows,
+        "classes": m.classes,
+        "momentum": M.MOMENTUM,
+        "layers": m.spec.layer_table(),
+        "artifacts": {
+            "grad": f"grad_{m.name}.hlo.txt",
+            "train_step": f"train_step_{m.name}.hlo.txt",
+            "eval": f"eval_{m.name}.hlo.txt",
+            "update": f"update_{m.name}.hlo.txt",
+            "mix": f"mix_{m.name}.hlo.txt",
+            "init": f"init_{m.name}.f32",
+        },
+    }
+    with open(f"{outdir}/{m.name}.meta.json", "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"  wrote {outdir}/{m.name}.meta.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--models",
+        default="mlp,cnn,transformer,transformer_small",
+        help="comma-separated",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for name in args.models.split(","):
+        emit_model(M.build_model(name.strip()), args.out)
+    print("AOT done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Pallas (L1) kernels for the GossipGraD reproduction.
+
+All kernels run with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); the BlockSpecs still encode the TPU HBM<->VMEM schedule —
+see DESIGN.md §Hardware-Adaptation and EXPERIMENTS.md §Perf for the
+analytic VMEM/MXU analysis.
+"""
+
+from .linear import linear, matmul
+from .mix import mix
+from .softmax_xent import softmax_xent
+from .update import sgd_momentum
+
+__all__ = ["linear", "matmul", "mix", "softmax_xent", "sgd_momentum"]

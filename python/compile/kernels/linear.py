@@ -1,0 +1,143 @@
+"""L1 Pallas kernel: tiled linear layer  y = act(x @ w + b).
+
+This is the compute hot-spot of every model in this repo (the paper's
+conv/FC layers reduce to matmuls here — CIFARNet convs are lowered via
+im2col in model.py, so *all* FLOPs flow through this kernel).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the output
+into (BM, BN) VMEM blocks and marches over the K dimension in BK chunks —
+the BlockSpec index maps express the HBM->VMEM schedule that a CUDA
+implementation would express with threadblocks + shared-memory staging.
+Default tiles are MXU-aligned (128x128 output, 512-deep K), giving a
+working set of (BM*BK + BK*BN + BM*BN) * 4B ~= 0.75 MB << 16 MB VMEM,
+leaving room for double buffering.
+
+The kernel is exposed through a jax.custom_vjp so models can be
+differentiated: the backward pass reuses the same tiled-matmul kernel for
+dx = g @ w^T and dw = x^T @ g (activation gradient fused into g first).
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers the same schedule to plain HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# MXU-aligned tiles for a real TPU lowering (see module docstring).
+TPU_BM, TPU_BN, TPU_BK = 128, 128, 512
+
+# Block-size budget for the auto policy below: keep each tile's working
+# set under ~16 MB (the VMEM envelope on TPUv4; also the point past which
+# CPU-interpret execution stops improving).
+BLOCK_BUDGET_FLOATS = 4 * 1024 * 1024
+
+# Interpret-mode grids lower to sequential HLO while-loops, so on the CPU
+# testbed FEWER, BIGGER tiles win (EXPERIMENTS.md §Perf: the CNN step
+# dropped ~20x moving from fixed 128x128x512 tiles to this policy).  Set
+# GOSSIPGRAD_TPU_TILES=1 when lowering for a real TPU to get the
+# MXU-aligned tiling instead.
+import os
+
+USE_TPU_TILES = os.environ.get("GOSSIPGRAD_TPU_TILES") == "1"
+
+
+def _auto_blocks(m, k, n):
+    """Pick (bm, bk, bn) minimizing grid steps under the block budget.
+
+    Strategy: never split k or n (they are small in every model here —
+    k,n <= 3*d_model); split m only as needed to fit the budget.
+    """
+    if USE_TPU_TILES:
+        return TPU_BM, TPU_BK, TPU_BN
+    bk, bn = _rup(k, 8), _rup(n, 8)
+    # floats held per tile: bm*bk + bk*bn + bm*bn
+    denom = max(bk + bn, 1)
+    bm_max = max((BLOCK_BUDGET_FLOATS - bk * bn) // denom, 8)
+    bm = min(_rup(m, 8), _rup(bm_max, 8))
+    return bm, bk, bn
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk):
+    """One (m, n) output tile; the k grid axis accumulates partial sums."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad2(a, bm, bn):
+    m, n = a.shape
+    pm = (-m) % bm
+    pn = (-n) % bn
+    if pm or pn:
+        a = jnp.pad(a, ((0, pm), (0, pn)))
+    return a
+
+
+def matmul(x, w, bm=None, bn=None, bk=None):
+    """Tiled Pallas matmul on arbitrary [m,k] @ [k,n] (zero-padded to tiles)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    abm, abk, abn = _auto_blocks(m, k, n)
+    bm, bk, bn = bm or abm, bk or abk, bn or abn
+    bm, bk, bn = min(bm, _rup(m, 8)), min(bk, _rup(k, 8)), min(bn, _rup(n, 8))
+    xp = _pad2(x, bm, bk)
+    wp = _pad2(w, bk, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _rup(v, q):
+    """Round v up to a multiple of q (so tiny dims still get a legal tile)."""
+    return ((v + q - 1) // q) * q
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear(x, w, b, activation="none"):
+    """act(x @ w + b) with Pallas matmul; differentiable via custom_vjp."""
+    pre = matmul(x, w) + b
+    return ref.activate_ref(pre, activation)
+
+
+def _linear_fwd(x, w, b, activation):
+    pre = matmul(x, w) + b
+    return ref.activate_ref(pre, activation), (x, w, pre)
+
+
+def _linear_bwd(activation, res, g):
+    x, w, pre = res
+    if activation == "relu":
+        g = g * (pre > 0.0).astype(g.dtype)
+    elif activation == "gelu":
+        g = g * ref.gelu_grad_ref(pre)
+    dx = matmul(g, w.T)
+    dw = matmul(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)

@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: GossipGraD pairwise model mixing.
+
+    w <- (w_local + w_remote) / 2
+
+This is the paper's §6 averaging step — after a dissemination exchange,
+each rank averages its flat parameter vector with its partner's.  The
+kernel is the AOT (artifacts/mix.hlo.txt) side of the mixing ablation;
+the Rust coordinator also has a native SIMD mixer (nativenet::mix) and
+benches/hotpath.rs compares the two.
+
+Memory-bound: 2 reads + 1 write per element.  Same blocking rationale as
+update.py (64 KiB streaming blocks, VPU-aligned).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4 * 1024 * 1024  # see update.py's block-size note (§Perf)
+
+
+def _mix_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = (a_ref[...] + b_ref[...]) * 0.5
+
+
+def mix(a, b, block=BLOCK):
+    """Elementwise (a + b) / 2 over flat f32 vectors of equal length."""
+    (n,) = a.shape
+    assert a.shape == b.shape
+    block = min(block, n)
+    pad = (-n) % block
+    if pad:
+        a = jnp.pad(a, (0, pad))
+        b = jnp.pad(b, (0, pad))
+    np_ = a.shape[0]
+    out = pl.pallas_call(
+        _mix_kernel,
+        grid=(np_ // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return out[:n]

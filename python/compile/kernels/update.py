@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: fused momentum-SGD parameter update.
+
+    v' = mu * v + g
+    p' = p - lr * v'
+
+Operates on the flat f32[N] parameter vector (the L2<->L3 contract keeps
+all model parameters as one flat vector; see DESIGN.md "Artifact
+contract").  Fusing the two updates into one kernel reads each of p/v/g
+exactly once and writes p'/v' once — the update is memory-bound, so this
+halves traffic vs. two separate elementwise passes.
+
+TPU mapping: 1-D grid over VPU-lane-aligned blocks (8 * 128 = 1024-float
+multiples); each block is an HBM->VMEM stream with no reuse, so block
+size only needs to amortize DMA setup — 64 KiB blocks (16384 floats) keep
+the pipeline full while bounding VMEM to ~200 KiB for the 3 input streams.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Floats per grid step.  On a real TPU a 16K-float (64 KiB) streaming
+# block amortizes DMA setup; under CPU interpret the grid is a sequential
+# HLO loop, so one big block wins (§Perf).  Multiple of the 1024-float
+# VPU tile either way.
+BLOCK = 4 * 1024 * 1024
+
+
+def _sgd_kernel(p_ref, v_ref, g_ref, lr_ref, po_ref, vo_ref, *, mu):
+    lr = lr_ref[0]
+    v = mu * v_ref[...] + g_ref[...]
+    vo_ref[...] = v
+    po_ref[...] = p_ref[...] - lr * v
+
+
+def sgd_momentum(params, mom, grads, lr, mu=0.9, block=BLOCK):
+    """Fused momentum-SGD over flat vectors.  lr is a scalar (traced)."""
+    (n,) = params.shape
+    block = min(block, n)
+    pad = (-n) % block
+    if pad:
+        params = jnp.pad(params, (0, pad))
+        mom = jnp.pad(mom, (0, pad))
+        grads = jnp.pad(grads, (0, pad))
+    np_ = params.shape[0]
+    lr_arr = jnp.reshape(lr, (1,)).astype(jnp.float32)
+    grid = (np_ // block,)
+    p2, v2 = pl.pallas_call(
+        functools.partial(_sgd_kernel, mu=mu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+        ],
+        interpret=True,
+    )(params, mom, grads, lr_arr)
+    return p2[:n], v2[:n]

@@ -1,0 +1,415 @@
+"""L2: JAX model definitions (fwd/bwd/update), built on the L1 Pallas kernels.
+
+Three model families, mirroring the paper's evaluation matrix:
+
+* ``mlp``         — LeNet3 analog for the MNIST-analog dataset (paper §7.2).
+* ``cnn``         — CIFARNet analog for the CIFAR10-analog dataset (§7.2).
+                    Convolutions are lowered via im2col so that every FLOP
+                    flows through the Pallas ``linear``/``matmul`` kernel.
+* ``transformer`` — decoder-only LM used by the end-to-end driver
+                    (examples/train_e2e.rs); stands in for the paper's
+                    ResNet50/GoogLeNet "large model" runs (Figs 14-16).
+
+The L2<->L3 contract (DESIGN.md "Artifact contract"): parameters are ONE
+flat f32[N] vector on both sides.  ``layer_table()`` exports the
+(name, offset, len) table that the Rust coordinator uses to slice the flat
+gradient for layer-wise asynchronous exchange.
+
+Everything here is build-time only; aot.py lowers the functions below to
+HLO text that the Rust runtime executes.
+"""
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import linear, matmul, softmax_xent, sgd_momentum, mix
+
+MOMENTUM = 0.9
+
+
+# --------------------------------------------------------------------------
+# Parameter bookkeeping: named leaves in a fixed order -> flat f32[N].
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class ParamSpec:
+    """Ordered list of named parameter tensors defining the flat layout."""
+
+    names: list = field(default_factory=list)
+    shapes: list = field(default_factory=list)
+
+    def add(self, name, shape):
+        self.names.append(name)
+        self.shapes.append(tuple(shape))
+
+    @property
+    def sizes(self):
+        return [int(np.prod(s)) for s in self.shapes]
+
+    @property
+    def total(self):
+        return int(sum(self.sizes))
+
+    def offsets(self):
+        off, out = 0, []
+        for n, s, sz in zip(self.names, self.shapes, self.sizes):
+            out.append((n, off, sz, s))
+            off += sz
+        return out
+
+    def unflatten(self, flat):
+        out, off = {}, 0
+        for n, s, sz in zip(self.names, self.shapes, self.sizes):
+            out[n] = flat[off : off + sz].reshape(s)
+            off += sz
+        return out
+
+    def init(self, seed):
+        """He-style init, matching Caffe's msra filler used by the paper's nets.
+
+        1-D parameters: biases (`.b`) start at zero; layernorm gains
+        (1-D `.w`, e.g. `blk0.ln1.w`) start at one.  The final classifier
+        weight is scaled by 0.1 so the initial loss sits near log(C)
+        regardless of network depth (standard small-head init).
+        """
+        key = jax.random.PRNGKey(seed)
+        last_w = next(
+            (
+                n
+                for n, s in zip(reversed(self.names), reversed(self.shapes))
+                if len(s) >= 2
+            ),
+            None,
+        )
+        chunks = []
+        for n, s in zip(self.names, self.shapes):
+            key, sub = jax.random.split(key)
+            if len(s) == 1 and n.endswith(".w"):  # layernorm gain
+                chunks.append(jnp.ones(s, jnp.float32))
+            elif len(s) == 1:  # bias
+                chunks.append(jnp.zeros(s, jnp.float32))
+            else:
+                fan_in = int(np.prod(s[:-1]))
+                scale = jnp.sqrt(2.0 / fan_in)
+                if n == last_w:
+                    scale = scale * 0.1
+                chunks.append(
+                    (jax.random.normal(sub, s, jnp.float32) * scale).reshape(-1)
+                )
+        return jnp.concatenate([c.reshape(-1) for c in chunks])
+
+    def layer_table(self):
+        """Grouped per-layer (name, offset, len) for layer-wise comm.
+
+        A "layer" groups a weight and its bias (the granularity at which
+        the paper exchanges gradients asynchronously)."""
+        groups = {}
+        order = []
+        for n, off, sz, _ in self.offsets():
+            layer = n.rsplit(".", 1)[0]
+            if layer not in groups:
+                groups[layer] = [off, 0]
+                order.append(layer)
+            g = groups[layer]
+            g[0] = min(g[0], off)
+            g[1] += sz
+        return [
+            {"name": layer, "offset": groups[layer][0], "len": groups[layer][1]}
+            for layer in order
+        ]
+
+
+# --------------------------------------------------------------------------
+# Model family: MLP (LeNet3 analog — MNIST-analog 28x28 grayscale, 10 cls)
+# --------------------------------------------------------------------------
+
+
+def mlp_spec(din=784, hidden=(512, 256), classes=10):
+    spec = ParamSpec()
+    dims = [din, *hidden, classes]
+    for i in range(len(dims) - 1):
+        spec.add(f"fc{i}.w", (dims[i], dims[i + 1]))
+        spec.add(f"fc{i}.b", (dims[i + 1],))
+    return spec
+
+
+def mlp_logits(spec, flat, x):
+    p = spec.unflatten(flat)
+    h = x.reshape(x.shape[0], -1)
+    n_layers = len(spec.names) // 2
+    for i in range(n_layers):
+        act = "relu" if i < n_layers - 1 else "none"
+        h = linear(h, p[f"fc{i}.w"], p[f"fc{i}.b"], act)
+    return h
+
+
+# --------------------------------------------------------------------------
+# Model family: CNN (CIFARNet analog — 32x32x3, 10 classes)
+#   conv5x5/32 - pool2 - conv5x5/32 - pool2 - conv5x5/64 - pool2 - fc64 - fc10
+#   Convs run as im2col + Pallas matmul (DESIGN.md §Hardware-Adaptation).
+# --------------------------------------------------------------------------
+
+
+def cnn_spec(channels=3, classes=10):
+    spec = ParamSpec()
+    spec.add("conv0.w", (5 * 5 * channels, 32))
+    spec.add("conv0.b", (32,))
+    spec.add("conv1.w", (5 * 5 * 32, 32))
+    spec.add("conv1.b", (32,))
+    spec.add("conv2.w", (5 * 5 * 32, 64))
+    spec.add("conv2.b", (64,))
+    spec.add("fc0.w", (4 * 4 * 64, 64))
+    spec.add("fc0.b", (64,))
+    spec.add("fc1.w", (64, classes))
+    spec.add("fc1.b", (classes,))
+    return spec
+
+
+def _conv_im2col(x, w, b):
+    """5x5 SAME conv via patch extraction + Pallas matmul.
+
+    x: [B, H, W, C] -> [B, H, W, O].  All FLOPs go through kernels.linear.
+    """
+    bsz, h, wdt, c = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(5, 5),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # [B, H, W, 5*5*C] with channel-major patch layout
+    cols = patches.reshape(bsz * h * wdt, 5 * 5 * c)
+    out = linear(cols, w, b, "relu")
+    return out.reshape(bsz, h, wdt, -1)
+
+
+def _maxpool2(x):
+    b, h, w, c = x.shape
+    return jnp.max(x.reshape(b, h // 2, 2, w // 2, 2, c), axis=(2, 4))
+
+
+def cnn_logits(spec, flat, x):
+    p = spec.unflatten(flat)
+    h = x.reshape(x.shape[0], 32, 32, 3)
+    h = _maxpool2(_conv_im2col(h, p["conv0.w"], p["conv0.b"]))
+    h = _maxpool2(_conv_im2col(h, p["conv1.w"], p["conv1.b"]))
+    h = _maxpool2(_conv_im2col(h, p["conv2.w"], p["conv2.b"]))
+    h = h.reshape(h.shape[0], -1)
+    h = linear(h, p["fc0.w"], p["fc0.b"], "relu")
+    return linear(h, p["fc1.w"], p["fc1.b"], "none")
+
+
+# --------------------------------------------------------------------------
+# Model family: decoder-only transformer LM (stand-in for ResNet50 scale)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class TransformerCfg:
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 6
+    n_heads: int = 8
+    d_ff: int = 1024
+    seq: int = 64
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+
+def transformer_spec(cfg: TransformerCfg):
+    spec = ParamSpec()
+    spec.add("embed.w", (cfg.vocab, cfg.d_model))
+    spec.add("pos.w", (cfg.seq, cfg.d_model))
+    for i in range(cfg.n_layers):
+        spec.add(f"blk{i}.ln1.w", (cfg.d_model,))
+        spec.add(f"blk{i}.ln1.b", (cfg.d_model,))
+        spec.add(f"blk{i}.qkv.w", (cfg.d_model, 3 * cfg.d_model))
+        spec.add(f"blk{i}.qkv.b", (3 * cfg.d_model,))
+        spec.add(f"blk{i}.proj.w", (cfg.d_model, cfg.d_model))
+        spec.add(f"blk{i}.proj.b", (cfg.d_model,))
+        spec.add(f"blk{i}.ln2.w", (cfg.d_model,))
+        spec.add(f"blk{i}.ln2.b", (cfg.d_model,))
+        spec.add(f"blk{i}.ff1.w", (cfg.d_model, cfg.d_ff))
+        spec.add(f"blk{i}.ff1.b", (cfg.d_ff,))
+        spec.add(f"blk{i}.ff2.w", (cfg.d_ff, cfg.d_model))
+        spec.add(f"blk{i}.ff2.b", (cfg.d_model,))
+    spec.add("lnf.w", (cfg.d_model,))
+    spec.add("lnf.b", (cfg.d_model,))
+    spec.add("head.w", (cfg.d_model, cfg.vocab))
+    spec.add("head.b", (cfg.vocab,))
+    return spec
+
+
+def _layernorm(x, w, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * w + b
+
+
+def transformer_logits(spec, cfg: TransformerCfg, flat, tokens):
+    """tokens: int32[B, S] -> logits f32[B*S, vocab].
+
+    QKV/proj/FF projections run through the Pallas linear kernel (the bulk
+    of the FLOPs); the attention score/value einsums stay in jnp."""
+    p = spec.unflatten(flat)
+    bsz, seq = tokens.shape
+    h = p["embed.w"][tokens] + p["pos.w"][None, :seq, :]
+    mask = jnp.tril(jnp.ones((seq, seq), jnp.float32))
+    neg = jnp.float32(-1e9)
+    for i in range(cfg.n_layers):
+        x = _layernorm(h, p[f"blk{i}.ln1.w"], p[f"blk{i}.ln1.b"])
+        qkv = linear(
+            x.reshape(bsz * seq, cfg.d_model),
+            p[f"blk{i}.qkv.w"],
+            p[f"blk{i}.qkv.b"],
+            "none",
+        ).reshape(bsz, seq, 3, cfg.n_heads, cfg.d_head)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        att = jnp.einsum("bshd,bthd->bhst", q, k) / jnp.sqrt(
+            jnp.float32(cfg.d_head)
+        )
+        att = jnp.where(mask[None, None] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhst,bthd->bshd", att, v).reshape(
+            bsz * seq, cfg.d_model
+        )
+        h = h + linear(
+            ctx, p[f"blk{i}.proj.w"], p[f"blk{i}.proj.b"], "none"
+        ).reshape(bsz, seq, cfg.d_model)
+        x = _layernorm(h, p[f"blk{i}.ln2.w"], p[f"blk{i}.ln2.b"])
+        y = linear(
+            x.reshape(bsz * seq, cfg.d_model),
+            p[f"blk{i}.ff1.w"],
+            p[f"blk{i}.ff1.b"],
+            "gelu",
+        )
+        y = linear(y, p[f"blk{i}.ff2.w"], p[f"blk{i}.ff2.b"], "none")
+        h = h + y.reshape(bsz, seq, cfg.d_model)
+    h = _layernorm(h, p["lnf.w"], p["lnf.b"])
+    return linear(
+        h.reshape(bsz * seq, cfg.d_model), p["head.w"], p["head.b"], "none"
+    )
+
+
+# --------------------------------------------------------------------------
+# Model registry + the three lowered entry points per model
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class Model:
+    """A model family instance: spec + logits fn + static batch shapes."""
+
+    name: str
+    spec: ParamSpec
+    logits_fn: object  # (flat, x) -> logits [rows, classes]
+    x_shape: tuple  # per-batch input shape (incl. batch dim)
+    x_dtype: object
+    labels_rows: int  # number of label rows (B, or B*S for the LM)
+    classes: int
+    batch: int
+
+    def loss(self, flat, x, y):
+        return softmax_xent(self.logits_fn(flat, x), y)
+
+    def grad_fn(self):
+        """(params, x, y) -> (grads flat, loss)."""
+
+        def f(flat, x, y):
+            loss, grads = jax.value_and_grad(self.loss)(flat, x, y)
+            return grads, loss
+
+        return f
+
+    def train_step_fn(self):
+        """(params, mom, x, y, lr) -> (params', mom', loss). Fused update."""
+
+        def f(flat, momv, x, y, lr):
+            loss, grads = jax.value_and_grad(self.loss)(flat, x, y)
+            new_p, new_m = sgd_momentum(flat, momv, grads, lr, MOMENTUM)
+            return new_p, new_m, loss
+
+        return f
+
+    def eval_fn(self):
+        """(params, x, y) -> (loss, correct_count)."""
+
+        def f(flat, x, y):
+            logits = self.logits_fn(flat, x)
+            loss = softmax_xent(logits, y)
+            correct = jnp.sum(
+                (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+            )
+            return loss, correct
+
+        return f
+
+
+def build_model(name, batch=None, tcfg: TransformerCfg = None) -> Model:
+    if name == "mlp":
+        b = batch or 64  # paper: MNIST batch 64 per device
+        spec = mlp_spec()
+        return Model(
+            name,
+            spec,
+            functools.partial(mlp_logits, spec),
+            (b, 784),
+            jnp.float32,
+            b,
+            10,
+            b,
+        )
+    if name == "cnn":
+        b = batch or 50  # paper uses 100 for CIFAR10; 50 keeps CPU steps fast
+        spec = cnn_spec()
+        return Model(
+            name,
+            spec,
+            functools.partial(cnn_logits, spec),
+            (b, 3072),
+            jnp.float32,
+            b,
+            10,
+            b,
+        )
+    if name == "transformer":
+        cfg = tcfg or TransformerCfg()
+        b = batch or 8
+    elif name == "transformer_small":
+        # e2e-driver preset sized for the single-core CPU testbed (the
+        # xla_extension 0.5.1 backend is ~15-30x slower than current
+        # XLA on this HLO — see EXPERIMENTS.md §Perf)
+        cfg = tcfg or TransformerCfg(
+            vocab=256, d_model=128, n_layers=4, n_heads=4, d_ff=512, seq=32
+        )
+        b = batch or 4
+    else:
+        raise ValueError(f"unknown model {name!r}")
+    spec = transformer_spec(cfg)
+    return Model(
+        name,
+        spec,
+        functools.partial(transformer_logits, spec, cfg),
+        (b, cfg.seq),
+        jnp.int32,
+        b * cfg.seq,
+        cfg.vocab,
+        b,
+    )
+
+
+def mix_fn(a, b):
+    """(a, b) -> (a+b)/2 via the Pallas mix kernel (artifacts/mix.hlo.txt)."""
+    return mix(a, b)
+
+
+def update_fn(params, momv, grads, lr):
+    """Standalone fused momentum-SGD artifact (L3 owns grads/comm ordering)."""
+    return sgd_momentum(params, momv, grads, lr, MOMENTUM)

@@ -1,0 +1,178 @@
+"""Kernel-vs-oracle correctness: the CORE numerical signal of L1.
+
+hypothesis sweeps shapes (ragged, non-tile-aligned) for every Pallas
+kernel and asserts allclose against the pure-jnp oracle in kernels/ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import linear, matmul, mix, sgd_momentum, softmax_xent
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SET = dict(max_examples=12, deadline=None)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+@settings(**SET)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    r = rng(seed)
+    x = r.standard_normal((m, k), dtype=np.float32)
+    w = r.standard_normal((k, n), dtype=np.float32)
+    got = matmul(jnp.asarray(x), jnp.asarray(w))
+    np.testing.assert_allclose(got, x @ w, rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_tile_aligned_exact_shape():
+    # shapes exactly matching the default tiles must not be padded/sliced
+    r = rng(0)
+    x = r.standard_normal((128, 512), dtype=np.float32)
+    w = r.standard_normal((512, 128), dtype=np.float32)
+    got = matmul(jnp.asarray(x), jnp.asarray(w))
+    assert got.shape == (128, 128)
+    np.testing.assert_allclose(got, x @ w, rtol=2e-4, atol=2e-3)
+
+
+@settings(**SET)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    act=st.sampled_from(["none", "relu", "gelu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_fwd_matches_ref(m, k, n, act, seed):
+    r = rng(seed)
+    x = jnp.asarray(r.standard_normal((m, k), dtype=np.float32))
+    w = jnp.asarray(r.standard_normal((k, n), dtype=np.float32))
+    b = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    np.testing.assert_allclose(
+        linear(x, w, b, act), ref.linear_ref(x, w, b, act), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(**SET)
+@given(
+    m=st.integers(2, 24),
+    k=st.integers(2, 24),
+    n=st.integers(2, 24),
+    act=st.sampled_from(["none", "relu", "gelu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_grad_matches_autodiff_of_ref(m, k, n, act, seed):
+    r = rng(seed)
+    x = jnp.asarray(r.standard_normal((m, k), dtype=np.float32))
+    w = jnp.asarray(r.standard_normal((k, n), dtype=np.float32))
+    b = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+
+    def f_pallas(w, b, x):
+        return jnp.sum(linear(x, w, b, act) ** 2)
+
+    def f_ref(w, b, x):
+        return jnp.sum(ref.linear_ref(x, w, b, act) ** 2)
+
+    gw, gb, gx = jax.grad(f_pallas, argnums=(0, 1, 2))(w, b, x)
+    rw, rb, rx = jax.grad(f_ref, argnums=(0, 1, 2))(w, b, x)
+    np.testing.assert_allclose(gw, rw, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gb, rb, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gx, rx, rtol=1e-3, atol=1e-3)
+
+
+@settings(**SET)
+@given(
+    n=st.integers(1, 100_000),
+    lr=st.floats(1e-4, 1.0),
+    mu=st.sampled_from([0.0, 0.5, 0.9, 0.99]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_momentum_matches_ref(n, lr, mu, seed):
+    r = rng(seed)
+    p = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    v = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    g = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    p2, v2 = sgd_momentum(p, v, g, lr, mu)
+    pr, vr = ref.sgd_momentum_ref(p, v, g, lr, mu)
+    np.testing.assert_allclose(p2, pr, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(v2, vr, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SET)
+@given(n=st.integers(1, 200_000), seed=st.integers(0, 2**31 - 1))
+def test_mix_matches_ref(n, seed):
+    r = rng(seed)
+    a = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    b = jnp.asarray(r.standard_normal(n, dtype=np.float32))
+    np.testing.assert_allclose(mix(a, b), ref.mix_ref(a, b), rtol=1e-6)
+
+
+def test_mix_is_symmetric_and_idempotent_on_equal():
+    a = jnp.linspace(-3, 3, 4097)
+    b = jnp.linspace(5, -5, 4097)
+    np.testing.assert_allclose(mix(a, b), mix(b, a), rtol=0, atol=0)
+    np.testing.assert_allclose(mix(a, a), a, rtol=0, atol=0)
+
+
+@settings(**SET)
+@given(
+    m=st.integers(1, 300),
+    c=st.integers(2, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_xent_fwd_matches_ref(m, c, seed):
+    r = rng(seed)
+    logits = jnp.asarray(5 * r.standard_normal((m, c), dtype=np.float32))
+    labels = jnp.asarray(r.integers(0, c, m, dtype=np.int32))
+    np.testing.assert_allclose(
+        softmax_xent(logits, labels),
+        ref.softmax_xent_ref(logits, labels),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+@settings(**SET)
+@given(
+    m=st.integers(1, 64),
+    c=st.integers(2, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_xent_bwd_matches_ref(m, c, seed):
+    r = rng(seed)
+    logits = jnp.asarray(r.standard_normal((m, c), dtype=np.float32))
+    labels = jnp.asarray(r.integers(0, c, m, dtype=np.int32))
+    got = jax.grad(lambda l: softmax_xent(l, labels))(logits)
+    want = ref.softmax_xent_bwd_ref(logits, labels, 1.0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_softmax_xent_extreme_logits_stable():
+    logits = jnp.asarray([[1e4, -1e4, 0.0], [-1e4, 1e4, 0.0]], jnp.float32)
+    labels = jnp.asarray([0, 1], jnp.int32)
+    loss = softmax_xent(logits, labels)
+    assert np.isfinite(float(loss))
+    np.testing.assert_allclose(float(loss), 0.0, atol=1e-5)
+
+
+def test_mix_preserves_mean():
+    # the §6 conservation property the Rust side also proptest-checks
+    r = rng(7)
+    a = jnp.asarray(r.standard_normal(5000, dtype=np.float32))
+    b = jnp.asarray(r.standard_normal(5000, dtype=np.float32))
+    m = mix(a, b)
+    np.testing.assert_allclose(
+        2 * np.asarray(m), np.asarray(a) + np.asarray(b), rtol=1e-6, atol=1e-6
+    )

@@ -1,0 +1,51 @@
+//! Ablation bench: the three all-reduce algorithms over the in-process
+//! fabric, across vector sizes and rank counts — the substrate numbers
+//! behind the AGD baselines.
+//!
+//!     cargo bench --bench collectives
+
+use gossipgrad::collectives::Algorithm;
+use gossipgrad::transport::{CostModel, Fabric};
+use gossipgrad::util::bench::{fmt_dur, Table};
+use std::thread;
+use std::time::Instant;
+
+fn time_allreduce(alg: Algorithm, p: usize, n: usize, iters: usize) -> f64 {
+    let fabric = Fabric::new(p, CostModel::zero());
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..p)
+        .map(|r| {
+            let ep = fabric.endpoint(r);
+            thread::spawn(move || {
+                let mut buf = vec![r as f32; n];
+                for it in 0..iters {
+                    alg.run(&ep, &mut buf, it);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn main() {
+    let algs = [
+        Algorithm::RecursiveDoubling,
+        Algorithm::BinomialTree,
+        Algorithm::Ring,
+    ];
+    for &n in &[4_096usize, 535_818 /* = MLP params */, 4_000_000] {
+        let mut t = Table::new(&["p", "rec-doubling", "binomial", "ring"]);
+        for p in [2usize, 4, 8] {
+            let mut row = vec![p.to_string()];
+            for alg in algs {
+                let secs = time_allreduce(alg, p, n, 5);
+                row.push(fmt_dur(secs));
+            }
+            t.row(&row);
+        }
+        t.print(&format!("all-reduce wall time per call, n = {n} f32"));
+    }
+}

@@ -1,0 +1,49 @@
+//! Figure 15: relative speedup of GossipGraD over AGD for GoogLeNet
+//! (batch 16/device) on up to 32 P100s.
+//!
+//!     cargo bench --bench fig15_googlenet
+//!
+//! GoogLeNet's comm:compute ratio is at least ResNet50's (20 MB model,
+//! ~5x less compute per step), so AGD's exposed communication grows
+//! faster with p and the gossip speedup curve rises — the effect §7.4
+//! describes.
+
+use gossipgrad::collectives::Algorithm;
+use gossipgrad::sim::{efficiency::avg_efficiency, Schedule, Workload};
+use gossipgrad::transport::CostModel;
+use gossipgrad::util::bench::Table;
+
+fn main() {
+    let w = Workload::googlenet_p100();
+    let r = Workload::resnet50_p100();
+    let cost = CostModel::ib_edr(0);
+
+    let mut t = Table::new(&["p", "googlenet speedup", "resnet50 speedup"]);
+    let mut series = Vec::new();
+    for p in [2usize, 4, 8, 16, 32] {
+        let mut row = vec![p.to_string()];
+        let mut speedups = Vec::new();
+        for wl in [&w, &r] {
+            let agd = avg_efficiency(
+                Schedule::Agd(Algorithm::RecursiveDoubling),
+                wl,
+                p,
+                &cost,
+                32,
+            );
+            let g = avg_efficiency(Schedule::Gossip, wl, p, &cost, 32);
+            speedups.push(agd.t_step / g.t_step);
+            row.push(format!("{:.3}", agd.t_step / g.t_step));
+        }
+        series.push(speedups[0]);
+        t.row(&row);
+    }
+    t.print("Fig 15 — GossipGraD speedup over AGD (batch 16, P100, IB-EDR)");
+    println!(
+        "\nshape check: speedup rises with p ({:.3} -> {:.3}) and exceeds 1 at 32",
+        series[0],
+        series[series.len() - 1]
+    );
+    assert!(series[series.len() - 1] > series[0]);
+    assert!(series[series.len() - 1] > 1.0);
+}

@@ -1,0 +1,69 @@
+//! Table 7: compute efficiency (%) of GossipGraD vs PowerAI-style
+//! hierarchical-ring all-reduce, ResNet50 @ batch 32/device, 4–128 P100s.
+//!
+//!     cargo bench --bench table7_efficiency
+//!
+//! Regenerates the table's rows from the discrete-event scale simulator
+//! (calibrated to the paper's published per-step times; see
+//! sim/workload.rs).  Expected shape: gossip pinned at ~100% everywhere;
+//! ring-allreduce AGD slowly decaying to the mid-90s at 128 — matching
+//! the paper's PowerAI column (100, 100, 98, 99, 97, 95).
+
+use gossipgrad::collectives::Algorithm;
+use gossipgrad::sim::{efficiency::avg_efficiency, Schedule, Workload};
+use gossipgrad::transport::CostModel;
+use gossipgrad::util::bench::Table;
+
+fn main() {
+    let w = Workload::resnet50_p100();
+    let cost = CostModel::ib_edr(0);
+    let ps = [4usize, 8, 16, 32, 64, 128];
+
+    let mut t = Table::new(&[
+        "p",
+        "GossipGraD",
+        "AGD ring (PowerAI-like)",
+        "AGD rec-dbl",
+        "SGD sync",
+        "paper GossipGraD",
+        "paper PowerAI",
+    ]);
+    let paper_gossip = [100, 100, 100, 100, 100, 100];
+    let paper_powerai = [100, 100, 98, 99, 97, 95];
+    for (i, &p) in ps.iter().enumerate() {
+        let g = avg_efficiency(Schedule::Gossip, &w, p, &cost, 32);
+        let ring = avg_efficiency(Schedule::Agd(Algorithm::Ring), &w, p, &cost, 32);
+        let rd = avg_efficiency(
+            Schedule::Agd(Algorithm::RecursiveDoubling),
+            &w,
+            p,
+            &cost,
+            32,
+        );
+        let sgd = avg_efficiency(
+            Schedule::SgdSync(Algorithm::RecursiveDoubling),
+            &w,
+            p,
+            &cost,
+            32,
+        );
+        t.row(&[
+            p.to_string(),
+            format!("{:.1}", g.percent()),
+            format!("{:.1}", ring.percent()),
+            format!("{:.1}", rd.percent()),
+            format!("{:.1}", sgd.percent()),
+            paper_gossip[i].to_string(),
+            paper_powerai[i].to_string(),
+        ]);
+    }
+    t.print("Table 7 — compute efficiency (%), ResNet50, batch 32/device, IB-EDR model");
+
+    let g128 = avg_efficiency(Schedule::Gossip, &w, 128, &cost, 32);
+    println!(
+        "\nheadline check: gossip @128 = {:.1}% (paper ~100%), {:.1} updates/s/device (paper 10.4)",
+        g128.percent(),
+        g128.updates_per_sec()
+    );
+    assert!(g128.percent() > 98.5, "gossip must stay ~100% at 128");
+}

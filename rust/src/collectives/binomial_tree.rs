@@ -1,0 +1,96 @@
+//! Binomial-tree all-reduce: reduce to rank 0 up a binomial tree
+//! (⌈log₂ p⌉ rounds), then broadcast back down (⌈log₂ p⌉ rounds).
+//! This is the "binomial/k-nomial tree" the paper's §3.1 complexity
+//! argument references.
+
+use super::{add_into, scale};
+use crate::transport::{Endpoint, Tag};
+
+pub fn binomial_tree_allreduce(ep: &Endpoint, buf: &mut [f32], round: usize) {
+    let p = ep.size();
+    let me = ep.rank();
+    if p == 1 {
+        return;
+    }
+    let tag = Tag::REDUCE.round(round);
+    let btag = Tag::BCAST.round(round);
+
+    // reduce phase: at distance d, ranks with (me & d) != 0 send to me-d
+    let mut d = 1usize;
+    while d < p {
+        if me & d != 0 {
+            ep.send(me - d, tag, buf.to_vec());
+            break; // sender is done reducing
+        }
+        if me + d < p {
+            let theirs = ep.recv(me + d, tag);
+            add_into(buf, &theirs);
+        }
+        d <<= 1;
+    }
+
+    if me == 0 {
+        scale(buf, 1.0 / p as f32);
+    }
+
+    // broadcast phase: mirror of the reduce tree
+    let mut d = {
+        // first power of two >= p, halved down to my subtree
+        let mut d = 1usize;
+        while d < p {
+            d <<= 1;
+        }
+        d
+    };
+    // find the distance at which I received my value (me's lowest set bit),
+    // or the full tree for rank 0
+    let recv_d = if me == 0 { d } else { me & me.wrapping_neg() };
+    if me != 0 {
+        let parent = me - recv_d;
+        let v = ep.recv(parent, btag);
+        buf.copy_from_slice(&v);
+    }
+    d = recv_d;
+    // forward down: children are me + d' for d' < recv_d
+    let mut child_d = d >> 1;
+    while child_d >= 1 {
+        let child = me + child_d;
+        if child < p {
+            ep.isend(child, btag, buf.to_vec());
+        }
+        if child_d == 0 {
+            break;
+        }
+        child_d >>= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{CostModel, Fabric};
+    use std::thread;
+
+    #[test]
+    fn averages_various_p() {
+        for p in [2usize, 3, 5, 8, 11] {
+            let f = Fabric::new(p, CostModel::zero());
+            let h: Vec<_> = (0..p)
+                .map(|r| {
+                    let ep = f.endpoint(r);
+                    thread::spawn(move || {
+                        let mut b = vec![r as f32; 16];
+                        binomial_tree_allreduce(&ep, &mut b, 0);
+                        b
+                    })
+                })
+                .collect();
+            let want = (0..p).map(|r| r as f32).sum::<f32>() / p as f32;
+            for t in h {
+                let got = t.join().unwrap();
+                assert!((got[0] - want).abs() < 1e-5, "p={p} {got:?}");
+                assert!(got.iter().all(|&v| (v - want).abs() < 1e-5));
+            }
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! All-to-all reduction algorithms over the transport — the substrate of
+//! the paper's SGD/AGD baselines (§3) and of the PowerAI-style
+//! comparison in Table 7.
+//!
+//! All algorithms compute the elementwise **average** across ranks (the
+//! gradient all-reduce of data-parallel SGD) and are SPMD: every rank
+//! calls the same function with its own endpoint and buffer; the call
+//! returns when the rank holds the reduced vector.
+//!
+//! * [`recursive_doubling`] — ⌈log₂ p⌉ rounds of pairwise exchange of the
+//!   full vector (the binomial/k-nomial tree cost the paper's Θ(log p)
+//!   bound refers to).  General p via the standard fold-to-power-of-two
+//!   pre/post phase.
+//! * [`binomial_tree`] — reduce-to-root + broadcast, 2⌈log₂ p⌉ rounds,
+//!   half the bandwidth of recursive doubling at the root bottleneck.
+//! * [`ring_allreduce`] — 2(p−1) rounds on 1/p-sized chunks; the
+//!   bandwidth-optimal "hierarchical ring" PowerAI uses (Table 7 note).
+
+pub mod binomial_tree;
+pub mod recursive_doubling;
+pub mod ring_allreduce;
+
+pub use binomial_tree::binomial_tree_allreduce;
+pub use recursive_doubling::recursive_doubling_allreduce;
+pub use ring_allreduce::ring_allreduce;
+
+use crate::transport::Endpoint;
+
+/// Which all-reduce algorithm a baseline uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    RecursiveDoubling,
+    BinomialTree,
+    Ring,
+}
+
+impl Algorithm {
+    pub fn run(self, ep: &Endpoint, buf: &mut [f32], round: usize) {
+        match self {
+            Algorithm::RecursiveDoubling => {
+                recursive_doubling_allreduce(ep, buf, round)
+            }
+            Algorithm::BinomialTree => binomial_tree_allreduce(ep, buf, round),
+            Algorithm::Ring => ring_allreduce(ep, buf, round),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::RecursiveDoubling => "recursive-doubling",
+            Algorithm::BinomialTree => "binomial-tree",
+            Algorithm::Ring => "ring",
+        }
+    }
+
+    /// Number of communication rounds on the critical path for `p` ranks
+    /// — the Θ(log p) (or 2(p−1)) terms of Table 1 / §3.1.
+    pub fn rounds(self, p: usize) -> usize {
+        let lg = crate::util::ceil_log2(p);
+        match self {
+            Algorithm::RecursiveDoubling => lg,
+            Algorithm::BinomialTree => 2 * lg,
+            Algorithm::Ring => 2 * p.saturating_sub(1),
+        }
+    }
+}
+
+/// Elementwise `acc += x` (the reduction op).
+pub(crate) fn add_into(acc: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, b) in acc.iter_mut().zip(x) {
+        *a += b;
+    }
+}
+
+/// Divide by p to turn the sum into the data-parallel average.
+pub(crate) fn scale(buf: &mut [f32], k: f32) {
+    for v in buf.iter_mut() {
+        *v *= k;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{CostModel, Fabric};
+    use crate::util::Rng;
+    use std::thread;
+
+    /// Run `alg` on `p` ranks with seeded random vectors; check every
+    /// rank ends with the exact average (within fp tolerance).
+    fn check(alg: Algorithm, p: usize, n: usize) {
+        let fabric = Fabric::new(p, CostModel::zero());
+        let inputs: Vec<Vec<f32>> = (0..p)
+            .map(|r| {
+                let mut rng = Rng::new(100 + r as u64);
+                (0..n).map(|_| rng.normal_f32()).collect()
+            })
+            .collect();
+        let mut want = vec![0.0f32; n];
+        for v in &inputs {
+            add_into(&mut want, v);
+        }
+        scale(&mut want, 1.0 / p as f32);
+
+        let handles: Vec<_> = (0..p)
+            .map(|r| {
+                let ep = fabric.endpoint(r);
+                let mut buf = inputs[r].clone();
+                thread::spawn(move || {
+                    alg.run(&ep, &mut buf, 0);
+                    buf
+                })
+            })
+            .collect();
+        for h in handles {
+            let got = h.join().unwrap();
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (g - w).abs() <= 1e-4 * w.abs().max(1.0),
+                    "{} p={p} n={n}: {g} vs {w}",
+                    alg.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_algorithms_all_sizes() {
+        for alg in [
+            Algorithm::RecursiveDoubling,
+            Algorithm::BinomialTree,
+            Algorithm::Ring,
+        ] {
+            for p in [1usize, 2, 3, 4, 5, 7, 8, 12, 16] {
+                check(alg, p, 257);
+            }
+        }
+    }
+
+    #[test]
+    fn consecutive_rounds_do_not_cross() {
+        // two back-to-back allreduces must not mix messages
+        let p = 4;
+        let fabric = Fabric::new(p, CostModel::zero());
+        let handles: Vec<_> = (0..p)
+            .map(|r| {
+                let ep = fabric.endpoint(r);
+                thread::spawn(move || {
+                    let mut a = vec![r as f32; 64];
+                    let mut b = vec![(r * 10) as f32; 64];
+                    recursive_doubling_allreduce(&ep, &mut a, 0);
+                    recursive_doubling_allreduce(&ep, &mut b, 1);
+                    (a, b)
+                })
+            })
+            .collect();
+        let avg_a = (0..p).map(|r| r as f32).sum::<f32>() / p as f32;
+        let avg_b = (0..p).map(|r| (r * 10) as f32).sum::<f32>() / p as f32;
+        for h in handles {
+            let (a, b) = h.join().unwrap();
+            assert!((a[0] - avg_a).abs() < 1e-5);
+            assert!((b[0] - avg_b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn round_counts_match_complexity_table() {
+        // Table 1: Θ(log p) for tree-based, 2(p-1) for ring
+        assert_eq!(Algorithm::RecursiveDoubling.rounds(128), 7);
+        assert_eq!(Algorithm::BinomialTree.rounds(128), 14);
+        assert_eq!(Algorithm::Ring.rounds(128), 254);
+    }
+
+    #[test]
+    fn message_count_scales_log_p_for_recursive_doubling() {
+        // the comm-complexity assertion behind Table 1
+        for p in [4usize, 8, 16] {
+            let fabric = Fabric::new(p, CostModel::zero());
+            let handles: Vec<_> = (0..p)
+                .map(|r| {
+                    let ep = fabric.endpoint(r);
+                    thread::spawn(move || {
+                        let mut buf = vec![1.0f32; 32];
+                        recursive_doubling_allreduce(&ep, &mut buf, 0);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            let per_rank = fabric.total_msgs() as usize / p;
+            assert_eq!(
+                per_rank,
+                crate::util::ceil_log2(p),
+                "p={p}: {per_rank} msgs/rank"
+            );
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Recursive-doubling all-reduce: ⌈log₂ p⌉ pairwise full-vector
+//! exchanges.  For non-power-of-two p, the standard fold: extra ranks
+//! first send their vector to a partner in the power-of-two core, the
+//! core runs recursive doubling, and the result is sent back.
+
+use super::{add_into, scale};
+use crate::transport::{Endpoint, Tag};
+
+pub fn recursive_doubling_allreduce(ep: &Endpoint, buf: &mut [f32], round: usize) {
+    let p = ep.size();
+    let me = ep.rank();
+    if p == 1 {
+        return;
+    }
+    let tag = Tag::REDUCE.round(round);
+    let core = 1usize << crate::util::ceil_log2(p + 1).saturating_sub(1).min(63);
+    let core = if core > p { core >> 1 } else { core }; // largest pow2 <= p
+    let rem = p - core;
+
+    // fold phase: ranks >= core send to (rank - core)
+    if me >= core {
+        ep.send(me - core, tag, buf.to_vec());
+        // idle during the core exchange; wait for the result broadcast
+        let out = ep.recv(me - core, tag);
+        buf.copy_from_slice(&out);
+        return;
+    }
+    if me < rem {
+        let extra = ep.recv(me + core, tag);
+        add_into(buf, &extra);
+    }
+
+    // core recursive doubling over `core` ranks
+    let mut dist = 1usize;
+    while dist < core {
+        let partner = me ^ dist;
+        ep.isend(partner, tag, buf.to_vec());
+        let theirs = ep.recv(partner, tag);
+        add_into(buf, &theirs);
+        dist <<= 1;
+    }
+
+    scale(buf, 1.0 / p as f32);
+
+    // unfold phase
+    if me < rem {
+        ep.send(me + core, tag, buf.to_vec());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{CostModel, Fabric};
+    use std::thread;
+
+    #[test]
+    fn two_ranks_average() {
+        let f = Fabric::new(2, CostModel::zero());
+        let h: Vec<_> = (0..2)
+            .map(|r| {
+                let ep = f.endpoint(r);
+                thread::spawn(move || {
+                    let mut b = vec![r as f32 * 2.0; 8];
+                    recursive_doubling_allreduce(&ep, &mut b, 0);
+                    b
+                })
+            })
+            .collect();
+        for t in h {
+            assert_eq!(t.join().unwrap(), vec![1.0; 8]);
+        }
+    }
+
+    #[test]
+    fn three_ranks_fold_unfold() {
+        let f = Fabric::new(3, CostModel::zero());
+        let h: Vec<_> = (0..3)
+            .map(|r| {
+                let ep = f.endpoint(r);
+                thread::spawn(move || {
+                    let mut b = vec![(r + 1) as f32; 4];
+                    recursive_doubling_allreduce(&ep, &mut b, 0);
+                    b
+                })
+            })
+            .collect();
+        for t in h {
+            let got = t.join().unwrap();
+            assert!((got[0] - 2.0).abs() < 1e-6, "{got:?}");
+        }
+    }
+}

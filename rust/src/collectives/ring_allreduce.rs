@@ -1,0 +1,84 @@
+//! Ring all-reduce: reduce-scatter + all-gather over a ring, 2(p−1)
+//! rounds on n/p-sized chunks — bandwidth-optimal, the building block of
+//! PowerAI's "hierarchical rings" that Table 7 compares against.
+
+use super::scale;
+use crate::transport::{Endpoint, Tag};
+
+pub fn ring_allreduce(ep: &Endpoint, buf: &mut [f32], round: usize) {
+    let p = ep.size();
+    let me = ep.rank();
+    if p == 1 {
+        return;
+    }
+    let tag = Tag::REDUCE.round(round);
+    let n = buf.len();
+    // chunk c covers [starts[c], starts[c+1])
+    let starts: Vec<usize> = (0..=p).map(|c| c * n / p).collect();
+    let next = (me + 1) % p;
+    let prev = (me + p - 1) % p;
+
+    // reduce-scatter: at step s, send chunk (me - s) and accumulate
+    // chunk (me - s - 1) from the left neighbour
+    for s in 0..p - 1 {
+        let send_c = (me + p - s) % p;
+        let recv_c = (me + p - s - 1) % p;
+        let chunk = buf[starts[send_c]..starts[send_c + 1]].to_vec();
+        ep.isend(next, tag.sub(s), chunk);
+        let theirs = ep.recv(prev, tag.sub(s));
+        let dst = &mut buf[starts[recv_c]..starts[recv_c + 1]];
+        for (a, b) in dst.iter_mut().zip(&theirs) {
+            *a += b;
+        }
+    }
+    // each rank now owns the fully reduced chunk (me + 1) % p
+    let owned = (me + 1) % p;
+    scale(&mut buf[starts[owned]..starts[owned + 1]], 1.0 / p as f32);
+
+    // all-gather: circulate the reduced chunks p-1 more steps
+    for s in 0..p - 1 {
+        let send_c = (me + 1 + p - s) % p;
+        let recv_c = (me + p - s) % p;
+        let chunk = buf[starts[send_c]..starts[send_c + 1]].to_vec();
+        ep.isend(next, tag.sub(p + s), chunk);
+        let theirs = ep.recv(prev, tag.sub(p + s));
+        buf[starts[recv_c]..starts[recv_c + 1]].copy_from_slice(&theirs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{CostModel, Fabric};
+    use std::thread;
+
+    #[test]
+    fn averages_with_ragged_chunks() {
+        // n not divisible by p exercises the uneven chunk boundaries
+        for (p, n) in [(2usize, 7usize), (3, 10), (5, 23), (8, 64), (4, 3)] {
+            let f = Fabric::new(p, CostModel::zero());
+            let h: Vec<_> = (0..p)
+                .map(|r| {
+                    let ep = f.endpoint(r);
+                    thread::spawn(move || {
+                        let mut b: Vec<f32> =
+                            (0..n).map(|i| (r * n + i) as f32).collect();
+                        ring_allreduce(&ep, &mut b, 0);
+                        b
+                    })
+                })
+                .collect();
+            let want: Vec<f32> = (0..n)
+                .map(|i| {
+                    (0..p).map(|r| (r * n + i) as f32).sum::<f32>() / p as f32
+                })
+                .collect();
+            for t in h {
+                let got = t.join().unwrap();
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-4, "p={p} n={n}: {got:?}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,301 @@
+//! Run configuration: a single struct covering every experiment knob,
+//! JSON presets on disk, CLI overrides on top.
+//!
+//! Presets mirror the paper's setups (`configs/*.json`): e.g.
+//! `mnist_gossip_32.json` = LeNet3-analog, 32 ranks, dissemination +
+//! rotation + ring shuffle, IB-EDR cost model.
+
+use crate::collectives::Algorithm;
+use crate::transport::CostModel;
+use crate::util::json::Json;
+
+/// Which training algorithm the coordinator runs (paper Table 6 + §7.5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// GossipGraD: dissemination gossip + rotation + ring sample shuffle.
+    Gossip,
+    /// GossipGraD on the hypercube virtual topology (§4.4.1 variant).
+    GossipHypercube,
+    /// Random gossip (Jin/Blot baseline).
+    GossipRandom,
+    /// Synchronous all-reduce SGD.
+    SgdSync,
+    /// Asynchronous layer-wise all-reduce (AGD — the paper's baseline).
+    Agd,
+    /// AGD every ⌈log₂ p⌉ steps (Fig 17).
+    PeriodicAgd,
+    /// Parameter-server baseline.
+    ParamServer,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Result<Algo, String> {
+        Ok(match s {
+            "gossip" | "gossipgrad" => Algo::Gossip,
+            "gossip-hypercube" => Algo::GossipHypercube,
+            "gossip-random" => Algo::GossipRandom,
+            "sgd" | "sgd-sync" => Algo::SgdSync,
+            "agd" => Algo::Agd,
+            "periodic-agd" => Algo::PeriodicAgd,
+            "ps" | "param-server" => Algo::ParamServer,
+            other => return Err(format!("unknown algo {other:?}")),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Gossip => "gossipgrad",
+            Algo::GossipHypercube => "gossip-hypercube",
+            Algo::GossipRandom => "gossip-random",
+            Algo::SgdSync => "sgd-sync",
+            Algo::Agd => "agd",
+            Algo::PeriodicAgd => "periodic-agd",
+            Algo::ParamServer => "param-server",
+        }
+    }
+}
+
+/// Learning-rate schedule (§7.3.2: ResNet50 step regimen ×0.1/30 epochs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LrSchedule {
+    Const,
+    /// Multiply by `gamma` every `every` steps.
+    Step { every: usize, gamma: f64 },
+}
+
+impl LrSchedule {
+    pub fn lr_at(self, base: f64, step: usize) -> f64 {
+        match self {
+            LrSchedule::Const => base,
+            LrSchedule::Step { every, gamma } => {
+                base * gamma.powi((step / every.max(1)) as i32)
+            }
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub algo: Algo,
+    pub model: String,
+    pub ranks: usize,
+    pub steps: usize,
+    pub lr: f64,
+    pub lr_schedule: LrSchedule,
+    /// Paper §7.1: AGD/SGD weak scaling multiplies lr by sqrt(p);
+    /// GossipGraD keeps the single-device lr.
+    pub krizhevsky_lr_scaling: bool,
+    pub allreduce: Algorithm,
+    pub rotation: bool,
+    pub sample_shuffle: bool,
+    /// Gossip every `gossip_period` steps (1 = every batch).
+    pub gossip_period: usize,
+    pub seed: u64,
+    /// Dataset rows per rank.
+    pub rows_per_rank: usize,
+    /// Evaluate validation accuracy every N steps (0 = never).
+    pub eval_every: usize,
+    pub val_rows: usize,
+    /// α seconds; β as 1/(bytes per second); noise fraction.
+    pub net_alpha: f64,
+    pub net_beta: f64,
+    pub net_noise: f64,
+    /// Use the PJRT artifacts (true) or the native backend (false).
+    pub use_artifacts: bool,
+    pub artifacts_dir: String,
+    /// Parameter-server count (ParamServer algo only).
+    pub ps_servers: usize,
+    /// Optional checkpoint directory to resume parameters from.
+    pub resume_from: Option<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            algo: Algo::Gossip,
+            model: "mlp".into(),
+            ranks: 8,
+            steps: 100,
+            lr: 0.05,
+            lr_schedule: LrSchedule::Const,
+            krizhevsky_lr_scaling: false,
+            allreduce: Algorithm::RecursiveDoubling,
+            rotation: true,
+            sample_shuffle: true,
+            gossip_period: 1,
+            seed: 42,
+            rows_per_rank: 512,
+            eval_every: 0,
+            val_rows: 512,
+            net_alpha: 0.0,
+            net_beta: 0.0,
+            net_noise: 0.0,
+            use_artifacts: true,
+            artifacts_dir: "artifacts".into(),
+            ps_servers: 1,
+            resume_from: None,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn cost_model(&self) -> CostModel {
+        CostModel::new(self.net_alpha, self.net_beta, self.net_noise, self.seed)
+    }
+
+    /// Effective base learning rate for this algorithm at this scale
+    /// (paper §7.1: ×√p for AGD/SGD weak scaling; unchanged for gossip).
+    pub fn effective_lr(&self) -> f64 {
+        let scaled = matches!(
+            self.algo,
+            Algo::SgdSync | Algo::Agd | Algo::PeriodicAgd | Algo::ParamServer
+        );
+        if self.krizhevsky_lr_scaling && scaled {
+            self.lr * (self.ranks as f64).sqrt()
+        } else {
+            self.lr
+        }
+    }
+
+    /// Load a JSON preset, then apply this config's fields as defaults
+    /// for anything missing.
+    pub fn from_json(j: &Json) -> Result<RunConfig, String> {
+        let mut c = RunConfig::default();
+        if let Some(v) = j.get("algo").and_then(Json::as_str) {
+            c.algo = Algo::parse(v)?;
+        }
+        if let Some(v) = j.get("model").and_then(Json::as_str) {
+            c.model = v.to_string();
+        }
+        macro_rules! num_field {
+            ($key:literal, $field:ident, $ty:ty) => {
+                if let Some(v) = j.get($key).and_then(Json::as_f64) {
+                    c.$field = v as $ty;
+                }
+            };
+        }
+        num_field!("ranks", ranks, usize);
+        num_field!("steps", steps, usize);
+        num_field!("lr", lr, f64);
+        num_field!("gossip_period", gossip_period, usize);
+        num_field!("seed", seed, u64);
+        num_field!("rows_per_rank", rows_per_rank, usize);
+        num_field!("eval_every", eval_every, usize);
+        num_field!("val_rows", val_rows, usize);
+        num_field!("net_alpha", net_alpha, f64);
+        num_field!("net_beta", net_beta, f64);
+        num_field!("net_noise", net_noise, f64);
+        num_field!("ps_servers", ps_servers, usize);
+        if let Some(v) = j.get("rotation").and_then(Json::as_bool) {
+            c.rotation = v;
+        }
+        if let Some(v) = j.get("sample_shuffle").and_then(Json::as_bool) {
+            c.sample_shuffle = v;
+        }
+        if let Some(v) = j.get("krizhevsky_lr_scaling").and_then(Json::as_bool) {
+            c.krizhevsky_lr_scaling = v;
+        }
+        if let Some(v) = j.get("use_artifacts").and_then(Json::as_bool) {
+            c.use_artifacts = v;
+        }
+        if let Some(v) = j.get("artifacts_dir").and_then(Json::as_str) {
+            c.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = j.get("resume_from").and_then(Json::as_str) {
+            c.resume_from = Some(v.to_string());
+        }
+        if let Some(v) = j.get("allreduce").and_then(Json::as_str) {
+            c.allreduce = match v {
+                "recursive-doubling" => Algorithm::RecursiveDoubling,
+                "binomial-tree" => Algorithm::BinomialTree,
+                "ring" => Algorithm::Ring,
+                other => return Err(format!("unknown allreduce {other:?}")),
+            };
+        }
+        if let Some(sched) = j.get("lr_step_every").and_then(Json::as_usize) {
+            let gamma = j
+                .get("lr_step_gamma")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.1);
+            c.lr_schedule = LrSchedule::Step {
+                every: sched,
+                gamma,
+            };
+        }
+        Ok(c)
+    }
+
+    pub fn load(path: &str) -> Result<RunConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("{path}: {e}"))?;
+        RunConfig::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_preset() {
+        let j = Json::parse(
+            r#"{"algo":"agd","model":"cnn","ranks":16,"steps":50,
+                "lr":0.1,"krizhevsky_lr_scaling":true,
+                "allreduce":"ring","rotation":false,
+                "lr_step_every":30,"lr_step_gamma":0.1}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.algo, Algo::Agd);
+        assert_eq!(c.ranks, 16);
+        assert_eq!(c.allreduce, Algorithm::Ring);
+        assert!(!c.rotation);
+        // √16 = 4× lr scaling for AGD
+        assert!((c.effective_lr() - 0.4).abs() < 1e-12);
+        assert_eq!(
+            c.lr_schedule,
+            LrSchedule::Step {
+                every: 30,
+                gamma: 0.1
+            }
+        );
+    }
+
+    #[test]
+    fn gossip_keeps_single_device_lr() {
+        let mut c = RunConfig::default();
+        c.krizhevsky_lr_scaling = true;
+        c.ranks = 64;
+        c.algo = Algo::Gossip;
+        assert_eq!(c.effective_lr(), c.lr);
+    }
+
+    #[test]
+    fn lr_step_schedule() {
+        let s = LrSchedule::Step {
+            every: 30,
+            gamma: 0.1,
+        };
+        assert!((s.lr_at(0.1, 0) - 0.1).abs() < 1e-12);
+        assert!((s.lr_at(0.1, 29) - 0.1).abs() < 1e-12);
+        assert!((s.lr_at(0.1, 30) - 0.01).abs() < 1e-12);
+        assert!((s.lr_at(0.1, 65) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn algo_names_roundtrip() {
+        for a in [
+            Algo::Gossip,
+            Algo::GossipHypercube,
+            Algo::GossipRandom,
+            Algo::SgdSync,
+            Algo::Agd,
+            Algo::PeriodicAgd,
+            Algo::ParamServer,
+        ] {
+            assert_eq!(Algo::parse(a.name()).unwrap(), a);
+        }
+        assert!(Algo::parse("nope").is_err());
+    }
+}

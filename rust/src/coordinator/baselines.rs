@@ -1,0 +1,150 @@
+//! The baselines the paper evaluates GossipGraD against.
+//!
+//! * [`run_allreduce`] — synchronous SGD (whole-model all-reduce after
+//!   backprop) and AGD (layer-wise all-reduce; §3.2/S-Caffe/PowerAI
+//!   style).  AGD's *gradient averaging* is mathematically identical to
+//!   SGD — the paper treats AGD as "theoretically equivalent" (§7.1) —
+//!   the difference is the communication schedule.
+//! * [`run_periodic`] — AGD communicating every ⌈log₂ p⌉ steps (Fig 17).
+//! * [`run_param_server`] — Fig 2(a): workers push gradients to server
+//!   rank(s), pull fresh weights.  Servers occupy the top ranks of the
+//!   fabric (fabric size = workers + servers).
+
+use super::worker::Worker;
+use crate::collectives::Algorithm;
+use crate::nativenet::ops;
+use crate::transport::{Endpoint, Tag};
+use crate::util::ceil_log2;
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+/// Synchronous all-reduce training.  `layerwise = true` → AGD (one
+/// all-reduce per layer slice, the overlappable schedule); `false` →
+/// plain SGD (single whole-model all-reduce).
+pub fn run_allreduce(w: &mut Worker, ep: &Endpoint, alg: Algorithm, layerwise: bool) {
+    let steps = w.cfg.steps;
+    let layers: Vec<(usize, usize)> = w
+        .backend
+        .layers()
+        .iter()
+        .map(|l| (l.offset, l.len))
+        .collect();
+    for step in 0..steps {
+        let t0 = Instant::now();
+        let lr = w.lr_at(step);
+        let batch = w.shuffle.take(ep);
+        let (x, y) = w.to_batch_data(&batch);
+        let (mut grads, loss) = w.backend.grad(&w.params, &x, &y);
+
+        let tw = Instant::now();
+        if layerwise {
+            for (li, &(off, len)) in layers.iter().enumerate() {
+                alg.run(ep, &mut grads[off..off + len], step * layers.len() + li);
+            }
+        } else {
+            alg.run(ep, &mut grads, step);
+        }
+        let comm_wait = tw.elapsed().as_secs_f64();
+
+        w.backend.apply_update(&mut w.params, &mut w.mom, &grads, lr);
+        w.shuffle.give_back(ep, batch);
+        w.record_step(step, loss, t0, comm_wait);
+        if w.cfg.eval_every > 0 && (step % w.cfg.eval_every == 0 || step + 1 == steps)
+        {
+            let (_, acc) = w.evaluate();
+            w.metrics.accuracy.push((step, acc));
+        }
+    }
+    let c = ep.fabric().counters(w.rank);
+    w.metrics.msgs_sent = c.msgs_sent.load(Ordering::Relaxed);
+    w.metrics.bytes_sent = c.bytes_sent.load(Ordering::Relaxed);
+}
+
+/// AGD every ⌈log₂ p⌉ steps (Fig 17's "computing AGD every log(p)
+/// iterations"): local updates in between, model (not gradient)
+/// averaging at the boundary so updates are not lost.
+pub fn run_periodic(w: &mut Worker, ep: &Endpoint, alg: Algorithm) {
+    let steps = w.cfg.steps;
+    let period = ceil_log2(w.cfg.ranks).max(1);
+    for step in 0..steps {
+        let t0 = Instant::now();
+        let lr = w.lr_at(step);
+        let batch = w.shuffle.take(ep);
+        let (x, y) = w.to_batch_data(&batch);
+        let (grads, loss) = w.backend.grad(&w.params, &x, &y);
+        w.backend.apply_update(&mut w.params, &mut w.mom, &grads, lr);
+
+        let mut comm_wait = 0.0;
+        if step % period == period - 1 {
+            let tw = Instant::now();
+            alg.run(ep, &mut w.params, step);
+            comm_wait = tw.elapsed().as_secs_f64();
+        }
+        w.shuffle.give_back(ep, batch);
+        w.record_step(step, loss, t0, comm_wait);
+        if w.cfg.eval_every > 0 && (step % w.cfg.eval_every == 0 || step + 1 == steps)
+        {
+            let (_, acc) = w.evaluate();
+            w.metrics.accuracy.push((step, acc));
+        }
+    }
+    let c = ep.fabric().counters(w.rank);
+    w.metrics.msgs_sent = c.msgs_sent.load(Ordering::Relaxed);
+    w.metrics.bytes_sent = c.bytes_sent.load(Ordering::Relaxed);
+}
+
+/// Parameter-server worker loop: push grads, pull weights, every step.
+pub fn run_ps_worker(w: &mut Worker, ep: &Endpoint, server: usize) {
+    let steps = w.cfg.steps;
+    for step in 0..steps {
+        let t0 = Instant::now();
+        let batch = w.shuffle.take(ep);
+        let (x, y) = w.to_batch_data(&batch);
+        let (grads, loss) = w.backend.grad(&w.params, &x, &y);
+
+        let tw = Instant::now();
+        ep.isend(server, Tag::REDUCE.round(step), grads);
+        let fresh = ep.recv(server, Tag::MODEL.round(step));
+        let comm_wait = tw.elapsed().as_secs_f64();
+        w.params.copy_from_slice(&fresh);
+
+        w.shuffle.give_back(ep, batch);
+        w.record_step(step, loss, t0, comm_wait);
+        if w.cfg.eval_every > 0 && (step % w.cfg.eval_every == 0 || step + 1 == steps)
+        {
+            let (_, acc) = w.evaluate();
+            w.metrics.accuracy.push((step, acc));
+        }
+    }
+    let c = ep.fabric().counters(w.rank);
+    w.metrics.msgs_sent = c.msgs_sent.load(Ordering::Relaxed);
+    w.metrics.bytes_sent = c.bytes_sent.load(Ordering::Relaxed);
+}
+
+/// Parameter-server loop (runs on fabric rank `workers`..): aggregates
+/// the workers' gradients each step, applies the update centrally, and
+/// broadcasts fresh weights.  `lr_of(step)` mirrors the workers'
+/// schedule.
+pub fn run_ps_server(
+    ep: &Endpoint,
+    backend: &super::worker::Backend,
+    workers: usize,
+    steps: usize,
+    lr_of: impl Fn(usize) -> f32,
+) {
+    let mut params = backend.init_params();
+    let mut mom = vec![0.0f32; params.len()];
+    let mut acc = vec![0.0f32; params.len()];
+    for step in 0..steps {
+        acc.iter_mut().for_each(|v| *v = 0.0);
+        for src in 0..workers {
+            let g = ep.recv(src, Tag::REDUCE.round(step));
+            ops::add_into(&mut acc, &g);
+        }
+        ops::scale(&mut acc, 1.0 / workers as f32);
+        backend.apply_update(&mut params, &mut mom, &acc, lr_of(step));
+        for dst in 0..workers {
+            ep.isend(dst, Tag::MODEL.round(step), params.clone());
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Model checkpointing: save/restore the flat parameter + momentum
+//! vectors with a JSON manifest.  Format:
+//!
+//!   <dir>/manifest.json   {"model": .., "param_count": .., "step": ..,
+//!                          "files": {"params": "params.f32", ...}}
+//!   <dir>/params.f32      raw little-endian f32
+//!   <dir>/momentum.f32    raw little-endian f32
+//!
+//! Used by the CLI's `--save-every/--resume` and by the Fig-14-style
+//! long runs so the step-LR schedule can be continued across restarts.
+
+use crate::util::json::{num, obj, s, Json};
+use std::io::Write;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub model: String,
+    pub step: usize,
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
+}
+
+fn write_f32(path: &Path, data: &[f32]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&buf)
+}
+
+fn read_f32(path: &Path, expect: usize) -> Result<Vec<f32>, String> {
+    let bytes =
+        std::fs::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    if bytes.len() != expect * 4 {
+        return Err(format!(
+            "{}: {} bytes, expected {}",
+            path.display(),
+            bytes.len(),
+            expect * 4
+        ));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+impl Checkpoint {
+    pub fn save(&self, dir: &Path) -> Result<(), String> {
+        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        write_f32(&dir.join("params.f32"), &self.params)
+            .map_err(|e| e.to_string())?;
+        write_f32(&dir.join("momentum.f32"), &self.momentum)
+            .map_err(|e| e.to_string())?;
+        let manifest = obj(vec![
+            ("model", s(&self.model)),
+            ("param_count", num(self.params.len() as f64)),
+            ("step", num(self.step as f64)),
+            (
+                "files",
+                obj(vec![
+                    ("params", s("params.f32")),
+                    ("momentum", s("momentum.f32")),
+                ]),
+            ),
+        ]);
+        std::fs::write(dir.join("manifest.json"), manifest.to_string())
+            .map_err(|e| e.to_string())
+    }
+
+    pub fn load(dir: &Path) -> Result<Checkpoint, String> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("manifest: {e}"))?;
+        let j = Json::parse(&text)?;
+        let n = j
+            .get("param_count")
+            .and_then(Json::as_usize)
+            .ok_or("manifest missing param_count")?;
+        let model = j
+            .get("model")
+            .and_then(Json::as_str)
+            .ok_or("manifest missing model")?
+            .to_string();
+        let step = j.get("step").and_then(Json::as_usize).unwrap_or(0);
+        Ok(Checkpoint {
+            model,
+            step,
+            params: read_f32(&dir.join("params.f32"), n)?,
+            momentum: read_f32(&dir.join("momentum.f32"), n)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("gg_ckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(4);
+        let ck = Checkpoint {
+            model: "mlp".into(),
+            step: 123,
+            params: (0..1000).map(|_| rng.normal_f32()).collect(),
+            momentum: (0..1000).map(|_| rng.normal_f32()).collect(),
+        };
+        let dir = tmpdir("roundtrip");
+        ck.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(back, ck);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_rejects_truncated() {
+        let mut ck = Checkpoint {
+            model: "mlp".into(),
+            step: 1,
+            params: vec![1.0; 10],
+            momentum: vec![0.0; 10],
+        };
+        let dir = tmpdir("trunc");
+        ck.save(&dir).unwrap();
+        // corrupt: shrink params file
+        std::fs::write(dir.join("params.f32"), [0u8; 8]).unwrap();
+        assert!(Checkpoint::load(&dir).is_err());
+        // manifest mismatch: param_count changed
+        ck.params = vec![1.0; 10];
+        ck.save(&dir).unwrap();
+        assert!(Checkpoint::load(&dir).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(Checkpoint::load(Path::new("/nonexistent/gg")).is_err());
+    }
+}

@@ -1,0 +1,235 @@
+//! The GossipGraD engine (paper §4–§5).
+//!
+//! Per step, each rank:
+//! 1. **Drains** its partner's model slices from the *previous* step —
+//!    by now they have arrived under the compute of this step's gradient
+//!    evaluation, so the wait is ≈ 0 (the §5.1 overlap, implemented with
+//!    non-blocking irecv + test_all + wait_all exactly as the paper's
+//!    MPI_TestAll design).
+//! 2. Computes gradients on its current batch.
+//! 3. **Mixes**: `params <- (params + partner_params) / 2` (§6's pairwise
+//!    averaging; the supermartingale argument's w_{n+1} step).
+//! 4. Applies the fused momentum-SGD update.
+//! 5. **Sends** its updated model to this step's dissemination partner,
+//!    one message per layer slice (layer-wise, so a real NIC would
+//!    pipeline them; tags carry (layer, step)).
+//! 6. Forwards its consumed batch around the sample-shuffle ring.
+//!
+//! Partner selection is a rotated dissemination topology by default
+//! (§4.3–4.5); hypercube and random (Jin/Blot) variants are selectable
+//! for the ablations.  With `gossip_period > 1` mixing/sending happens
+//! every k-th step only.
+//!
+//! ## Staleness note
+//! Mixing consumes the partner model *sent after the partner's previous
+//! update* — one step of staleness, which is precisely what makes the
+//! exchange fully overlappable (the paper's asynchronous design).  The
+//! synchronous variant (`sync_mix = true`, used by the convergence
+//! property tests) blocks for the current step's model instead and pays
+//! the exposed communication time.
+
+use super::worker::Worker;
+use crate::config::Algo;
+use crate::nativenet::ops;
+use crate::topology::{
+    Dissemination, Exchange, Hypercube, RandomGossip, Rotation, Topology,
+};
+use crate::transport::{Endpoint, RecvReq, Tag};
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+/// Which virtual topology drives partner selection.
+pub enum GossipTopology {
+    Rotated(Rotation<Dissemination>),
+    Plain(Dissemination),
+    Hyper(Hypercube),
+    Random(RandomGossip),
+}
+
+impl GossipTopology {
+    pub fn build(algo: Algo, p: usize, rotation: bool, seed: u64) -> GossipTopology {
+        match algo {
+            // Hypercube requires power-of-two p (panics otherwise, §4.4.1)
+            Algo::GossipHypercube => GossipTopology::Hyper(Hypercube::new(p)),
+            Algo::GossipRandom => GossipTopology::Random(RandomGossip::new(p, seed)),
+            _ if rotation => {
+                GossipTopology::Rotated(Rotation::new(Dissemination::new(p), seed))
+            }
+            _ => GossipTopology::Plain(Dissemination::new(p)),
+        }
+    }
+
+    pub fn exchange(&self, rank: usize, step: usize) -> Exchange {
+        match self {
+            GossipTopology::Rotated(t) => t.exchange(rank, step),
+            GossipTopology::Plain(t) => t.exchange(rank, step),
+            GossipTopology::Hyper(t) => t.exchange(rank, step),
+            GossipTopology::Random(t) => t.exchange(rank, step),
+        }
+    }
+
+    /// For the random baseline: every rank whose message must be drained.
+    pub fn senders_to(&self, rank: usize, step: usize) -> Option<Vec<usize>> {
+        match self {
+            GossipTopology::Random(t) => Some(t.senders_to(rank, step)),
+            _ => None,
+        }
+    }
+}
+
+/// In-flight model receive: the layer-sliced irecvs posted for one step.
+struct PendingModel {
+    reqs: Vec<(usize, RecvReq)>, // (layer offset, request)
+}
+
+/// Run GossipGraD on one rank for `cfg.steps` steps.
+pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix: bool) {
+    let steps = w.cfg.steps;
+    let period = w.cfg.gossip_period.max(1);
+    let layers: Vec<(usize, usize)> = w
+        .backend
+        .layers()
+        .iter()
+        .map(|l| (l.offset, l.len))
+        .collect();
+    let mut pending: Option<(usize, PendingModel)> = None; // (send step, reqs)
+    let mut partner_buf = vec![0.0f32; w.params.len()];
+
+    for step in 0..steps {
+        let t0 = Instant::now();
+        let mut comm_wait = 0.0f64;
+        let lr = w.lr_at(step);
+        let batch = w.shuffle.take(ep);
+        let (x, y) = w.to_batch_data(&batch);
+
+        // ---- compute (overlaps the in-flight partner model) ----------
+        let (grads, loss) = w.backend.grad(&w.params, &x, &y);
+
+        // ---- drain previous step's partner model & mix (§6) ----------
+        if let Some((_, pm)) = pending.take() {
+            let tw = Instant::now();
+            for (off, req) in pm.reqs {
+                let data = req.wait();
+                partner_buf[off..off + data.len()].copy_from_slice(&data);
+            }
+            comm_wait += tw.elapsed().as_secs_f64();
+            ops::mix_into(&mut w.params, &partner_buf);
+        }
+
+        // ---- local update ---------------------------------------------
+        w.backend.apply_update(&mut w.params, &mut w.mom, &grads, lr);
+
+        // ---- gossip exchange (every `period` steps) -------------------
+        if step % period == 0 {
+            let gossip_step = step / period;
+            if let Some(senders) = topo.senders_to(w.rank, gossip_step) {
+                // random-gossip baseline: blocking, possibly unbalanced
+                let ex = topo.exchange(w.rank, gossip_step);
+                send_model(ep, ex.send_to, step, &w.params, &layers);
+                let tw = Instant::now();
+                for src in senders {
+                    let pm = post_recvs(ep, src, step, &layers);
+                    for (off, req) in pm.reqs {
+                        let data = req.wait();
+                        partner_buf[off..off + data.len()].copy_from_slice(&data);
+                    }
+                    ops::mix_into(&mut w.params, &partner_buf);
+                }
+                comm_wait += tw.elapsed().as_secs_f64();
+            } else {
+                let ex = topo.exchange(w.rank, gossip_step);
+                if ex.send_to != w.rank {
+                    send_model(ep, ex.send_to, step, &w.params, &layers);
+                    let pm = post_recvs(ep, ex.recv_from, step, &layers);
+                    if sync_mix {
+                        let tw = Instant::now();
+                        for (off, req) in pm.reqs {
+                            let data = req.wait();
+                            partner_buf[off..off + data.len()]
+                                .copy_from_slice(&data);
+                        }
+                        comm_wait += tw.elapsed().as_secs_f64();
+                        ops::mix_into(&mut w.params, &partner_buf);
+                    } else {
+                        pending = Some((step, PendingModel { reqs: pm.reqs }));
+                    }
+                }
+            }
+        }
+
+        // ---- sample shuffle (§4.5.2, overlapped) ----------------------
+        w.shuffle.give_back(ep, batch);
+
+        w.record_step(step, loss, t0, comm_wait);
+
+        if w.cfg.eval_every > 0
+            && (step % w.cfg.eval_every == 0 || step + 1 == steps)
+        {
+            let (_, acc) = w.evaluate();
+            w.metrics.accuracy.push((step, acc));
+        }
+    }
+
+    // drain any final in-flight model so the fabric is clean
+    if let Some((_, pm)) = pending.take() {
+        for (off, req) in pm.reqs {
+            let data = req.wait();
+            partner_buf[off..off + data.len()].copy_from_slice(&data);
+        }
+        ops::mix_into(&mut w.params, &partner_buf);
+    }
+
+    let c = ep.fabric().counters(w.rank);
+    w.metrics.msgs_sent = c.msgs_sent.load(Ordering::Relaxed);
+    w.metrics.bytes_sent = c.bytes_sent.load(Ordering::Relaxed);
+}
+
+/// Send the model to `dst`, one message per layer slice (§5 layer-wise).
+fn send_model(
+    ep: &Endpoint,
+    dst: usize,
+    step: usize,
+    params: &[f32],
+    layers: &[(usize, usize)],
+) {
+    for (li, &(off, len)) in layers.iter().enumerate() {
+        ep.isend(
+            dst,
+            Tag::layer(li).round(step),
+            params[off..off + len].to_vec(),
+        );
+    }
+}
+
+/// Post per-layer irecvs for the model sent by `src` at `step`.
+fn post_recvs(
+    ep: &Endpoint,
+    src: usize,
+    step: usize,
+    layers: &[(usize, usize)],
+) -> PendingModel {
+    PendingModel {
+        reqs: layers
+            .iter()
+            .enumerate()
+            .map(|(li, &(off, _))| (off, ep.irecv(src, Tag::layer(li).round(step))))
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_builder_variants() {
+        let t = GossipTopology::build(crate::config::Algo::Gossip, 8, true, 1);
+        assert!(matches!(t, GossipTopology::Rotated(_)));
+        let t = GossipTopology::build(crate::config::Algo::Gossip, 8, false, 1);
+        assert!(matches!(t, GossipTopology::Plain(_)));
+        let t =
+            GossipTopology::build(crate::config::Algo::GossipRandom, 8, true, 1);
+        assert!(matches!(t, GossipTopology::Random(_)));
+        assert!(t.senders_to(0, 0).is_some());
+    }
+}

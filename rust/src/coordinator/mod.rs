@@ -1,0 +1,29 @@
+//! The GossipGraD coordinator — the paper's contribution (L3).
+//!
+//! * [`gossip`]      — the GossipGraD engine: dissemination/hypercube
+//!   partner selection, §4.5.1 partner rotation, pairwise model mixing,
+//!   §5.1 asynchronous (overlapped) exchange, §4.5.2 ring sample shuffle.
+//! * [`baselines`]   — everything the paper compares against: synchronous
+//!   all-reduce SGD, AGD (layer-wise all-reduce), AGD-every-log(p) steps
+//!   (Fig 17), random gossip (Jin/Blot), parameter server (Fig 2a).
+//! * [`shuffle`]     — the asynchronous distributed sample shuffle.
+//! * [`worker`]      — per-rank training state shared by all algorithms.
+//! * [`trainer`]     — multi-threaded launcher: one thread per rank over
+//!   the in-process fabric, metrics collection, validation evaluation.
+//!
+//! ## Execution model
+//! Each rank is a thread owning its model replica (flat `f32[N]`),
+//! momentum buffer, and data shard.  Compute runs through a shared
+//! [`ModelBackend`](crate::runtime::ModelBackend) (PJRT artifacts or the
+//! native backend).  All communication flows through the MPI-like
+//! transport, so message counts/bytes and blocked time are measured, not
+//! estimated.
+
+pub mod baselines;
+pub mod checkpoint;
+pub mod gossip;
+pub mod shuffle;
+pub mod trainer;
+pub mod worker;
+
+pub use trainer::{run, RunResult};

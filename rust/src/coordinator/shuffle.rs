@@ -1,0 +1,221 @@
+//! Asynchronous distributed sample shuffle (paper §4.5.2).
+//!
+//! Ring topology, deliberately different from the gradient topology:
+//! after a rank consumes a batch it forwards that batch to its right
+//! neighbour and (asynchronously) receives one from its left.  Batches
+//! therefore circulate the ring, giving the fairness property proved in
+//! topology::ring's tests: a sample returns to a rank only after every
+//! other rank has held it once.
+//!
+//! The exchange is fully overlapped: sends are non-blocking; the receive
+//! posted at step k is only *required* by the time the local queue runs
+//! dry, which takes `rows_per_rank / batch` further steps — by then the
+//! message has long arrived.
+//!
+//! Token batches (transformer) ride the same path: token ids are carried
+//! in the f32 payload (exact for vocab < 2^24).
+
+use crate::transport::{Endpoint, RecvReq, Tag};
+
+/// One circulating unit: a batch of samples (features or token ids).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SampleBatch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+}
+
+impl SampleBatch {
+    fn pack(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.x.len() + self.y.len());
+        out.extend_from_slice(&self.x);
+        out.extend(self.y.iter().map(|&v| v as f32));
+        out
+    }
+
+    fn unpack(mut payload: Vec<f32>, rows: usize) -> SampleBatch {
+        let y_start = payload.len() - rows;
+        let y = payload[y_start..].iter().map(|&v| v as i32).collect();
+        payload.truncate(y_start);
+        SampleBatch { x: payload, y }
+    }
+}
+
+/// Per-rank ring-shuffle state.
+pub struct RingShuffle {
+    queue: std::collections::VecDeque<SampleBatch>,
+    pending: std::collections::VecDeque<RecvReq>,
+    next: usize,
+    prev: usize,
+    rows_per_batch: usize,
+    step: usize,
+    /// disabled ranks pass batches straight through the queue
+    enabled: bool,
+}
+
+impl RingShuffle {
+    /// `batches`: this rank's initial shard cut into batch-sized units.
+    /// `p` is the number of *workers* in the ring — this may be smaller
+    /// than the fabric size (the parameter-server fabric has extra
+    /// server ranks that must not be in the sample ring).
+    pub fn new(
+        ep: &Endpoint,
+        p: usize,
+        batches: Vec<SampleBatch>,
+        rows_per_batch: usize,
+        enabled: bool,
+    ) -> RingShuffle {
+        let me = ep.rank();
+        assert!(me < p, "rank {me} outside worker ring of size {p}");
+        assert!(!batches.is_empty(), "rank {me}: empty shard");
+        RingShuffle {
+            queue: batches.into(),
+            pending: Default::default(),
+            next: (me + 1) % p,
+            prev: (me + p - 1) % p,
+            rows_per_batch,
+            step: 0,
+            enabled,
+        }
+    }
+
+    /// Number of batches currently held (queued locally).
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Take the next batch to train on.  Blocks on the oldest in-flight
+    /// receive only if the local queue is empty.
+    pub fn take(&mut self, _ep: &Endpoint) -> SampleBatch {
+        if let Some(b) = self.queue.pop_front() {
+            return b;
+        }
+        let req = self
+            .pending
+            .pop_front()
+            .expect("ring shuffle: queue empty with no in-flight batches");
+        SampleBatch::unpack(req.wait(), self.rows_per_batch)
+    }
+
+    /// Return a consumed batch: forward it around the ring (if enabled)
+    /// and harvest any batches that have arrived meanwhile.
+    pub fn give_back(&mut self, ep: &Endpoint, batch: SampleBatch) {
+        if !self.enabled || self.next == ep.rank() {
+            self.queue.push_back(batch);
+            return;
+        }
+        let tag = Tag::SAMPLES.round(self.step);
+        ep.isend(self.next, tag, batch.pack());
+        self.pending.push_back(ep.irecv(self.prev, tag));
+        self.step += 1;
+        // opportunistically drain completed receives (non-blocking)
+        while let Some(front) = self.pending.front_mut() {
+            if front.test() {
+                let req = self.pending.pop_front().unwrap();
+                self.queue
+                    .push_back(SampleBatch::unpack(req.wait(), self.rows_per_batch));
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{CostModel, Fabric};
+    use std::thread;
+
+    fn mk_batches(rank: usize, n: usize, rows: usize, dim: usize) -> Vec<SampleBatch> {
+        (0..n)
+            .map(|b| SampleBatch {
+                x: vec![(rank * 100 + b) as f32; rows * dim],
+                y: vec![(rank * 100 + b) as i32; rows],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let b = SampleBatch {
+            x: vec![1.5, -2.0, 3.0, 0.0],
+            y: vec![7, 123456],
+        };
+        let up = SampleBatch::unpack(b.pack(), 2);
+        assert_eq!(up, b);
+    }
+
+    #[test]
+    fn batches_circulate_the_ring() {
+        let p = 4;
+        let steps = 12;
+        let f = Fabric::new(p, CostModel::zero());
+        let handles: Vec<_> = (0..p)
+            .map(|r| {
+                let ep = f.endpoint(r);
+                thread::spawn(move || {
+                    let mut sh =
+                        RingShuffle::new(&ep, p, mk_batches(r, 3, 2, 1), 2, true);
+                    let mut seen_owners = std::collections::HashSet::new();
+                    for _ in 0..steps {
+                        let b = sh.take(&ep);
+                        seen_owners.insert(b.y[0] / 100);
+                        sh.give_back(&ep, b);
+                    }
+                    seen_owners
+                })
+            })
+            .collect();
+        for h in handles {
+            let owners = h.join().unwrap();
+            // over 12 steps every rank sees batches originating from
+            // multiple other ranks — circulation is happening
+            assert!(
+                owners.len() >= 3,
+                "saw only origins {owners:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn disabled_shuffle_keeps_local_data() {
+        let f = Fabric::new(2, CostModel::zero());
+        let ep = f.endpoint(0);
+        let mut sh = RingShuffle::new(&ep, 2, mk_batches(0, 2, 2, 3), 2, false);
+        for _ in 0..6 {
+            let b = sh.take(&ep);
+            assert_eq!(b.y[0] / 100, 0, "foreign batch with shuffle off");
+            sh.give_back(&ep, b);
+        }
+        assert_eq!(f.total_msgs(), 0);
+    }
+
+    #[test]
+    fn conservation_no_batch_lost() {
+        // total batches across ranks is conserved after many steps
+        let p = 3;
+        let per = 4;
+        let f = Fabric::new(p, CostModel::zero());
+        let handles: Vec<_> = (0..p)
+            .map(|r| {
+                let ep = f.endpoint(r);
+                thread::spawn(move || {
+                    let mut sh =
+                        RingShuffle::new(&ep, p, mk_batches(r, per, 1, 1), 1, true);
+                    for _ in 0..20 {
+                        let b = sh.take(&ep);
+                        sh.give_back(&ep, b);
+                    }
+                    // drain all in flight
+                    while !sh.pending.is_empty() {
+                        let req = sh.pending.pop_front().unwrap();
+                        sh.queue.push_back(SampleBatch::unpack(req.wait(), 1));
+                    }
+                    sh.queue.len()
+                })
+            })
+            .collect();
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, p * per);
+    }
+}

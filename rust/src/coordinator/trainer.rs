@@ -1,0 +1,281 @@
+//! Multi-threaded training launcher: builds the fabric, dataset and
+//! backend, spawns one thread per rank, runs the selected algorithm and
+//! collects per-rank metrics.
+
+use super::baselines;
+use super::gossip::{run_gossip, GossipTopology};
+use super::worker::{Backend, Worker};
+use crate::config::{Algo, RunConfig};
+use crate::data::synthetic::{self, Dataset};
+use crate::metrics::RunMetrics;
+use crate::nativenet::NativeMlp;
+use crate::runtime::PjrtModel;
+use crate::transport::Fabric;
+
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// Outcome of one distributed run.
+pub struct RunResult {
+    pub per_rank: Vec<RunMetrics>,
+    /// Final parameter vectors (rank-major) — used by convergence tests
+    /// to measure cross-rank disagreement.
+    pub final_params: Vec<Vec<f32>>,
+    /// rank-0 validation accuracy at the end (if eval was enabled).
+    pub final_accuracy: Option<f64>,
+    pub wall_secs: f64,
+}
+
+impl RunResult {
+    /// Max pairwise L∞ distance between rank models (consensus metric;
+    /// Corollary 6.3 says this shrinks under gossip).
+    pub fn max_disagreement(&self) -> f32 {
+        let mut worst = 0.0f32;
+        for a in &self.final_params {
+            for b in &self.final_params {
+                for (x, y) in a.iter().zip(b) {
+                    worst = worst.max((x - y).abs());
+                }
+            }
+        }
+        worst
+    }
+
+    pub fn mean_efficiency_pct(&self) -> f64 {
+        crate::util::mean(
+            &self
+                .per_rank
+                .iter()
+                .map(|m| m.efficiency_pct())
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    pub fn mean_step_secs(&self) -> f64 {
+        crate::util::mean(
+            &self
+                .per_rank
+                .iter()
+                .map(|m| m.mean_step_secs())
+                .collect::<Vec<_>>(),
+        )
+    }
+}
+
+/// Build the training/validation datasets for `cfg.model`.
+pub fn build_datasets(
+    cfg: &RunConfig,
+    batch: usize,
+    x_len: usize,
+    classes: usize,
+) -> (Dataset, Dataset) {
+    let rows = cfg.rows_per_rank.max(batch * 2) * cfg.ranks;
+    match cfg.model.as_str() {
+        "mlp" => (
+            synthetic::mnist_analog_split(rows, cfg.seed, 0),
+            synthetic::mnist_analog_split(cfg.val_rows, cfg.seed, 1),
+        ),
+        "cnn" => (
+            synthetic::cifar_analog_split(rows, cfg.seed, 0),
+            synthetic::cifar_analog_split(cfg.val_rows, cfg.seed, 1),
+        ),
+        m if m.starts_with("transformer") => {
+            let seq = x_len / batch;
+            let mk = |n_rows: usize, stream: u64| {
+                let toks = synthetic::token_corpus_split(
+                    (n_rows + 1) * seq + 1,
+                    classes,
+                    4,
+                    cfg.seed,
+                    stream,
+                );
+                let (xs, ys) = crate::data::shard::lm_windows(&toks, seq);
+                let rows = xs.len();
+                Dataset {
+                    x: xs.iter()
+                        .flat_map(|w| w.iter().map(|&t| t as f32))
+                        .collect(),
+                    // labels: next tokens, flattened (seq per row) — the
+                    // Dataset.y field holds row labels for image tasks;
+                    // for LM we store targets separately per row below.
+                    y: ys.iter().flat_map(|w| w.iter().cloned()).collect(),
+                    dim: seq,
+                    rows,
+                    classes,
+                }
+            };
+            (mk(rows, 0), mk(cfg.val_rows.max(4), 1))
+        }
+        other => panic!("unknown model {other:?}"),
+    }
+}
+
+/// Load the configured backend (PJRT artifacts or native).
+pub fn build_backend(cfg: &RunConfig) -> Result<Backend> {
+    if cfg.use_artifacts {
+        let dir = std::path::Path::new(&cfg.artifacts_dir);
+        let m = PjrtModel::load(dir, &cfg.model)
+            .with_context(|| format!("loading {} artifacts", cfg.model))?;
+        Ok(Arc::new(m))
+    } else {
+        anyhow::ensure!(
+            cfg.model == "mlp",
+            "native backend only implements the mlp family"
+        );
+        Ok(Arc::new(NativeMlp::mnist(64)))
+    }
+}
+
+/// Run a full distributed training job per `cfg`; blocks until done.
+pub fn run(cfg: &RunConfig) -> Result<RunResult> {
+    let backend = build_backend(cfg)?;
+    run_with_backend(cfg, backend)
+}
+
+/// Like [`run`] but with a caller-provided backend (tests inject the
+/// native backend or tiny models here).
+pub fn run_with_backend(cfg: &RunConfig, backend: Backend) -> Result<RunResult> {
+    let p = cfg.ranks;
+    anyhow::ensure!(p >= 1, "need at least one rank");
+    let is_ps = cfg.algo == Algo::ParamServer;
+    let fabric_size = if is_ps { p + cfg.ps_servers.max(1) } else { p };
+    let fabric = Fabric::new(fabric_size, cfg.cost_model());
+
+    let batch = backend.batch();
+    let x_len = backend.x_len();
+    let (train, val) = build_datasets(cfg, batch, x_len, backend.classes());
+    // For the LM, labels live row-wise in train.y with `dim` targets per
+    // row; the Worker's SampleBatch carries (x row, y row) pairs — image
+    // tasks have 1 label per row, LM tasks have seq labels per row.
+    let train = Arc::new(train);
+    let val = Arc::new(val);
+
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for rank in 0..p {
+        let ep = fabric.endpoint(rank);
+        let backend = Arc::clone(&backend);
+        let train = Arc::clone(&train);
+        let val = Arc::clone(&val);
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut w = build_worker(rank, &ep, backend, &train, val, &cfg);
+            match cfg.algo {
+                Algo::Gossip | Algo::GossipHypercube | Algo::GossipRandom => {
+                    let topo =
+                        GossipTopology::build(cfg.algo, p, cfg.rotation, cfg.seed);
+                    run_gossip(&mut w, &ep, &topo, false);
+                }
+                Algo::SgdSync => {
+                    baselines::run_allreduce(&mut w, &ep, cfg.allreduce, false)
+                }
+                Algo::Agd => {
+                    baselines::run_allreduce(&mut w, &ep, cfg.allreduce, true)
+                }
+                Algo::PeriodicAgd => {
+                    baselines::run_periodic(&mut w, &ep, cfg.allreduce)
+                }
+                Algo::ParamServer => {
+                    baselines::run_ps_worker(&mut w, &ep, p);
+                }
+            }
+            (w.metrics, w.params)
+        }));
+    }
+    if is_ps {
+        // dedicate this thread to the (first) server; extra servers are
+        // future work — the paper's critique targets the 1-server case
+        let ep = fabric.endpoint(p);
+        let sb = Arc::clone(&backend);
+        let c2 = cfg.clone();
+        baselines::run_ps_server(&ep, &sb, p, c2.steps, move |s| {
+            c2.lr_schedule.lr_at(c2.effective_lr(), s) as f32
+        });
+    }
+
+    let mut per_rank = Vec::new();
+    let mut final_params = Vec::new();
+    for h in handles {
+        let (m, params) = h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+        per_rank.push(m);
+        final_params.push(params);
+    }
+    per_rank.sort_by_key(|m| m.rank);
+    let final_accuracy = per_rank
+        .first()
+        .and_then(|m| m.accuracy.last())
+        .map(|&(_, a)| a);
+    Ok(RunResult {
+        per_rank,
+        final_params,
+        final_accuracy,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Construct a Worker, handling the LM's row-wise multi-label layout.
+fn build_worker(
+    rank: usize,
+    ep: &crate::transport::Endpoint,
+    backend: Backend,
+    train: &Dataset,
+    val: Arc<Dataset>,
+    cfg: &RunConfig,
+) -> Worker {
+    if backend.x_is_int() {
+        // LM: each dataset row is one sequence; labels are seq targets.
+        // Re-pack rows so Worker's batch cutter sees (x=seq toks, y=seq
+        // targets) with batch = backend.batch() rows per batch.
+        let seq = train.dim;
+        let labels_per_row = backend.labels_len() / backend.batch();
+        assert_eq!(labels_per_row, seq);
+        let mut d = Dataset {
+            x: train.x.clone(),
+            y: train.y.clone(),
+            dim: seq,
+            rows: train.rows,
+            classes: train.classes,
+        };
+        // Worker::new uses Shard { y per row = 1 }, so for the LM we
+        // inline a custom cutter here instead.
+        let p = cfg.ranks;
+        let base = d.rows / p;
+        let extra = d.rows % p;
+        let my_rows = base + usize::from(rank < extra);
+        let start = rank * base + rank.min(extra);
+        let batch = backend.batch();
+        let n_batches = (my_rows / batch).max(1);
+        let mut batches = Vec::new();
+        for b in 0..n_batches {
+            let mut x = Vec::with_capacity(batch * seq);
+            let mut y = Vec::with_capacity(batch * seq);
+            for i in 0..batch {
+                let r = start + (b * batch + i) % my_rows.max(1);
+                x.extend_from_slice(&d.x[r * seq..(r + 1) * seq]);
+                y.extend_from_slice(&d.y[r * seq..(r + 1) * seq]);
+            }
+            batches.push(super::shuffle::SampleBatch { x, y });
+        }
+        let shuffle = super::shuffle::RingShuffle::new(
+            ep,
+            p,
+            batches,
+            backend.labels_len(),
+            cfg.sample_shuffle,
+        );
+        let (params, mom) = super::worker::initial_state(&backend, cfg);
+        d.rows = my_rows;
+        Worker {
+            rank,
+            backend,
+            params,
+            mom,
+            shuffle,
+            metrics: RunMetrics::new(rank),
+            cfg: cfg.clone(),
+            val,
+        }
+    } else {
+        Worker::new(rank, ep, backend, train, val, cfg)
+    }
+}

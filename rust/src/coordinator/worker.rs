@@ -1,0 +1,164 @@
+//! Per-rank training state shared by GossipGraD and every baseline.
+
+use super::shuffle::{RingShuffle, SampleBatch};
+use crate::config::RunConfig;
+use crate::data::synthetic::Dataset;
+use crate::data::Shard;
+use crate::metrics::RunMetrics;
+use crate::runtime::{BatchData, ModelBackend};
+use crate::transport::Endpoint;
+use std::sync::Arc;
+use std::time::Instant;
+
+pub type Backend = Arc<dyn ModelBackend + Send + Sync>;
+
+/// Initial (params, momentum) for a rank: the backend's common init, or
+/// a checkpoint when `cfg.resume_from` is set (all ranks resume from the
+/// same state, as they started from the same init).
+pub fn initial_state(backend: &Backend, cfg: &RunConfig) -> (Vec<f32>, Vec<f32>) {
+    if let Some(dir) = &cfg.resume_from {
+        let ck = super::checkpoint::Checkpoint::load(std::path::Path::new(dir))
+            .unwrap_or_else(|e| panic!("resume_from {dir}: {e}"));
+        assert_eq!(
+            ck.params.len(),
+            backend.param_count(),
+            "checkpoint size mismatch"
+        );
+        (ck.params, ck.momentum)
+    } else {
+        let params = backend.init_params();
+        let n = params.len();
+        (params, vec![0.0; n])
+    }
+}
+
+/// One rank's model replica + data + metrics.
+pub struct Worker {
+    pub rank: usize,
+    pub backend: Backend,
+    pub params: Vec<f32>,
+    pub mom: Vec<f32>,
+    pub shuffle: RingShuffle,
+    pub metrics: RunMetrics,
+    pub cfg: RunConfig,
+    /// validation set shared by all ranks (read-only)
+    pub val: Arc<Dataset>,
+}
+
+impl Worker {
+    pub fn new(
+        rank: usize,
+        ep: &Endpoint,
+        backend: Backend,
+        train: &Dataset,
+        val: Arc<Dataset>,
+        cfg: &RunConfig,
+    ) -> Worker {
+        let p = cfg.ranks;
+        let shard = Shard::partition(train, rank, p);
+        let batch = backend.batch();
+        // cut the shard into batch-sized circulating units
+        let n_batches = (shard.rows / batch).max(1);
+        let mut batches = Vec::with_capacity(n_batches);
+        for b in 0..n_batches {
+            let lo = b * batch;
+            let hi = ((b + 1) * batch).min(shard.rows);
+            let mut x = Vec::with_capacity(batch * shard.dim);
+            let mut y = Vec::with_capacity(batch);
+            for i in lo..hi {
+                x.extend_from_slice(shard.row(i));
+                y.push(shard.y[i]);
+            }
+            // pad the tail batch by wrapping (static shapes)
+            let mut i = lo;
+            while y.len() < batch {
+                x.extend_from_slice(shard.row(i % shard.rows));
+                y.push(shard.y[i % shard.rows]);
+                i += 1;
+            }
+            batches.push(SampleBatch { x, y });
+        }
+        let shuffle = RingShuffle::new(
+            ep,
+            p,
+            batches,
+            backend.labels_len(),
+            cfg.sample_shuffle,
+        );
+        let (params, mom) = initial_state(&backend, cfg);
+        Worker {
+            rank,
+            backend,
+            params,
+            mom,
+            shuffle,
+            metrics: RunMetrics::new(rank),
+            cfg: cfg.clone(),
+            val,
+        }
+    }
+
+    /// Learning rate at `step` (schedule over the *effective* base lr).
+    pub fn lr_at(&self, step: usize) -> f32 {
+        self.cfg
+            .lr_schedule
+            .lr_at(self.cfg.effective_lr(), step) as f32
+    }
+
+    /// Convert a circulating batch into backend input form.
+    pub fn to_batch_data(&self, b: &SampleBatch) -> (BatchData, Vec<i32>) {
+        if self.backend.x_is_int() {
+            let toks: Vec<i32> = b.x.iter().map(|&v| v as i32).collect();
+            (BatchData::I32(toks), b.y.clone())
+        } else {
+            (BatchData::F32(b.x.clone()), b.y.clone())
+        }
+    }
+
+    /// Evaluate on the shared validation set; returns (loss, accuracy).
+    /// For the LM, "accuracy" is next-token accuracy (labels per row =
+    /// sequence length); for image tasks it is top-1 classification.
+    pub fn evaluate(&self) -> (f64, f64) {
+        let batch = self.backend.batch();
+        let dim = self.val.dim;
+        let labels_per_row = self.backend.labels_len() / batch;
+        let mut total_loss = 0.0f64;
+        let mut total_correct = 0.0f64;
+        let mut label_rows = 0usize;
+        let n_batches = (self.val.rows / batch).clamp(1, 64);
+        for b in 0..n_batches {
+            let lo = (b * batch) % self.val.rows.max(1);
+            let mut x = Vec::with_capacity(batch * dim);
+            let mut y = Vec::with_capacity(batch * labels_per_row);
+            for i in 0..batch {
+                let r = (lo + i) % self.val.rows;
+                x.extend_from_slice(self.val.row(r));
+                y.extend_from_slice(
+                    &self.val.y[r * labels_per_row..(r + 1) * labels_per_row],
+                );
+            }
+            let xb = if self.backend.x_is_int() {
+                BatchData::I32(x.iter().map(|&v| v as i32).collect())
+            } else {
+                BatchData::F32(x)
+            };
+            let (loss, correct) = self.backend.eval(&self.params, &xb, &y);
+            total_loss += loss as f64;
+            total_correct += correct as f64;
+            label_rows += batch * labels_per_row;
+        }
+        (
+            total_loss / n_batches as f64,
+            total_correct / label_rows.max(1) as f64,
+        )
+    }
+
+    /// Record one step's timings into the metrics.
+    pub fn record_step(&mut self, step: usize, loss: f32, t0: Instant, comm_wait: f64) {
+        self.metrics.step_secs.push(t0.elapsed().as_secs_f64());
+        self.metrics.comm_wait_secs.push(comm_wait);
+        if step % 10 == 0 || step + 1 == self.cfg.steps {
+            self.metrics.loss.push((step, loss as f64));
+        }
+    }
+}

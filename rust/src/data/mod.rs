@@ -1,0 +1,14 @@
+//! Synthetic datasets + sharding — the laptop-scale stand-ins for
+//! MNIST / CIFAR10 / ImageNet-1K (DESIGN.md "substitutions" table).
+//!
+//! * [`synthetic`] — Gaussian-blob classification generators with
+//!   per-class structure (learnable, so accuracy curves are meaningful)
+//!   and a Markov token corpus for the transformer LM.
+//! * [`shard`]     — contiguous sharding across ranks + batch iterators,
+//!   mirroring how the paper's netCDF reader partitions ImageNet.
+
+pub mod shard;
+pub mod synthetic;
+
+pub use shard::{BatchIter, Shard};
+pub use synthetic::{blob_classification, token_corpus, Dataset};

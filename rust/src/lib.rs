@@ -1,0 +1,45 @@
+//! # GossipGraD — gossip-communication-based asynchronous gradient descent
+//!
+//! Full-system reproduction of *GossipGraD: Scalable Deep Learning using
+//! Gossip Communication based Asynchronous Gradient Descent* (Daily,
+//! Vishnu, Siegel, Warfel, Amatya — PNNL, 2018) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! Layer map (see `DESIGN.md` for the full inventory):
+//!
+//! * [`topology`] — virtual communication topologies: dissemination,
+//!   hypercube, ring, random gossip, plus communicator **rotation**
+//!   (paper §4.3–4.5).
+//! * [`transport`] — MPI-like in-process message substrate with
+//!   non-blocking isend/irecv/test_all/wait_all and an α–β network cost
+//!   model (`simnet`) standing in for InfiniBand/Aries.
+//! * [`collectives`] — all-reduce algorithms (recursive doubling,
+//!   binomial tree, ring) built on the transport; the SGD/AGD baselines.
+//! * [`coordinator`] — the paper's contribution: the GossipGraD engine
+//!   (partner selection + pairwise mixing + rotation + ring sample
+//!   shuffle + layer-wise asynchronous exchange) and every baseline it
+//!   is compared against (sync SGD, AGD, periodic-AGD, random gossip,
+//!   parameter server).
+//! * [`runtime`] — PJRT executor: loads `artifacts/*.hlo.txt` produced
+//!   by `python/compile/aot.py` and runs them on the XLA CPU client.
+//! * [`nativenet`] — pure-Rust compute backend (same model families)
+//!   used for large-p experiments and artifact-independent tests.
+//! * [`data`] — synthetic datasets (MNIST/CIFAR analogs, token corpus),
+//!   sharding, ring shuffle buffers.
+//! * [`sim`] — discrete-event scale simulator regenerating the paper's
+//!   128-GPU efficiency tables from calibrated per-step costs.
+//! * [`metrics`], [`config`], [`util`] — supporting infrastructure
+//!   (the offline environment has no clap/serde/criterion/proptest, so
+//!   `util` carries small hand-rolled equivalents).
+
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod nativenet;
+pub mod runtime;
+pub mod sim;
+pub mod topology;
+pub mod transport;
+pub mod util;

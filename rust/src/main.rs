@@ -1,0 +1,269 @@
+//! `gossipgrad` — CLI launcher for the GossipGraD reproduction.
+//!
+//! Subcommands:
+//!   train      run a distributed training job (threads-as-ranks)
+//!   sweep      efficiency sweep over rank counts (real runs)
+//!   sim        scale simulation (Table 7-style, up to 1024 devices)
+//!   inspect    print artifact metadata
+//!
+//! Examples:
+//!   gossipgrad train --model mlp --algo gossip --ranks 8 --steps 200
+//!   gossipgrad train --config configs/mnist_gossip_32.json
+//!   gossipgrad sim --workload resnet50 --algos gossip,agd-ring
+//!   gossipgrad inspect --model transformer
+
+use anyhow::{bail, Context, Result};
+use gossipgrad::collectives::Algorithm;
+use gossipgrad::config::{Algo, RunConfig};
+use gossipgrad::coordinator;
+use gossipgrad::metrics::sparkline;
+use gossipgrad::runtime::artifacts::{default_dir, ArtifactSet};
+use gossipgrad::sim::{self, Schedule, Workload};
+use gossipgrad::transport::CostModel;
+use gossipgrad::util::args::Args;
+use gossipgrad::util::bench::Table;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env(&["no-rotation", "no-shuffle", "native", "lr-scaling"])
+        .map_err(anyhow::Error::msg)?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("inspect") => cmd_inspect(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o:?}\n");
+            }
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "gossipgrad — GossipGraD (Daily et al. 2018) reproduction\n\n\
+         USAGE: gossipgrad <train|sweep|sim|inspect> [--key value ...]\n\n\
+         train:   --model mlp|cnn|transformer  --algo gossip|gossip-hypercube|\n\
+                  gossip-random|sgd|agd|periodic-agd|ps  --ranks N --steps N\n\
+                  --lr F --eval-every N --config file.json --seed N\n\
+                  --alpha S --beta-gbps G --noise F\n\
+                  [--no-rotation] [--no-shuffle] [--native] [--lr-scaling]\n\
+         sweep:   train across --ranks-list 2,4,8 (other train flags apply)\n\
+         sim:     --workload resnet50|googlenet|lenet3|cifarnet\n\
+                  --p-list 4,8,...  --algos gossip,agd-ring,sgd-rd,ps1\n\
+         inspect: --model NAME [--dir artifacts]"
+    );
+}
+
+/// Build a RunConfig from `--config` (optional) + CLI overrides.
+pub fn config_from(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::load(path).map_err(anyhow::Error::msg)?,
+        None => RunConfig::default(),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(a) = args.get("algo") {
+        cfg.algo = Algo::parse(a).map_err(anyhow::Error::msg)?;
+    }
+    if let Some(a) = args.get("allreduce") {
+        cfg.allreduce = match a {
+            "recursive-doubling" | "rd" => Algorithm::RecursiveDoubling,
+            "binomial-tree" | "tree" => Algorithm::BinomialTree,
+            "ring" => Algorithm::Ring,
+            other => bail!("unknown allreduce {other:?}"),
+        };
+    }
+    cfg.ranks = args.usize_or("ranks", cfg.ranks);
+    cfg.steps = args.usize_or("steps", cfg.steps);
+    cfg.lr = args.f64_or("lr", cfg.lr);
+    cfg.seed = args.usize_or("seed", cfg.seed as usize) as u64;
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every);
+    cfg.rows_per_rank = args.usize_or("rows-per-rank", cfg.rows_per_rank);
+    cfg.gossip_period = args.usize_or("gossip-period", cfg.gossip_period);
+    cfg.net_alpha = args.f64_or("alpha", cfg.net_alpha);
+    if let Some(g) = args.get("beta-gbps") {
+        let gbps: f64 = g.parse().context("--beta-gbps")?;
+        cfg.net_beta = 1.0 / (gbps * 1e9);
+    }
+    cfg.net_noise = args.f64_or("noise", cfg.net_noise);
+    if args.flag("no-rotation") {
+        cfg.rotation = false;
+    }
+    if args.flag("no-shuffle") {
+        cfg.sample_shuffle = false;
+    }
+    if args.flag("native") {
+        cfg.use_artifacts = false;
+    }
+    if args.flag("lr-scaling") {
+        cfg.krizhevsky_lr_scaling = true;
+    }
+    if let Some(d) = args.get("artifacts-dir") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    if let Some(d) = args.get("resume") {
+        cfg.resume_from = Some(d.to_string());
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    println!(
+        "train: model={} algo={} ranks={} steps={} lr={} (effective {:.4})",
+        cfg.model,
+        cfg.algo.name(),
+        cfg.ranks,
+        cfg.steps,
+        cfg.lr,
+        cfg.effective_lr()
+    );
+    let res = coordinator::run(&cfg)?;
+    report(&res);
+    if let Some(dir) = args.get("save") {
+        let ck = gossipgrad::coordinator::checkpoint::Checkpoint {
+            model: cfg.model.clone(),
+            step: cfg.steps,
+            params: res.final_params[0].clone(),
+            // momentum is per-rank transient state; a resumed run
+            // restarts it (standard practice for step-LR restarts)
+            momentum: vec![0.0; res.final_params[0].len()],
+        };
+        ck.save(std::path::Path::new(dir)).map_err(anyhow::Error::msg)?;
+        println!("saved checkpoint to {dir}");
+    }
+    Ok(())
+}
+
+fn report(res: &coordinator::RunResult) {
+    let m0 = &res.per_rank[0];
+    let losses: Vec<f64> = m0.loss.iter().map(|&(_, l)| l).collect();
+    println!(
+        "rank0 loss  {}  {:.4} -> {:.4}",
+        sparkline(&losses, 40),
+        losses.first().unwrap_or(&f64::NAN),
+        losses.last().unwrap_or(&f64::NAN)
+    );
+    if let Some(acc) = res.final_accuracy {
+        println!("final validation accuracy: {:.2}%", 100.0 * acc);
+    }
+    println!(
+        "mean step {:.2} ms | efficiency {:.1}% | disagreement {:.3e} | {} msgs | wall {:.1}s",
+        1e3 * res.mean_step_secs(),
+        res.mean_efficiency_pct(),
+        res.max_disagreement(),
+        res.per_rank.iter().map(|m| m.msgs_sent).sum::<u64>(),
+        res.wall_secs,
+    );
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let base = config_from(args)?;
+    let list = args.get_or("ranks-list", "2,4,8");
+    let mut table = Table::new(&["ranks", "step_ms", "eff_%", "msgs/rank/step"]);
+    for tok in list.split(',') {
+        let ranks: usize = tok.trim().parse().context("--ranks-list")?;
+        let mut cfg = base.clone();
+        cfg.ranks = ranks;
+        let res = coordinator::run(&cfg)?;
+        let msgs = res.per_rank.iter().map(|m| m.msgs_sent).sum::<u64>() as f64
+            / (ranks * cfg.steps) as f64;
+        table.row(&[
+            ranks.to_string(),
+            format!("{:.2}", 1e3 * res.mean_step_secs()),
+            format!("{:.1}", res.mean_efficiency_pct()),
+            format!("{msgs:.1}"),
+        ]);
+    }
+    table.print(&format!("sweep: {} / {}", base.model, base.algo.name()));
+    Ok(())
+}
+
+fn parse_sched(tok: &str) -> Result<Schedule> {
+    Ok(match tok {
+        "gossip" => Schedule::Gossip,
+        "agd-rd" => Schedule::Agd(Algorithm::RecursiveDoubling),
+        "agd-ring" => Schedule::Agd(Algorithm::Ring),
+        "agd-tree" => Schedule::Agd(Algorithm::BinomialTree),
+        "sgd-rd" => Schedule::SgdSync(Algorithm::RecursiveDoubling),
+        "sgd-ring" => Schedule::SgdSync(Algorithm::Ring),
+        "periodic-rd" => Schedule::PeriodicAgd(Algorithm::RecursiveDoubling),
+        s if s.starts_with("ps") => Schedule::ParamServer {
+            servers: s[2..].parse().unwrap_or(1),
+        },
+        other => bail!("unknown schedule {other:?}"),
+    })
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let w = match args.get_or("workload", "resnet50").as_str() {
+        "resnet50" => Workload::resnet50_p100(),
+        "googlenet" => Workload::googlenet_p100(),
+        "lenet3" => Workload::lenet3(args.f64_or("device-speed", 1.0)),
+        "cifarnet" => Workload::cifarnet(args.f64_or("device-speed", 1.0)),
+        other => bail!("unknown workload {other:?}"),
+    };
+    let cost = CostModel::ib_edr(0);
+    let p_list = args.get_or("p-list", "4,8,16,32,64,128");
+    let algos = args.get_or("algos", "gossip,agd-ring,agd-rd,sgd-rd,ps1");
+    let scheds: Vec<Schedule> = algos
+        .split(',')
+        .map(|t| parse_sched(t.trim()))
+        .collect::<Result<_>>()?;
+    let mut header = vec!["p".to_string()];
+    header.extend(scheds.iter().map(|s| s.name()));
+    let mut table =
+        Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for tok in p_list.split(',') {
+        let p: usize = tok.trim().parse().context("--p-list")?;
+        let mut row = vec![p.to_string()];
+        for &s in &scheds {
+            let e = sim::efficiency::avg_efficiency(s, &w, p, &cost, 64);
+            row.push(format!("{:.1}", e.percent()));
+        }
+        table.row(&row);
+    }
+    table.print(&format!("simulated compute efficiency (%) — {}", w.name));
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = args
+        .get("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_dir);
+    let model = args.get_or("model", "mlp");
+    let set = ArtifactSet::load(&dir, &model).map_err(anyhow::Error::msg)?;
+    let m = &set.meta;
+    println!("model {}: {} params, batch {}", m.model, m.param_count, m.batch);
+    println!(
+        "x{:?} ({}) | {} label rows | {} classes | momentum {}",
+        m.x_shape,
+        if m.x_is_int { "i32" } else { "f32" },
+        m.labels_rows,
+        m.classes,
+        m.momentum
+    );
+    let mut t = Table::new(&["layer", "offset", "len", "KiB"]);
+    for l in &m.layers {
+        t.row(&[
+            l.name.clone(),
+            l.offset.to_string(),
+            l.len.to_string(),
+            format!("{:.1}", l.len as f64 * 4.0 / 1024.0),
+        ]);
+    }
+    t.print("layer table (layer-wise comm granularity)");
+    Ok(())
+}

@@ -1,0 +1,204 @@
+//! Experiment metrics: per-step records, loss/accuracy curves, CSV and
+//! JSON emission for the figures in EXPERIMENTS.md.
+
+use crate::util::json::{arr, num, obj, Json};
+use std::io::Write;
+use std::path::Path;
+
+/// One rank's record of a training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub rank: usize,
+    /// (step, training loss) samples.
+    pub loss: Vec<(usize, f64)>,
+    /// (step, validation accuracy) samples.
+    pub accuracy: Vec<(usize, f64)>,
+    /// Wall-clock seconds per step.
+    pub step_secs: Vec<f64>,
+    /// Seconds spent blocked on communication (exposed comm).
+    pub comm_wait_secs: Vec<f64>,
+    pub msgs_sent: u64,
+    pub bytes_sent: u64,
+}
+
+impl RunMetrics {
+    pub fn new(rank: usize) -> Self {
+        RunMetrics {
+            rank,
+            ..Default::default()
+        }
+    }
+
+    pub fn mean_step_secs(&self) -> f64 {
+        crate::util::mean(&self.step_secs)
+    }
+
+    pub fn mean_comm_wait(&self) -> f64 {
+        crate::util::mean(&self.comm_wait_secs)
+    }
+
+    /// Compute efficiency as the paper defines it: fraction of step time
+    /// not blocked on communication.
+    pub fn efficiency_pct(&self) -> f64 {
+        let step = self.mean_step_secs();
+        if step <= 0.0 {
+            return 100.0;
+        }
+        100.0 * (1.0 - self.mean_comm_wait() / step).clamp(0.0, 1.0)
+    }
+
+    pub fn final_loss(&self) -> Option<f64> {
+        self.loss.last().map(|&(_, l)| l)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("rank", num(self.rank as f64)),
+            (
+                "loss",
+                arr(self
+                    .loss
+                    .iter()
+                    .map(|&(st, l)| arr(vec![num(st as f64), num(l)]))
+                    .collect()),
+            ),
+            (
+                "accuracy",
+                arr(self
+                    .accuracy
+                    .iter()
+                    .map(|&(st, a)| arr(vec![num(st as f64), num(a)]))
+                    .collect()),
+            ),
+            ("mean_step_secs", num(self.mean_step_secs())),
+            ("mean_comm_wait_secs", num(self.mean_comm_wait())),
+            ("efficiency_pct", num(self.efficiency_pct())),
+            ("msgs_sent", num(self.msgs_sent as f64)),
+            ("bytes_sent", num(self.bytes_sent as f64)),
+        ])
+    }
+}
+
+/// Aggregate across ranks for a run summary line.
+pub fn summarize(runs: &[RunMetrics]) -> Json {
+    let losses: Vec<f64> = runs.iter().filter_map(|r| r.final_loss()).collect();
+    let eff: Vec<f64> = runs.iter().map(|r| r.efficiency_pct()).collect();
+    let steps: Vec<f64> = runs.iter().map(|r| r.mean_step_secs()).collect();
+    obj(vec![
+        ("ranks", num(runs.len() as f64)),
+        ("mean_final_loss", num(crate::util::mean(&losses))),
+        ("mean_efficiency_pct", num(crate::util::mean(&eff))),
+        ("mean_step_secs", num(crate::util::mean(&steps))),
+        (
+            "total_msgs",
+            num(runs.iter().map(|r| r.msgs_sent).sum::<u64>() as f64),
+        ),
+    ])
+}
+
+/// Write (step, value) series as CSV.  Column 0 is the x value.
+pub fn write_csv(
+    path: &Path,
+    header: &[&str],
+    rows: &[Vec<f64>],
+) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for r in rows {
+        let cells: Vec<String> = r.iter().map(|v| format!("{v}")).collect();
+        writeln!(f, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+/// Render a (x, y) series as a coarse ASCII sparkline for run logs.
+pub fn sparkline(ys: &[f64], width: usize) -> String {
+    if ys.is_empty() {
+        return String::new();
+    }
+    const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let lo = ys.iter().cloned().fold(f64::MAX, f64::min);
+    let hi = ys.iter().cloned().fold(f64::MIN, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let step = (ys.len() as f64 / width as f64).max(1.0);
+    let mut out = String::new();
+    let mut i = 0.0;
+    while (i as usize) < ys.len() && out.chars().count() < width {
+        let v = ys[i as usize];
+        let g = (((v - lo) / span) * 7.0).round() as usize;
+        out.push(GLYPHS[g.min(7)]);
+        i += step;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficiency_computation() {
+        let mut m = RunMetrics::new(0);
+        m.step_secs = vec![0.1, 0.1];
+        m.comm_wait_secs = vec![0.01, 0.01];
+        assert!((m.efficiency_pct() - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn efficiency_empty_is_100() {
+        assert_eq!(RunMetrics::new(0).efficiency_pct(), 100.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut m = RunMetrics::new(2);
+        m.loss = vec![(0, 2.3), (10, 1.1)];
+        m.accuracy = vec![(10, 0.55)];
+        m.step_secs = vec![0.01];
+        let j = m.to_json();
+        let parsed =
+            crate::util::json::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("rank").unwrap().as_usize(), Some(2));
+        assert_eq!(
+            parsed.get("loss").unwrap().idx(1).unwrap().idx(1).unwrap().as_f64(),
+            Some(1.1)
+        );
+    }
+
+    #[test]
+    fn csv_writes(){
+        let dir = std::env::temp_dir().join("gg_metrics_test");
+        let p = dir.join("x.csv");
+        write_csv(&p, &["step", "loss"], &[vec![0.0, 2.3], vec![1.0, 1.9]])
+            .unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("step,loss\n0,2.3\n"));
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let ys: Vec<f64> = (0..64).map(|i| i as f64).collect();
+        let sl = sparkline(&ys, 16);
+        assert_eq!(sl.chars().count(), 16);
+        assert!(sl.starts_with('▁'));
+        assert!(sl.ends_with('█'));
+    }
+
+    #[test]
+    fn summarize_aggregates() {
+        let mut a = RunMetrics::new(0);
+        a.loss = vec![(0, 2.0)];
+        a.step_secs = vec![0.2];
+        a.msgs_sent = 5;
+        let mut b = RunMetrics::new(1);
+        b.loss = vec![(0, 4.0)];
+        b.step_secs = vec![0.4];
+        b.msgs_sent = 7;
+        let j = summarize(&[a, b]);
+        assert_eq!(j.get("mean_final_loss").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("total_msgs").unwrap().as_f64(), Some(12.0));
+    }
+}

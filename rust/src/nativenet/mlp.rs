@@ -1,0 +1,316 @@
+//! Native MLP backend: the same model family as the `mlp` AOT artifacts
+//! (relu hidden layers, softmax-xent head, flat-parameter layout in
+//! `fc{i}.w, fc{i}.b` order) with hand-written backprop.
+//!
+//! The numerics intentionally mirror python/compile/model.py::mlp_logits
+//! so integration tests can train either backend interchangeably.
+
+use super::ops;
+use crate::runtime::{BatchData, LayerSlice, ModelBackend};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct NativeMlp {
+    pub dims: Vec<usize>, // [din, h1, ..., classes]
+    pub batch: usize,
+    layers: Vec<LayerSlice>,
+    param_count: usize,
+    momentum: f32,
+    init_seed: u64,
+}
+
+impl NativeMlp {
+    pub fn new(dims: Vec<usize>, batch: usize, init_seed: u64) -> NativeMlp {
+        assert!(dims.len() >= 2);
+        let mut layers = Vec::new();
+        let mut off = 0usize;
+        for i in 0..dims.len() - 1 {
+            let len = dims[i] * dims[i + 1] + dims[i + 1];
+            layers.push(LayerSlice {
+                name: format!("fc{i}"),
+                offset: off,
+                len,
+            });
+            off += len;
+        }
+        NativeMlp {
+            dims,
+            batch,
+            layers,
+            param_count: off,
+            momentum: 0.9,
+            init_seed,
+        }
+    }
+
+    /// The MNIST-analog configuration (mirrors build_model("mlp")).
+    pub fn mnist(batch: usize) -> NativeMlp {
+        NativeMlp::new(vec![784, 512, 256, 10], batch, 0)
+    }
+
+    /// Small configuration for fast tests.
+    pub fn tiny(batch: usize) -> NativeMlp {
+        NativeMlp::new(vec![16, 24, 4], batch, 0)
+    }
+
+    fn wb<'a>(&self, params: &'a [f32], i: usize) -> (&'a [f32], &'a [f32]) {
+        let l = &self.layers[i];
+        let w_len = self.dims[i] * self.dims[i + 1];
+        let s = &params[l.offset..l.offset + l.len];
+        (&s[..w_len], &s[w_len..])
+    }
+
+    /// Forward pass; returns activations per layer (a[0] = input copy).
+    fn forward(&self, params: &[f32], x: &[f32], rows: usize) -> Vec<Vec<f32>> {
+        let mut acts = vec![x.to_vec()];
+        let n_layers = self.dims.len() - 1;
+        for i in 0..n_layers {
+            let (w, b) = self.wb(params, i);
+            let (din, dout) = (self.dims[i], self.dims[i + 1]);
+            let mut out = vec![0.0f32; rows * dout];
+            // bias
+            for r in 0..rows {
+                out[r * dout..(r + 1) * dout].copy_from_slice(b);
+            }
+            ops::matmul_acc(&mut out, &acts[i], w, rows, din, dout);
+            if i < n_layers - 1 {
+                for v in out.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            acts.push(out);
+        }
+        acts
+    }
+
+    /// Full backprop; returns (grads, loss).
+    fn backprop(&self, params: &[f32], x: &[f32], y: &[i32], rows: usize) -> (Vec<f32>, f32) {
+        let n_layers = self.dims.len() - 1;
+        let acts = self.forward(params, x, rows);
+        let classes = self.classes();
+        let mut grads = vec![0.0f32; self.param_count];
+        let mut delta = vec![0.0f32; rows * classes];
+        let loss = ops::softmax_xent(&acts[n_layers], y, rows, classes, &mut delta);
+
+        for i in (0..n_layers).rev() {
+            let (din, dout) = (self.dims[i], self.dims[i + 1]);
+            let l = &self.layers[i];
+            let w_len = din * dout;
+            // dW = a[i]ᵀ · delta   (a[i] stored [rows, din])
+            {
+                let (gw, gb) = grads[l.offset..l.offset + l.len].split_at_mut(w_len);
+                ops::matmul_at_acc(gw, &acts[i], &delta, din, rows, dout);
+                // db = column sums of delta
+                for r in 0..rows {
+                    ops::add_into(gb, &delta[r * dout..(r + 1) * dout]);
+                }
+            }
+            if i > 0 {
+                // dx = delta · Wᵀ, masked by relu'(a[i])
+                let (w, _) = self.wb(params, i);
+                let mut dx = vec![0.0f32; rows * din];
+                // w stored [din, dout]; need delta[rows,dout] · wᵀ[dout,din]
+                // = matmul_bt with B stored [din? ] — use plain loops via
+                // matmul_acc on transposed w
+                // Build wt [dout, din] once per layer (din*dout floats).
+                let mut wt = vec![0.0f32; w_len];
+                for a_ in 0..din {
+                    for b_ in 0..dout {
+                        wt[b_ * din + a_] = w[a_ * dout + b_];
+                    }
+                }
+                ops::matmul_acc(&mut dx, &delta, &wt, rows, dout, din);
+                // relu mask from a[i] (post-activation: zero where act==0)
+                for (d, &a_) in dx.iter_mut().zip(&acts[i]) {
+                    if a_ <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+                delta = dx;
+            }
+        }
+        (grads, loss)
+    }
+}
+
+impl ModelBackend for NativeMlp {
+    fn param_count(&self) -> usize {
+        self.param_count
+    }
+
+    fn layers(&self) -> &[LayerSlice] {
+        &self.layers
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn x_len(&self) -> usize {
+        self.batch * self.dims[0]
+    }
+
+    fn labels_len(&self) -> usize {
+        self.batch
+    }
+
+    fn classes(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    fn x_is_int(&self) -> bool {
+        false
+    }
+
+    fn init_params(&self) -> Vec<f32> {
+        // He init, zero biases — same scheme as ParamSpec.init
+        let mut rng = Rng::new(self.init_seed);
+        let mut out = vec![0.0f32; self.param_count];
+        for (i, l) in self.layers.iter().enumerate() {
+            let (din, dout) = (self.dims[i], self.dims[i + 1]);
+            let scale = (2.0 / din as f64).sqrt() as f32;
+            let w = &mut out[l.offset..l.offset + din * dout];
+            for v in w.iter_mut() {
+                *v = rng.normal_f32() * scale;
+            }
+        }
+        out
+    }
+
+    fn grad(&self, params: &[f32], x: &BatchData, y: &[i32]) -> (Vec<f32>, f32) {
+        self.backprop(params, x.as_f32(), y, self.batch)
+    }
+
+    fn train_step(
+        &self,
+        params: &mut [f32],
+        mom: &mut [f32],
+        x: &BatchData,
+        y: &[i32],
+        lr: f32,
+    ) -> f32 {
+        let (grads, loss) = self.backprop(params, x.as_f32(), y, self.batch);
+        ops::sgd_momentum(params, mom, &grads, lr, self.momentum);
+        loss
+    }
+
+    fn apply_update(&self, params: &mut [f32], mom: &mut [f32], grads: &[f32], lr: f32) {
+        ops::sgd_momentum(params, mom, grads, lr, self.momentum);
+    }
+
+    fn eval(&self, params: &[f32], x: &BatchData, y: &[i32]) -> (f32, f32) {
+        let rows = self.batch;
+        let acts = self.forward(params, x.as_f32(), rows);
+        let classes = self.classes();
+        let logits = acts.last().unwrap();
+        let mut d = vec![0.0f32; rows * classes];
+        let loss = ops::softmax_xent(logits, y, rows, classes, &mut d);
+        let mut correct = 0.0f32;
+        for r in 0..rows {
+            let row = &logits[r * classes..(r + 1) * classes];
+            let arg = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if arg as i32 == y[r] {
+                correct += 1.0;
+            }
+        }
+        (loss, correct)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch(m: &NativeMlp, seed: u64) -> (BatchData, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let x: Vec<f32> = (0..m.x_len()).map(|_| rng.normal_f32() * 0.5).collect();
+        let y: Vec<i32> = (0..m.batch()).map(|_| rng.below(m.classes()) as i32).collect();
+        (BatchData::F32(x), y)
+    }
+
+    #[test]
+    fn layer_table_contiguous() {
+        let m = NativeMlp::mnist(8);
+        let mut off = 0;
+        for l in m.layers() {
+            assert_eq!(l.offset, off);
+            off += l.len;
+        }
+        assert_eq!(off, m.param_count());
+        assert_eq!(m.param_count(), 784 * 512 + 512 + 512 * 256 + 256 + 256 * 10 + 10);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let m = NativeMlp::tiny(4);
+        let params = m.init_params();
+        let (x, y) = batch(&m, 1);
+        let (grads, loss0) = m.grad(&params, &x, &y);
+        assert!(loss0.is_finite());
+        // check a scatter of coordinates with central differences
+        let mut rng = Rng::new(7);
+        let eps = 1e-3f32;
+        for _ in 0..20 {
+            let i = rng.below(m.param_count());
+            let mut pp = params.clone();
+            pp[i] += eps;
+            let (_, lp) = m.grad(&pp, &x, &y);
+            pp[i] -= 2.0 * eps;
+            let (_, lm) = m.grad(&pp, &x, &y);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grads[i]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "coord {i}: fd {fd} vs analytic {}",
+                grads[i]
+            );
+        }
+    }
+
+    #[test]
+    fn training_learns_fixed_batch() {
+        let m = NativeMlp::tiny(8);
+        let mut params = m.init_params();
+        let mut mom = vec![0.0; m.param_count()];
+        let (x, y) = batch(&m, 3);
+        let first = m.train_step(&mut params, &mut mom, &x, &y, 0.1);
+        let mut last = first;
+        for _ in 0..60 {
+            last = m.train_step(&mut params, &mut mom, &x, &y, 0.1);
+        }
+        assert!(
+            last < 0.3 * first,
+            "failed to memorize batch: {first} -> {last}"
+        );
+        let (_, correct) = m.eval(&params, &x, &y);
+        assert!(correct >= 7.0, "correct={correct}");
+    }
+
+    #[test]
+    fn grad_plus_update_equals_train_step() {
+        let m = NativeMlp::tiny(4);
+        let (x, y) = batch(&m, 9);
+        let mut p1 = m.init_params();
+        let mut v1 = vec![0.0; m.param_count()];
+        let mut p2 = p1.clone();
+        let mut v2 = v1.clone();
+        m.train_step(&mut p1, &mut v1, &x, &y, 0.05);
+        let (g, _) = m.grad(&p2, &x, &y);
+        m.apply_update(&mut p2, &mut v2, &g, 0.05);
+        assert_eq!(p1, p2);
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let a = NativeMlp::mnist(4).init_params();
+        let b = NativeMlp::mnist(4).init_params();
+        assert_eq!(a, b);
+    }
+}

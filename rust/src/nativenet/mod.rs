@@ -1,0 +1,16 @@
+//! Pure-Rust compute backend.
+//!
+//! Two roles:
+//! 1. [`ops`] — the coordinator's own hot-path numerics (gossip mixing,
+//!    fused momentum update, blocked matmul).  The mixer here is the
+//!    "native" side of the mixing ablation against the Pallas AOT
+//!    artifact (benches/hotpath.rs).
+//! 2. [`mlp`] — a complete MLP model (same family as the AOT `mlp`
+//!    artifacts, same flat-parameter layout) with hand-written backprop.
+//!    Used for artifact-independent tests and large-p experiments where
+//!    compiling/sharing XLA executables is not the point.
+
+pub mod mlp;
+pub mod ops;
+
+pub use mlp::NativeMlp;

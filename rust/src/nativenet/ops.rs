@@ -1,0 +1,242 @@
+//! Hot-path numerics.  Written as straight slices + chunked loops so the
+//! autovectorizer emits AVX on this target (verified in EXPERIMENTS.md
+//! §Perf via the hotpath bench); no unsafe, no hand intrinsics.
+
+/// GossipGraD pairwise mixing: `a <- (a + b) / 2`, in place.
+/// The L3 hot path (runs every gossip step over the full flat model).
+pub fn mix_into(a: &mut [f32], b: &[f32]) {
+    assert_eq!(a.len(), b.len());
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x = (*x + y) * 0.5;
+    }
+}
+
+/// Out-of-place mixing into a caller-provided buffer (steady-state
+/// allocation-free form).
+pub fn mix_to(out: &mut [f32], a: &[f32], b: &[f32]) {
+    assert!(out.len() == a.len() && a.len() == b.len());
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = (x + y) * 0.5;
+    }
+}
+
+/// `acc += x`.
+pub fn add_into(acc: &mut [f32], x: &[f32]) {
+    assert_eq!(acc.len(), x.len());
+    for (a, &b) in acc.iter_mut().zip(x) {
+        *a += b;
+    }
+}
+
+/// `buf *= k`.
+pub fn scale(buf: &mut [f32], k: f32) {
+    for v in buf.iter_mut() {
+        *v *= k;
+    }
+}
+
+/// Fused momentum-SGD (the native mirror of the Pallas update kernel):
+/// `v = mu*v + g; p -= lr*v` in one pass.
+pub fn sgd_momentum(params: &mut [f32], mom: &mut [f32], grads: &[f32], lr: f32, mu: f32) {
+    assert!(params.len() == mom.len() && mom.len() == grads.len());
+    for ((p, v), &g) in params.iter_mut().zip(mom.iter_mut()).zip(grads) {
+        let nv = mu * *v + g;
+        *v = nv;
+        *p -= lr * nv;
+    }
+}
+
+/// C[m,n] += A[m,k] · B[k,n]  (row-major, i-k-j loop order so the inner
+/// loop is a contiguous axpy the vectorizer likes).
+pub fn matmul_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // relu sparsity shortcut
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// C[m,n] += Aᵀ[m,k] · B[k,n] where A is stored [k,m] (for dW = xᵀ·g).
+pub fn matmul_at_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), k * m);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// C[m,n] += A[m,k] · Bᵀ[k,n] where B is stored [n,k] (for dx = g·Wᵀ).
+pub fn matmul_bt_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *cv += acc;
+        }
+    }
+}
+
+/// Row-wise softmax cross-entropy.  Returns mean NLL; writes
+/// `(softmax - onehot) / rows` into `dlogits`.
+pub fn softmax_xent(
+    logits: &[f32],
+    labels: &[i32],
+    rows: usize,
+    classes: usize,
+    dlogits: &mut [f32],
+) -> f32 {
+    assert_eq!(logits.len(), rows * classes);
+    assert_eq!(dlogits.len(), logits.len());
+    let mut loss = 0.0f64;
+    let inv = 1.0 / rows as f32;
+    for r in 0..rows {
+        let row = &logits[r * classes..(r + 1) * classes];
+        let drow = &mut dlogits[r * classes..(r + 1) * classes];
+        let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+        let mut z = 0.0f32;
+        for (d, &v) in drow.iter_mut().zip(row) {
+            let e = (v - mx).exp();
+            *d = e;
+            z += e;
+        }
+        let label = labels[r] as usize;
+        loss += -(((row[label] - mx) - z.ln()) as f64);
+        for d in drow.iter_mut() {
+            *d = *d / z * inv;
+        }
+        drow[label] -= inv;
+    }
+    (loss / rows as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn mix_into_averages() {
+        let mut a = vec![1.0, 2.0, 3.0];
+        mix_into(&mut a, &[3.0, 2.0, 1.0]);
+        assert_eq!(a, vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn sgd_momentum_matches_formula() {
+        let mut p = vec![1.0f32, 2.0];
+        let mut v = vec![0.5f32, -0.5];
+        sgd_momentum(&mut p, &mut v, &[0.1, 0.2], 0.1, 0.9);
+        // v' = 0.9*0.5 + 0.1 = 0.55 ; p' = 1 - 0.055 = 0.945
+        assert!((v[0] - 0.55).abs() < 1e-6);
+        assert!((p[0] - 0.945).abs() < 1e-6);
+    }
+
+    fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for kk in 0..k {
+                    c[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_variants_agree_with_naive() {
+        let mut rng = Rng::new(1);
+        let (m, k, n) = (7, 11, 5);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let want = naive_matmul(&a, &b, m, k, n);
+
+        let mut c = vec![0.0; m * n];
+        matmul_acc(&mut c, &a, &b, m, k, n);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+
+        // Aᵀ form: store a as [k,m]
+        let mut at = vec![0.0; k * m];
+        for i in 0..m {
+            for kk in 0..k {
+                at[kk * m + i] = a[i * k + kk];
+            }
+        }
+        let mut c2 = vec![0.0; m * n];
+        matmul_at_acc(&mut c2, &at, &b, m, k, n);
+        for (x, y) in c2.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+
+        // Bᵀ form: store b as [n,k]
+        let mut bt = vec![0.0; n * k];
+        for kk in 0..k {
+            for j in 0..n {
+                bt[j * k + kk] = b[kk * n + j];
+            }
+        }
+        let mut c3 = vec![0.0; m * n];
+        matmul_bt_acc(&mut c3, &a, &bt, m, k, n);
+        for (x, y) in c3.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn xent_matches_hand_case() {
+        // logits [[0,0]] label 0 -> loss ln(2), grad [(0.5-1)/1, 0.5]
+        let mut d = vec![0.0; 2];
+        let loss = softmax_xent(&[0.0, 0.0], &[0], 1, 2, &mut d);
+        assert!((loss - (2.0f32).ln()).abs() < 1e-6);
+        assert!((d[0] + 0.5).abs() < 1e-6);
+        assert!((d[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn xent_grad_sums_to_zero_per_row() {
+        let mut rng = Rng::new(2);
+        let (rows, classes) = (6, 10);
+        let logits: Vec<f32> =
+            (0..rows * classes).map(|_| 3.0 * rng.normal_f32()).collect();
+        let labels: Vec<i32> = (0..rows).map(|r| (r % classes) as i32).collect();
+        let mut d = vec![0.0; rows * classes];
+        let loss = softmax_xent(&logits, &labels, rows, classes, &mut d);
+        assert!(loss.is_finite());
+        for r in 0..rows {
+            let s: f32 = d[r * classes..(r + 1) * classes].iter().sum();
+            assert!(s.abs() < 1e-5, "row {r} grad sum {s}");
+        }
+    }
+}

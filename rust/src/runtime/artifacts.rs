@@ -1,0 +1,225 @@
+//! Artifact descriptors: `{model}.meta.json` + raw init vectors.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One layer's slice of the flat parameter vector — the granularity of
+/// layer-wise asynchronous gradient exchange (paper §5).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerSlice {
+    pub name: String,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Parsed `{model}.meta.json`.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub model: String,
+    pub param_count: usize,
+    pub batch: usize,
+    pub x_shape: Vec<usize>,
+    pub x_is_int: bool,
+    pub labels_rows: usize,
+    pub classes: usize,
+    pub momentum: f32,
+    pub layers: Vec<LayerSlice>,
+}
+
+impl ModelMeta {
+    pub fn parse(text: &str) -> Result<ModelMeta, String> {
+        let j = Json::parse(text)?;
+        let get_usize = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("meta missing {k}"))
+        };
+        let layers = j
+            .get("layers")
+            .and_then(Json::as_arr)
+            .ok_or("meta missing layers")?
+            .iter()
+            .map(|l| {
+                Ok(LayerSlice {
+                    name: l
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or("layer missing name")?
+                        .to_string(),
+                    offset: l
+                        .get("offset")
+                        .and_then(Json::as_usize)
+                        .ok_or("layer missing offset")?,
+                    len: l
+                        .get("len")
+                        .and_then(Json::as_usize)
+                        .ok_or("layer missing len")?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(ModelMeta {
+            model: j
+                .get("model")
+                .and_then(Json::as_str)
+                .ok_or("meta missing model")?
+                .to_string(),
+            param_count: get_usize("param_count")?,
+            batch: get_usize("batch")?,
+            x_shape: j
+                .get("x_shape")
+                .and_then(Json::as_arr)
+                .ok_or("meta missing x_shape")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            x_is_int: j.get("x_dtype").and_then(Json::as_str) == Some("i32"),
+            labels_rows: get_usize("labels_rows")?,
+            classes: get_usize("classes")?,
+            momentum: j
+                .get("momentum")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.9) as f32,
+            layers,
+        })
+    }
+
+    /// Sanity-check invariants the Rust side depends on.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut off = 0usize;
+        for l in &self.layers {
+            if l.offset != off {
+                return Err(format!(
+                    "layer {} offset {} != running total {off}",
+                    l.name, l.offset
+                ));
+            }
+            off += l.len;
+        }
+        if off != self.param_count {
+            return Err(format!(
+                "layers cover {off} of {n} params",
+                n = self.param_count
+            ));
+        }
+        let x_elems: usize = self.x_shape.iter().product();
+        if x_elems == 0 {
+            return Err("empty x_shape".into());
+        }
+        Ok(())
+    }
+}
+
+/// Paths for one model family's artifacts.
+#[derive(Clone, Debug)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub meta: ModelMeta,
+}
+
+impl ArtifactSet {
+    /// Load and validate `{dir}/{model}.meta.json`.
+    pub fn load(dir: &Path, model: &str) -> Result<ArtifactSet, String> {
+        let meta_path = dir.join(format!("{model}.meta.json"));
+        let text = std::fs::read_to_string(&meta_path)
+            .map_err(|e| format!("{}: {e}", meta_path.display()))?;
+        let meta = ModelMeta::parse(&text)?;
+        meta.validate()?;
+        if meta.model != model {
+            return Err(format!(
+                "meta names model {:?}, expected {model:?}",
+                meta.model
+            ));
+        }
+        Ok(ArtifactSet {
+            dir: dir.to_path_buf(),
+            meta,
+        })
+    }
+
+    pub fn hlo_path(&self, kind: &str) -> PathBuf {
+        self.dir
+            .join(format!("{kind}_{}.hlo.txt", self.meta.model))
+    }
+
+    /// Read the raw little-endian f32 init vector.
+    pub fn init_params(&self) -> Result<Vec<f32>, String> {
+        let p = self.dir.join(format!("init_{}.f32", self.meta.model));
+        let bytes = std::fs::read(&p).map_err(|e| format!("{}: {e}", p.display()))?;
+        if bytes.len() != self.meta.param_count * 4 {
+            return Err(format!(
+                "init file has {} bytes, expected {}",
+                bytes.len(),
+                self.meta.param_count * 4
+            ));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Default artifacts directory: $GG_ARTIFACTS or ./artifacts.
+pub fn default_dir() -> PathBuf {
+    std::env::var("GG_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const META: &str = r#"{
+        "model": "mlp", "param_count": 10, "batch": 4,
+        "x_shape": [4, 3], "x_dtype": "f32", "labels_rows": 4,
+        "classes": 2, "momentum": 0.9,
+        "layers": [
+            {"name": "fc0", "offset": 0, "len": 6},
+            {"name": "fc1", "offset": 6, "len": 4}
+        ],
+        "artifacts": {}
+    }"#;
+
+    #[test]
+    fn parse_and_validate() {
+        let m = ModelMeta::parse(META).unwrap();
+        m.validate().unwrap();
+        assert_eq!(m.param_count, 10);
+        assert_eq!(m.layers.len(), 2);
+        assert!(!m.x_is_int);
+    }
+
+    #[test]
+    fn validate_rejects_gaps() {
+        let mut m = ModelMeta::parse(META).unwrap();
+        m.layers[1].offset = 7;
+        assert!(m.validate().is_err());
+        let mut m2 = ModelMeta::parse(META).unwrap();
+        m2.param_count = 11;
+        assert!(m2.validate().is_err());
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(ModelMeta::parse(r#"{"model":"x"}"#).is_err());
+    }
+
+    #[test]
+    fn real_artifacts_if_present() {
+        // integration check against `make artifacts` output
+        let dir = default_dir();
+        if !dir.join("mlp.meta.json").exists() {
+            eprintln!("skipping: no artifacts dir");
+            return;
+        }
+        let a = ArtifactSet::load(&dir, "mlp").unwrap();
+        assert_eq!(a.meta.batch, 64);
+        let init = a.init_params().unwrap();
+        assert_eq!(init.len(), a.meta.param_count);
+        assert!(init.iter().all(|v| v.is_finite()));
+        assert!(a.hlo_path("grad").exists());
+        assert!(a.hlo_path("train_step").exists());
+        assert!(a.hlo_path("eval").exists());
+    }
+}

@@ -1,0 +1,297 @@
+//! PJRT-backed [`ModelBackend`]: loads HLO text artifacts, compiles them
+//! once on the XLA CPU client, and serves grad/train/eval/update/mix
+//! calls to all worker threads.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::
+//! from_text_file` → `XlaComputation::from_proto` → `client.compile` →
+//! `execute`.  HLO *text* is the interchange format (jax ≥ 0.5 protos
+//! carry 64-bit ids that xla_extension 0.5.1 rejects).
+//!
+//! ## Thread safety
+//! The `xla` crate wrappers hold raw pointers and declare no Send/Sync,
+//! but the PJRT C API (and the TfrtCpuClient behind it) is documented
+//! thread-safe: compiled executables may be executed concurrently from
+//! multiple threads.  [`Exe`] asserts that via `unsafe impl`.  Set
+//! `GG_SERIALIZE_PJRT=1` to force a global execution mutex when
+//! debugging.
+
+use super::artifacts::{ArtifactSet, LayerSlice};
+use super::{BatchData, ModelBackend};
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Thread-safety assertion wrapper (see module docs).
+struct Exe(xla::PjRtLoadedExecutable);
+unsafe impl Send for Exe {}
+unsafe impl Sync for Exe {}
+
+struct ClientBox(#[allow(dead_code)] xla::PjRtClient);
+unsafe impl Send for ClientBox {}
+unsafe impl Sync for ClientBox {}
+
+pub struct PjrtModel {
+    set: ArtifactSet,
+    _client: ClientBox,
+    grad_exe: Exe,
+    train_exe: Exe,
+    eval_exe: Exe,
+    update_exe: Exe,
+    mix_exe: Exe,
+    init: Vec<f32>,
+    serialize: Option<Mutex<()>>,
+}
+
+impl PjrtModel {
+    /// Load + compile all executables for `model` from `dir`.
+    pub fn load(dir: &Path, model: &str) -> Result<PjrtModel> {
+        let set = ArtifactSet::load(dir, model)
+            .map_err(anyhow::Error::msg)
+            .context("loading artifact meta")?;
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |kind: &str| -> Result<Exe> {
+            let path = set.hlo_path(kind);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(Exe(client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?))
+        };
+        let grad_exe = compile("grad")?;
+        let train_exe = compile("train_step")?;
+        let eval_exe = compile("eval")?;
+        let update_exe = compile("update")?;
+        let mix_exe = compile("mix")?;
+        let init = set.init_params().map_err(anyhow::Error::msg)?;
+        let serialize = if std::env::var("GG_SERIALIZE_PJRT").is_ok() {
+            Some(Mutex::new(()))
+        } else {
+            None
+        };
+        Ok(PjrtModel {
+            set,
+            _client: ClientBox(client),
+            grad_exe,
+            train_exe,
+            eval_exe,
+            update_exe,
+            mix_exe,
+            init,
+            serialize,
+        })
+    }
+
+    fn x_literal(&self, x: &BatchData) -> Result<xla::Literal> {
+        let dims: Vec<i64> =
+            self.set.meta.x_shape.iter().map(|&d| d as i64).collect();
+        Ok(match x {
+            BatchData::F32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+            BatchData::I32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+        })
+    }
+
+    fn run(&self, exe: &Exe, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let _guard = self.serialize.as_ref().map(|m| m.lock().unwrap());
+        let bufs = exe.0.execute::<xla::Literal>(args)?;
+        let tuple = bufs[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Pallas gossip-mix executable: (a, b) -> (a+b)/2.  Exposed for the
+    /// AOT-vs-native mixing ablation (benches/hotpath.rs).
+    pub fn mix(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let la = xla::Literal::vec1(a);
+        let lb = xla::Literal::vec1(b);
+        let out = self.run(&self.mix_exe, &[la, lb])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    pub fn meta(&self) -> &super::artifacts::ModelMeta {
+        &self.set.meta
+    }
+}
+
+impl ModelBackend for PjrtModel {
+    fn param_count(&self) -> usize {
+        self.set.meta.param_count
+    }
+
+    fn layers(&self) -> &[LayerSlice] {
+        &self.set.meta.layers
+    }
+
+    fn batch(&self) -> usize {
+        self.set.meta.batch
+    }
+
+    fn x_len(&self) -> usize {
+        self.set.meta.x_shape.iter().product()
+    }
+
+    fn labels_len(&self) -> usize {
+        self.set.meta.labels_rows
+    }
+
+    fn classes(&self) -> usize {
+        self.set.meta.classes
+    }
+
+    fn x_is_int(&self) -> bool {
+        self.set.meta.x_is_int
+    }
+
+    fn init_params(&self) -> Vec<f32> {
+        self.init.clone()
+    }
+
+    fn grad(&self, params: &[f32], x: &BatchData, y: &[i32]) -> (Vec<f32>, f32) {
+        let args = vec![
+            xla::Literal::vec1(params),
+            self.x_literal(x).expect("x literal"),
+            xla::Literal::vec1(y),
+        ];
+        let out = self.run(&self.grad_exe, &args).expect("grad exec");
+        let grads = out[0].to_vec::<f32>().expect("grads");
+        let loss = out[1].get_first_element::<f32>().expect("loss");
+        (grads, loss)
+    }
+
+    fn train_step(
+        &self,
+        params: &mut [f32],
+        mom: &mut [f32],
+        x: &BatchData,
+        y: &[i32],
+        lr: f32,
+    ) -> f32 {
+        let args = vec![
+            xla::Literal::vec1(params),
+            xla::Literal::vec1(mom),
+            self.x_literal(x).expect("x literal"),
+            xla::Literal::vec1(y),
+            xla::Literal::scalar(lr),
+        ];
+        let out = self.run(&self.train_exe, &args).expect("train exec");
+        out[0]
+            .copy_raw_to::<f32>(params)
+            .expect("copy params");
+        out[1].copy_raw_to::<f32>(mom).expect("copy mom");
+        out[2].get_first_element::<f32>().expect("loss")
+    }
+
+    fn apply_update(
+        &self,
+        params: &mut [f32],
+        mom: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+    ) {
+        let args = vec![
+            xla::Literal::vec1(params),
+            xla::Literal::vec1(mom),
+            xla::Literal::vec1(grads),
+            xla::Literal::scalar(lr),
+        ];
+        let out = self.run(&self.update_exe, &args).expect("update exec");
+        out[0].copy_raw_to::<f32>(params).expect("copy params");
+        out[1].copy_raw_to::<f32>(mom).expect("copy mom");
+    }
+
+    fn eval(&self, params: &[f32], x: &BatchData, y: &[i32]) -> (f32, f32) {
+        let args = vec![
+            xla::Literal::vec1(params),
+            self.x_literal(x).expect("x literal"),
+            xla::Literal::vec1(y),
+        ];
+        let out = self.run(&self.eval_exe, &args).expect("eval exec");
+        let loss = out[0].get_first_element::<f32>().expect("loss");
+        let correct = out[1].get_first_element::<f32>().expect("correct");
+        (loss, correct)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::artifacts::default_dir;
+    use super::*;
+
+    fn load_mlp() -> Option<PjrtModel> {
+        let dir = default_dir();
+        if !dir.join("mlp.meta.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(PjrtModel::load(&dir, "mlp").expect("load mlp artifacts"))
+    }
+
+    #[test]
+    fn grad_and_eval_shapes() {
+        let Some(m) = load_mlp() else { return };
+        let params = m.init_params();
+        let x = BatchData::F32(vec![0.1; m.x_len()]);
+        let y: Vec<i32> = (0..m.labels_len() as i32).map(|i| i % 10).collect();
+        let (g, loss) = m.grad(&params, &x, &y);
+        assert_eq!(g.len(), m.param_count());
+        assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+        let (eloss, correct) = m.eval(&params, &x, &y);
+        assert!(eloss.is_finite());
+        assert!((0.0..=m.batch() as f32).contains(&correct));
+    }
+
+    #[test]
+    fn train_step_reduces_loss() {
+        let Some(m) = load_mlp() else { return };
+        let mut params = m.init_params();
+        let mut mom = vec![0.0f32; m.param_count()];
+        let mut rng = crate::util::Rng::new(3);
+        let x = BatchData::F32(
+            (0..m.x_len()).map(|_| rng.normal_f32() * 0.5).collect(),
+        );
+        let y: Vec<i32> =
+            (0..m.labels_len()).map(|_| rng.below(10) as i32).collect();
+        let l0 = m.train_step(&mut params, &mut mom, &x, &y, 0.05);
+        let mut last = l0;
+        for _ in 0..4 {
+            last = m.train_step(&mut params, &mut mom, &x, &y, 0.05);
+        }
+        assert!(last < l0, "loss did not drop: {l0} -> {last}");
+    }
+
+    #[test]
+    fn mix_artifact_averages() {
+        let Some(m) = load_mlp() else { return };
+        let n = m.param_count();
+        let a = vec![1.0f32; n];
+        let b = vec![3.0f32; n];
+        let mixed = m.mix(&a, &b).unwrap();
+        assert!(mixed.iter().all(|&v| (v - 2.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn update_matches_train_step_decomposition() {
+        // grad + apply_update must equal the fused train_step
+        let Some(m) = load_mlp() else { return };
+        let mut p1 = m.init_params();
+        let mut m1 = vec![0.0f32; m.param_count()];
+        let mut p2 = p1.clone();
+        let mut m2 = m1.clone();
+        let mut rng = crate::util::Rng::new(5);
+        let x = BatchData::F32(
+            (0..m.x_len()).map(|_| rng.normal_f32() * 0.5).collect(),
+        );
+        let y: Vec<i32> =
+            (0..m.labels_len()).map(|_| rng.below(10) as i32).collect();
+        m.train_step(&mut p1, &mut m1, &x, &y, 0.1);
+        let (g, _) = m.grad(&p2.clone(), &x, &y);
+        m.apply_update(&mut p2, &mut m2, &g, 0.1);
+        let max_diff = p1
+            .iter()
+            .zip(&p2)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-5, "fused vs decomposed diff {max_diff}");
+    }
+}

@@ -1,0 +1,83 @@
+//! PJRT runtime — loads the AOT artifacts emitted by
+//! `python/compile/aot.py` and exposes them behind the [`ModelBackend`]
+//! trait the coordinator trains against.
+//!
+//! * [`artifacts`] — `*.meta.json` descriptors + raw init vectors.
+//! * [`client`]    — the XLA PJRT CPU client wrapper: HLO text →
+//!   `HloModuleProto::from_text_file` → compile → execute (the pattern
+//!   from /opt/xla-example/load_hlo).
+//!
+//! The [`nativenet`](crate::nativenet) backend implements the same trait
+//! in pure Rust for artifact-independent tests and very-large-p runs.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactSet, LayerSlice, ModelMeta};
+pub use client::PjrtModel;
+
+/// Input batch payload (models take f32 features or i32 token ids).
+#[derive(Clone, Debug)]
+pub enum BatchData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl BatchData {
+    pub fn len(&self) -> usize {
+        match self {
+            BatchData::F32(v) => v.len(),
+            BatchData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Convert a feature batch to f32 (panics for token batches).
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            BatchData::F32(v) => v,
+            BatchData::I32(_) => panic!("expected f32 batch"),
+        }
+    }
+}
+
+/// The compute contract between coordinator (L3) and model (L2/L1).
+/// Parameters and gradients are flat `f32[N]`; the layer table defines
+/// the layer-wise communication granularity.
+pub trait ModelBackend: Send {
+    /// Total parameter count N.
+    fn param_count(&self) -> usize;
+    /// Per-layer (name, offset, len) in flat-vector coordinates.
+    fn layers(&self) -> &[LayerSlice];
+    /// Rows per training batch (static — baked into the artifacts).
+    fn batch(&self) -> usize;
+    /// Flat input length per batch (rows × feature dim, or rows × seq).
+    fn x_len(&self) -> usize;
+    /// Number of label rows per batch (B, or B·S for the LM).
+    fn labels_len(&self) -> usize;
+    /// Number of output classes (vocab size for the LM).
+    fn classes(&self) -> usize;
+    /// Whether inputs are token ids (i32) rather than features (f32).
+    fn x_is_int(&self) -> bool;
+    /// Initial parameter vector (identical across ranks, like the
+    /// paper's common model initialisation).
+    fn init_params(&self) -> Vec<f32>;
+    /// Gradients + loss at `params` for one batch.
+    fn grad(&self, params: &[f32], x: &BatchData, y: &[i32]) -> (Vec<f32>, f32);
+    /// Fused momentum-SGD train step (in-place params/mom). Returns loss.
+    fn train_step(
+        &self,
+        params: &mut [f32],
+        mom: &mut [f32],
+        x: &BatchData,
+        y: &[i32],
+        lr: f32,
+    ) -> f32;
+    /// Apply a momentum-SGD update for externally-produced grads.
+    fn apply_update(&self, params: &mut [f32], mom: &mut [f32], grads: &[f32], lr: f32);
+    /// (loss, correct_count) over one batch.
+    fn eval(&self, params: &[f32], x: &BatchData, y: &[i32]) -> (f32, f32);
+}

@@ -1,0 +1,22 @@
+//! Discrete-event scale simulator — regenerates the paper's large-scale
+//! efficiency results (Table 7, Figs 10/11/15/17 performance panels) at
+//! device counts unavailable on this testbed (up to 128 P100s and
+//! beyond).
+//!
+//! The simulator charges exactly the communication schedules the real
+//! coordinator emits (same per-layer message sizes, same per-step
+//! partner patterns, same all-reduce round structures) against the α–β
+//! cost model, with a per-layer compute timeline that exposes the
+//! paper's central mechanism: *gradients of layer ℓ are ready for
+//! communication while back-propagation continues on layers < ℓ* (§5).
+//!
+//! Efficiency := t_compute / t_step — "compute efficiency" as reported
+//! in Table 7 (100% ⇔ all communication hidden under compute).
+
+pub mod efficiency;
+pub mod events;
+pub mod straggler;
+pub mod workload;
+
+pub use efficiency::{step_time, Efficiency, Schedule};
+pub use workload::Workload;

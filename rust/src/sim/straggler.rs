@@ -1,0 +1,155 @@
+//! Multi-rank straggler simulation — the noise ablation.
+//!
+//! The closed-form model in [`super::efficiency`] charges an *expected*
+//! straggler factor per collective round.  This module simulates the
+//! actual rank-level dynamics with a per-(rank, step) recurrence:
+//!
+//! ```text
+//!   start[r][k] = max(end[r][k-1], dependency(r, k-1))
+//!   end[r][k]   = start[r][k] + compute · (1 + jitter)
+//! ```
+//!
+//! where the dependency is the global max (barrier schedules: all-reduce
+//! SGD/AGD wait for the slowest rank each step) or a single gossip
+//! partner (dissemination).  The paper cites exactly this effect
+//! (Hoefler et al. [14], Bhatele et al. [15]) as why "actual
+//! communication time deviates from Θ(log p)".
+//!
+//! Output: mean step time per schedule as noise and p grow — gossip's
+//! advantage widens with both, which the efficiency table alone cannot
+//! show.  (The generic [`super::events`] queue is the DES substrate for
+//! schedules with irregular dependency graphs; the three below have
+//! regular per-step dependencies, so the recurrence is exact.)
+
+use super::workload::Workload;
+use crate::util::{ceil_log2, Rng};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SyncKind {
+    /// Barrier each step (all-reduce SGD/AGD): wait for the global max.
+    Global,
+    /// Gossip: wait only for this step's dissemination partner.
+    Partner,
+    /// No waiting at all (infinite-staleness bound, for reference).
+    None,
+}
+
+/// One rank's compute time for a step: nominal × (1 + jitter), jitter
+/// drawn from an exponential tail with mean `noise`.
+fn jittered(nominal: f64, noise: f64, rng: &mut Rng) -> f64 {
+    let u = rng.f64().max(1e-12);
+    nominal * (1.0 + noise * (-u.ln()))
+}
+
+/// Simulate `steps` training steps on `p` ranks; returns the mean
+/// wall-clock time per step (completion of the slowest rank / steps).
+pub fn mean_step_time(
+    w: &Workload,
+    p: usize,
+    kind: SyncKind,
+    noise: f64,
+    steps: usize,
+    seed: u64,
+) -> f64 {
+    assert!(p >= 1 && steps >= 1);
+    let nominal = w.t_compute();
+    let mut rngs: Vec<Rng> = (0..p)
+        .map(|r| Rng::new(seed ^ (r as u64).wrapping_mul(0x9E3779B97F4A7C15)))
+        .collect();
+    let rounds = ceil_log2(p).max(1);
+    let mut end = vec![0.0f64; p]; // end[r] after the previous step
+    for k in 0..steps {
+        let prev = end.clone();
+        let prev_max = prev.iter().cloned().fold(0.0, f64::max);
+        for r in 0..p {
+            let dep = match kind {
+                SyncKind::Global => prev_max,
+                SyncKind::Partner => {
+                    // rank r mixes with the model sent by its
+                    // dissemination recv partner after step k-1
+                    let d = (1usize << (k % rounds)) % p.max(1);
+                    let d = d.max(1) % p.max(1);
+                    if p == 1 {
+                        prev[r]
+                    } else {
+                        let from = (r + p - d.max(1)) % p;
+                        prev[from]
+                    }
+                }
+                SyncKind::None => prev[r],
+            };
+            let start = prev[r].max(dep);
+            end[r] = start + jittered(nominal, noise, &mut rngs[r]);
+        }
+    }
+    end.iter().cloned().fold(0.0, f64::max) / steps as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_noise_all_kinds_equal_nominal() {
+        let w = Workload::lenet3(1.0);
+        for kind in [SyncKind::Global, SyncKind::Partner, SyncKind::None] {
+            let t = mean_step_time(&w, 8, kind, 0.0, 50, 1);
+            assert!(
+                (t - w.t_compute()).abs() < 1e-9,
+                "{kind:?}: {t} vs {}",
+                w.t_compute()
+            );
+        }
+    }
+
+    #[test]
+    fn global_sync_amplifies_noise_more_than_gossip() {
+        let w = Workload::lenet3(1.0);
+        let noise = 0.2;
+        let g = mean_step_time(&w, 32, SyncKind::Global, noise, 200, 7);
+        let p = mean_step_time(&w, 32, SyncKind::Partner, noise, 200, 7);
+        let n = mean_step_time(&w, 32, SyncKind::None, noise, 200, 7);
+        assert!(g > p, "global {g} should exceed partner {p}");
+        assert!(p >= n * 0.999, "partner {p} can't beat no-sync {n}");
+        // E[max of 32 exp] ≈ H_32 ≈ 4.06 × mean jitter: the barrier cost
+        let amplification = (g / w.t_compute() - 1.0) / noise;
+        assert!(
+            amplification > 2.0,
+            "straggler amplification {amplification} too small"
+        );
+    }
+
+    #[test]
+    fn gossip_advantage_grows_with_p() {
+        let w = Workload::lenet3(1.0);
+        let adv = |p: usize| {
+            let g = mean_step_time(&w, p, SyncKind::Global, 0.15, 200, 3);
+            let pt = mean_step_time(&w, p, SyncKind::Partner, 0.15, 200, 3);
+            g / pt
+        };
+        let a4 = adv(4);
+        let a64 = adv(64);
+        assert!(
+            a64 > a4,
+            "advantage should grow with p: {a4:.3} -> {a64:.3}"
+        );
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let w = Workload::cifarnet(1.0);
+        let a = mean_step_time(&w, 16, SyncKind::Partner, 0.3, 100, 42);
+        let b = mean_step_time(&w, 16, SyncKind::Partner, 0.3, 100, 42);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn single_rank_all_kinds_identical() {
+        let w = Workload::lenet3(1.0);
+        let a = mean_step_time(&w, 1, SyncKind::Global, 0.3, 100, 5);
+        let b = mean_step_time(&w, 1, SyncKind::Partner, 0.3, 100, 5);
+        let c = mean_step_time(&w, 1, SyncKind::None, 0.3, 100, 5);
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+    }
+}

@@ -1,0 +1,119 @@
+//! Dissemination exchange (paper §4.4.2) — GossipGraD's primary topology.
+//!
+//! At step k (mod the diffusion horizon), rank i sends to
+//! `(i + 2^(k mod ⌈log₂p⌉)) mod p` and receives from
+//! `(i + p − 2^(k mod ⌈log₂p⌉)) mod p`.  Unlike hypercube exchange the
+//! send and receive partners differ, so each rank *diffuses gradients
+//! from two partners per step* — the reason the paper prefers it.
+//! Works for any p (not just powers of two).
+
+use super::{Exchange, Topology};
+use crate::util::ceil_log2;
+
+#[derive(Clone, Debug)]
+pub struct Dissemination {
+    p: usize,
+    rounds: usize,
+}
+
+impl Dissemination {
+    pub fn new(p: usize) -> Self {
+        assert!(p >= 1);
+        Dissemination {
+            p,
+            rounds: ceil_log2(p).max(1),
+        }
+    }
+}
+
+impl Topology for Dissemination {
+    fn size(&self) -> usize {
+        self.p
+    }
+
+    fn exchange(&self, rank: usize, step: usize) -> Exchange {
+        if self.p == 1 {
+            return Exchange {
+                send_to: 0,
+                recv_from: 0,
+            };
+        }
+        let k = step % self.rounds;
+        let d = 1usize << k;
+        let d = d % self.p; // distances wrap for non-power-of-two p
+        let d = if d == 0 { 1 } else { d };
+        Exchange {
+            send_to: (rank + d) % self.p,
+            recv_from: (rank + self.p - d) % self.p,
+        }
+    }
+
+    fn diffusion_steps(&self) -> usize {
+        ceil_log2(self.p)
+    }
+
+    fn name(&self) -> &'static str {
+        "dissemination"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_formula() {
+        // §4.4.2: at step k, p_i sends to (p_i + 2^k) % p
+        let t = Dissemination::new(8);
+        assert_eq!(
+            t.exchange(0, 0),
+            Exchange {
+                send_to: 1,
+                recv_from: 7
+            }
+        );
+        assert_eq!(
+            t.exchange(0, 1),
+            Exchange {
+                send_to: 2,
+                recv_from: 6
+            }
+        );
+        assert_eq!(
+            t.exchange(0, 2),
+            Exchange {
+                send_to: 4,
+                recv_from: 4
+            }
+        );
+        // period log2(8)=3: step 3 repeats step 0
+        assert_eq!(t.exchange(5, 3), t.exchange(5, 0));
+    }
+
+    #[test]
+    fn send_and_recv_partners_differ_for_p_gt_2() {
+        // the "two partners per step" property vs hypercube
+        let t = Dissemination::new(8);
+        let e = t.exchange(3, 0);
+        assert_ne!(e.send_to, e.recv_from);
+    }
+
+    #[test]
+    fn single_rank_degenerates() {
+        let t = Dissemination::new(1);
+        assert_eq!(t.exchange(0, 5).send_to, 0);
+        assert_eq!(t.diffusion_steps(), 0);
+    }
+
+    #[test]
+    fn non_power_of_two_never_self_loops() {
+        for p in [3usize, 5, 6, 7, 9, 12, 100] {
+            let t = Dissemination::new(p);
+            for step in 0..3 * t.rounds {
+                for r in 0..p {
+                    assert_ne!(t.exchange(r, step).send_to, r, "p={p} step={step}");
+                }
+            }
+        }
+    }
+}

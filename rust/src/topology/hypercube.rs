@@ -1,0 +1,84 @@
+//! Hypercube exchange (paper §4.4.1): at step k, rank i pairs with
+//! i ⊕ 2^k — a *pairwise* exchange (send and recv partner coincide), so
+//! each step diffuses gradients from exactly one partner.  Requires p to
+//! be a power of two; the paper considers it and prefers dissemination.
+
+use super::{Exchange, Topology};
+use crate::util::ceil_log2;
+
+#[derive(Clone, Debug)]
+pub struct Hypercube {
+    p: usize,
+    dims: usize,
+}
+
+impl Hypercube {
+    pub fn new(p: usize) -> Self {
+        assert!(p.is_power_of_two(), "hypercube requires power-of-two p, got {p}");
+        Hypercube {
+            p,
+            dims: ceil_log2(p).max(1),
+        }
+    }
+}
+
+impl Topology for Hypercube {
+    fn size(&self) -> usize {
+        self.p
+    }
+
+    fn exchange(&self, rank: usize, step: usize) -> Exchange {
+        if self.p == 1 {
+            return Exchange {
+                send_to: 0,
+                recv_from: 0,
+            };
+        }
+        let partner = rank ^ (1usize << (step % self.dims));
+        Exchange {
+            send_to: partner,
+            recv_from: partner,
+        }
+    }
+
+    fn diffusion_steps(&self) -> usize {
+        ceil_log2(self.p)
+    }
+
+    fn name(&self) -> &'static str {
+        "hypercube"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pairwise_and_involutive() {
+        let t = Hypercube::new(16);
+        for step in 0..8 {
+            for r in 0..16 {
+                let e = t.exchange(r, step);
+                assert_eq!(e.send_to, e.recv_from);
+                // partner-of-partner is self
+                assert_eq!(t.exchange(e.send_to, step).send_to, r);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn rejects_non_power_of_two() {
+        Hypercube::new(12);
+    }
+
+    #[test]
+    fn figure6_cube_example() {
+        // Figure 6: 8 ranks — step 0 pairs across dim 0, etc.
+        let t = Hypercube::new(8);
+        assert_eq!(t.exchange(0, 0).send_to, 1);
+        assert_eq!(t.exchange(0, 1).send_to, 2);
+        assert_eq!(t.exchange(0, 2).send_to, 4);
+    }
+}

@@ -1,0 +1,199 @@
+//! Virtual communication topologies — the paper's §4.3/§4.4.
+//!
+//! A [`Topology`] answers, for a given rank and gossip step, *who do I
+//! send my model/gradients to and who do I receive from*.  GossipGraD's
+//! requirements (paper §4.3): (1) O(1) messages per rank per step,
+//! (2) **balanced** communication — the per-step exchange pattern is a
+//! permutation of the ranks, (3) indirect diffusion of updates to all
+//! ranks within ⌈log₂ p⌉ steps, (4) bisection-bandwidth friendly.
+//!
+//! Implementations:
+//! * [`dissemination`] — the paper's primary choice: at step k, rank i
+//!   sends to (i + 2^k) mod p and receives from (i − 2^k) mod p.
+//! * [`hypercube`]     — pairwise exchange with partner i ⊕ 2^k
+//!   (power-of-two p only).
+//! * [`ring`]          — used for the asynchronous *sample* shuffle
+//!   (§4.5.2), deliberately different from the gradient topology.
+//! * [`random`]        — the Jin et al. / Blot et al. baseline whose
+//!   imbalance the paper criticises (kept as a comparison point).
+//! * [`rotation`]      — §4.5.1 partner rotation: p seeded shuffles of
+//!   the communicator, advanced every ⌈log₂ p⌉ steps.
+
+pub mod dissemination;
+pub mod hypercube;
+pub mod random;
+pub mod ring;
+pub mod rotation;
+
+pub use dissemination::Dissemination;
+pub use hypercube::Hypercube;
+pub use random::RandomGossip;
+pub use ring::Ring;
+pub use rotation::Rotation;
+
+/// The peers a rank exchanges with at one gossip step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Exchange {
+    /// Rank we send our update to.
+    pub send_to: usize,
+    /// Rank we receive an update from.
+    pub recv_from: usize,
+}
+
+/// A virtual topology over `p` ranks.
+pub trait Topology: Send + Sync {
+    /// Number of ranks.
+    fn size(&self) -> usize;
+
+    /// The exchange performed by `rank` at gossip `step`.
+    fn exchange(&self, rank: usize, step: usize) -> Exchange;
+
+    /// Steps after which all ranks have *indirectly* communicated
+    /// (⌈log₂ p⌉ for dissemination/hypercube; p−1 for ring).
+    fn diffusion_steps(&self) -> usize;
+
+    /// Human-readable name for tables/metrics.
+    fn name(&self) -> &'static str;
+}
+
+/// Verify the §4.3 "balanced communication" property at `step`:
+/// the send pattern must be a permutation with no self-loops (for p > 1),
+/// and recv_from must be the inverse of send_to.
+pub fn check_balanced(t: &dyn Topology, step: usize) -> Result<(), String> {
+    let p = t.size();
+    let mut recv_count = vec![0usize; p];
+    for r in 0..p {
+        let e = t.exchange(r, step);
+        if e.send_to >= p || e.recv_from >= p {
+            return Err(format!("rank {r} step {step}: peer out of range {e:?}"));
+        }
+        if p > 1 && e.send_to == r {
+            return Err(format!("rank {r} step {step}: self-loop"));
+        }
+        recv_count[e.send_to] += 1;
+        // consistency: if i sends to j, j must expect to receive from i
+        let back = t.exchange(e.send_to, step);
+        if back.recv_from != r {
+            return Err(format!(
+                "rank {r} -> {j} but {j} expects recv from {b} (step {step})",
+                j = e.send_to,
+                b = back.recv_from
+            ));
+        }
+    }
+    if recv_count.iter().any(|&c| c != 1) {
+        return Err(format!(
+            "step {step}: send pattern not a permutation: {recv_count:?}"
+        ));
+    }
+    Ok(())
+}
+
+/// Simulate indirect diffusion: start with information only at `origin`,
+/// iterate the exchange pattern, return the number of steps until all
+/// ranks are reached.  Used by tests to verify the ⌈log₂ p⌉ bound.
+pub fn diffusion_time(t: &dyn Topology, origin: usize, max_steps: usize) -> Option<usize> {
+    let p = t.size();
+    let mut has = vec![false; p];
+    has[origin] = true;
+    if p == 1 {
+        return Some(0);
+    }
+    for step in 0..max_steps {
+        let prev = has.clone();
+        for r in 0..p {
+            let e = t.exchange(r, step);
+            // r sends its (pre-step) knowledge to send_to
+            if prev[r] {
+                has[e.send_to] = true;
+            }
+        }
+        if has.iter().all(|&b| b) {
+            return Some(step + 1);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ceil_log2;
+
+    #[test]
+    fn dissemination_balanced_all_steps_all_sizes() {
+        for p in [1usize, 2, 3, 5, 8, 13, 32, 33, 128] {
+            let t = Dissemination::new(p);
+            for step in 0..3 * ceil_log2(p).max(1) {
+                check_balanced(&t, step).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn hypercube_balanced_power_of_two() {
+        for p in [2usize, 4, 8, 64, 128] {
+            let t = Hypercube::new(p);
+            for step in 0..2 * ceil_log2(p) {
+                check_balanced(&t, step).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn ring_balanced() {
+        for p in [2usize, 3, 7, 32] {
+            let t = Ring::new(p);
+            for step in 0..5 {
+                check_balanced(&t, step).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn dissemination_diffuses_in_ceil_log2_steps() {
+        // the paper's headline claim for the virtual topology (§4.4)
+        for p in [2usize, 3, 4, 5, 8, 16, 17, 32, 100, 128] {
+            let t = Dissemination::new(p);
+            for origin in [0, p / 2, p - 1] {
+                let steps = diffusion_time(&t, origin, 4 * p).unwrap();
+                assert!(
+                    steps <= ceil_log2(p),
+                    "p={p} origin={origin}: diffused in {steps} > ⌈log2⌉={}",
+                    ceil_log2(p)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hypercube_diffuses_in_log2_steps() {
+        for p in [2usize, 4, 8, 32, 128] {
+            let t = Hypercube::new(p);
+            let steps = diffusion_time(&t, 0, 4 * p).unwrap();
+            assert_eq!(steps, ceil_log2(p), "p={p}");
+        }
+    }
+
+    #[test]
+    fn ring_diffusion_is_linear() {
+        let p = 16;
+        let t = Ring::new(p);
+        assert_eq!(diffusion_time(&t, 0, 4 * p).unwrap(), p - 1);
+    }
+
+    #[test]
+    fn random_gossip_is_unbalanced_somewhere() {
+        // the deficiency the paper attributes to Jin/Blot random gossip:
+        // some step has a rank receiving 0 or ≥2 messages.
+        let t = RandomGossip::new(16, 7);
+        let mut saw_imbalance = false;
+        for step in 0..64 {
+            if check_balanced(&t, step).is_err() {
+                saw_imbalance = true;
+                break;
+            }
+        }
+        assert!(saw_imbalance, "random gossip unexpectedly balanced");
+    }
+}

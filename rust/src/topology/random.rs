@@ -1,0 +1,128 @@
+//! Random gossip — the Jin et al. / Blot et al. baseline (paper Fig 2b).
+//!
+//! Each rank independently picks a uniformly random partner per step.
+//! This is exactly the scheme whose *communication imbalance* and *poor
+//! gradient diffusion* the paper criticises (§1, §4.2); we keep it as a
+//! measurable baseline.  Deterministic per (seed, step, rank) so
+//! experiments replay.
+
+use super::{Exchange, Topology};
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct RandomGossip {
+    p: usize,
+    seed: u64,
+}
+
+impl RandomGossip {
+    pub fn new(p: usize, seed: u64) -> Self {
+        assert!(p >= 1);
+        RandomGossip { p, seed }
+    }
+
+    /// All ranks that send to `rank` at `step` (may be empty or many —
+    /// the imbalance).  Used by the random-gossip baseline so every sent
+    /// message is actually consumed.
+    pub fn senders_to(&self, rank: usize, step: usize) -> Vec<usize> {
+        (0..self.p)
+            .filter(|&r| r != rank && self.pick(r, step) == rank)
+            .collect()
+    }
+
+    fn pick(&self, rank: usize, step: usize) -> usize {
+        let mut rng = Rng::new(
+            self.seed ^ (step as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (rank as u64).wrapping_mul(0xD1B54A32D192ED03),
+        );
+        if self.p == 1 {
+            return 0;
+        }
+        // uniform over the other p-1 ranks
+        let mut t = rng.below(self.p - 1);
+        if t >= rank {
+            t += 1;
+        }
+        t
+    }
+}
+
+impl Topology for RandomGossip {
+    fn size(&self) -> usize {
+        self.p
+    }
+
+    fn exchange(&self, rank: usize, step: usize) -> Exchange {
+        // send target is random; "recv_from" must name *some* rank that
+        // sends here this step, or ourselves if none does (models the
+        // imbalance: a rank may receive 0 or many updates).
+        let send_to = self.pick(rank, step);
+        let mut recv_from = rank;
+        for r in 0..self.p {
+            if r != rank && self.pick(r, step) == rank {
+                recv_from = r;
+                break;
+            }
+        }
+        Exchange { send_to, recv_from }
+    }
+
+    fn diffusion_steps(&self) -> usize {
+        // expected O(log p) w.h.p., but unbounded worst case; report the
+        // coupon-collector-ish bound used for scheduling purposes
+        2 * crate::util::ceil_log2(self.p).max(1)
+    }
+
+    fn name(&self) -> &'static str {
+        "random-gossip"
+    }
+}
+
+/// Count, for one step, how many messages each rank receives — the
+/// imbalance statistic plotted in EXPERIMENTS.md (paper's critique).
+pub fn recv_histogram(t: &RandomGossip, step: usize) -> Vec<usize> {
+    let mut h = vec![0usize; t.p];
+    for r in 0..t.p {
+        h[t.pick(r, step)] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = RandomGossip::new(32, 5);
+        let b = RandomGossip::new(32, 5);
+        for step in 0..10 {
+            for r in 0..32 {
+                assert_eq!(a.exchange(r, step), b.exchange(r, step));
+            }
+        }
+    }
+
+    #[test]
+    fn never_self_partner() {
+        let t = RandomGossip::new(17, 3);
+        for step in 0..50 {
+            for r in 0..17 {
+                assert_ne!(t.exchange(r, step).send_to, r);
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_shows_imbalance() {
+        // with p=64 the chance of a perfectly balanced random step is ~0
+        let t = RandomGossip::new(64, 11);
+        let mut max_load = 0;
+        for step in 0..20 {
+            let h = recv_histogram(&t, step);
+            assert_eq!(h.iter().sum::<usize>(), 64);
+            max_load = max_load.max(*h.iter().max().unwrap());
+        }
+        assert!(max_load >= 2, "random gossip suspiciously balanced");
+    }
+}

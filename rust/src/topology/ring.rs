@@ -1,0 +1,80 @@
+//! Ring virtual topology — used for the asynchronous distributed *sample*
+//! shuffle (paper §4.5.2).  Each rank always sends its just-consumed
+//! batch to its right neighbour and receives from its left, giving the
+//! fairness property: a sample returns to a rank only after every other
+//! rank has held it once (p−1 hops).  Deliberately a different topology
+//! from the gradient dissemination exchange.
+
+use super::{Exchange, Topology};
+
+#[derive(Clone, Debug)]
+pub struct Ring {
+    p: usize,
+}
+
+impl Ring {
+    pub fn new(p: usize) -> Self {
+        assert!(p >= 1);
+        Ring { p }
+    }
+}
+
+impl Topology for Ring {
+    fn size(&self) -> usize {
+        self.p
+    }
+
+    fn exchange(&self, rank: usize, _step: usize) -> Exchange {
+        if self.p == 1 {
+            return Exchange {
+                send_to: 0,
+                recv_from: 0,
+            };
+        }
+        Exchange {
+            send_to: (rank + 1) % self.p,
+            recv_from: (rank + self.p - 1) % self.p,
+        }
+    }
+
+    fn diffusion_steps(&self) -> usize {
+        self.p.saturating_sub(1)
+    }
+
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neighbours() {
+        let t = Ring::new(5);
+        assert_eq!(t.exchange(0, 0).send_to, 1);
+        assert_eq!(t.exchange(4, 9).send_to, 0);
+        assert_eq!(t.exchange(0, 0).recv_from, 4);
+    }
+
+    #[test]
+    fn sample_returns_after_p_minus_1_hops() {
+        // fairness property: following send_to from rank 0 visits all
+        // other ranks before returning
+        let p = 9;
+        let t = Ring::new(p);
+        let mut at = 0usize;
+        let mut visited = vec![false; p];
+        visited[0] = true;
+        for hop in 0..p {
+            at = t.exchange(at, hop).send_to;
+            if at == 0 {
+                assert!(visited.iter().all(|&v| v), "returned early at hop {hop}");
+                return;
+            }
+            visited[at] = true;
+        }
+        panic!("never returned");
+    }
+}

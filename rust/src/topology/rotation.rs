@@ -1,0 +1,164 @@
+//! Partner rotation (paper §4.5.1).
+//!
+//! Dissemination exchange repeats its partners every ⌈log₂ p⌉ steps, so
+//! *direct* diffusion is limited to log(p)/p of the ranks.  The paper's
+//! fix: precompute p random shuffles of the communicator at startup;
+//! after every ⌈log₂ p⌉ steps, advance to the next shuffled communicator
+//! and rebuild the virtual dissemination topology on it.  Cost is
+//! amortised to ~0 (all permutations precomputed here, as in the paper).
+//!
+//! `Rotation` wraps any inner topology: ranks are mapped through the
+//! active permutation before the inner exchange formula is applied.
+
+use super::{Exchange, Topology};
+use crate::util::{ceil_log2, Rng};
+
+pub struct Rotation<T: Topology> {
+    inner: T,
+    /// perms[e][v] = physical rank at virtual position v, epoch e.
+    perms: Vec<Vec<usize>>,
+    /// inverse: pos[e][r] = virtual position of physical rank r.
+    pos: Vec<Vec<usize>>,
+    period: usize,
+}
+
+impl<T: Topology> Rotation<T> {
+    pub fn new(inner: T, seed: u64) -> Self {
+        let p = inner.size();
+        let mut rng = Rng::new(seed);
+        // epoch 0 is the identity (matches the paper: rotation kicks in
+        // after the first log(p) steps); then p random shuffles.
+        let mut perms = vec![(0..p).collect::<Vec<_>>()];
+        for _ in 0..p {
+            perms.push(rng.permutation(p));
+        }
+        let pos = perms
+            .iter()
+            .map(|perm| {
+                let mut inv = vec![0usize; p];
+                for (v, &r) in perm.iter().enumerate() {
+                    inv[r] = v;
+                }
+                inv
+            })
+            .collect();
+        let period = ceil_log2(p).max(1);
+        Rotation {
+            inner,
+            perms,
+            pos,
+            period,
+        }
+    }
+
+    /// Which communicator epoch is active at `step`.
+    pub fn epoch(&self, step: usize) -> usize {
+        (step / self.period) % self.perms.len()
+    }
+
+    pub fn num_epochs(&self) -> usize {
+        self.perms.len()
+    }
+
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T: Topology> Topology for Rotation<T> {
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+
+    fn exchange(&self, rank: usize, step: usize) -> Exchange {
+        let e = self.epoch(step);
+        let v = self.pos[e][rank];
+        let ex = self.inner.exchange(v, step);
+        Exchange {
+            send_to: self.perms[e][ex.send_to],
+            recv_from: self.perms[e][ex.recv_from],
+        }
+    }
+
+    fn diffusion_steps(&self) -> usize {
+        self.inner.diffusion_steps()
+    }
+
+    fn name(&self) -> &'static str {
+        "rotated"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{check_balanced, Dissemination};
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn stays_balanced_under_rotation() {
+        for p in [4usize, 7, 16, 33] {
+            let t = Rotation::new(Dissemination::new(p), 42);
+            for step in 0..6 * t.period {
+                check_balanced(&t, step).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn epoch_advances_every_log_p_steps() {
+        let t = Rotation::new(Dissemination::new(16), 1);
+        assert_eq!(t.period, 4);
+        assert_eq!(t.epoch(0), 0);
+        assert_eq!(t.epoch(3), 0);
+        assert_eq!(t.epoch(4), 1);
+        assert_eq!(t.epoch(8), 2);
+    }
+
+    #[test]
+    fn first_epoch_is_identity() {
+        let p = 8;
+        let rot = Rotation::new(Dissemination::new(p), 9);
+        let plain = Dissemination::new(p);
+        for step in 0..rot.period {
+            for r in 0..p {
+                assert_eq!(rot.exchange(r, step), plain.exchange(r, step));
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_widens_direct_partner_set() {
+        // §4.5.1 motivation: without rotation rank 0 only ever meets
+        // log(p) distinct partners; with rotation it meets many more.
+        let p = 32;
+        let plain = Dissemination::new(p);
+        let rot = Rotation::new(Dissemination::new(p), 3);
+        let horizon = 40 * rot.period;
+        let direct = |t: &dyn Topology| {
+            let mut s = HashSet::new();
+            for step in 0..horizon {
+                let e = t.exchange(0, step);
+                s.insert(e.send_to);
+                s.insert(e.recv_from);
+            }
+            s.len()
+        };
+        let d_plain = direct(&plain);
+        let d_rot = direct(&rot);
+        assert!(d_plain <= 2 * crate::util::ceil_log2(p));
+        assert!(
+            d_rot > 2 * d_plain,
+            "rotation gave {d_rot} direct partners vs {d_plain} plain"
+        );
+    }
+
+    #[test]
+    fn all_perms_are_bijections() {
+        let rot = Rotation::new(Dissemination::new(13), 77);
+        for perm in &rot.perms {
+            let s: HashSet<_> = perm.iter().collect();
+            assert_eq!(s.len(), 13);
+        }
+    }
+}

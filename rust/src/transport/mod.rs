@@ -1,0 +1,70 @@
+//! MPI-like in-process transport substrate.
+//!
+//! The paper runs on MPI over InfiniBand/Aries; here each rank is a
+//! thread and messages are real buffers moved through per-rank mailboxes
+//! ([`inproc`]).  Non-blocking semantics mirror the MPI primitives the
+//! paper uses (§5.1): `isend` / `irecv` return request handles;
+//! `test` is a non-blocking progress poll (MPI_Test/MPI_TestAll);
+//! `wait` blocks (MPI_Wait/MPI_WaitAll).
+//!
+//! Timing is charged by the α–β cost model in [`simnet`]: a message of
+//! M bytes becomes *visible* to the receiver `α + M·β (+ noise)` after
+//! the send — so a receiver that arrives later than that observes zero
+//! exposed communication time, exactly the overlap behaviour the paper
+//! exploits.  With [`simnet::CostModel::zero`] the transport is a plain
+//! (correctness-only) message layer.
+
+pub mod inproc;
+pub mod simnet;
+
+pub use inproc::{Endpoint, Fabric, RecvReq, SendReq};
+pub use simnet::CostModel;
+
+/// Message tags name the logical channel, mirroring MPI tags.
+/// Layer-wise gradient exchange uses `Tag::layer(i)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Tag(pub u64);
+
+impl Tag {
+    pub const MODEL: Tag = Tag(1 << 40);
+    pub const SAMPLES: Tag = Tag(2 << 40);
+    pub const LABELS: Tag = Tag(3 << 40);
+    pub const REDUCE: Tag = Tag(4 << 40);
+    pub const CTRL: Tag = Tag(5 << 40);
+
+    pub const BCAST: Tag = Tag(7 << 40);
+
+    /// Per-layer gradient channel (paper §5: layer-wise async exchange).
+    pub fn layer(i: usize) -> Tag {
+        Tag((6u64 << 40) | i as u64)
+    }
+
+    /// Collective-call separator (one per allreduce invocation).
+    /// Uses a dedicated 16-bit field so it cannot collide with `sub`.
+    pub fn round(self, r: usize) -> Tag {
+        Tag((self.0 & !(0xFFFFu64 << 24)) | ((r as u64 & 0xFFFF) << 24))
+    }
+
+    /// Intra-collective step separator (ring steps, tree phases).
+    pub fn sub(self, s: usize) -> Tag {
+        Tag((self.0 & !(0xFFFFu64 << 8)) | ((s as u64 & 0xFFFF) << 8))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_distinct() {
+        assert_ne!(Tag::MODEL, Tag::SAMPLES);
+        assert_ne!(Tag::layer(0), Tag::layer(1));
+        assert_ne!(Tag::layer(3), Tag::MODEL);
+        assert_ne!(Tag::REDUCE.round(0), Tag::REDUCE.round(1));
+        assert_ne!(Tag::REDUCE.round(7), Tag::CTRL.round(7));
+        // round and sub live in disjoint bit fields
+        assert_ne!(Tag::REDUCE.round(1).sub(0), Tag::REDUCE.round(0).sub(1));
+        assert_eq!(Tag::REDUCE.round(1).round(2), Tag::REDUCE.round(2));
+        assert_ne!(Tag::BCAST.round(3), Tag::REDUCE.round(3));
+    }
+}

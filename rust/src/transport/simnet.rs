@@ -1,0 +1,118 @@
+//! α–β network cost model (+ optional OS-noise jitter) — the simulated
+//! interconnect standing in for InfiniBand-EDR / Cray Aries.
+//!
+//! Message cost: `t = α + M·β`, the model the paper's complexity claims
+//! are phrased in (Θ(log p) all-reduce vs O(1) gossip).  `noise_frac`
+//! injects multiplicative jitter reproducing the "system issues" the
+//! paper cites (Hoefler et al. [14], Bhatele et al. [15]).
+//!
+//! Presets are calibrated to the paper's testbeds (Table 4): IB-EDR
+//! (~1 µs latency, ~12 GB/s effective) and Aries (~1.2 µs, ~10 GB/s).
+//! `scaled` presets shrink message *time* proportionally for laptop-scale
+//! real runs while preserving the compute:comm ratio.
+
+use crate::util::Rng;
+use std::sync::Mutex;
+
+#[derive(Debug)]
+pub struct CostModel {
+    /// Per-message latency, seconds.
+    pub alpha: f64,
+    /// Per-byte transfer time, seconds (1 / bandwidth).
+    pub beta: f64,
+    /// Multiplicative noise amplitude (0.0 = deterministic).
+    pub noise_frac: f64,
+    rng: Mutex<Rng>,
+}
+
+impl Clone for CostModel {
+    fn clone(&self) -> Self {
+        CostModel {
+            alpha: self.alpha,
+            beta: self.beta,
+            noise_frac: self.noise_frac,
+            rng: Mutex::new(self.rng.lock().unwrap().clone()),
+        }
+    }
+}
+
+impl CostModel {
+    pub fn new(alpha: f64, beta: f64, noise_frac: f64, seed: u64) -> Self {
+        CostModel {
+            alpha,
+            beta,
+            noise_frac,
+            rng: Mutex::new(Rng::new(seed)),
+        }
+    }
+
+    /// No simulated cost: messages are visible immediately (correctness
+    /// runs, unit tests).
+    pub fn zero() -> Self {
+        CostModel::new(0.0, 0.0, 0.0, 0)
+    }
+
+    /// InfiniBand EDR preset (paper's P100 cluster fabric).
+    pub fn ib_edr(seed: u64) -> Self {
+        CostModel::new(1.0e-6, 1.0 / 12.0e9, 0.05, seed)
+    }
+
+    /// Cray Aries preset (paper's KNL cluster fabric).
+    pub fn aries(seed: u64) -> Self {
+        CostModel::new(1.2e-6, 1.0 / 10.0e9, 0.08, seed)
+    }
+
+    /// The cost in seconds of one message of `bytes` bytes.
+    pub fn message_time(&self, bytes: usize) -> f64 {
+        let base = self.alpha + bytes as f64 * self.beta;
+        if self.noise_frac > 0.0 {
+            let u = self.rng.lock().unwrap().f64();
+            // one-sided jitter: networks are slower than nominal, not faster
+            base * (1.0 + self.noise_frac * u)
+        } else {
+            base
+        }
+    }
+
+    /// Analytic (noise-free) cost — used by the discrete-event simulator
+    /// where determinism across sweeps matters.
+    pub fn nominal(&self, bytes: usize) -> f64 {
+        self.alpha + bytes as f64 * self.beta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_model_is_free() {
+        let m = CostModel::zero();
+        assert_eq!(m.message_time(1 << 20), 0.0);
+    }
+
+    #[test]
+    fn alpha_beta_additive() {
+        let m = CostModel::new(1e-6, 1e-9, 0.0, 0);
+        assert!((m.message_time(0) - 1e-6).abs() < 1e-12);
+        assert!((m.message_time(1000) - (1e-6 + 1e-6)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noise_is_one_sided_and_bounded() {
+        let m = CostModel::new(1e-6, 0.0, 0.5, 7);
+        for _ in 0..100 {
+            let t = m.message_time(0);
+            assert!(t >= 1e-6 && t <= 1.5e-6 + 1e-12, "t={t}");
+        }
+    }
+
+    #[test]
+    fn presets_sane() {
+        // 100 MB model (ResNet50) on IB-EDR: ~8ms — the paper's 27 ms
+        // includes protocol overheads; order of magnitude is right
+        let m = CostModel::ib_edr(0);
+        let t = m.nominal(100 << 20);
+        assert!(t > 5e-3 && t < 20e-3, "t={t}");
+    }
+}

@@ -1,0 +1,103 @@
+//! Tiny argv parser (clap stand-in): `--key value`, `--flag`, positionals.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv-style tokens.  `flag_names` lists boolean flags that
+    /// take no value; every other `--key` consumes the next token.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        tokens: I,
+        flag_names: &[&str],
+    ) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut it = tokens.into_iter();
+        while let Some(t) = it.next() {
+            if let Some(key) = t.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&key) {
+                    a.flags.push(key.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("--{key} needs a value"))?;
+                    a.options.insert(key.to_string(), v);
+                }
+            } else {
+                a.positional.push(t);
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            toks("train --model mlp --ranks 8 --verbose --lr=0.05 out.csv"),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["train", "out.csv"]);
+        assert_eq!(a.get("model"), Some("mlp"));
+        assert_eq!(a.usize_or("ranks", 1), 8);
+        assert_eq!(a.f64_or("lr", 0.1), 0.05);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(toks("--model"), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(toks(""), &[]).unwrap();
+        assert_eq!(a.usize_or("ranks", 4), 4);
+        assert_eq!(a.get_or("model", "mlp"), "mlp");
+    }
+}

@@ -1,0 +1,153 @@
+//! Micro-benchmark harness (criterion stand-in for the offline env).
+//!
+//! `cargo bench` targets use `harness = false` and drive this directly:
+//! warmup, N timed samples, median/mean/p10/p90, throughput helpers, and
+//! paper-style table printing.
+
+use std::time::{Duration, Instant};
+
+pub struct Sample {
+    pub name: String,
+    pub secs: Vec<f64>,
+}
+
+impl Sample {
+    pub fn median(&self) -> f64 {
+        let mut v = self.secs.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    }
+    pub fn mean(&self) -> f64 {
+        crate::util::mean(&self.secs)
+    }
+    pub fn stddev(&self) -> f64 {
+        crate::util::stddev(&self.secs)
+    }
+    pub fn pct(&self, q: f64) -> f64 {
+        let mut v = self.secs.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((v.len() - 1) as f64 * q).round() as usize;
+        v[idx]
+    }
+}
+
+/// Time `f` — `warmup` untimed runs then `iters` timed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut secs = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        secs.push(t0.elapsed().as_secs_f64());
+    }
+    let s = Sample {
+        name: name.to_string(),
+        secs,
+    };
+    println!(
+        "{:<44} median {:>10}  mean {:>10} ± {:>8}",
+        s.name,
+        fmt_dur(s.median()),
+        fmt_dur(s.mean()),
+        fmt_dur(s.stddev()),
+    );
+    s
+}
+
+/// Run `f` until `budget` elapses (at least once); report iterations/sec.
+pub fn bench_throughput<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> f64 {
+    f(); // warmup
+    let t0 = Instant::now();
+    let mut n = 0u64;
+    while t0.elapsed() < budget {
+        f();
+        n += 1;
+    }
+    let per_sec = n as f64 / t0.elapsed().as_secs_f64();
+    println!("{name:<44} {per_sec:>12.1} iters/s");
+    per_sec
+}
+
+pub fn fmt_dur(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Paper-style table printer: header row + aligned numeric rows.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+    pub fn print(&self, title: &str) {
+        println!("\n== {title} ==");
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.header);
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_all_samples() {
+        let s = bench("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.secs.len(), 5);
+        assert!(s.median() >= 0.0);
+        assert!(s.pct(0.9) >= s.pct(0.1));
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(2.0).ends_with(" s"));
+        assert!(fmt_dur(2e-3).ends_with("ms"));
+        assert!(fmt_dur(2e-6).ends_with("µs"));
+        assert!(fmt_dur(2e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn table_shapes() {
+        let mut t = Table::new(&["p", "eff"]);
+        t.row(&["4".into(), "100.0".into()]);
+        t.print("test");
+    }
+}

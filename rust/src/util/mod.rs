@@ -1,0 +1,73 @@
+//! Supporting infrastructure hand-rolled for the offline build
+//! environment (no serde / clap / criterion / proptest crates available):
+//! seeded RNG, minimal JSON codec, micro-benchmark harness, property-test
+//! harness and a tiny argv parser.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use rng::Rng;
+
+/// ceil(log2(p)) — the paper's diffusion horizon; 0 for p <= 1.
+pub fn ceil_log2(p: usize) -> usize {
+    if p <= 1 {
+        0
+    } else {
+        usize::BITS as usize - (p - 1).leading_zeros() as usize
+    }
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_log2_matches_table() {
+        let cases = [
+            (0, 0),
+            (1, 0),
+            (2, 1),
+            (3, 2),
+            (4, 2),
+            (5, 3),
+            (8, 3),
+            (9, 4),
+            (16, 4),
+            (128, 7),
+            (1000, 10),
+            (1024, 10),
+        ];
+        for (p, want) in cases {
+            assert_eq!(ceil_log2(p), want, "p={p}");
+        }
+    }
+
+    #[test]
+    fn mean_stddev_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((stddev(&[1.0, 2.0, 3.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(stddev(&[5.0]), 0.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+}

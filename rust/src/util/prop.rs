@@ -1,0 +1,88 @@
+//! Tiny property-testing harness (proptest stand-in for the offline env).
+//!
+//! `forall(cases, gen, check)` runs `check` on `cases` generated inputs;
+//! on failure it reports the case index and the seed so the exact input
+//! can be replayed (`GG_PROP_SEED=<seed> cargo test ...`).  No shrinking —
+//! generators are asked to keep inputs small instead.
+
+use crate::util::Rng;
+
+pub const DEFAULT_CASES: usize = 64;
+
+fn base_seed() -> u64 {
+    std::env::var("GG_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `check(gen(rng))` for `cases` different rng streams.
+/// Panics with case index + seed on the first failure.
+pub fn forall<T, G, C>(cases: usize, mut gen: G, mut check: C)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B9));
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property failed at case {case} (GG_PROP_SEED={seed}):\n  \
+                 input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+pub fn f32_vec(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| rng.normal_f32() * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(
+            32,
+            |r| usize_in(r, 1, 100),
+            |&n| {
+                if n >= 1 && n <= 100 {
+                    Ok(())
+                } else {
+                    Err(format!("out of range: {n}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure() {
+        forall(32, |r| usize_in(r, 0, 10), |&n| {
+            if n < 5 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn f32_vec_len_and_scale() {
+        let mut r = Rng::new(3);
+        let v = f32_vec(&mut r, 1000, 2.0);
+        assert_eq!(v.len(), 1000);
+        let m: f64 = v.iter().map(|&x| x as f64).sum::<f64>() / 1000.0;
+        assert!(m.abs() < 0.5);
+    }
+}

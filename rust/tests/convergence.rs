@@ -1,0 +1,173 @@
+//! Integration tests for the paper's §6 convergence claims, run end to
+//! end through trainer + transport + native backend (no artifacts
+//! needed, so these run everywhere).
+
+use gossipgrad::config::{Algo, RunConfig};
+use gossipgrad::coordinator::trainer::run_with_backend;
+use gossipgrad::nativenet::NativeMlp;
+use std::sync::Arc;
+
+fn base_cfg(algo: Algo, ranks: usize, steps: usize) -> RunConfig {
+    RunConfig {
+        model: "mlp".into(),
+        algo,
+        ranks,
+        steps,
+        lr: 0.05,
+        rows_per_rank: 192,
+        eval_every: steps,
+        use_artifacts: false,
+        seed: 42,
+        ..Default::default()
+    }
+}
+
+fn tiny_backend() -> gossipgrad::coordinator::worker::Backend {
+    // 784-dim input (matches the MNIST-analog dataset) but a small net
+    Arc::new(NativeMlp::new(vec![784, 64, 10], 32, 0))
+}
+
+#[test]
+fn gossip_learns_and_models_agree() {
+    let cfg = base_cfg(Algo::Gossip, 8, 120);
+    let res = run_with_backend(&cfg, tiny_backend()).unwrap();
+    let acc = res.final_accuracy.expect("accuracy recorded");
+    assert!(acc > 0.9, "gossip accuracy {acc}");
+    // Corollary 6.3: models converge toward a single model.  With
+    // mixing every step, cross-rank disagreement stays tiny relative
+    // to parameter scale.
+    let dis = res.max_disagreement();
+    assert!(dis < 0.1, "disagreement {dis}");
+}
+
+#[test]
+fn agd_learns_and_models_identical() {
+    let cfg = base_cfg(Algo::Agd, 4, 80);
+    let res = run_with_backend(&cfg, tiny_backend()).unwrap();
+    assert!(res.final_accuracy.unwrap() > 0.9);
+    // synchronous all-reduce keeps replicas bit-identical
+    assert_eq!(res.max_disagreement(), 0.0);
+}
+
+#[test]
+fn sgd_sync_matches_agd_updates() {
+    // AGD (layer-wise) and SGD (whole-model) average the same gradients
+    // => identical final models given the same seed/batches.
+    let a = run_with_backend(&base_cfg(Algo::Agd, 4, 30), tiny_backend()).unwrap();
+    let b =
+        run_with_backend(&base_cfg(Algo::SgdSync, 4, 30), tiny_backend()).unwrap();
+    let max_diff = a.final_params[0]
+        .iter()
+        .zip(&b.final_params[0])
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "AGD vs SGD diverged: {max_diff}");
+}
+
+#[test]
+fn periodic_agd_learns() {
+    let cfg = base_cfg(Algo::PeriodicAgd, 8, 120);
+    let res = run_with_backend(&cfg, tiny_backend()).unwrap();
+    assert!(res.final_accuracy.unwrap() > 0.85);
+}
+
+#[test]
+fn param_server_learns_and_models_identical() {
+    let cfg = base_cfg(Algo::ParamServer, 4, 80);
+    let res = run_with_backend(&cfg, tiny_backend()).unwrap();
+    assert!(res.final_accuracy.unwrap() > 0.9);
+    assert_eq!(res.max_disagreement(), 0.0);
+}
+
+#[test]
+fn random_gossip_learns_but_gossip_is_no_worse() {
+    let r = run_with_backend(&base_cfg(Algo::GossipRandom, 8, 120), tiny_backend())
+        .unwrap();
+    let g =
+        run_with_backend(&base_cfg(Algo::Gossip, 8, 120), tiny_backend()).unwrap();
+    let (ra, ga) = (r.final_accuracy.unwrap(), g.final_accuracy.unwrap());
+    assert!(ra > 0.5, "random gossip acc {ra}");
+    assert!(ga + 0.05 >= ra, "dissemination {ga} much worse than random {ra}");
+}
+
+#[test]
+fn gossip_hypercube_learns() {
+    let cfg = base_cfg(Algo::GossipHypercube, 8, 100);
+    let res = run_with_backend(&cfg, tiny_backend()).unwrap();
+    assert!(res.final_accuracy.unwrap() > 0.85);
+}
+
+#[test]
+fn gossip_without_rotation_or_shuffle_still_learns() {
+    // ablation: the §4.5 heuristics improve diffusion, but the core
+    // algorithm must converge without them
+    let mut cfg = base_cfg(Algo::Gossip, 8, 120);
+    cfg.rotation = false;
+    cfg.sample_shuffle = false;
+    let res = run_with_backend(&cfg, tiny_backend()).unwrap();
+    assert!(res.final_accuracy.unwrap() > 0.85);
+}
+
+#[test]
+fn gossip_message_complexity_is_o1() {
+    // Table 1's central claim measured on the wire: gossip messages per
+    // rank per step stay constant as p doubles, AGD's grow ~log p.
+    let mut gossip_rates = Vec::new();
+    let mut agd_rates = Vec::new();
+    for ranks in [4usize, 8, 16] {
+        let mut cfg = base_cfg(Algo::Gossip, ranks, 20);
+        cfg.sample_shuffle = false; // isolate gradient traffic
+        let res = run_with_backend(&cfg, tiny_backend()).unwrap();
+        let per = res.per_rank.iter().map(|m| m.msgs_sent).sum::<u64>() as f64
+            / (ranks * 20) as f64;
+        gossip_rates.push(per);
+
+        let mut cfg = base_cfg(Algo::SgdSync, ranks, 20);
+        cfg.sample_shuffle = false;
+        let res = run_with_backend(&cfg, tiny_backend()).unwrap();
+        let per = res.per_rank.iter().map(|m| m.msgs_sent).sum::<u64>() as f64
+            / (ranks * 20) as f64;
+        agd_rates.push(per);
+    }
+    // gossip: constant (layers per step, independent of p)
+    assert!(
+        (gossip_rates[0] - gossip_rates[2]).abs() < 0.5,
+        "gossip rates {gossip_rates:?}"
+    );
+    // allreduce: strictly growing with p
+    assert!(
+        agd_rates[2] > agd_rates[1] && agd_rates[1] > agd_rates[0],
+        "agd rates {agd_rates:?}"
+    );
+}
+
+#[test]
+fn disagreement_shrinks_with_more_gossip() {
+    // §6 mixing: continuing to gossip with lr -> 0 contracts the models
+    // toward consensus.
+    let mut cfg = base_cfg(Algo::Gossip, 8, 30);
+    cfg.lr = 0.05;
+    let short = run_with_backend(&cfg, tiny_backend()).unwrap();
+    let mut cfg2 = base_cfg(Algo::Gossip, 8, 200);
+    cfg2.lr_schedule = gossipgrad::config::LrSchedule::Step {
+        every: 60,
+        gamma: 0.1,
+    };
+    let long = run_with_backend(&cfg2, tiny_backend()).unwrap();
+    assert!(
+        long.max_disagreement() < short.max_disagreement(),
+        "disagreement did not shrink: short {} vs long {}",
+        short.max_disagreement(),
+        long.max_disagreement()
+    );
+}
+
+#[test]
+fn krizhevsky_scaling_only_affects_allreduce_family() {
+    let mut g = base_cfg(Algo::Gossip, 16, 1);
+    g.krizhevsky_lr_scaling = true;
+    assert_eq!(g.effective_lr(), g.lr);
+    let mut a = base_cfg(Algo::Agd, 16, 1);
+    a.krizhevsky_lr_scaling = true;
+    assert!((a.effective_lr() - a.lr * 4.0).abs() < 1e-12);
+}

@@ -1,0 +1,327 @@
+//! Randomized property tests over the coordinator's invariants
+//! (DESIGN.md "Key invariants"), using the util::prop harness.
+//! Replay a failure with GG_PROP_SEED=<seed> cargo test --test properties.
+
+use gossipgrad::collectives::Algorithm;
+use gossipgrad::nativenet::ops;
+use gossipgrad::topology::{
+    check_balanced, diffusion_time, Dissemination, Hypercube, Ring, Rotation,
+    Topology,
+};
+use gossipgrad::transport::{CostModel, Fabric, Tag};
+use gossipgrad::util::prop::{f32_vec, forall, usize_in};
+use gossipgrad::util::{ceil_log2, Rng};
+
+// ---- invariant 1: balanced matching at every step ------------------------
+
+#[test]
+fn prop_dissemination_balanced() {
+    forall(
+        96,
+        |r| (usize_in(r, 1, 200), usize_in(r, 0, 1000)),
+        |&(p, step)| {
+            check_balanced(&Dissemination::new(p), step)
+        },
+    );
+}
+
+#[test]
+fn prop_rotation_balanced_and_bijective() {
+    forall(
+        64,
+        |r| (usize_in(r, 2, 64), r.next_u64(), usize_in(r, 0, 500)),
+        |&(p, seed, step)| {
+            let t = Rotation::new(Dissemination::new(p), seed);
+            check_balanced(&t, step)?;
+            // recv must be inverse of send across the whole permutation
+            let mut seen = vec![false; p];
+            for rank in 0..p {
+                let e = t.exchange(rank, step);
+                if seen[e.send_to] {
+                    return Err(format!("rank {} target hit twice", rank));
+                }
+                seen[e.send_to] = true;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- invariant 2: diffusion completes within ceil(log2 p) ----------------
+
+#[test]
+fn prop_dissemination_diffusion_bound() {
+    forall(
+        48,
+        |r| (usize_in(r, 2, 150), usize_in(r, 0, 149)),
+        |&(p, origin)| {
+            let origin = origin % p;
+            let t = Dissemination::new(p);
+            match diffusion_time(&t, origin, 4 * p) {
+                Some(steps) if steps <= ceil_log2(p) => Ok(()),
+                Some(steps) => Err(format!(
+                    "diffused in {steps} > ceil_log2({p}) = {}",
+                    ceil_log2(p)
+                )),
+                None => Err("never diffused".into()),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_rotation_preserves_diffusion_bound() {
+    forall(
+        32,
+        |r| (1usize << usize_in(r, 1, 6), r.next_u64()),
+        |&(p, seed)| {
+            let t = Rotation::new(Dissemination::new(p), seed);
+            match diffusion_time(&t, 0, 4 * p) {
+                // rotation epochs switch mid-diffusion; allow one extra
+                // epoch of slack but it must stay O(log p)
+                Some(steps) if steps <= 2 * ceil_log2(p).max(1) => Ok(()),
+                other => Err(format!("diffusion {other:?} for p={p}")),
+            }
+        },
+    );
+}
+
+// ---- invariant 4: mixing conserves the global mean and contracts ---------
+
+#[test]
+fn prop_mixing_preserves_global_sum() {
+    forall(
+        48,
+        |r| {
+            let p = usize_in(r, 2, 16);
+            let n = usize_in(r, 1, 300);
+            let models: Vec<Vec<f32>> =
+                (0..p).map(|_| f32_vec(r, n, 1.0)).collect();
+            (models, r.next_u64())
+        },
+        |(models, seed)| {
+            let p = models.len();
+            let n = models[0].len();
+            let topo = Dissemination::new(p);
+            let sum_before: f64 = models
+                .iter()
+                .flat_map(|m| m.iter().map(|&v| v as f64))
+                .sum();
+            // run several synchronized gossip mixing rounds
+            let mut ms = models.clone();
+            let mut rng = Rng::new(*seed);
+            for step in 0..usize_in(&mut rng, 1, 12) {
+                let snapshot = ms.clone();
+                for rank in 0..p {
+                    let e = topo.exchange(rank, step);
+                    ops::mix_to(&mut ms[rank], &snapshot[rank], &snapshot[e.recv_from]);
+                }
+            }
+            let sum_after: f64 = ms
+                .iter()
+                .flat_map(|m| m.iter().map(|&v| v as f64))
+                .sum();
+            let tol = 1e-3 * (p * n) as f64;
+            if (sum_before - sum_after).abs() > tol {
+                return Err(format!(
+                    "global sum drifted: {sum_before} -> {sum_after}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mixing_contracts_disagreement() {
+    forall(
+        32,
+        |r| {
+            let p = 1usize << usize_in(r, 1, 4);
+            let n = usize_in(r, 4, 128);
+            ((0..p).map(|_| f32_vec(r, n, 1.0)).collect::<Vec<_>>(),)
+        },
+        |(models,)| {
+            let p = models.len();
+            let spread = |ms: &Vec<Vec<f32>>| -> f64 {
+                let n = ms[0].len();
+                let mut worst = 0.0f64;
+                for j in 0..n {
+                    let mut lo = f64::MAX;
+                    let mut hi = f64::MIN;
+                    for m in ms {
+                        lo = lo.min(m[j] as f64);
+                        hi = hi.max(m[j] as f64);
+                    }
+                    worst = worst.max(hi - lo);
+                }
+                worst
+            };
+            let before = spread(models);
+            let topo = Hypercube::new(p);
+            let mut ms = models.clone();
+            for step in 0..ceil_log2(p) {
+                let snapshot = ms.clone();
+                for rank in 0..p {
+                    let e = topo.exchange(rank, step);
+                    ops::mix_to(&mut ms[rank], &snapshot[rank], &snapshot[e.recv_from]);
+                }
+            }
+            let after = spread(&ms);
+            // after a full hypercube sweep every rank holds the exact
+            // global average -> spread collapses
+            if after > 1e-3 * before.max(1.0) && after > 1e-4 {
+                return Err(format!("spread {before} -> {after}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- invariant 5: ring shuffle fairness ----------------------------------
+
+#[test]
+fn prop_ring_revisit_after_full_circulation() {
+    forall(
+        48,
+        |r| (usize_in(r, 2, 40), usize_in(r, 0, 39)),
+        |&(p, start)| {
+            let start = start % p;
+            let ring = Ring::new(p);
+            let mut at = start;
+            for hop in 1..=p {
+                at = ring.exchange(at, hop - 1).send_to;
+                if at == start && hop != p {
+                    return Err(format!("returned after {hop} < p = {p}"));
+                }
+            }
+            if at != start {
+                return Err("did not return after p hops".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- invariant 6: collectives equal the naive average --------------------
+
+#[test]
+fn prop_allreduce_equals_naive() {
+    forall(
+        24,
+        |r| {
+            let p = usize_in(r, 1, 9);
+            let n = usize_in(r, 1, 200);
+            let alg = match usize_in(r, 0, 2) {
+                0 => Algorithm::RecursiveDoubling,
+                1 => Algorithm::BinomialTree,
+                _ => Algorithm::Ring,
+            };
+            let inputs: Vec<Vec<f32>> =
+                (0..p).map(|_| f32_vec(r, n, 2.0)).collect();
+            (alg, inputs)
+        },
+        |(alg, inputs)| {
+            let p = inputs.len();
+            let n = inputs[0].len();
+            let mut want = vec![0.0f64; n];
+            for v in inputs {
+                for (w, &x) in want.iter_mut().zip(v) {
+                    *w += x as f64;
+                }
+            }
+            for w in want.iter_mut() {
+                *w /= p as f64;
+            }
+            let fabric = Fabric::new(p, CostModel::zero());
+            let alg = *alg;
+            let handles: Vec<_> = inputs
+                .iter()
+                .cloned()
+                .enumerate()
+                .map(|(rank, mut buf)| {
+                    let ep = fabric.endpoint(rank);
+                    std::thread::spawn(move || {
+                        alg.run(&ep, &mut buf, 0);
+                        buf
+                    })
+                })
+                .collect();
+            for h in handles {
+                let got = h.join().unwrap();
+                for (g, w) in got.iter().zip(&want) {
+                    if (*g as f64 - w).abs() > 1e-3 * (1.0 + w.abs()) {
+                        return Err(format!("{} vs {}", g, w));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- invariant 7: transport FIFO + exactly-once ---------------------------
+
+#[test]
+fn prop_transport_fifo_exactly_once() {
+    forall(
+        32,
+        |r| (usize_in(r, 1, 50), r.next_u64()),
+        |&(n_msgs, seed)| {
+            let fabric = Fabric::new(2, CostModel::zero());
+            let a = fabric.endpoint(0);
+            let b = fabric.endpoint(1);
+            let mut rng = Rng::new(seed);
+            let payloads: Vec<Vec<f32>> = (0..n_msgs)
+                .map(|i| vec![i as f32, rng.f32()])
+                .collect();
+            for p in &payloads {
+                a.isend(1, Tag::CTRL, p.clone());
+            }
+            for want in &payloads {
+                let got = b.recv(0, Tag::CTRL);
+                if &got != want {
+                    return Err(format!("got {got:?} want {want:?}"));
+                }
+            }
+            // nothing left
+            let mut extra = b.irecv(0, Tag::CTRL);
+            if extra.test() {
+                return Err("message delivered twice".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---- fused update equals two-step reference -------------------------------
+
+#[test]
+fn prop_fused_sgd_matches_reference() {
+    forall(
+        48,
+        |r| {
+            let n = usize_in(r, 1, 500);
+            (
+                f32_vec(r, n, 1.0),
+                f32_vec(r, n, 1.0),
+                f32_vec(r, n, 1.0),
+                r.f32() * 0.5,
+                r.f32(),
+            )
+        },
+        |(p, v, g, lr, mu)| {
+            let mut p1 = p.clone();
+            let mut v1 = v.clone();
+            ops::sgd_momentum(&mut p1, &mut v1, g, *lr, *mu);
+            for i in 0..p.len() {
+                let nv = mu * v[i] + g[i];
+                let np = p[i] - lr * nv;
+                if (v1[i] - nv).abs() > 1e-5 || (p1[i] - np).abs() > 1e-5 {
+                    return Err(format!("coord {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
