@@ -4,21 +4,28 @@
 //!
 //!     cargo bench --bench fig10_11_speedup
 //!
-//! Two layers of evidence:
+//! Three layers of evidence:
 //! 1. simulator sweep at the paper's device speeds (P100 ≈ 4x KNL for
 //!    these nets) — regenerates the figures' curves;
 //! 2. a real measured run (threads + native backend + α–β fabric) at a
 //!    few rank counts to confirm the simulated ordering holds in running
-//!    code.
+//!    code;
+//! 3. a **virtual-clock** measured sweep (deterministic discrete-event
+//!    timing, docs/virtual-time.md) that pushes the measured path to
+//!    p = 256 — rank counts the wall-clock fabric cannot reach — in
+//!    seconds of real time, with bit-reproducible step timings.
 //!
 //! Expected shape: speedup > 1 everywhere, increasing with p, larger on
 //! the faster device (P100) — the paper reports ~1.9x for MNIST at 32.
 
 use gossipgrad::collectives::Algorithm;
 use gossipgrad::config::{Algo, RunConfig};
+use gossipgrad::coordinator::trainer::run_with_backend;
+use gossipgrad::nativenet::NativeMlp;
 use gossipgrad::sim::{efficiency::avg_efficiency, Schedule, Workload};
 use gossipgrad::transport::CostModel;
 use gossipgrad::util::bench::Table;
+use std::sync::Arc;
 
 fn sim_sweep(name: &str, mk: &dyn Fn(f64) -> Workload) -> (f64, f64) {
     let cost = CostModel::ib_edr(0);
@@ -80,10 +87,71 @@ fn real_runs() {
     t.print("measured (threads + fabric, MLP/native): AGD vs GossipGraD");
 }
 
+/// Virtual-clock measured sweep: same coordinator + transport code as
+/// `real_runs`, but with per-rank logical clocks charging the LeNet3
+/// compute model.  Timing is deterministic and the wall cost per rank is
+/// only the backend's real compute, so p = 256 finishes in seconds.
+fn virtual_runs() {
+    let w = Workload::lenet3(4.0);
+    let mut t = Table::new(&[
+        "ranks",
+        "agd step ms",
+        "gossip step ms",
+        "speedup",
+        "gossip eff %",
+    ]);
+    let mut last_speedup = 0.0f64;
+    let t0 = std::time::Instant::now();
+    for ranks in [64usize, 128, 256] {
+        let mut step_ms = [0.0f64; 2];
+        let mut eff = 0.0f64;
+        for (i, algo) in [Algo::Agd, Algo::Gossip].into_iter().enumerate() {
+            let mut cfg = RunConfig {
+                model: "mlp".into(),
+                algo,
+                ranks,
+                steps: 8,
+                use_artifacts: false,
+                rows_per_rank: 32,
+                // slow fabric so the schedules separate measurably
+                // (matches real_runs)
+                ..Default::default()
+            };
+            cfg.virtualize(&w, 200e-6, 1.0 / 0.5e9);
+            // small native net: wall cost is the real compute, virtual
+            // timing comes from the workload model
+            let backend = Arc::new(NativeMlp::new(vec![784, 32, 10], 16, 0));
+            let res = run_with_backend(&cfg, backend).expect("virtual run");
+            step_ms[i] = 1e3 * res.mean_step_secs();
+            if algo == Algo::Gossip {
+                eff = res.mean_efficiency_pct();
+            }
+        }
+        last_speedup = step_ms[0] / step_ms[1];
+        t.row(&[
+            ranks.to_string(),
+            format!("{:.2}", step_ms[0]),
+            format!("{:.2}", step_ms[1]),
+            format!("{:.2}", last_speedup),
+            format!("{eff:.1}"),
+        ]);
+    }
+    t.print("measured on the VIRTUAL-CLOCK fabric (deterministic, p to 256)");
+    println!(
+        "  swept p = 64/128/256 in {:.1}s wall (simulated seconds are free)",
+        t0.elapsed().as_secs_f64()
+    );
+    assert!(
+        last_speedup > 1.0,
+        "gossip must beat AGD at p=256 (speedup {last_speedup:.2})"
+    );
+}
+
 fn main() {
     let (p100, knl) = sim_sweep("Fig 10 — MNIST/LeNet3", &Workload::lenet3);
     sim_sweep("Fig 11 — CIFAR10/CIFARNet", &Workload::cifarnet);
     real_runs();
+    virtual_runs();
     println!(
         "\nshape check @32: P100 speedup {p100:.2} > KNL speedup {knl:.2} > 1 (paper: ~1.9x MNIST/P100)"
     );

@@ -108,6 +108,16 @@ pub struct RunConfig {
     pub ps_servers: usize,
     /// Optional checkpoint directory to resume parameters from.
     pub resume_from: Option<String>,
+    /// Run the fabric on the deterministic virtual clock (discrete-event
+    /// simulated time) instead of the wall clock.  Timing metrics become
+    /// bit-reproducible and independent of host speed; see
+    /// `docs/virtual-time.md`.
+    pub virtual_clock: bool,
+    /// Modeled compute seconds charged per step per rank in virtual-clock
+    /// mode (typically a calibrated
+    /// [`Workload::t_compute`](crate::sim::Workload::t_compute)).
+    /// Ignored in wall mode, where compute takes real time.
+    pub virt_compute_secs: f64,
 }
 
 impl Default for RunConfig {
@@ -135,6 +145,8 @@ impl Default for RunConfig {
             artifacts_dir: "artifacts".into(),
             ps_servers: 1,
             resume_from: None,
+            virtual_clock: false,
+            virt_compute_secs: 0.0,
         }
     }
 }
@@ -156,6 +168,18 @@ impl RunConfig {
         } else {
             self.lr
         }
+    }
+
+    /// Switch this run onto the virtual clock, charging the calibrated
+    /// workload's per-step compute cost and the given α–β wire costs.
+    /// Noise is zeroed: the virtual fabric charges nominal
+    /// (deterministic) message costs by construction.
+    pub fn virtualize(&mut self, w: &crate::sim::Workload, alpha: f64, beta: f64) {
+        self.virtual_clock = true;
+        self.virt_compute_secs = w.t_compute();
+        self.net_alpha = alpha;
+        self.net_beta = beta;
+        self.net_noise = 0.0;
     }
 
     /// Load a JSON preset, then apply this config's fields as defaults
@@ -187,6 +211,10 @@ impl RunConfig {
         num_field!("net_beta", net_beta, f64);
         num_field!("net_noise", net_noise, f64);
         num_field!("ps_servers", ps_servers, usize);
+        num_field!("virt_compute_secs", virt_compute_secs, f64);
+        if let Some(v) = j.get("virtual_clock").and_then(Json::as_bool) {
+            c.virtual_clock = v;
+        }
         if let Some(v) = j.get("rotation").and_then(Json::as_bool) {
             c.rotation = v;
         }
@@ -281,6 +309,22 @@ mod tests {
         assert!((s.lr_at(0.1, 29) - 0.1).abs() < 1e-12);
         assert!((s.lr_at(0.1, 30) - 0.01).abs() < 1e-12);
         assert!((s.lr_at(0.1, 65) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn virtualize_pulls_workload_compute_cost() {
+        let mut c = RunConfig::default();
+        c.net_noise = 0.3;
+        let w = crate::sim::Workload::resnet50_p100();
+        c.virtualize(&w, 1e-6, 1e-10);
+        assert!(c.virtual_clock);
+        assert!((c.virt_compute_secs - 0.096).abs() < 1e-9);
+        assert_eq!(c.net_noise, 0.0);
+        let j = Json::parse(r#"{"virtual_clock": true, "virt_compute_secs": 0.004}"#)
+            .unwrap();
+        let c2 = RunConfig::from_json(&j).unwrap();
+        assert!(c2.virtual_clock);
+        assert!((c2.virt_compute_secs - 0.004).abs() < 1e-12);
     }
 
     #[test]

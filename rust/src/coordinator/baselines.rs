@@ -15,8 +15,6 @@ use crate::collectives::Algorithm;
 use crate::nativenet::ops;
 use crate::transport::{Endpoint, Tag};
 use crate::util::ceil_log2;
-use std::sync::atomic::Ordering;
-use std::time::Instant;
 
 /// Synchronous all-reduce training.  `layerwise = true` → AGD (one
 /// all-reduce per layer slice, the overlappable schedule); `false` →
@@ -30,13 +28,14 @@ pub fn run_allreduce(w: &mut Worker, ep: &Endpoint, alg: Algorithm, layerwise: b
         .map(|l| (l.offset, l.len))
         .collect();
     for step in 0..steps {
-        let t0 = Instant::now();
+        let t0 = ep.mark();
         let lr = w.lr_at(step);
         let batch = w.shuffle.take(ep);
         let (x, y) = w.to_batch_data(&batch);
         let (mut grads, loss) = w.backend.grad(&w.params, &x, &y);
+        ep.advance(w.cfg.virt_compute_secs);
 
-        let tw = Instant::now();
+        let tw = ep.mark();
         if layerwise {
             for (li, &(off, len)) in layers.iter().enumerate() {
                 alg.run(ep, &mut grads[off..off + len], step * layers.len() + li);
@@ -44,20 +43,18 @@ pub fn run_allreduce(w: &mut Worker, ep: &Endpoint, alg: Algorithm, layerwise: b
         } else {
             alg.run(ep, &mut grads, step);
         }
-        let comm_wait = tw.elapsed().as_secs_f64();
+        let comm_wait = ep.comm_wait_since(&tw);
 
         w.backend.apply_update(&mut w.params, &mut w.mom, &grads, lr);
         w.shuffle.give_back(ep, batch);
-        w.record_step(step, loss, t0, comm_wait);
+        w.record_step(step, loss, ep.elapsed(&t0), comm_wait);
         if w.cfg.eval_every > 0 && (step % w.cfg.eval_every == 0 || step + 1 == steps)
         {
             let (_, acc) = w.evaluate();
             w.metrics.accuracy.push((step, acc));
         }
     }
-    let c = ep.fabric().counters(w.rank);
-    w.metrics.msgs_sent = c.msgs_sent.load(Ordering::Relaxed);
-    w.metrics.bytes_sent = c.bytes_sent.load(Ordering::Relaxed);
+    w.snapshot_counters(ep);
 }
 
 /// AGD every ⌈log₂ p⌉ steps (Fig 17's "computing AGD every log(p)
@@ -67,58 +64,56 @@ pub fn run_periodic(w: &mut Worker, ep: &Endpoint, alg: Algorithm) {
     let steps = w.cfg.steps;
     let period = ceil_log2(w.cfg.ranks).max(1);
     for step in 0..steps {
-        let t0 = Instant::now();
+        let t0 = ep.mark();
         let lr = w.lr_at(step);
         let batch = w.shuffle.take(ep);
         let (x, y) = w.to_batch_data(&batch);
         let (grads, loss) = w.backend.grad(&w.params, &x, &y);
+        ep.advance(w.cfg.virt_compute_secs);
         w.backend.apply_update(&mut w.params, &mut w.mom, &grads, lr);
 
         let mut comm_wait = 0.0;
         if step % period == period - 1 {
-            let tw = Instant::now();
+            let tw = ep.mark();
             alg.run(ep, &mut w.params, step);
-            comm_wait = tw.elapsed().as_secs_f64();
+            comm_wait = ep.comm_wait_since(&tw);
         }
         w.shuffle.give_back(ep, batch);
-        w.record_step(step, loss, t0, comm_wait);
+        w.record_step(step, loss, ep.elapsed(&t0), comm_wait);
         if w.cfg.eval_every > 0 && (step % w.cfg.eval_every == 0 || step + 1 == steps)
         {
             let (_, acc) = w.evaluate();
             w.metrics.accuracy.push((step, acc));
         }
     }
-    let c = ep.fabric().counters(w.rank);
-    w.metrics.msgs_sent = c.msgs_sent.load(Ordering::Relaxed);
-    w.metrics.bytes_sent = c.bytes_sent.load(Ordering::Relaxed);
+    w.snapshot_counters(ep);
 }
 
 /// Parameter-server worker loop: push grads, pull weights, every step.
 pub fn run_ps_worker(w: &mut Worker, ep: &Endpoint, server: usize) {
     let steps = w.cfg.steps;
     for step in 0..steps {
-        let t0 = Instant::now();
+        let t0 = ep.mark();
         let batch = w.shuffle.take(ep);
         let (x, y) = w.to_batch_data(&batch);
         let (grads, loss) = w.backend.grad(&w.params, &x, &y);
+        ep.advance(w.cfg.virt_compute_secs);
 
-        let tw = Instant::now();
+        let tw = ep.mark();
         ep.isend(server, Tag::REDUCE.round(step), grads);
         let fresh = ep.recv(server, Tag::MODEL.round(step));
-        let comm_wait = tw.elapsed().as_secs_f64();
+        let comm_wait = ep.comm_wait_since(&tw);
         w.params.copy_from_slice(&fresh);
 
         w.shuffle.give_back(ep, batch);
-        w.record_step(step, loss, t0, comm_wait);
+        w.record_step(step, loss, ep.elapsed(&t0), comm_wait);
         if w.cfg.eval_every > 0 && (step % w.cfg.eval_every == 0 || step + 1 == steps)
         {
             let (_, acc) = w.evaluate();
             w.metrics.accuracy.push((step, acc));
         }
     }
-    let c = ep.fabric().counters(w.rank);
-    w.metrics.msgs_sent = c.msgs_sent.load(Ordering::Relaxed);
-    w.metrics.bytes_sent = c.bytes_sent.load(Ordering::Relaxed);
+    w.snapshot_counters(ep);
 }
 
 /// Parameter-server loop (runs on fabric rank `workers`..): aggregates

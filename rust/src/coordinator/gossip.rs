@@ -18,7 +18,17 @@
 //! Partner selection is a rotated dissemination topology by default
 //! (§4.3–4.5); hypercube and random (Jin/Blot) variants are selectable
 //! for the ablations.  With `gossip_period > 1` mixing/sending happens
-//! every k-th step only.
+//! every k-th step only.  Step 0 never gossips: all ranks start from the
+//! same initial model, so a step-0 exchange would swap identical
+//! parameters and inflate the per-step message count for nothing.
+//!
+//! Timing goes through [`Endpoint::mark`]/[`Endpoint::elapsed`]/
+//! [`Endpoint::comm_wait_since`], so the same code path produces wall
+//! timings on the default fabric and deterministic simulated timings on
+//! a virtual-clock fabric ([`crate::transport::Fabric::new_virtual`]);
+//! in virtual mode [`Endpoint::advance`] charges the configured
+//! per-step compute cost right after the gradient evaluation — the
+//! window the asynchronous exchange overlaps with.
 //!
 //! ## Staleness note
 //! Mixing consumes the partner model *sent after the partner's previous
@@ -35,8 +45,6 @@ use crate::topology::{
     Dissemination, Exchange, Hypercube, RandomGossip, Rotation, Topology,
 };
 use crate::transport::{Endpoint, RecvReq, Tag};
-use std::sync::atomic::Ordering;
-use std::time::Instant;
 
 /// Which virtual topology drives partner selection.
 pub enum GossipTopology {
@@ -96,7 +104,7 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
     let mut partner_buf = vec![0.0f32; w.params.len()];
 
     for step in 0..steps {
-        let t0 = Instant::now();
+        let t0 = ep.mark();
         let mut comm_wait = 0.0f64;
         let lr = w.lr_at(step);
         let batch = w.shuffle.take(ep);
@@ -104,29 +112,32 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
 
         // ---- compute (overlaps the in-flight partner model) ----------
         let (grads, loss) = w.backend.grad(&w.params, &x, &y);
+        // virtual clock: charge the modeled compute cost for this step
+        ep.advance(w.cfg.virt_compute_secs);
 
         // ---- drain previous step's partner model & mix (§6) ----------
         if let Some((_, pm)) = pending.take() {
-            let tw = Instant::now();
+            let tw = ep.mark();
             for (off, req) in pm.reqs {
                 let data = req.wait();
                 partner_buf[off..off + data.len()].copy_from_slice(&data);
             }
-            comm_wait += tw.elapsed().as_secs_f64();
+            comm_wait += ep.comm_wait_since(&tw);
             ops::mix_into(&mut w.params, &partner_buf);
         }
 
         // ---- local update ---------------------------------------------
         w.backend.apply_update(&mut w.params, &mut w.mom, &grads, lr);
 
-        // ---- gossip exchange (every `period` steps) -------------------
-        if step % period == 0 {
+        // ---- gossip exchange (every `period` steps; never at step 0,
+        // where all replicas still hold the identical initial model) ----
+        if step > 0 && step % period == 0 {
             let gossip_step = step / period;
             if let Some(senders) = topo.senders_to(w.rank, gossip_step) {
                 // random-gossip baseline: blocking, possibly unbalanced
                 let ex = topo.exchange(w.rank, gossip_step);
                 send_model(ep, ex.send_to, step, &w.params, &layers);
-                let tw = Instant::now();
+                let tw = ep.mark();
                 for src in senders {
                     let pm = post_recvs(ep, src, step, &layers);
                     for (off, req) in pm.reqs {
@@ -135,20 +146,20 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
                     }
                     ops::mix_into(&mut w.params, &partner_buf);
                 }
-                comm_wait += tw.elapsed().as_secs_f64();
+                comm_wait += ep.comm_wait_since(&tw);
             } else {
                 let ex = topo.exchange(w.rank, gossip_step);
                 if ex.send_to != w.rank {
                     send_model(ep, ex.send_to, step, &w.params, &layers);
                     let pm = post_recvs(ep, ex.recv_from, step, &layers);
                     if sync_mix {
-                        let tw = Instant::now();
+                        let tw = ep.mark();
                         for (off, req) in pm.reqs {
                             let data = req.wait();
                             partner_buf[off..off + data.len()]
                                 .copy_from_slice(&data);
                         }
-                        comm_wait += tw.elapsed().as_secs_f64();
+                        comm_wait += ep.comm_wait_since(&tw);
                         ops::mix_into(&mut w.params, &partner_buf);
                     } else {
                         pending = Some((step, PendingModel { reqs: pm.reqs }));
@@ -160,7 +171,7 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
         // ---- sample shuffle (§4.5.2, overlapped) ----------------------
         w.shuffle.give_back(ep, batch);
 
-        w.record_step(step, loss, t0, comm_wait);
+        w.record_step(step, loss, ep.elapsed(&t0), comm_wait);
 
         if w.cfg.eval_every > 0
             && (step % w.cfg.eval_every == 0 || step + 1 == steps)
@@ -179,9 +190,7 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
         ops::mix_into(&mut w.params, &partner_buf);
     }
 
-    let c = ep.fabric().counters(w.rank);
-    w.metrics.msgs_sent = c.msgs_sent.load(Ordering::Relaxed);
-    w.metrics.bytes_sent = c.bytes_sent.load(Ordering::Relaxed);
+    w.snapshot_counters(ep);
 }
 
 /// Send the model to `dst`, one message per layer slice (§5 layer-wise).

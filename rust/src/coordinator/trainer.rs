@@ -139,7 +139,13 @@ pub fn run_with_backend(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
     anyhow::ensure!(p >= 1, "need at least one rank");
     let is_ps = cfg.algo == Algo::ParamServer;
     let fabric_size = if is_ps { p + cfg.ps_servers.max(1) } else { p };
-    let fabric = Fabric::new(fabric_size, cfg.cost_model());
+    // Virtual-clock fabric makes all timing metrics deterministic
+    // discrete-event simulated seconds (docs/virtual-time.md).
+    let fabric = if cfg.virtual_clock {
+        Fabric::new_virtual(fabric_size, cfg.cost_model())
+    } else {
+        Fabric::new(fabric_size, cfg.cost_model())
+    };
 
     let batch = backend.batch();
     let x_len = backend.x_len();

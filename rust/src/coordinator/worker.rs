@@ -8,7 +8,6 @@ use crate::metrics::RunMetrics;
 use crate::runtime::{BatchData, ModelBackend};
 use crate::transport::Endpoint;
 use std::sync::Arc;
-use std::time::Instant;
 
 pub type Backend = Arc<dyn ModelBackend + Send + Sync>;
 
@@ -153,9 +152,23 @@ impl Worker {
         )
     }
 
-    /// Record one step's timings into the metrics.
-    pub fn record_step(&mut self, step: usize, loss: f32, t0: Instant, comm_wait: f64) {
-        self.metrics.step_secs.push(t0.elapsed().as_secs_f64());
+    /// Snapshot the transport's traffic + exposed-wait counters into
+    /// this rank's metrics at the end of a run.
+    pub fn snapshot_counters(&mut self, ep: &Endpoint) {
+        use std::sync::atomic::Ordering;
+        let c = ep.fabric().counters(self.rank);
+        self.metrics.msgs_sent = c.msgs_sent.load(Ordering::Relaxed);
+        self.metrics.bytes_sent = c.bytes_sent.load(Ordering::Relaxed);
+        self.metrics.recv_wait_secs =
+            c.recv_wait_ns.load(Ordering::Relaxed) as f64 * 1e-9;
+    }
+
+    /// Record one step's timings into the metrics.  `step_secs` and
+    /// `comm_wait` are seconds on the rank's active clock (wall seconds,
+    /// or simulated seconds in virtual-clock mode — see
+    /// [`Endpoint::mark`]/[`Endpoint::elapsed`]).
+    pub fn record_step(&mut self, step: usize, loss: f32, step_secs: f64, comm_wait: f64) {
+        self.metrics.step_secs.push(step_secs);
         self.metrics.comm_wait_secs.push(comm_wait);
         if step % 10 == 0 || step + 1 == self.cfg.steps {
             self.metrics.loss.push((step, loss as f64));

@@ -12,7 +12,10 @@
 //!   (paper §4.3–4.5).
 //! * [`transport`] — MPI-like in-process message substrate with
 //!   non-blocking isend/irecv/test_all/wait_all and an α–β network cost
-//!   model (`simnet`) standing in for InfiniBand/Aries.
+//!   model (`simnet`) standing in for InfiniBand/Aries.  Runs under a
+//!   wall clock (default) or a deterministic virtual clock
+//!   (`transport::clock`, docs/virtual-time.md) that scales measured
+//!   runs to p = 256+ in seconds with bit-reproducible timings.
 //! * [`collectives`] — all-reduce algorithms (recursive doubling,
 //!   binomial tree, ring) built on the transport; the SGD/AGD baselines.
 //! * [`coordinator`] — the paper's contribution: the GossipGraD engine

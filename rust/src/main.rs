@@ -31,8 +31,14 @@ fn main() {
 }
 
 fn real_main() -> Result<()> {
-    let args = Args::from_env(&["no-rotation", "no-shuffle", "native", "lr-scaling"])
-        .map_err(anyhow::Error::msg)?;
+    let args = Args::from_env(&[
+        "no-rotation",
+        "no-shuffle",
+        "native",
+        "lr-scaling",
+        "virtual-clock",
+    ])
+    .map_err(anyhow::Error::msg)?;
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("sweep") => cmd_sweep(&args),
@@ -57,6 +63,8 @@ fn print_usage() {
                   --lr F --eval-every N --config file.json --seed N\n\
                   --alpha S --beta-gbps G --noise F\n\
                   [--no-rotation] [--no-shuffle] [--native] [--lr-scaling]\n\
+                  [--virtual-clock] [--compute-ms MS]   deterministic\n\
+                  discrete-event timing (docs/virtual-time.md)\n\
          sweep:   train across --ranks-list 2,4,8 (other train flags apply)\n\
          sim:     --workload resnet50|googlenet|lenet3|cifarnet\n\
                   --p-list 4,8,...  --algos gossip,agd-ring,sgd-rd,ps1\n\
@@ -108,6 +116,20 @@ pub fn config_from(args: &Args) -> Result<RunConfig> {
     }
     if args.flag("lr-scaling") {
         cfg.krizhevsky_lr_scaling = true;
+    }
+    if args.flag("virtual-clock") {
+        cfg.virtual_clock = true;
+    }
+    cfg.virt_compute_secs =
+        args.f64_or("compute-ms", cfg.virt_compute_secs * 1e3) * 1e-3;
+    // A virtual run with no compute charge degenerates to pure exposed
+    // wait (0% efficiency, meaningless step times) — refuse it loudly.
+    if cfg.virtual_clock && cfg.virt_compute_secs <= 0.0 {
+        bail!(
+            "--virtual-clock needs a per-step compute cost: pass \
+             --compute-ms MS (e.g. 6.25 for LeNet3@P100) or set \
+             virt_compute_secs in the config"
+        );
     }
     if let Some(d) = args.get("artifacts-dir") {
         cfg.artifacts_dir = d.to_string();

@@ -19,6 +19,12 @@ pub struct RunMetrics {
     pub comm_wait_secs: Vec<f64>,
     pub msgs_sent: u64,
     pub bytes_sent: u64,
+    /// Total exposed receive wait over the whole run, snapshotted from
+    /// the transport's `Counters::recv_wait_ns` (wall-blocked seconds,
+    /// or deterministic simulated seconds in virtual-clock mode).
+    /// Unlike `comm_wait_secs` this also covers waits outside the
+    /// explicitly-marked drain sections (e.g. sample-shuffle refills).
+    pub recv_wait_secs: f64,
 }
 
 impl RunMetrics {
@@ -72,6 +78,7 @@ impl RunMetrics {
             ),
             ("mean_step_secs", num(self.mean_step_secs())),
             ("mean_comm_wait_secs", num(self.mean_comm_wait())),
+            ("recv_wait_secs", num(self.recv_wait_secs)),
             ("efficiency_pct", num(self.efficiency_pct())),
             ("msgs_sent", num(self.msgs_sent as f64)),
             ("bytes_sent", num(self.bytes_sent as f64)),
@@ -158,7 +165,13 @@ mod tests {
         m.loss = vec![(0, 2.3), (10, 1.1)];
         m.accuracy = vec![(10, 0.55)];
         m.step_secs = vec![0.01];
+        m.recv_wait_secs = 0.25;
         let j = m.to_json();
+        assert_eq!(
+            j.get("recv_wait_secs").and_then(|v| v.as_f64()),
+            Some(0.25),
+            "per-rank exposed wait must be surfaced"
+        );
         let parsed =
             crate::util::json::Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("rank").unwrap().as_usize(), Some(2));

@@ -16,6 +16,7 @@
 //! debugging.
 
 use super::artifacts::{ArtifactSet, LayerSlice};
+use super::xla_stub as xla;
 use super::{BatchData, ModelBackend};
 use anyhow::{Context, Result};
 use std::path::Path;

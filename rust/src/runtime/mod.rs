@@ -12,6 +12,7 @@
 
 pub mod artifacts;
 pub mod client;
+pub(crate) mod xla_stub;
 
 pub use artifacts::{ArtifactSet, LayerSlice, ModelMeta};
 pub use client::PjrtModel;

@@ -12,6 +12,16 @@
 //!
 //! Efficiency := t_compute / t_step — "compute efficiency" as reported
 //! in Table 7 (100% ⇔ all communication hidden under compute).
+//!
+//! Two simulation paths share the calibrated [`Workload`] costs:
+//! * this module's *closed-form* per-step models (fast sweeps to
+//!   arbitrary p, no coordinator in the loop), and
+//! * the transport's *virtual clock*
+//!   ([`Fabric::new_virtual`](crate::transport::Fabric::new_virtual) +
+//!   [`RunConfig::virtualize`](crate::config::RunConfig::virtualize)),
+//!   which runs the real coordinator/transport code against
+//!   `Workload::t_compute()` charges — measured schedules, deterministic
+//!   discrete-event timing (docs/virtual-time.md).
 
 pub mod efficiency;
 pub mod events;

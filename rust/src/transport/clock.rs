@@ -1,0 +1,124 @@
+//! Clock abstraction for the fabric: wall time vs. virtual time.
+//!
+//! * [`ClockMode::Wall`] — the default.  Message arrival instants are
+//!   real [`Instant`]s; blocking waits sleep; timings are measured with
+//!   the OS clock.  Non-deterministic (thread scheduling, machine load)
+//!   but physically real — the mode the cross-thread overlap tests use.
+//! * [`ClockMode::Virtual`] — discrete-event simulated time.  Each rank
+//!   owns a logical clock (u64 nanoseconds) advanced by (a) explicit
+//!   compute charges ([`Endpoint::advance`](super::Endpoint::advance),
+//!   driven by the calibrated [`Workload`](crate::sim::Workload) model)
+//!   and (b) message arrival instants on blocking receives.  Nothing
+//!   sleeps and no condvar timeout is involved in the time accounting,
+//!   so a run's timing metrics are **bit-reproducible** across
+//!   executions and independent of host speed — this is what lets the
+//!   Fig 10/11/17 and Table 7 benches sweep p = 128/256/1024 in seconds
+//!   of wall time.
+//!
+//! ## Determinism argument (virtual mode)
+//! A message's arrival instant is `sender_clock_at_send + nominal cost`
+//! (the α–β model with the noise term disabled — see
+//! [`CostModel::nominal`](super::CostModel::nominal)).  Sender clocks
+//! advance only through deterministic charges, channels are FIFO, and a
+//! receiver's exposed wait is computed arithmetically as
+//! `max(0, arrival − receiver_now)` — never measured.  OS scheduling can
+//! reorder *wall-clock* interleavings, but every virtual-time quantity
+//! (step seconds, exposed wait, message counts, delivered payload order
+//! per channel) is a pure function of the run configuration and seed.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClockMode {
+    /// Real time: arrival instants are `Instant`s, waits sleep.
+    Wall,
+    /// Deterministic discrete-event time: per-rank logical clocks.
+    Virtual,
+}
+
+/// Per-rank logical clocks (nanosecond ticks) for [`ClockMode::Virtual`].
+///
+/// Only the owning rank advances its own clock, and only the owning rank
+/// reads it on its hot paths, so `Relaxed` ordering suffices; the store
+/// is atomic only so `Fabric` can stay `Sync` without a lock.
+pub struct Clock {
+    mode: ClockMode,
+    vnow: Vec<AtomicU64>,
+}
+
+impl Clock {
+    pub fn new(mode: ClockMode, ranks: usize) -> Clock {
+        Clock {
+            mode,
+            vnow: (0..ranks).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn mode(&self) -> ClockMode {
+        self.mode
+    }
+
+    pub fn is_virtual(&self) -> bool {
+        self.mode == ClockMode::Virtual
+    }
+
+    /// This rank's current virtual time in nanoseconds (0 in wall mode).
+    pub fn now_ns(&self, rank: usize) -> u64 {
+        self.vnow[rank].load(Ordering::Relaxed)
+    }
+
+    /// Charge `delta_ns` of simulated time to `rank`.
+    pub fn advance_ns(&self, rank: usize, delta_ns: u64) {
+        self.vnow[rank].fetch_add(delta_ns, Ordering::Relaxed);
+    }
+
+    /// Move `rank`'s clock forward to at least `t_ns` (monotonic).
+    pub fn advance_to_ns(&self, rank: usize, t_ns: u64) {
+        self.vnow[rank].fetch_max(t_ns, Ordering::Relaxed);
+    }
+
+    pub fn secs_to_ns(secs: f64) -> u64 {
+        (secs * 1e9).round() as u64
+    }
+
+    pub fn ns_to_secs(ns: u64) -> f64 {
+        ns as f64 * 1e-9
+    }
+}
+
+/// Opaque timestamp for step/exposed-wait accounting under either clock
+/// mode; produced by [`Endpoint::mark`](super::Endpoint::mark) and
+/// consumed by `Endpoint::elapsed` / `Endpoint::comm_wait_since`.
+#[derive(Clone, Copy, Debug)]
+pub struct TimeMark {
+    pub(crate) wall: Instant,
+    pub(crate) virt_ns: u64,
+    pub(crate) wait_ns: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_advances_monotonically() {
+        let c = Clock::new(ClockMode::Virtual, 2);
+        assert_eq!(c.now_ns(0), 0);
+        c.advance_ns(0, 500);
+        c.advance_ns(0, 250);
+        assert_eq!(c.now_ns(0), 750);
+        assert_eq!(c.now_ns(1), 0, "clocks are per-rank");
+        c.advance_to_ns(0, 600); // already past: no-op
+        assert_eq!(c.now_ns(0), 750);
+        c.advance_to_ns(0, 1_000);
+        assert_eq!(c.now_ns(0), 1_000);
+    }
+
+    #[test]
+    fn seconds_nanos_roundtrip() {
+        assert_eq!(Clock::secs_to_ns(1.5e-3), 1_500_000);
+        assert_eq!(Clock::ns_to_secs(2_000_000_000), 2.0);
+        assert_eq!(Clock::secs_to_ns(0.0), 0);
+    }
+}

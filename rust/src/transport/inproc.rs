@@ -1,12 +1,26 @@
 //! In-process fabric: one mailbox per rank, real buffers, MPI-like
 //! non-blocking request handles.
 //!
-//! Visibility time: a message sent at wall-time t with simulated cost c
+//! Visibility time: a message sent at time t with simulated cost c
 //! becomes matchable at `t + c` (see [`super::simnet`]).  `RecvReq::test`
-//! returns false before that instant; `wait` sleeps out the remainder.
+//! returns false before that instant; `wait` blocks out the remainder.
 //! This makes *overlap* physically real: a rank that computes past the
 //! delivery instant observes zero exposed communication time.
+//!
+//! The fabric runs under one of two clocks (see [`super::clock`]):
+//!
+//! * **Wall** (default, [`Fabric::new`]) — arrival instants are real
+//!   [`Instant`]s; `wait` sleeps out the simulated wire time; exposed
+//!   wait is measured with the OS clock.
+//! * **Virtual** ([`Fabric::new_virtual`]) — arrival instants are
+//!   logical nanoseconds on the sender's per-rank clock; `test` compares
+//!   logical instants; `wait` never sleeps on simulated time — it blocks
+//!   only until the payload is *queued* (plain condvar, no timeout),
+//!   then jumps the receiver's clock to the arrival instant and records
+//!   `max(0, arrival − now)` as exposed wait.  All timing quantities are
+//!   deterministic (see the determinism argument in [`super::clock`]).
 
+use super::clock::{Clock, ClockMode, TimeMark};
 use super::simnet::CostModel;
 use super::Tag;
 use std::collections::{HashMap, VecDeque};
@@ -16,8 +30,16 @@ use std::time::{Duration, Instant};
 
 type Key = (usize, Tag); // (src, tag)
 
+/// Arrival stamp of a queued message — variant always matches the
+/// fabric's clock mode.
+#[derive(Clone, Copy, Debug)]
+enum Stamp {
+    Wall(Instant),
+    Virt(u64),
+}
+
 struct Mailbox {
-    queues: HashMap<Key, VecDeque<(Instant, Vec<f32>)>>,
+    queues: HashMap<Key, VecDeque<(Stamp, Vec<f32>)>>,
 }
 
 struct RankSlot {
@@ -27,7 +49,9 @@ struct RankSlot {
 
 /// Per-rank traffic counters — the data behind the Table-1
 /// communication-complexity assertions and the EXPERIMENTS.md imbalance
-/// histograms.
+/// histograms.  `recv_wait_ns` is the rank's *exposed* communication
+/// time: wall-clock blocked time in wall mode, simulated
+/// `arrival − now` in virtual mode.
 #[derive(Default)]
 pub struct Counters {
     pub msgs_sent: AtomicU64,
@@ -36,17 +60,28 @@ pub struct Counters {
     pub recv_wait_ns: AtomicU64,
 }
 
-/// The shared interconnect: `p` mailboxes + a cost model.
+/// The shared interconnect: `p` mailboxes + a cost model + a clock.
 pub struct Fabric {
     slots: Vec<RankSlot>,
     pub cost: CostModel,
     counters: Vec<Counters>,
-    #[allow(dead_code)]
-    epoch: Instant,
+    clock: Clock,
 }
 
 impl Fabric {
+    /// Wall-clock fabric (the default; real sleeps, measured waits).
     pub fn new(p: usize, cost: CostModel) -> Arc<Fabric> {
+        Fabric::with_clock(p, cost, ClockMode::Wall)
+    }
+
+    /// Virtual-clock fabric: deterministic discrete-event time.  Message
+    /// costs use [`CostModel::nominal`] (the noise term is skipped — its
+    /// RNG draw order would depend on thread scheduling).
+    pub fn new_virtual(p: usize, cost: CostModel) -> Arc<Fabric> {
+        Fabric::with_clock(p, cost, ClockMode::Virtual)
+    }
+
+    pub fn with_clock(p: usize, cost: CostModel, mode: ClockMode) -> Arc<Fabric> {
         Arc::new(Fabric {
             slots: (0..p)
                 .map(|_| RankSlot {
@@ -58,12 +93,16 @@ impl Fabric {
                 .collect(),
             cost,
             counters: (0..p).map(|_| Counters::default()).collect(),
-            epoch: Instant::now(),
+            clock: Clock::new(mode, p),
         })
     }
 
     pub fn size(&self) -> usize {
         self.slots.len()
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.clock
     }
 
     pub fn endpoint(self: &Arc<Self>, rank: usize) -> Endpoint {
@@ -130,7 +169,7 @@ pub struct RecvReq {
 
 impl RecvReq {
     /// Non-blocking poll (MPI_Test): true once the message is delivered
-    /// *and* its simulated arrival instant has passed.
+    /// *and* its arrival instant has passed on this rank's clock.
     pub fn test(&mut self) -> bool {
         if self.data.is_some() {
             return true;
@@ -138,8 +177,12 @@ impl RecvReq {
         let slot = &self.fabric.slots[self.rank];
         let mut mb = slot.mbox.lock().unwrap();
         if let Some(q) = mb.queues.get_mut(&self.key) {
-            if let Some((at, _)) = q.front() {
-                if Instant::now() >= *at {
+            if let Some((stamp, _)) = q.front() {
+                let visible = match *stamp {
+                    Stamp::Wall(at) => Instant::now() >= at,
+                    Stamp::Virt(at) => self.fabric.clock.now_ns(self.rank) >= at,
+                };
+                if visible {
                     let (_, data) = q.pop_front().unwrap();
                     self.data = Some(data);
                     self.fabric.counters[self.rank]
@@ -152,12 +195,21 @@ impl RecvReq {
         false
     }
 
-    /// Blocking wait (MPI_Wait); returns the payload.  Records the time
-    /// spent blocked as *exposed communication time*.
+    /// Blocking wait (MPI_Wait); returns the payload and records the
+    /// exposed communication time in `Counters::recv_wait_ns`.
     pub fn wait(mut self) -> Vec<f32> {
         if let Some(d) = self.data.take() {
             return d;
         }
+        match self.fabric.clock.mode() {
+            ClockMode::Wall => self.wait_wall(),
+            ClockMode::Virtual => self.wait_virtual(),
+        }
+    }
+
+    /// Wall mode: sleep out the simulated wire time; measure the blocked
+    /// interval with the OS clock.
+    fn wait_wall(self) -> Vec<f32> {
         let t0 = Instant::now();
         let slot = &self.fabric.slots[self.rank];
         let mut mb = slot.mbox.lock().unwrap();
@@ -167,7 +219,10 @@ impl RecvReq {
                 .queues
                 .get(&self.key)
                 .and_then(|q| q.front())
-                .map(|(at, _)| *at);
+                .map(|(stamp, _)| match *stamp {
+                    Stamp::Wall(at) => at,
+                    Stamp::Virt(_) => unreachable!("virtual stamp on wall fabric"),
+                });
             match deliver_at {
                 Some(at) if now >= at => {
                     let (_, data) = mb
@@ -201,6 +256,40 @@ impl RecvReq {
             }
         }
     }
+
+    /// Virtual mode: block (plain condvar, no timeout) only until the
+    /// payload is queued, then jump this rank's clock to the arrival
+    /// instant; the exposed wait is computed, never measured.
+    fn wait_virtual(self) -> Vec<f32> {
+        let slot = &self.fabric.slots[self.rank];
+        let mut mb = slot.mbox.lock().unwrap();
+        loop {
+            let queued = mb
+                .queues
+                .get(&self.key)
+                .map_or(false, |q| !q.is_empty());
+            if queued {
+                let (stamp, data) = mb
+                    .queues
+                    .get_mut(&self.key)
+                    .unwrap()
+                    .pop_front()
+                    .unwrap();
+                let at = match stamp {
+                    Stamp::Virt(at) => at,
+                    Stamp::Wall(_) => unreachable!("wall stamp on virtual fabric"),
+                };
+                let clock = &self.fabric.clock;
+                let exposed = at.saturating_sub(clock.now_ns(self.rank));
+                clock.advance_to_ns(self.rank, at);
+                let c = &self.fabric.counters[self.rank];
+                c.msgs_recv.fetch_add(1, Ordering::Relaxed);
+                c.recv_wait_ns.fetch_add(exposed, Ordering::Relaxed);
+                return data;
+            }
+            mb = slot.cv.wait(mb).unwrap();
+        }
+    }
 }
 
 impl Endpoint {
@@ -216,12 +305,72 @@ impl Endpoint {
         &self.fabric
     }
 
+    /// Charge `secs` of modeled compute time to this rank's virtual
+    /// clock.  No-op on a wall-clock fabric, where compute takes real
+    /// time.  The coordinator calls this once per step with the
+    /// calibrated [`Workload`](crate::sim::Workload) compute cost — this
+    /// is the window asynchronous exchange overlaps with.
+    pub fn advance(&self, secs: f64) {
+        if self.fabric.clock.is_virtual() {
+            self.fabric
+                .clock
+                .advance_ns(self.rank, Clock::secs_to_ns(secs));
+        }
+    }
+
+    /// Opaque timestamp for step / exposed-wait accounting that works
+    /// under either clock mode.
+    pub fn mark(&self) -> TimeMark {
+        TimeMark {
+            wall: Instant::now(),
+            virt_ns: self.fabric.clock.now_ns(self.rank),
+            wait_ns: self.fabric.counters[self.rank]
+                .recv_wait_ns
+                .load(Ordering::Relaxed),
+        }
+    }
+
+    /// Seconds elapsed since `m` on this rank's active clock (wall
+    /// seconds, or simulated seconds in virtual mode).
+    pub fn elapsed(&self, m: &TimeMark) -> f64 {
+        match self.fabric.clock.mode() {
+            ClockMode::Wall => m.wall.elapsed().as_secs_f64(),
+            ClockMode::Virtual => {
+                Clock::ns_to_secs(self.fabric.clock.now_ns(self.rank) - m.virt_ns)
+            }
+        }
+    }
+
+    /// Exposed communication wait since `m`.  Wall mode measures the
+    /// real elapsed interval (call it tightly around a blocking drain);
+    /// virtual mode reads the transport's deterministic exposed-wait
+    /// counter delta, so unrelated work between the marks is excluded.
+    pub fn comm_wait_since(&self, m: &TimeMark) -> f64 {
+        match self.fabric.clock.mode() {
+            ClockMode::Wall => m.wall.elapsed().as_secs_f64(),
+            ClockMode::Virtual => {
+                let now = self.fabric.counters[self.rank]
+                    .recv_wait_ns
+                    .load(Ordering::Relaxed);
+                Clock::ns_to_secs(now - m.wait_ns)
+            }
+        }
+    }
+
     /// Non-blocking send (MPI_Isend).  The payload is moved into the
     /// destination mailbox with its simulated arrival instant.
     pub fn isend(&self, dst: usize, tag: Tag, data: Vec<f32>) -> SendReq {
         let bytes = data.len() * 4;
-        let delay = self.fabric.cost.message_time(bytes);
-        let at = Instant::now() + Duration::from_secs_f64(delay);
+        let stamp = match self.fabric.clock.mode() {
+            ClockMode::Wall => {
+                let delay = self.fabric.cost.message_time(bytes);
+                Stamp::Wall(Instant::now() + Duration::from_secs_f64(delay))
+            }
+            ClockMode::Virtual => {
+                let cost = Clock::secs_to_ns(self.fabric.cost.nominal(bytes));
+                Stamp::Virt(self.fabric.clock.now_ns(self.rank) + cost)
+            }
+        };
         let c = &self.fabric.counters[self.rank];
         c.msgs_sent.fetch_add(1, Ordering::Relaxed);
         c.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
@@ -231,7 +380,7 @@ impl Endpoint {
             mb.queues
                 .entry((self.rank, tag))
                 .or_default()
-                .push_back((at, data));
+                .push_back((stamp, data));
         }
         slot.cv.notify_all();
         SendReq { done: false }
@@ -314,15 +463,19 @@ mod tests {
         let mut r = b.irecv(0, Tag::MODEL);
         assert!(!r.test()); // nothing sent yet
         f.endpoint(0).send(1, Tag::MODEL, vec![9.0]);
-        // spin-poll (eventual completion)
+        // deadline-based poll (not a fixed spin count): with zero cost
+        // the message is visible as soon as it is enqueued, but give a
+        // loaded machine time rather than a flaky iteration bound
+        let deadline = Instant::now() + Duration::from_secs(5);
         let mut ok = false;
-        for _ in 0..1000 {
+        while Instant::now() < deadline {
             if r.test() {
                 ok = true;
                 break;
             }
+            thread::yield_now();
         }
-        assert!(ok);
+        assert!(ok, "message never became visible to test()");
     }
 
     #[test]
@@ -402,5 +555,83 @@ mod tests {
         let got = Endpoint::wait_all(reqs);
         assert_eq!(got[0][0], 10.0);
         assert_eq!(got[1][0], 20.0);
+    }
+
+    // ---- virtual-clock semantics ---------------------------------------
+
+    #[test]
+    fn virtual_visibility_follows_logical_time() {
+        let f = Fabric::new_virtual(2, CostModel::new(10e-3, 0.0, 0.0, 0));
+        let a = f.endpoint(0);
+        let b = f.endpoint(1);
+        a.isend(1, Tag::MODEL, vec![1.0]);
+        let mut r = b.irecv(0, Tag::MODEL);
+        assert!(!r.test(), "receiver clock at 0 < arrival at 10ms");
+        b.advance(5e-3);
+        assert!(!r.test(), "5ms < 10ms arrival");
+        b.advance(5e-3);
+        assert!(r.test(), "arrival instant reached on the logical clock");
+    }
+
+    #[test]
+    fn virtual_wait_jumps_clock_and_accounts_exposed_time() {
+        // noise_frac > 0 must be ignored (nominal cost) for determinism
+        let f = Fabric::new_virtual(2, CostModel::new(10e-3, 0.0, 0.5, 7));
+        f.endpoint(0).isend(1, Tag::MODEL, vec![1.0]);
+        let b = f.endpoint(1);
+        let m = b.mark();
+        let _ = b.recv(0, Tag::MODEL);
+        assert_eq!(f.clock().now_ns(1), 10_000_000, "clock jumped to arrival");
+        assert_eq!(
+            f.counters(1).recv_wait_ns.load(Ordering::Relaxed),
+            10_000_000,
+            "exposed wait is exactly the nominal wire time"
+        );
+        assert!((b.comm_wait_since(&m) - 10e-3).abs() < 1e-12);
+        assert!((b.elapsed(&m) - 10e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn virtual_overlap_hides_wire_time() {
+        let f = Fabric::new_virtual(2, CostModel::new(10e-3, 0.0, 0.0, 0));
+        f.endpoint(0).isend(1, Tag::MODEL, vec![1.0]);
+        let b = f.endpoint(1);
+        b.advance(20e-3); // "compute" past the arrival instant
+        let _ = b.recv(0, Tag::MODEL);
+        assert_eq!(f.counters(1).recv_wait_ns.load(Ordering::Relaxed), 0);
+        assert_eq!(f.clock().now_ns(1), 20_000_000, "clock not rewound");
+    }
+
+    #[test]
+    fn virtual_wait_blocks_until_queued_cross_thread() {
+        // no condvar timeout: the virtual wait must still wake when the
+        // sender (another thread) enqueues the payload
+        let f = Fabric::new_virtual(2, CostModel::new(1e-3, 0.0, 0.0, 0));
+        let b = f.endpoint(1);
+        let a = f.endpoint(0);
+        let h = thread::spawn(move || b.recv(0, Tag::MODEL));
+        thread::sleep(Duration::from_millis(20));
+        a.advance(3e-3);
+        a.isend(1, Tag::MODEL, vec![7.0]);
+        let got = h.join().unwrap();
+        assert_eq!(got, vec![7.0]);
+        // arrival = sender now (3ms) + alpha (1ms)
+        assert_eq!(f.clock().now_ns(1), 4_000_000);
+    }
+
+    #[test]
+    fn virtual_send_stamps_use_sender_clock() {
+        let f = Fabric::new_virtual(3, CostModel::new(2e-3, 0.0, 0.0, 0));
+        let a = f.endpoint(0);
+        a.advance(10e-3);
+        a.isend(2, Tag::MODEL, vec![0.5]);
+        f.endpoint(1).isend(2, Tag::SAMPLES, vec![1.5]); // sender clock 0
+        let c = f.endpoint(2);
+        let _ = c.recv(1, Tag::SAMPLES);
+        assert_eq!(f.clock().now_ns(2), 2_000_000);
+        let _ = c.recv(0, Tag::MODEL);
+        assert_eq!(f.clock().now_ns(2), 12_000_000);
+        let w = f.counters(2).recv_wait_ns.load(Ordering::Relaxed);
+        assert_eq!(w, 12_000_000, "2ms + 10ms exposed across the two recvs");
     }
 }

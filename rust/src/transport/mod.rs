@@ -13,41 +13,108 @@
 //! exposed communication time, exactly the overlap behaviour the paper
 //! exploits.  With [`simnet::CostModel::zero`] the transport is a plain
 //! (correctness-only) message layer.
+//!
+//! ## Clock modes
+//!
+//! The fabric runs under one of two clocks ([`clock`]):
+//!
+//! * **Wall** ([`Fabric::new`], the default) — arrival instants are real
+//!   [`std::time::Instant`]s, blocking waits sleep out the simulated
+//!   wire time, and exposed waits are measured with the OS clock.
+//!   Physically real overlap, but timings vary run to run and the
+//!   wall-clock cost of a simulated second is a real second.
+//! * **Virtual** ([`Fabric::new_virtual`]) — deterministic discrete-event
+//!   time.  Each rank owns a logical clock advanced by explicit compute
+//!   charges ([`Endpoint::advance`]) and by message arrival instants on
+//!   blocking receives; `RecvReq::test`/`wait` compare logical arrival
+//!   instants instead of sleeping, and the exposed wait is *computed*
+//!   (`max(0, arrival − now)`), never measured.  Timing metrics are
+//!   bit-reproducible given the same configuration and seed, and a run
+//!   at p = 1024 costs only the real compute the backend performs.
+//!   See `docs/virtual-time.md` for the full determinism argument.
+//!
+//! Step and wait accounting that works under either mode goes through
+//! [`Endpoint::mark`] / [`Endpoint::elapsed`] /
+//! [`Endpoint::comm_wait_since`], which the coordinator uses in place of
+//! raw `Instant::now()` arithmetic.
 
+pub mod clock;
 pub mod inproc;
 pub mod simnet;
 
-pub use inproc::{Endpoint, Fabric, RecvReq, SendReq};
+pub use clock::{Clock, ClockMode, TimeMark};
+pub use inproc::{Counters, Endpoint, Fabric, RecvReq, SendReq};
 pub use simnet::CostModel;
 
 /// Message tags name the logical channel, mirroring MPI tags.
 /// Layer-wise gradient exchange uses `Tag::layer(i)`.
+///
+/// Bit layout of the `u64` (fields are disjoint, so `kind`, `chan`,
+/// `round` and `sub` can never collide with each other):
+///
+/// ```text
+///   63      60 59              44 43                      16 15       0
+///   +--------+------------------+--------------------------+---------+
+///   |  kind  |  chan (layer i)  |  round (call separator)  |   sub   |
+///   | 4 bits |     16 bits      |         28 bits          | 16 bits |
+///   +--------+------------------+--------------------------+---------+
+/// ```
+///
+/// `round` is 28 bits wide so per-step tags do not wrap until ~268M
+/// steps (the old 16-bit field silently collided after 65,536 steps),
+/// and the layer index lives in its own dedicated field instead of the
+/// low bits (where i ≥ 256 used to bleed into `sub`).  Overflowing any
+/// field is a programming error and panics rather than aliasing a
+/// channel.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Tag(pub u64);
 
-impl Tag {
-    pub const MODEL: Tag = Tag(1 << 40);
-    pub const SAMPLES: Tag = Tag(2 << 40);
-    pub const LABELS: Tag = Tag(3 << 40);
-    pub const REDUCE: Tag = Tag(4 << 40);
-    pub const CTRL: Tag = Tag(5 << 40);
+const KIND_SHIFT: u32 = 60;
+const CHAN_SHIFT: u32 = 44;
+const CHAN_BITS: u32 = 16;
+const ROUND_SHIFT: u32 = 16;
+const ROUND_BITS: u32 = 28;
+const SUB_BITS: u32 = 16;
 
-    pub const BCAST: Tag = Tag(7 << 40);
+impl Tag {
+    pub const MODEL: Tag = Tag(1u64 << KIND_SHIFT);
+    pub const SAMPLES: Tag = Tag(2u64 << KIND_SHIFT);
+    pub const LABELS: Tag = Tag(3u64 << KIND_SHIFT);
+    pub const REDUCE: Tag = Tag(4u64 << KIND_SHIFT);
+    pub const CTRL: Tag = Tag(5u64 << KIND_SHIFT);
+
+    pub const BCAST: Tag = Tag(7u64 << KIND_SHIFT);
 
     /// Per-layer gradient channel (paper §5: layer-wise async exchange).
+    /// The index occupies the dedicated 16-bit `chan` field.
     pub fn layer(i: usize) -> Tag {
-        Tag((6u64 << 40) | i as u64)
+        assert!(
+            i < (1usize << CHAN_BITS),
+            "layer index {i} overflows the {CHAN_BITS}-bit chan field"
+        );
+        Tag((6u64 << KIND_SHIFT) | ((i as u64) << CHAN_SHIFT))
     }
 
-    /// Collective-call separator (one per allreduce invocation).
-    /// Uses a dedicated 16-bit field so it cannot collide with `sub`.
+    /// Collective-call separator (one per allreduce invocation / step).
+    /// Uses a dedicated 28-bit field so it cannot collide with `sub`,
+    /// `layer` or the tag kind, and does not wrap at 65,536 steps.
     pub fn round(self, r: usize) -> Tag {
-        Tag((self.0 & !(0xFFFFu64 << 24)) | ((r as u64 & 0xFFFF) << 24))
+        assert!(
+            (r as u64) < (1u64 << ROUND_BITS),
+            "round {r} overflows the {ROUND_BITS}-bit round field"
+        );
+        let mask = ((1u64 << ROUND_BITS) - 1) << ROUND_SHIFT;
+        Tag((self.0 & !mask) | ((r as u64) << ROUND_SHIFT))
     }
 
     /// Intra-collective step separator (ring steps, tree phases).
     pub fn sub(self, s: usize) -> Tag {
-        Tag((self.0 & !(0xFFFFu64 << 8)) | ((s as u64 & 0xFFFF) << 8))
+        assert!(
+            (s as u64) < (1u64 << SUB_BITS),
+            "sub-step {s} overflows the {SUB_BITS}-bit sub field"
+        );
+        let mask = (1u64 << SUB_BITS) - 1;
+        Tag((self.0 & !mask) | s as u64)
     }
 }
 
@@ -66,5 +133,41 @@ mod tests {
         assert_ne!(Tag::REDUCE.round(1).sub(0), Tag::REDUCE.round(0).sub(1));
         assert_eq!(Tag::REDUCE.round(1).round(2), Tag::REDUCE.round(2));
         assert_ne!(Tag::BCAST.round(3), Tag::REDUCE.round(3));
+    }
+
+    #[test]
+    fn round_survives_16bit_overflow() {
+        // regression: the old layout masked rounds to 16 bits, so step
+        // 65_536 aliased step 0 and long runs crossed messages
+        assert_ne!(Tag::REDUCE.round(65_536), Tag::REDUCE.round(0));
+        assert_ne!(Tag::REDUCE.round(65_537), Tag::REDUCE.round(1));
+        assert_ne!(Tag::layer(2).round(100_000), Tag::layer(2).round(100_001));
+        assert_eq!(Tag::CTRL.round(1 << 27).round(3), Tag::CTRL.round(3));
+    }
+
+    #[test]
+    fn layer_index_has_its_own_field() {
+        // regression: the old layout put the layer index in the low bits,
+        // so layer(256) == layer(0).sub(1)
+        assert_ne!(Tag::layer(256), Tag::layer(0).sub(1));
+        assert_ne!(Tag::layer(512).round(9), Tag::layer(0).round(9).sub(2));
+        // deep layer indices never perturb round/sub
+        for i in [0usize, 1, 255, 256, 257, 4095, 65_535] {
+            assert_eq!(Tag::layer(i).round(5).sub(9), Tag::layer(i).sub(9).round(5));
+            assert_ne!(Tag::layer(i).round(5), Tag::layer(i).round(6));
+        }
+        assert_ne!(Tag::layer(256).round(1).sub(2), Tag::layer(257).round(1).sub(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows")]
+    fn round_overflow_panics_instead_of_aliasing() {
+        let _ = Tag::REDUCE.round(1 << ROUND_BITS);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows")]
+    fn layer_overflow_panics_instead_of_aliasing() {
+        let _ = Tag::layer(1 << CHAN_BITS);
     }
 }
