@@ -89,8 +89,11 @@ fn real_runs() {
 
 /// Virtual-clock measured sweep: same coordinator + transport code as
 /// `real_runs`, but with per-rank logical clocks charging the LeNet3
-/// compute model.  Timing is deterministic and the wall cost per rank is
-/// only the backend's real compute, so p = 256 finishes in seconds.
+/// compute model through the **layer-wise pipeline** (per-layer backprop
+/// slices, per-layer sends at grad-ready instants).  Timing is
+/// deterministic and the wall cost per rank is only the backend's real
+/// compute, so p = 256 finishes in seconds.  The overlap column is the
+/// measured fraction of received wire time hidden under compute.
 fn virtual_runs() {
     let w = Workload::lenet3(4.0);
     let mut t = Table::new(&[
@@ -99,11 +102,15 @@ fn virtual_runs() {
         "gossip step ms",
         "speedup",
         "gossip eff %",
+        "gossip overlap %",
+        "agd overlap %",
     ]);
     let mut last_speedup = 0.0f64;
+    let mut last_overlap = 0.0f64;
     let t0 = std::time::Instant::now();
     for ranks in [64usize, 128, 256] {
         let mut step_ms = [0.0f64; 2];
+        let mut overlap = [0.0f64; 2];
         let mut eff = 0.0f64;
         for (i, algo) in [Algo::Agd, Algo::Gossip].into_iter().enumerate() {
             let mut cfg = RunConfig {
@@ -113,6 +120,7 @@ fn virtual_runs() {
                 steps: 8,
                 use_artifacts: false,
                 rows_per_rank: 32,
+                layerwise: true, // per-layer pipelined schedule
                 // slow fabric so the schedules separate measurably
                 // (matches real_runs)
                 ..Default::default()
@@ -123,20 +131,31 @@ fn virtual_runs() {
             let backend = Arc::new(NativeMlp::new(vec![784, 32, 10], 16, 0));
             let res = run_with_backend(&cfg, backend).expect("virtual run");
             step_ms[i] = 1e3 * res.mean_step_secs();
+            overlap[i] = 100.0 * res.mean_overlap_frac();
             if algo == Algo::Gossip {
                 eff = res.mean_efficiency_pct();
             }
         }
         last_speedup = step_ms[0] / step_ms[1];
+        last_overlap = overlap[1];
         t.row(&[
             ranks.to_string(),
             format!("{:.2}", step_ms[0]),
             format!("{:.2}", step_ms[1]),
             format!("{:.2}", last_speedup),
             format!("{eff:.1}"),
+            format!("{:.1}", overlap[1]),
+            format!("{:.1}", overlap[0]),
         ]);
     }
-    t.print("measured on the VIRTUAL-CLOCK fabric (deterministic, p to 256)");
+    t.print(
+        "measured on the VIRTUAL-CLOCK fabric, layer-wise pipeline \
+         (deterministic, p to 256)",
+    );
+    assert!(
+        last_overlap > 50.0,
+        "pipelined gossip should hide most wire time (overlap {last_overlap:.1}%)"
+    );
     println!(
         "  swept p = 64/128/256 in {:.1}s wall (simulated seconds are free)",
         t0.elapsed().as_secs_f64()

@@ -118,6 +118,36 @@ pub struct RunConfig {
     /// [`Workload::t_compute`](crate::sim::Workload::t_compute)).
     /// Ignored in wall mode, where compute takes real time.
     pub virt_compute_secs: f64,
+    /// Run the layer-wise asynchronous pipeline (paper §5): the per-step
+    /// compute is charged in per-layer backprop slices (output layer
+    /// first) and each layer's exchange is posted the instant its slice
+    /// completes, instead of charging the whole backward pass and then
+    /// exchanging the whole model.  On backends with an elementwise
+    /// update kernel (the native backend; see
+    /// [`ModelBackend::apply_update_slice`](crate::runtime::ModelBackend::apply_update_slice))
+    /// this is numerically bit-identical to the monolithic schedule —
+    /// same elementwise ops in the same order — so only the timing, and
+    /// therefore the measurable comm/compute overlap, changes.  A PJRT
+    /// backend's slice updates go through the native momentum-SGD kernel
+    /// rather than its compiled full-buffer executable, so there the two
+    /// schedules may differ in final bits (not in math).
+    pub layerwise: bool,
+    /// Forward-pass seconds within `virt_compute_secs` (charged before
+    /// the first backward slice in layer-wise mode; set by
+    /// [`virtualize`](Self::virtualize) from the workload's `t_fwd`).
+    pub virt_fwd_secs: f64,
+    /// Deterministic per-(rank, step) straggler jitter amplitude for the
+    /// virtual fabric: each rank's compute charge is multiplied by
+    /// `1 + jitter · Exp(1)` where the exponential draw is a pure hash
+    /// of (seed, rank, step) — see [`crate::sim::jitter_factor`].  0
+    /// disables jitter.  This reproduces the `sim/straggler.rs` noise
+    /// ablation on the *measured* fabric.
+    pub straggler_jitter: f64,
+    /// Server-side aggregation compute charged on the PS rank per worker
+    /// per step in virtual-clock mode (one reduction pass over the
+    /// model).  Combined with the serialized broadcast this reproduces
+    /// the Fig 2(a) parameter-server bottleneck at scale.
+    pub virt_ps_agg_secs: f64,
 }
 
 impl Default for RunConfig {
@@ -147,6 +177,10 @@ impl Default for RunConfig {
             resume_from: None,
             virtual_clock: false,
             virt_compute_secs: 0.0,
+            layerwise: false,
+            virt_fwd_secs: 0.0,
+            straggler_jitter: 0.0,
+            virt_ps_agg_secs: 0.0,
         }
     }
 }
@@ -173,10 +207,16 @@ impl RunConfig {
     /// Switch this run onto the virtual clock, charging the calibrated
     /// workload's per-step compute cost and the given α–β wire costs.
     /// Noise is zeroed: the virtual fabric charges nominal
-    /// (deterministic) message costs by construction.
+    /// (deterministic) message costs by construction.  Also records the
+    /// workload's forward-pass share (for the layer-wise pipeline's
+    /// backprop-slice schedule) and a parameter-server aggregation cost
+    /// (one ~50 GB/s host-memory reduction pass over the model per
+    /// worker — PS frameworks aggregate on the host, Fig 2(a)).
     pub fn virtualize(&mut self, w: &crate::sim::Workload, alpha: f64, beta: f64) {
         self.virtual_clock = true;
         self.virt_compute_secs = w.t_compute();
+        self.virt_fwd_secs = w.t_fwd;
+        self.virt_ps_agg_secs = w.model_bytes() as f64 / 50.0e9;
         self.net_alpha = alpha;
         self.net_beta = beta;
         self.net_noise = 0.0;
@@ -212,8 +252,14 @@ impl RunConfig {
         num_field!("net_noise", net_noise, f64);
         num_field!("ps_servers", ps_servers, usize);
         num_field!("virt_compute_secs", virt_compute_secs, f64);
+        num_field!("virt_fwd_secs", virt_fwd_secs, f64);
+        num_field!("straggler_jitter", straggler_jitter, f64);
+        num_field!("virt_ps_agg_secs", virt_ps_agg_secs, f64);
         if let Some(v) = j.get("virtual_clock").and_then(Json::as_bool) {
             c.virtual_clock = v;
+        }
+        if let Some(v) = j.get("layerwise").and_then(Json::as_bool) {
+            c.layerwise = v;
         }
         if let Some(v) = j.get("rotation").and_then(Json::as_bool) {
             c.rotation = v;
@@ -319,12 +365,31 @@ mod tests {
         c.virtualize(&w, 1e-6, 1e-10);
         assert!(c.virtual_clock);
         assert!((c.virt_compute_secs - 0.096).abs() < 1e-9);
+        assert!((c.virt_fwd_secs - w.t_fwd).abs() < 1e-12);
+        assert!(c.virt_ps_agg_secs > 0.0, "PS aggregation cost modeled");
         assert_eq!(c.net_noise, 0.0);
         let j = Json::parse(r#"{"virtual_clock": true, "virt_compute_secs": 0.004}"#)
             .unwrap();
         let c2 = RunConfig::from_json(&j).unwrap();
         assert!(c2.virtual_clock);
         assert!((c2.virt_compute_secs - 0.004).abs() < 1e-12);
+    }
+
+    #[test]
+    fn layerwise_and_jitter_fields_parse() {
+        let j = Json::parse(
+            r#"{"layerwise": true, "virt_fwd_secs": 0.002,
+                "straggler_jitter": 0.15, "virt_ps_agg_secs": 0.001}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert!(c.layerwise);
+        assert!((c.virt_fwd_secs - 0.002).abs() < 1e-12);
+        assert!((c.straggler_jitter - 0.15).abs() < 1e-12);
+        assert!((c.virt_ps_agg_secs - 0.001).abs() < 1e-12);
+        // defaults keep the monolithic schedule
+        assert!(!RunConfig::default().layerwise);
+        assert_eq!(RunConfig::default().straggler_jitter, 0.0);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 
 use super::worker::Worker;
 use crate::collectives::Algorithm;
+use crate::config::RunConfig;
 use crate::nativenet::ops;
 use crate::transport::{Endpoint, Tag};
 use crate::util::ceil_log2;
@@ -19,6 +20,15 @@ use crate::util::ceil_log2;
 /// Synchronous all-reduce training.  `layerwise = true` → AGD (one
 /// all-reduce per layer slice, the overlappable schedule); `false` →
 /// plain SGD (single whole-model all-reduce).
+///
+/// With `cfg.layerwise` the AGD variant additionally runs the per-layer
+/// *pipelined* compute schedule: each layer's backprop slice is charged
+/// right before that layer's all-reduce, so the collective for layer ℓ
+/// starts at ℓ's grad-ready instant (the §3.2 S-Caffe/PowerAI schedule)
+/// instead of after the whole backward pass.  The collectives themselves
+/// remain dependency-chained on each rank, so their rounds stay exposed
+/// — the measured AGD is the blocking-schedule bound the gossip pipeline
+/// is compared against.
 pub fn run_allreduce(w: &mut Worker, ep: &Endpoint, alg: Algorithm, layerwise: bool) {
     let steps = w.cfg.steps;
     let layers: Vec<(usize, usize)> = w
@@ -27,23 +37,37 @@ pub fn run_allreduce(w: &mut Worker, ep: &Endpoint, alg: Algorithm, layerwise: b
         .iter()
         .map(|l| (l.offset, l.len))
         .collect();
+    let pipelined = layerwise && w.cfg.layerwise;
+    let sched = w.bwd_schedule(); // (layer, offset, len, slice secs), output first
     for step in 0..steps {
         let t0 = ep.mark();
         let lr = w.lr_at(step);
         let batch = w.shuffle.take(ep);
         let (x, y) = w.to_batch_data(&batch);
         let (mut grads, loss) = w.backend.grad(&w.params, &x, &y);
-        ep.advance(w.cfg.virt_compute_secs);
 
-        let tw = ep.mark();
-        if layerwise {
-            for (li, &(off, len)) in layers.iter().enumerate() {
+        let comm_wait = if pipelined {
+            // per-layer pipeline: slice compute, then that layer's
+            // all-reduce at its grad-ready instant (output layer first)
+            w.charge_compute(ep, step, w.cfg.virt_fwd_secs);
+            let tw = ep.mark();
+            for &(li, off, len, secs) in &sched {
+                w.charge_compute(ep, step, secs);
                 alg.run(ep, &mut grads[off..off + len], step * layers.len() + li);
             }
+            ep.comm_wait_since(&tw)
         } else {
-            alg.run(ep, &mut grads, step);
-        }
-        let comm_wait = ep.comm_wait_since(&tw);
+            w.charge_compute(ep, step, w.cfg.virt_compute_secs);
+            let tw = ep.mark();
+            if layerwise {
+                for (li, &(off, len)) in layers.iter().enumerate() {
+                    alg.run(ep, &mut grads[off..off + len], step * layers.len() + li);
+                }
+            } else {
+                alg.run(ep, &mut grads, step);
+            }
+            ep.comm_wait_since(&tw)
+        };
 
         w.backend.apply_update(&mut w.params, &mut w.mom, &grads, lr);
         w.shuffle.give_back(ep, batch);
@@ -69,7 +93,7 @@ pub fn run_periodic(w: &mut Worker, ep: &Endpoint, alg: Algorithm) {
         let batch = w.shuffle.take(ep);
         let (x, y) = w.to_batch_data(&batch);
         let (grads, loss) = w.backend.grad(&w.params, &x, &y);
-        ep.advance(w.cfg.virt_compute_secs);
+        w.charge_compute(ep, step, w.cfg.virt_compute_secs);
         w.backend.apply_update(&mut w.params, &mut w.mom, &grads, lr);
 
         let mut comm_wait = 0.0;
@@ -90,20 +114,43 @@ pub fn run_periodic(w: &mut Worker, ep: &Endpoint, alg: Algorithm) {
 }
 
 /// Parameter-server worker loop: push grads, pull weights, every step.
+///
+/// With `cfg.layerwise` the push is pipelined: each layer's gradient is
+/// sent the instant its backprop slice completes (one message per layer,
+/// tagged with the layer channel), so the push overlaps the remaining
+/// backward pass; only the weight pull stays exposed — which is exactly
+/// the Fig 2(a) bottleneck once the server serializes its broadcast.
 pub fn run_ps_worker(w: &mut Worker, ep: &Endpoint, server: usize) {
     let steps = w.cfg.steps;
+    let sched = w.bwd_schedule();
     for step in 0..steps {
         let t0 = ep.mark();
         let batch = w.shuffle.take(ep);
         let (x, y) = w.to_batch_data(&batch);
         let (grads, loss) = w.backend.grad(&w.params, &x, &y);
-        ep.advance(w.cfg.virt_compute_secs);
 
-        let tw = ep.mark();
-        ep.isend(server, Tag::REDUCE.round(step), grads);
-        let fresh = ep.recv(server, Tag::MODEL.round(step));
-        let comm_wait = ep.comm_wait_since(&tw);
-        w.params.copy_from_slice(&fresh);
+        let comm_wait = if w.cfg.layerwise {
+            w.charge_compute(ep, step, w.cfg.virt_fwd_secs);
+            for &(li, off, len, secs) in &sched {
+                w.charge_compute(ep, step, secs);
+                ep.isend(
+                    server,
+                    Tag::layer(li).round(step),
+                    grads[off..off + len].to_vec(),
+                );
+            }
+            let tw = ep.mark();
+            let fresh = ep.recv(server, Tag::MODEL.round(step));
+            w.params.copy_from_slice(&fresh);
+            ep.comm_wait_since(&tw)
+        } else {
+            w.charge_compute(ep, step, w.cfg.virt_compute_secs);
+            let tw = ep.mark();
+            ep.isend(server, Tag::REDUCE.round(step), grads);
+            let fresh = ep.recv(server, Tag::MODEL.round(step));
+            w.params.copy_from_slice(&fresh);
+            ep.comm_wait_since(&tw)
+        };
 
         w.shuffle.give_back(ep, batch);
         w.record_step(step, loss, ep.elapsed(&t0), comm_wait);
@@ -118,28 +165,56 @@ pub fn run_ps_worker(w: &mut Worker, ep: &Endpoint, server: usize) {
 
 /// Parameter-server loop (runs on fabric rank `workers`..): aggregates
 /// the workers' gradients each step, applies the update centrally, and
-/// broadcasts fresh weights.  `lr_of(step)` mirrors the workers'
-/// schedule.
+/// broadcasts fresh weights.
+///
+/// Virtual-clock cost model (Fig 2(a)): the server charges
+/// `cfg.virt_ps_agg_secs` of aggregation compute per worker per step
+/// (one host-memory reduction pass over the model), and its broadcast is
+/// serialized on the server's single NIC — `M·β` of link occupancy is
+/// charged between consecutive sends, so the k-th worker's fresh model
+/// leaves k transfers late.  Both charges are no-ops on a wall fabric.
+/// Workers may push monolithically (one `REDUCE` message) or layer-wise
+/// (one message per layer, `cfg.layerwise`); aggregation order is
+/// src-major in both cases, so the reduced model is bit-identical.
 pub fn run_ps_server(
     ep: &Endpoint,
     backend: &super::worker::Backend,
     workers: usize,
-    steps: usize,
-    lr_of: impl Fn(usize) -> f32,
+    cfg: &RunConfig,
 ) {
     let mut params = backend.init_params();
     let mut mom = vec![0.0f32; params.len()];
     let mut acc = vec![0.0f32; params.len()];
-    for step in 0..steps {
+    let layers: Vec<(usize, usize)> = backend
+        .layers()
+        .iter()
+        .map(|l| (l.offset, l.len))
+        .collect();
+    let beta = ep.fabric().cost.beta;
+    for step in 0..cfg.steps {
         acc.iter_mut().for_each(|v| *v = 0.0);
         for src in 0..workers {
-            let g = ep.recv(src, Tag::REDUCE.round(step));
-            ops::add_into(&mut acc, &g);
+            if cfg.layerwise {
+                for (li, &(off, len)) in layers.iter().enumerate() {
+                    let g = ep.recv(src, Tag::layer(li).round(step));
+                    ops::add_into(&mut acc[off..off + len], &g);
+                }
+            } else {
+                let g = ep.recv(src, Tag::REDUCE.round(step));
+                ops::add_into(&mut acc, &g);
+            }
         }
+        // server-side aggregation + update compute (virtual clock only)
+        ep.advance(cfg.virt_ps_agg_secs * workers as f64);
         ops::scale(&mut acc, 1.0 / workers as f32);
-        backend.apply_update(&mut params, &mut mom, &acc, lr_of(step));
+        let lr = cfg.lr_schedule.lr_at(cfg.effective_lr(), step) as f32;
+        backend.apply_update(&mut params, &mut mom, &acc, lr);
+        let wire = params.len() as f64 * 4.0 * beta;
         for dst in 0..workers {
             ep.isend(dst, Tag::MODEL.round(step), params.clone());
+            // the next transfer cannot start until this one clears the
+            // server's NIC: the broadcast serialization of Fig 2(a)
+            ep.advance(wire);
         }
     }
 }

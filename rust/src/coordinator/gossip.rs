@@ -25,10 +25,12 @@
 //! Timing goes through [`Endpoint::mark`]/[`Endpoint::elapsed`]/
 //! [`Endpoint::comm_wait_since`], so the same code path produces wall
 //! timings on the default fabric and deterministic simulated timings on
-//! a virtual-clock fabric ([`crate::transport::Fabric::new_virtual`]);
-//! in virtual mode [`Endpoint::advance`] charges the configured
-//! per-step compute cost right after the gradient evaluation — the
-//! window the asynchronous exchange overlaps with.
+//! a virtual-clock fabric ([`crate::transport::Fabric::new_virtual`]).
+//! In virtual mode the configured per-step compute cost is charged
+//! either as one block after the gradient evaluation (monolithic) or,
+//! with `cfg.layerwise`, as per-layer backprop slices with each layer's
+//! exchange posted at its grad-ready instant — the §5 asynchronous
+//! pipeline, measurable via the per-rank `overlap_frac` metric.
 //!
 //! ## Staleness note
 //! Mixing consumes the partner model *sent after the partner's previous
@@ -85,12 +87,33 @@ impl GossipTopology {
     }
 }
 
-/// In-flight model receive: the layer-sliced irecvs posted for one step.
+/// In-flight model receive: the layer-sliced irecvs posted for one
+/// exchange, indexed by backend layer-table position so the pipelined
+/// schedule can drain exactly the layer whose backprop slice just
+/// completed (`None` once consumed).
 struct PendingModel {
-    reqs: Vec<(usize, RecvReq)>, // (layer offset, request)
+    reqs: Vec<Option<(usize, RecvReq)>>, // [layer] -> (offset, request)
 }
 
 /// Run GossipGraD on one rank for `cfg.steps` steps.
+///
+/// Two step schedules share all numerics — with an elementwise update
+/// kernel (native backend) the final models are bit-identical, since
+/// the same elementwise mix/update ops run in the same per-element
+/// order (see
+/// `tests/virtual_time.rs::layerwise_pipeline_is_bit_identical_to_monolithic`):
+///
+/// * **Monolithic** (`cfg.layerwise = false`): charge the whole
+///   backward pass, drain + mix the whole partner model, update, send
+///   every layer at once.
+/// * **Layer-wise pipeline** (`cfg.layerwise = true`, paper §5): charge
+///   the forward pass, then per layer in backprop-completion order
+///   (output layer first) charge that layer's compute slice, drain the
+///   partner's matching slice from the previous exchange, mix, update,
+///   and post the layer's async send immediately — while later layers'
+///   backprop continues.  Each message's logical send instant is its
+///   layer's grad-ready instant, so the measured overlap matches the
+///   closed-form `Workload::grad_ready_times` model.
 pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix: bool) {
     let steps = w.cfg.steps;
     let period = w.cfg.gossip_period.max(1);
@@ -100,7 +123,9 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
         .iter()
         .map(|l| (l.offset, l.len))
         .collect();
-    let mut pending: Option<(usize, PendingModel)> = None; // (send step, reqs)
+    let layerwise = w.cfg.layerwise;
+    let sched = w.bwd_schedule(); // (layer, offset, len, slice secs), output first
+    let mut pending: Option<PendingModel> = None;
     let mut partner_buf = vec![0.0f32; w.params.len()];
 
     for step in 0..steps {
@@ -112,49 +137,94 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
 
         // ---- compute (overlaps the in-flight partner model) ----------
         let (grads, loss) = w.backend.grad(&w.params, &x, &y);
-        // virtual clock: charge the modeled compute cost for this step
-        ep.advance(w.cfg.virt_compute_secs);
 
-        // ---- drain previous step's partner model & mix (§6) ----------
-        if let Some((_, pm)) = pending.take() {
-            let tw = ep.mark();
-            for (off, req) in pm.reqs {
-                let data = req.wait();
-                partner_buf[off..off + data.len()].copy_from_slice(&data);
-            }
-            comm_wait += ep.comm_wait_since(&tw);
-            ops::mix_into(&mut w.params, &partner_buf);
-        }
+        // gossip exchange runs every `period` steps; never at step 0,
+        // where all replicas still hold the identical initial model
+        let gossip_now = step > 0 && step % period == 0;
+        let gossip_step = step / period;
+        let random_senders = if gossip_now {
+            topo.senders_to(w.rank, gossip_step)
+        } else {
+            None
+        };
+        let exchange = if gossip_now {
+            Some(topo.exchange(w.rank, gossip_step))
+        } else {
+            None
+        };
 
-        // ---- local update ---------------------------------------------
-        w.backend.apply_update(&mut w.params, &mut w.mom, &grads, lr);
-
-        // ---- gossip exchange (every `period` steps; never at step 0,
-        // where all replicas still hold the identical initial model) ----
-        if step > 0 && step % period == 0 {
-            let gossip_step = step / period;
-            if let Some(senders) = topo.senders_to(w.rank, gossip_step) {
-                // random-gossip baseline: blocking, possibly unbalanced
-                let ex = topo.exchange(w.rank, gossip_step);
-                send_model(ep, ex.send_to, step, &w.params, &layers);
-                let tw = ep.mark();
-                for src in senders {
-                    let pm = post_recvs(ep, src, step, &layers);
-                    for (off, req) in pm.reqs {
+        if layerwise {
+            // ---- layer-wise pipeline --------------------------------
+            w.charge_compute(ep, step, w.cfg.virt_fwd_secs);
+            let mut new_reqs: Vec<Option<(usize, RecvReq)>> =
+                (0..layers.len()).map(|_| None).collect();
+            for &(li, off, len, secs) in &sched {
+                w.charge_compute(ep, step, secs);
+                // drain the previous exchange's slice for this layer the
+                // moment the local slice completes (mix before update,
+                // as in the monolithic schedule)
+                if let Some(pm) = pending.as_mut() {
+                    if let Some((o2, req)) = pm.reqs[li].take() {
+                        let tw = ep.mark();
                         let data = req.wait();
-                        partner_buf[off..off + data.len()].copy_from_slice(&data);
+                        comm_wait += ep.comm_wait_since(&tw);
+                        ops::mix_into(&mut w.params[o2..o2 + data.len()], &data);
                     }
-                    ops::mix_into(&mut w.params, &partner_buf);
+                }
+                w.backend.apply_update_slice(
+                    &mut w.params[off..off + len],
+                    &mut w.mom[off..off + len],
+                    &grads[off..off + len],
+                    lr,
+                );
+                // post this layer's async exchange at its grad-ready
+                // instant — later layers' backprop continues past it
+                if let Some(ex) = &exchange {
+                    if ex.send_to != w.rank {
+                        ep.isend(
+                            ex.send_to,
+                            Tag::layer(li).round(step),
+                            w.params[off..off + len].to_vec(),
+                        );
+                        if random_senders.is_none() && !sync_mix {
+                            new_reqs[li] = Some((
+                                off,
+                                ep.irecv(ex.recv_from, Tag::layer(li).round(step)),
+                            ));
+                        }
+                    }
+                }
+            }
+            pending = None;
+            if new_reqs.iter().any(Option::is_some) {
+                pending = Some(PendingModel { reqs: new_reqs });
+            }
+        } else {
+            // ---- monolithic schedule --------------------------------
+            // virtual clock: charge the whole modeled compute cost
+            w.charge_compute(ep, step, w.cfg.virt_compute_secs);
+
+            // drain previous step's partner model & mix (§6)
+            if let Some(pm) = pending.take() {
+                let tw = ep.mark();
+                for (off, req) in pm.reqs.into_iter().flatten() {
+                    let data = req.wait();
+                    partner_buf[off..off + data.len()].copy_from_slice(&data);
                 }
                 comm_wait += ep.comm_wait_since(&tw);
-            } else {
-                let ex = topo.exchange(w.rank, gossip_step);
-                if ex.send_to != w.rank {
+                ops::mix_into(&mut w.params, &partner_buf);
+            }
+
+            // local update
+            w.backend.apply_update(&mut w.params, &mut w.mom, &grads, lr);
+
+            if let Some(ex) = &exchange {
+                if random_senders.is_none() && ex.send_to != w.rank {
                     send_model(ep, ex.send_to, step, &w.params, &layers);
                     let pm = post_recvs(ep, ex.recv_from, step, &layers);
                     if sync_mix {
                         let tw = ep.mark();
-                        for (off, req) in pm.reqs {
+                        for (off, req) in pm.reqs.into_iter().flatten() {
                             let data = req.wait();
                             partner_buf[off..off + data.len()]
                                 .copy_from_slice(&data);
@@ -162,8 +232,40 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
                         comm_wait += ep.comm_wait_since(&tw);
                         ops::mix_into(&mut w.params, &partner_buf);
                     } else {
-                        pending = Some((step, PendingModel { reqs: pm.reqs }));
+                        pending = Some(pm);
                     }
+                } else if random_senders.is_some() {
+                    send_model(ep, ex.send_to, step, &w.params, &layers);
+                }
+            }
+        }
+
+        // random-gossip baseline: blocking, possibly unbalanced drain of
+        // every sender targeting this rank (both schedules)
+        if let Some(senders) = random_senders {
+            let tw = ep.mark();
+            for src in senders {
+                let pm = post_recvs(ep, src, step, &layers);
+                for (off, req) in pm.reqs.into_iter().flatten() {
+                    let data = req.wait();
+                    partner_buf[off..off + data.len()].copy_from_slice(&data);
+                }
+                ops::mix_into(&mut w.params, &partner_buf);
+            }
+            comm_wait += ep.comm_wait_since(&tw);
+        } else if layerwise && sync_mix {
+            // synchronous mixing under the pipeline: block for the
+            // current exchange once all layers are updated and sent
+            if let Some(ex) = &exchange {
+                if ex.send_to != w.rank {
+                    let pm = post_recvs(ep, ex.recv_from, step, &layers);
+                    let tw = ep.mark();
+                    for (off, req) in pm.reqs.into_iter().flatten() {
+                        let data = req.wait();
+                        partner_buf[off..off + data.len()].copy_from_slice(&data);
+                    }
+                    comm_wait += ep.comm_wait_since(&tw);
+                    ops::mix_into(&mut w.params, &partner_buf);
                 }
             }
         }
@@ -182,12 +284,18 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
     }
 
     // drain any final in-flight model so the fabric is clean
-    if let Some((_, pm)) = pending.take() {
-        for (off, req) in pm.reqs {
+    if let Some(pm) = pending.take() {
+        for (off, req) in pm.reqs.into_iter().flatten() {
             let data = req.wait();
-            partner_buf[off..off + data.len()].copy_from_slice(&data);
+            if layerwise {
+                ops::mix_into(&mut w.params[off..off + data.len()], &data);
+            } else {
+                partner_buf[off..off + data.len()].copy_from_slice(&data);
+            }
         }
-        ops::mix_into(&mut w.params, &partner_buf);
+        if !layerwise {
+            ops::mix_into(&mut w.params, &partner_buf);
+        }
     }
 
     w.snapshot_counters(ep);
@@ -221,7 +329,9 @@ fn post_recvs(
         reqs: layers
             .iter()
             .enumerate()
-            .map(|(li, &(off, _))| (off, ep.irecv(src, Tag::layer(li).round(step))))
+            .map(|(li, &(off, _))| {
+                Some((off, ep.irecv(src, Tag::layer(li).round(step))))
+            })
             .collect(),
     }
 }

@@ -60,6 +60,19 @@ impl RunResult {
                 .collect::<Vec<_>>(),
         )
     }
+
+    /// Mean fraction of received wire time hidden under compute (§5.1
+    /// overlap) across ranks — the measured-overlap column of the
+    /// Fig 10/11 and Table 7 benches.
+    pub fn mean_overlap_frac(&self) -> f64 {
+        crate::util::mean(
+            &self
+                .per_rank
+                .iter()
+                .map(|m| m.overlap_frac())
+                .collect::<Vec<_>>(),
+        )
+    }
 }
 
 /// Build the training/validation datasets for `cfg.model`.
@@ -193,10 +206,7 @@ pub fn run_with_backend(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
         // future work — the paper's critique targets the 1-server case
         let ep = fabric.endpoint(p);
         let sb = Arc::clone(&backend);
-        let c2 = cfg.clone();
-        baselines::run_ps_server(&ep, &sb, p, c2.steps, move |s| {
-            c2.lr_schedule.lr_at(c2.effective_lr(), s) as f32
-        });
+        baselines::run_ps_server(&ep, &sb, p, cfg);
     }
 
     let mut per_rank = Vec::new();

@@ -152,7 +152,7 @@ impl Worker {
         )
     }
 
-    /// Snapshot the transport's traffic + exposed-wait counters into
+    /// Snapshot the transport's traffic + overlap-ledger counters into
     /// this rank's metrics at the end of a run.
     pub fn snapshot_counters(&mut self, ep: &Endpoint) {
         use std::sync::atomic::Ordering;
@@ -161,6 +161,44 @@ impl Worker {
         self.metrics.bytes_sent = c.bytes_sent.load(Ordering::Relaxed);
         self.metrics.recv_wait_secs =
             c.recv_wait_ns.load(Ordering::Relaxed) as f64 * 1e-9;
+        self.metrics.comm_hidden_secs =
+            c.comm_hidden_ns.load(Ordering::Relaxed) as f64 * 1e-9;
+    }
+
+    /// Charge modeled compute to this rank's virtual clock, scaled by
+    /// the deterministic per-(rank, step) straggler factor (no-op on a
+    /// wall fabric, where compute takes real time).
+    pub fn charge_compute(&self, ep: &Endpoint, step: usize, secs: f64) {
+        if secs > 0.0 {
+            ep.advance(
+                secs * crate::sim::jitter_factor(
+                    self.cfg.seed,
+                    self.rank,
+                    step,
+                    self.cfg.straggler_jitter,
+                ),
+            );
+        }
+    }
+
+    /// The layer-wise pipeline's backprop schedule: per-layer
+    /// `(table index, offset, len, compute-slice seconds)` in backprop
+    /// *completion* order — the output layer (last table entry) first,
+    /// mirroring `Workload::layer_compute_slices`.  The backward budget
+    /// (`virt_compute_secs − virt_fwd_secs`) is split across layers
+    /// proportionally to their parameter bytes.
+    pub fn bwd_schedule(&self) -> Vec<(usize, usize, usize, f64)> {
+        let layers = self.backend.layers();
+        let bytes: Vec<usize> = layers.iter().rev().map(|l| l.len * 4).collect();
+        let bwd = (self.cfg.virt_compute_secs - self.cfg.virt_fwd_secs).max(0.0);
+        let slices = crate::sim::split_compute(bwd, &bytes);
+        layers
+            .iter()
+            .enumerate()
+            .rev()
+            .zip(slices)
+            .map(|((li, l), secs)| (li, l.offset, l.len, secs))
+            .collect()
     }
 
     /// Record one step's timings into the metrics.  `step_secs` and

@@ -37,6 +37,7 @@ fn real_main() -> Result<()> {
         "native",
         "lr-scaling",
         "virtual-clock",
+        "layerwise",
     ])
     .map_err(anyhow::Error::msg)?;
     match args.positional.first().map(|s| s.as_str()) {
@@ -65,6 +66,13 @@ fn print_usage() {
                   [--no-rotation] [--no-shuffle] [--native] [--lr-scaling]\n\
                   [--virtual-clock] [--compute-ms MS]   deterministic\n\
                   discrete-event timing (docs/virtual-time.md)\n\
+                  [--layerwise]  per-layer async pipeline: charge backprop\n\
+                  in layer slices, post each layer's exchange at its\n\
+                  grad-ready instant (measured overlap; bit-identical\n\
+                  numerics on the native backend)   [--fwd-ms MS]\n\
+                  forward-pass share of --compute-ms   [--jitter F]\n\
+                  deterministic per-(rank,step) straggler noise on the\n\
+                  virtual fabric\n\
          sweep:   train across --ranks-list 2,4,8 (other train flags apply)\n\
          sim:     --workload resnet50|googlenet|lenet3|cifarnet\n\
                   --p-list 4,8,...  --algos gossip,agd-ring,sgd-rd,ps1\n\
@@ -120,8 +128,13 @@ pub fn config_from(args: &Args) -> Result<RunConfig> {
     if args.flag("virtual-clock") {
         cfg.virtual_clock = true;
     }
+    if args.flag("layerwise") {
+        cfg.layerwise = true;
+    }
+    cfg.straggler_jitter = args.f64_or("jitter", cfg.straggler_jitter);
     cfg.virt_compute_secs =
         args.f64_or("compute-ms", cfg.virt_compute_secs * 1e3) * 1e-3;
+    cfg.virt_fwd_secs = args.f64_or("fwd-ms", cfg.virt_fwd_secs * 1e3) * 1e-3;
     // A virtual run with no compute charge degenerates to pure exposed
     // wait (0% efficiency, meaningless step times) — refuse it loudly.
     if cfg.virtual_clock && cfg.virt_compute_secs <= 0.0 {
@@ -129,6 +142,15 @@ pub fn config_from(args: &Args) -> Result<RunConfig> {
             "--virtual-clock needs a per-step compute cost: pass \
              --compute-ms MS (e.g. 6.25 for LeNet3@P100) or set \
              virt_compute_secs in the config"
+        );
+    }
+    // A forward share exceeding the whole compute budget would silently
+    // clamp every backward slice to zero and overcharge the step.
+    if cfg.virtual_clock && cfg.virt_fwd_secs > cfg.virt_compute_secs {
+        bail!(
+            "--fwd-ms ({} ms) must not exceed --compute-ms ({} ms)",
+            cfg.virt_fwd_secs * 1e3,
+            cfg.virt_compute_secs * 1e3
         );
     }
     if let Some(d) = args.get("artifacts-dir") {
@@ -181,9 +203,10 @@ fn report(res: &coordinator::RunResult) {
         println!("final validation accuracy: {:.2}%", 100.0 * acc);
     }
     println!(
-        "mean step {:.2} ms | efficiency {:.1}% | disagreement {:.3e} | {} msgs | wall {:.1}s",
+        "mean step {:.2} ms | efficiency {:.1}% | overlap {:.0}% | disagreement {:.3e} | {} msgs | wall {:.1}s",
         1e3 * res.mean_step_secs(),
         res.mean_efficiency_pct(),
+        100.0 * res.mean_overlap_frac(),
         res.max_disagreement(),
         res.per_rank.iter().map(|m| m.msgs_sent).sum::<u64>(),
         res.wall_secs,

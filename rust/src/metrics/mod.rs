@@ -25,6 +25,12 @@ pub struct RunMetrics {
     /// Unlike `comm_wait_secs` this also covers waits outside the
     /// explicitly-marked drain sections (e.g. sample-shuffle refills).
     pub recv_wait_secs: f64,
+    /// Wire time of received messages that elapsed *under* this rank's
+    /// compute instead of being exposed as blocking wait, snapshotted
+    /// from `Counters::comm_hidden_ns`.  `recv_wait_secs +
+    /// comm_hidden_secs` is the rank's total received wire time; the
+    /// hidden share is the overlap the layer-wise pipeline wins.
+    pub comm_hidden_secs: f64,
 }
 
 impl RunMetrics {
@@ -57,6 +63,21 @@ impl RunMetrics {
         self.loss.last().map(|&(_, l)| l)
     }
 
+    /// Fraction of this rank's received wire time it never paid for as
+    /// blocking wait (§5.1 overlap): `hidden / (hidden + exposed)`.
+    /// "Hidden" wire time elapsed under compute *or* under a wait on
+    /// another message (concurrent waits cost the rank only once);
+    /// `recv_wait_secs` is exactly the blocking time paid.  1.0 when the
+    /// rank received no timed communication at all — nothing was
+    /// exposed.
+    pub fn overlap_frac(&self) -> f64 {
+        let total = self.comm_hidden_secs + self.recv_wait_secs;
+        if total <= 0.0 {
+            return 1.0;
+        }
+        self.comm_hidden_secs / total
+    }
+
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("rank", num(self.rank as f64)),
@@ -79,6 +100,8 @@ impl RunMetrics {
             ("mean_step_secs", num(self.mean_step_secs())),
             ("mean_comm_wait_secs", num(self.mean_comm_wait())),
             ("recv_wait_secs", num(self.recv_wait_secs)),
+            ("comm_hidden_secs", num(self.comm_hidden_secs)),
+            ("overlap_frac", num(self.overlap_frac())),
             ("efficiency_pct", num(self.efficiency_pct())),
             ("msgs_sent", num(self.msgs_sent as f64)),
             ("bytes_sent", num(self.bytes_sent as f64)),
@@ -91,11 +114,13 @@ pub fn summarize(runs: &[RunMetrics]) -> Json {
     let losses: Vec<f64> = runs.iter().filter_map(|r| r.final_loss()).collect();
     let eff: Vec<f64> = runs.iter().map(|r| r.efficiency_pct()).collect();
     let steps: Vec<f64> = runs.iter().map(|r| r.mean_step_secs()).collect();
+    let overlap: Vec<f64> = runs.iter().map(|r| r.overlap_frac()).collect();
     obj(vec![
         ("ranks", num(runs.len() as f64)),
         ("mean_final_loss", num(crate::util::mean(&losses))),
         ("mean_efficiency_pct", num(crate::util::mean(&eff))),
         ("mean_step_secs", num(crate::util::mean(&steps))),
+        ("mean_overlap_frac", num(crate::util::mean(&overlap))),
         (
             "total_msgs",
             num(runs.iter().map(|r| r.msgs_sent).sum::<u64>() as f64),
@@ -157,6 +182,21 @@ mod tests {
     #[test]
     fn efficiency_empty_is_100() {
         assert_eq!(RunMetrics::new(0).efficiency_pct(), 100.0);
+    }
+
+    #[test]
+    fn overlap_frac_splits_hidden_vs_exposed() {
+        let mut m = RunMetrics::new(0);
+        assert_eq!(m.overlap_frac(), 1.0, "no comm ⇒ vacuously all hidden");
+        m.comm_hidden_secs = 0.03;
+        m.recv_wait_secs = 0.01;
+        assert!((m.overlap_frac() - 0.75).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(j.get("overlap_frac").and_then(|v| v.as_f64()), Some(0.75));
+        assert_eq!(
+            j.get("comm_hidden_secs").and_then(|v| v.as_f64()),
+            Some(0.03)
+        );
     }
 
     #[test]

@@ -201,6 +201,25 @@ impl ModelBackend for PjrtModel {
         out[1].copy_raw_to::<f32>(mom).expect("copy mom");
     }
 
+    fn apply_update_slice(
+        &self,
+        params: &mut [f32],
+        mom: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+    ) {
+        // the compiled update executable takes full-length buffers, so
+        // layer slices go through the native elementwise momentum-SGD
+        // kernel with the artifact's momentum coefficient
+        crate::nativenet::ops::sgd_momentum(
+            params,
+            mom,
+            grads,
+            lr,
+            self.set.meta.momentum,
+        );
+    }
+
     fn eval(&self, params: &[f32], x: &BatchData, y: &[i32]) -> (f32, f32) {
         let args = vec![
             xla::Literal::vec1(params),

@@ -79,6 +79,22 @@ pub trait ModelBackend: Send {
     ) -> f32;
     /// Apply a momentum-SGD update for externally-produced grads.
     fn apply_update(&self, params: &mut [f32], mom: &mut [f32], grads: &[f32], lr: f32);
+    /// Apply the update to one aligned layer slice (the layer-wise
+    /// pipeline updates and sends each layer the moment its backprop
+    /// slice completes).  Momentum SGD is elementwise, so the default
+    /// just delegates to [`apply_update`](Self::apply_update) on the
+    /// sub-slices; backends whose update executable is compiled for
+    /// full-length buffers (PJRT) override this with a native
+    /// elementwise implementation.
+    fn apply_update_slice(
+        &self,
+        params: &mut [f32],
+        mom: &mut [f32],
+        grads: &[f32],
+        lr: f32,
+    ) {
+        self.apply_update(params, mom, grads, lr);
+    }
     /// (loss, correct_count) over one batch.
     fn eval(&self, params: &[f32], x: &BatchData, y: &[i32]) -> (f32, f32);
 }

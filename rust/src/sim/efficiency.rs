@@ -77,19 +77,11 @@ impl Efficiency {
     }
 }
 
-/// Per-layer backprop finish times: bwd time is split across layers
-/// proportionally to their byte size (heavier layers take longer), and
-/// layers finish in the given order (output layer first).
+/// Per-layer backprop finish times (output layer first) — the shared
+/// compute model in [`Workload::grad_ready_times`]; the measured
+/// virtual-clock pipeline charges the same slices.
 fn grad_ready_times(w: &Workload) -> Vec<f64> {
-    let total: usize = w.layer_bytes.iter().sum();
-    let mut t = w.t_fwd;
-    w.layer_bytes
-        .iter()
-        .map(|&b| {
-            t += w.t_bwd * b as f64 / total as f64;
-            t
-        })
-        .collect()
+    w.grad_ready_times()
 }
 
 /// Per-round progress/synchronisation overhead of collective rounds

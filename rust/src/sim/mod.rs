@@ -29,4 +29,5 @@ pub mod straggler;
 pub mod workload;
 
 pub use efficiency::{step_time, Efficiency, Schedule};
-pub use workload::Workload;
+pub use straggler::jitter_factor;
+pub use workload::{split_compute, Workload};

@@ -41,6 +41,31 @@ fn jittered(nominal: f64, noise: f64, rng: &mut Rng) -> f64 {
     nominal * (1.0 + noise * (-u.ln()))
 }
 
+/// Deterministic per-(rank, step) straggler factor for the *measured*
+/// virtual-clock fabric: the same exponential tail as [`jittered`], but
+/// a pure hash of `(seed, rank, step)` instead of a sequential RNG
+/// stream.  Hash-based (not shared-RNG) on purpose: the coordinator's
+/// ranks charge compute concurrently from many threads, so a shared
+/// stream would be drawn in scheduling-dependent order and break the
+/// fabric's bit-reproducibility.  With this, the noise ablation this
+/// module runs in closed form reproduces on the measured fabric at
+/// p = 1024 (set `RunConfig::straggler_jitter`).
+pub fn jitter_factor(seed: u64, rank: usize, step: usize, noise: f64) -> f64 {
+    if noise <= 0.0 {
+        return 1.0;
+    }
+    // splitmix64 over the three coordinates, mixed pairwise so nearby
+    // (rank, step) pairs land in unrelated places
+    let mut z = seed
+        .wrapping_add((rank as u64).wrapping_mul(0x9E3779B97F4A7C15))
+        .wrapping_add((step as u64).wrapping_mul(0xBF58476D1CE4E5B9));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^= z >> 31;
+    let u = ((z >> 11) as f64 / (1u64 << 53) as f64).max(1e-12);
+    1.0 + noise * (-u.ln())
+}
+
 /// Simulate `steps` training steps on `p` ranks; returns the mean
 /// wall-clock time per step (completion of the slowest rank / steps).
 pub fn mean_step_time(
@@ -141,6 +166,30 @@ mod tests {
         let a = mean_step_time(&w, 16, SyncKind::Partner, 0.3, 100, 42);
         let b = mean_step_time(&w, 16, SyncKind::Partner, 0.3, 100, 42);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn jitter_factor_is_pure_and_tail_shaped() {
+        // pure function: same coordinates, same factor — regardless of
+        // evaluation order (the property shared-RNG draws cannot give)
+        assert_eq!(jitter_factor(7, 3, 100, 0.2), jitter_factor(7, 3, 100, 0.2));
+        assert_ne!(jitter_factor(7, 3, 100, 0.2), jitter_factor(7, 4, 100, 0.2));
+        assert_ne!(jitter_factor(7, 3, 100, 0.2), jitter_factor(7, 3, 101, 0.2));
+        assert_eq!(jitter_factor(7, 3, 100, 0.0), 1.0, "no noise, no jitter");
+        // factors are ≥ 1 (one-sided slowdown) with mean ≈ 1 + noise
+        let noise = 0.3;
+        let n = 20_000usize;
+        let mut sum = 0.0;
+        for i in 0..n {
+            let f = jitter_factor(42, i % 64, i / 64, noise);
+            assert!(f >= 1.0);
+            sum += f;
+        }
+        let mean = sum / n as f64;
+        assert!(
+            (mean - (1.0 + noise)).abs() < 0.02,
+            "exponential tail mean off: {mean}"
+        );
     }
 
     #[test]

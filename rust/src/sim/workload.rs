@@ -43,6 +43,33 @@ impl Workload {
         self.t_fwd + self.t_bwd
     }
 
+    /// Per-layer backward compute slices, in backprop-completion order
+    /// (same order as `layer_bytes`: output layer first).  The backward
+    /// time is split across layers proportionally to their parameter
+    /// bytes — heavier layers take longer — so `t_fwd + Σ slices =
+    /// t_compute()`.  This is the compute model behind both the
+    /// closed-form simulator ([`grad_ready_times`](Self::grad_ready_times))
+    /// and the measured virtual-clock pipeline (the coordinator charges
+    /// one slice per layer and posts that layer's send the instant its
+    /// slice completes).
+    pub fn layer_compute_slices(&self) -> Vec<f64> {
+        split_compute(self.t_bwd, &self.layer_bytes)
+    }
+
+    /// Instant (from step start) at which each layer's gradient is ready
+    /// for communication: the forward pass plus the prefix sums of the
+    /// per-layer backward slices.  Output layer first.
+    pub fn grad_ready_times(&self) -> Vec<f64> {
+        let mut t = self.t_fwd;
+        self.layer_compute_slices()
+            .into_iter()
+            .map(|s| {
+                t += s;
+                t
+            })
+            .collect()
+    }
+
     /// ResNet50 on P100, batch 32/device (paper §7.3.1).
     pub fn resnet50_p100() -> Workload {
         // 100 MB over a ResNet-ish distribution: fc + 53 conv blocks,
@@ -110,6 +137,21 @@ impl Workload {
     }
 }
 
+/// Split `total` seconds across layers proportionally to their byte
+/// sizes (the shared per-layer compute model; also used by the
+/// coordinator to split a configured compute budget across a backend's
+/// actual layer table).
+pub fn split_compute(total: f64, layer_bytes: &[usize]) -> Vec<f64> {
+    let sum: usize = layer_bytes.iter().sum();
+    if sum == 0 {
+        return vec![0.0; layer_bytes.len()];
+    }
+    layer_bytes
+        .iter()
+        .map(|&b| total * b as f64 / sum as f64)
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,5 +178,34 @@ mod tests {
     fn layer_order_output_first() {
         let w = Workload::resnet50_p100();
         assert!(w.layer_bytes[0] > *w.layer_bytes.last().unwrap());
+    }
+
+    #[test]
+    fn compute_slices_partition_the_backward_pass() {
+        let w = Workload::resnet50_p100();
+        let slices = w.layer_compute_slices();
+        assert_eq!(slices.len(), w.layer_bytes.len());
+        let total: f64 = slices.iter().sum();
+        assert!((total - w.t_bwd).abs() < 1e-12, "Σ slices {total}");
+        // heavier layers get longer slices
+        assert!(slices[0] > *slices.last().unwrap());
+    }
+
+    #[test]
+    fn grad_ready_times_monotone_and_end_at_t_compute() {
+        for w in [Workload::resnet50_p100(), Workload::lenet3(1.0)] {
+            let ready = w.grad_ready_times();
+            assert!(ready[0] > w.t_fwd);
+            assert!(ready.windows(2).all(|p| p[0] < p[1]));
+            assert!((ready.last().unwrap() - w.t_compute()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn split_compute_handles_degenerate_inputs() {
+        assert_eq!(split_compute(1.0, &[]), Vec::<f64>::new());
+        assert_eq!(split_compute(1.0, &[0, 0]), vec![0.0, 0.0]);
+        let s = split_compute(2.0, &[1, 3]);
+        assert!((s[0] - 0.5).abs() < 1e-12 && (s[1] - 1.5).abs() < 1e-12);
     }
 }

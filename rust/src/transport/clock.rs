@@ -89,12 +89,17 @@ impl Clock {
 
 /// Opaque timestamp for step/exposed-wait accounting under either clock
 /// mode; produced by [`Endpoint::mark`](super::Endpoint::mark) and
-/// consumed by `Endpoint::elapsed` / `Endpoint::comm_wait_since`.
+/// consumed by `Endpoint::elapsed` / `Endpoint::comm_wait_since` /
+/// `Endpoint::comm_hidden_since`.
 #[derive(Clone, Copy, Debug)]
 pub struct TimeMark {
     pub(crate) wall: Instant,
     pub(crate) virt_ns: u64,
     pub(crate) wait_ns: u64,
+    /// Snapshot of the rank's hidden-communication counter (wire time
+    /// that elapsed under compute rather than being exposed as wait) —
+    /// the other half of the overlap ledger.
+    pub(crate) hidden_ns: u64,
 }
 
 #[cfg(test)]

@@ -30,12 +30,15 @@ use std::time::{Duration, Instant};
 
 type Key = (usize, Tag); // (src, tag)
 
-/// Arrival stamp of a queued message — variant always matches the
-/// fabric's clock mode.
+/// Send/arrival stamps of a queued message — variant always matches the
+/// fabric's clock mode.  The send instant rides along so the receiver
+/// can split the wire time into its *hidden* part (elapsed under the
+/// receiver's compute) and its *exposed* part (blocked wait) — the two
+/// halves of the overlap ledger behind `overlap_frac`.
 #[derive(Clone, Copy, Debug)]
 enum Stamp {
-    Wall(Instant),
-    Virt(u64),
+    Wall { sent: Instant, at: Instant },
+    Virt { sent_ns: u64, at_ns: u64 },
 }
 
 struct Mailbox {
@@ -58,6 +61,18 @@ pub struct Counters {
     pub bytes_sent: AtomicU64,
     pub msgs_recv: AtomicU64,
     pub recv_wait_ns: AtomicU64,
+    /// Wire time this rank never paid for as blocking wait — per
+    /// received message, `(arrival − send) − exposed`, clamped at 0.
+    /// Together with `recv_wait_ns` this splits every received message's
+    /// wire time into hidden vs exposed, giving the per-rank
+    /// `overlap_frac` metric (the §5.1 overlap the layer-wise pipeline
+    /// exists to win).  "Hidden" counts wire time overlapped with
+    /// anything that wasn't *this* message's wait — compute, or a
+    /// blocking wait on another message (two waits overlapping each
+    /// other cost the rank only once, so the second message's covered
+    /// wire time is genuinely free); `recv_wait_ns` remains exactly the
+    /// total blocking time the rank paid.
+    pub comm_hidden_ns: AtomicU64,
 }
 
 /// The shared interconnect: `p` mailboxes + a cost model + a clock.
@@ -131,6 +146,7 @@ impl Fabric {
             c.bytes_sent.store(0, Ordering::Relaxed);
             c.msgs_recv.store(0, Ordering::Relaxed);
             c.recv_wait_ns.store(0, Ordering::Relaxed);
+            c.comm_hidden_ns.store(0, Ordering::Relaxed);
         }
     }
 }
@@ -169,7 +185,9 @@ pub struct RecvReq {
 
 impl RecvReq {
     /// Non-blocking poll (MPI_Test): true once the message is delivered
-    /// *and* its arrival instant has passed on this rank's clock.
+    /// *and* its arrival instant has passed on this rank's clock.  A
+    /// message harvested by `test` exposed no wait, so its entire wire
+    /// time is credited as hidden communication.
     pub fn test(&mut self) -> bool {
         if self.data.is_some() {
             return true;
@@ -178,18 +196,26 @@ impl RecvReq {
         let mut mb = slot.mbox.lock().unwrap();
         if let Some(q) = mb.queues.get_mut(&self.key) {
             if let Some((stamp, _)) = q.front() {
-                let visible = match *stamp {
-                    Stamp::Wall(at) => Instant::now() >= at,
-                    Stamp::Virt(at) => self.fabric.clock.now_ns(self.rank) >= at,
+                let wire_ns = match *stamp {
+                    Stamp::Wall { sent, at } => {
+                        if Instant::now() < at {
+                            return false;
+                        }
+                        (at - sent).as_nanos() as u64
+                    }
+                    Stamp::Virt { sent_ns, at_ns } => {
+                        if self.fabric.clock.now_ns(self.rank) < at_ns {
+                            return false;
+                        }
+                        at_ns - sent_ns
+                    }
                 };
-                if visible {
-                    let (_, data) = q.pop_front().unwrap();
-                    self.data = Some(data);
-                    self.fabric.counters[self.rank]
-                        .msgs_recv
-                        .fetch_add(1, Ordering::Relaxed);
-                    return true;
-                }
+                let (_, data) = q.pop_front().unwrap();
+                self.data = Some(data);
+                let c = &self.fabric.counters[self.rank];
+                c.msgs_recv.fetch_add(1, Ordering::Relaxed);
+                c.comm_hidden_ns.fetch_add(wire_ns, Ordering::Relaxed);
+                return true;
             }
         }
         false
@@ -220,11 +246,13 @@ impl RecvReq {
                 .get(&self.key)
                 .and_then(|q| q.front())
                 .map(|(stamp, _)| match *stamp {
-                    Stamp::Wall(at) => at,
-                    Stamp::Virt(_) => unreachable!("virtual stamp on wall fabric"),
+                    Stamp::Wall { sent, at } => (sent, at),
+                    Stamp::Virt { .. } => {
+                        unreachable!("virtual stamp on wall fabric")
+                    }
                 });
             match deliver_at {
-                Some(at) if now >= at => {
+                Some((sent, at)) if now >= at => {
                     let (_, data) = mb
                         .queues
                         .get_mut(&self.key)
@@ -233,13 +261,14 @@ impl RecvReq {
                         .unwrap();
                     let c = &self.fabric.counters[self.rank];
                     c.msgs_recv.fetch_add(1, Ordering::Relaxed);
-                    c.recv_wait_ns.fetch_add(
-                        t0.elapsed().as_nanos() as u64,
-                        Ordering::Relaxed,
-                    );
+                    let exposed = t0.elapsed().as_nanos() as u64;
+                    let wire = (at - sent).as_nanos() as u64;
+                    c.recv_wait_ns.fetch_add(exposed, Ordering::Relaxed);
+                    c.comm_hidden_ns
+                        .fetch_add(wire.saturating_sub(exposed), Ordering::Relaxed);
                     return data;
                 }
-                Some(at) => {
+                Some((_, at)) => {
                     // message queued but not yet "arrived": sleep out the
                     // simulated wire time without holding the lock
                     drop(mb);
@@ -275,16 +304,22 @@ impl RecvReq {
                     .unwrap()
                     .pop_front()
                     .unwrap();
-                let at = match stamp {
-                    Stamp::Virt(at) => at,
-                    Stamp::Wall(_) => unreachable!("wall stamp on virtual fabric"),
+                let (sent_ns, at_ns) = match stamp {
+                    Stamp::Virt { sent_ns, at_ns } => (sent_ns, at_ns),
+                    Stamp::Wall { .. } => {
+                        unreachable!("wall stamp on virtual fabric")
+                    }
                 };
                 let clock = &self.fabric.clock;
-                let exposed = at.saturating_sub(clock.now_ns(self.rank));
-                clock.advance_to_ns(self.rank, at);
+                let exposed = at_ns.saturating_sub(clock.now_ns(self.rank));
+                clock.advance_to_ns(self.rank, at_ns);
                 let c = &self.fabric.counters[self.rank];
                 c.msgs_recv.fetch_add(1, Ordering::Relaxed);
                 c.recv_wait_ns.fetch_add(exposed, Ordering::Relaxed);
+                c.comm_hidden_ns.fetch_add(
+                    (at_ns - sent_ns).saturating_sub(exposed),
+                    Ordering::Relaxed,
+                );
                 return data;
             }
             mb = slot.cv.wait(mb).unwrap();
@@ -321,12 +356,12 @@ impl Endpoint {
     /// Opaque timestamp for step / exposed-wait accounting that works
     /// under either clock mode.
     pub fn mark(&self) -> TimeMark {
+        let c = &self.fabric.counters[self.rank];
         TimeMark {
             wall: Instant::now(),
             virt_ns: self.fabric.clock.now_ns(self.rank),
-            wait_ns: self.fabric.counters[self.rank]
-                .recv_wait_ns
-                .load(Ordering::Relaxed),
+            wait_ns: c.recv_wait_ns.load(Ordering::Relaxed),
+            hidden_ns: c.comm_hidden_ns.load(Ordering::Relaxed),
         }
     }
 
@@ -357,18 +392,40 @@ impl Endpoint {
         }
     }
 
+    /// Hidden communication accumulated since `m`: wire time of received
+    /// messages that elapsed under this rank's compute instead of being
+    /// exposed as blocking wait.  `comm_hidden / (comm_hidden +
+    /// comm_wait)` over a run is the rank's overlap fraction.
+    pub fn comm_hidden_since(&self, m: &TimeMark) -> f64 {
+        let now = self.fabric.counters[self.rank]
+            .comm_hidden_ns
+            .load(Ordering::Relaxed);
+        Clock::ns_to_secs(now - m.hidden_ns)
+    }
+
     /// Non-blocking send (MPI_Isend).  The payload is moved into the
-    /// destination mailbox with its simulated arrival instant.
+    /// destination mailbox with its send + simulated arrival instants —
+    /// under the layer-wise pipeline the sender's clock sits at the
+    /// layer's grad-ready instant, so the arrival stamp is
+    /// `grad_ready + α + M·β` exactly as in the closed-form simulator.
     pub fn isend(&self, dst: usize, tag: Tag, data: Vec<f32>) -> SendReq {
         let bytes = data.len() * 4;
         let stamp = match self.fabric.clock.mode() {
             ClockMode::Wall => {
                 let delay = self.fabric.cost.message_time(bytes);
-                Stamp::Wall(Instant::now() + Duration::from_secs_f64(delay))
+                let sent = Instant::now();
+                Stamp::Wall {
+                    sent,
+                    at: sent + Duration::from_secs_f64(delay),
+                }
             }
             ClockMode::Virtual => {
                 let cost = Clock::secs_to_ns(self.fabric.cost.nominal(bytes));
-                Stamp::Virt(self.fabric.clock.now_ns(self.rank) + cost)
+                let sent_ns = self.fabric.clock.now_ns(self.rank);
+                Stamp::Virt {
+                    sent_ns,
+                    at_ns: sent_ns + cost,
+                }
             }
         };
         let c = &self.fabric.counters[self.rank];
@@ -589,6 +646,9 @@ mod tests {
         );
         assert!((b.comm_wait_since(&m) - 10e-3).abs() < 1e-12);
         assert!((b.elapsed(&m) - 10e-3).abs() < 1e-12);
+        // fully exposed wait: nothing was hidden under compute
+        assert_eq!(f.counters(1).comm_hidden_ns.load(Ordering::Relaxed), 0);
+        assert_eq!(b.comm_hidden_since(&m), 0.0);
     }
 
     #[test]
@@ -596,10 +656,43 @@ mod tests {
         let f = Fabric::new_virtual(2, CostModel::new(10e-3, 0.0, 0.0, 0));
         f.endpoint(0).isend(1, Tag::MODEL, vec![1.0]);
         let b = f.endpoint(1);
+        let m = b.mark();
         b.advance(20e-3); // "compute" past the arrival instant
         let _ = b.recv(0, Tag::MODEL);
         assert_eq!(f.counters(1).recv_wait_ns.load(Ordering::Relaxed), 0);
         assert_eq!(f.clock().now_ns(1), 20_000_000, "clock not rewound");
+        // the whole 10 ms wire time was hidden under the compute charge
+        assert_eq!(
+            f.counters(1).comm_hidden_ns.load(Ordering::Relaxed),
+            10_000_000
+        );
+        assert!((b.comm_hidden_since(&m) - 10e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn virtual_partial_overlap_splits_wire_time() {
+        // 10 ms wire, 4 ms of compute: 4 ms hidden + 6 ms exposed
+        let f = Fabric::new_virtual(2, CostModel::new(10e-3, 0.0, 0.0, 0));
+        f.endpoint(0).isend(1, Tag::MODEL, vec![1.0]);
+        let b = f.endpoint(1);
+        b.advance(4e-3);
+        let _ = b.recv(0, Tag::MODEL);
+        let c = f.counters(1);
+        assert_eq!(c.recv_wait_ns.load(Ordering::Relaxed), 6_000_000);
+        assert_eq!(c.comm_hidden_ns.load(Ordering::Relaxed), 4_000_000);
+    }
+
+    #[test]
+    fn test_harvest_credits_full_wire_as_hidden() {
+        let f = Fabric::new_virtual(2, CostModel::new(5e-3, 0.0, 0.0, 0));
+        f.endpoint(0).isend(1, Tag::MODEL, vec![1.0]);
+        let b = f.endpoint(1);
+        let mut r = b.irecv(0, Tag::MODEL);
+        b.advance(8e-3);
+        assert!(r.test());
+        let c = f.counters(1);
+        assert_eq!(c.recv_wait_ns.load(Ordering::Relaxed), 0);
+        assert_eq!(c.comm_hidden_ns.load(Ordering::Relaxed), 5_000_000);
     }
 
     #[test]

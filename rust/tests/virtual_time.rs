@@ -43,6 +43,7 @@ fn assert_identical(a: &RunResult, b: &RunResult) {
         assert_eq!(ma.step_secs, mb.step_secs, "rank {}", ma.rank);
         assert_eq!(ma.comm_wait_secs, mb.comm_wait_secs, "rank {}", ma.rank);
         assert_eq!(ma.recv_wait_secs, mb.recv_wait_secs, "rank {}", ma.rank);
+        assert_eq!(ma.comm_hidden_secs, mb.comm_hidden_secs, "rank {}", ma.rank);
         assert_eq!(ma.loss, mb.loss, "rank {}", ma.rank);
         assert_eq!(ma.msgs_sent, mb.msgs_sent, "rank {}", ma.rank);
         assert_eq!(ma.bytes_sent, mb.bytes_sent, "rank {}", ma.rank);
@@ -145,6 +146,110 @@ fn gossip_skips_step_zero_exchange() {
             layers * 4
         );
     }
+}
+
+// ---- layer-wise asynchronous pipeline ---------------------------------
+
+/// The pipelined schedule re-times the step (per-layer compute slices,
+/// per-layer sends at grad-ready instants) but must not re-number it:
+/// the same elementwise mix/update ops run in the same per-element
+/// order, so the final model is bit-identical to the monolithic
+/// exchange.  Straggler jitter is enabled to prove the numerics are
+/// independent of the timing model entirely.
+#[test]
+fn layerwise_pipeline_is_bit_identical_to_monolithic() {
+    for algo in [Algo::Gossip, Algo::GossipRandom, Algo::Agd, Algo::ParamServer]
+    {
+        let mut mono = vcfg(algo, 8, 6);
+        mono.straggler_jitter = 0.2;
+        let mut pipe = mono.clone();
+        pipe.layerwise = true;
+        let a = run_with_backend(&mono, tiny_backend()).unwrap();
+        let b = run_with_backend(&pipe, tiny_backend()).unwrap();
+        assert_eq!(
+            a.final_params, b.final_params,
+            "{algo:?}: layer-wise pipeline changed the numerics"
+        );
+        for (ma, mb) in a.per_rank.iter().zip(&b.per_rank) {
+            assert_eq!(ma.loss, mb.loss, "{algo:?} rank {}", ma.rank);
+        }
+    }
+}
+
+/// The overlap metric is part of the deterministic surface: two p = 256
+/// pipelined runs must agree bit-for-bit on overlap_frac (and the
+/// hidden/exposed split behind it).
+#[test]
+fn layerwise_overlap_frac_deterministic_at_p256() {
+    let mut c = vcfg(Algo::Gossip, 256, 5);
+    c.layerwise = true;
+    let a = run_with_backend(&c, tiny_backend()).unwrap();
+    let b = run_with_backend(&c, tiny_backend()).unwrap();
+    assert_identical(&a, &b);
+    for (ma, mb) in a.per_rank.iter().zip(&b.per_rank) {
+        assert_eq!(ma.comm_hidden_secs, mb.comm_hidden_secs, "rank {}", ma.rank);
+        assert_eq!(
+            ma.overlap_frac().to_bits(),
+            mb.overlap_frac().to_bits(),
+            "rank {}",
+            ma.rank
+        );
+        let f = ma.overlap_frac();
+        assert!((0.0..=1.0).contains(&f), "overlap_frac {f} out of range");
+    }
+    // the 6.25 ms compute window dwarfs the ~700 µs of per-step
+    // messages: the pipelined exchange must be almost entirely hidden
+    assert!(
+        a.mean_overlap_frac() > 0.9,
+        "pipelined overlap {:.3} — exchange not hidden",
+        a.mean_overlap_frac()
+    );
+}
+
+/// Deterministic per-(rank, step) jitter on the measured fabric
+/// reproduces the sim/straggler.rs ablation: the all-reduce barrier
+/// amplifies straggler noise; gossip, waiting on one partner, does not.
+#[test]
+fn measured_jitter_reproduces_straggler_ablation() {
+    let mk = |algo: Algo| {
+        let mut c = vcfg(algo, 16, 12);
+        c.straggler_jitter = 0.3;
+        c.layerwise = true;
+        c
+    };
+    let gossip = run_with_backend(&mk(Algo::Gossip), tiny_backend()).unwrap();
+    let gossip2 = run_with_backend(&mk(Algo::Gossip), tiny_backend()).unwrap();
+    assert_identical(&gossip, &gossip2);
+    let agd = run_with_backend(&mk(Algo::Agd), tiny_backend()).unwrap();
+    assert!(
+        agd.mean_step_secs() > gossip.mean_step_secs(),
+        "barrier schedule must amplify jitter: agd {:.4}s vs gossip {:.4}s",
+        agd.mean_step_secs(),
+        gossip.mean_step_secs()
+    );
+    // jitter slows the mean step beyond the nominal compute window
+    let w = Workload::lenet3(4.0);
+    assert!(gossip.mean_step_secs() > w.t_compute());
+}
+
+/// Fig 2(a): with server-side aggregation + serialized broadcast
+/// charged on the PS rank, the parameter-server bottleneck appears as
+/// worker efficiency collapsing with scale.
+#[test]
+fn virtual_ps_bottleneck_grows_with_scale() {
+    let eff = |ranks: usize| {
+        let mut c = vcfg(Algo::ParamServer, ranks, 6);
+        c.layerwise = true;
+        run_with_backend(&c, tiny_backend())
+            .unwrap()
+            .mean_efficiency_pct()
+    };
+    let e4 = eff(4);
+    let e16 = eff(16);
+    assert!(
+        e16 < e4 - 3.0,
+        "PS bottleneck must grow with p: eff(4)={e4:.1}% eff(16)={e16:.1}%"
+    );
 }
 
 #[test]
