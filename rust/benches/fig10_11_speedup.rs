@@ -22,7 +22,8 @@ use gossipgrad::collectives::Algorithm;
 use gossipgrad::config::{Algo, RunConfig};
 use gossipgrad::coordinator::trainer::run_with_backend;
 use gossipgrad::nativenet::NativeMlp;
-use gossipgrad::sim::{efficiency::avg_efficiency, Schedule, Workload};
+use gossipgrad::sim::efficiency::{avg_efficiency, overlapped_agd_step_time};
+use gossipgrad::sim::{Schedule, Workload};
 use gossipgrad::transport::CostModel;
 use gossipgrad::util::bench::Table;
 use std::sync::Arc;
@@ -166,11 +167,95 @@ fn virtual_runs() {
     );
 }
 
+/// Comm-thread AGD vs the blocking chain on the measured fabric, with
+/// the closed-form overlapped-AGD curve as the analytic twin (same
+/// stand-in layer table, same α–β, sample shuffle off so only
+/// collective traffic is timed).  AGD stops being unfairly pessimistic:
+/// its rounds hide under remaining backprop exactly as a dedicated MPI
+/// progress thread would hide them.
+fn comm_thread_runs() {
+    let w = Workload::lenet3(4.0);
+    let dims = vec![784usize, 32, 10];
+    let mk = |p: usize, comm_thread: bool| {
+        let mut cfg = RunConfig {
+            model: "mlp".into(),
+            algo: Algo::Agd,
+            ranks: p,
+            steps: 6,
+            use_artifacts: false,
+            rows_per_rank: 32,
+            sample_shuffle: false,
+            layerwise: true,
+            comm_thread,
+            ..Default::default()
+        };
+        cfg.virtualize(&w, 200e-6, 1.0 / 0.5e9);
+        cfg
+    };
+    let run = |p: usize, comm_thread: bool| {
+        let backend = Arc::new(NativeMlp::new(dims.clone(), 16, 0));
+        run_with_backend(&mk(p, comm_thread), backend).expect("virtual run")
+    };
+    let cfg0 = mk(2, true);
+    let standin = Workload::standin_mlp(
+        cfg0.virt_fwd_secs,
+        cfg0.virt_compute_secs - cfg0.virt_fwd_secs,
+        &dims,
+    );
+    let mut t = Table::new(&[
+        "ranks",
+        "blocking step ms",
+        "comm-thread step ms",
+        "closed form ms",
+        "blocking overlap %",
+        "comm-thread overlap %",
+    ]);
+    for p in [64usize, 256, 1024] {
+        let blocking = run(p, false);
+        let ct = run(p, true);
+        let analytic = overlapped_agd_step_time(
+            Algorithm::RecursiveDoubling,
+            &standin,
+            p,
+            &cfg0.cost_model(),
+        );
+        assert_eq!(
+            blocking.final_params, ct.final_params,
+            "p={p}: comm thread changed AGD numerics"
+        );
+        assert!(
+            ct.mean_overlap_frac() > blocking.mean_overlap_frac(),
+            "p={p}: comm-thread overlap {:.4} !> blocking {:.4}",
+            ct.mean_overlap_frac(),
+            blocking.mean_overlap_frac()
+        );
+        let got = ct.mean_step_secs();
+        assert!(
+            (got - analytic).abs() / analytic < 0.05,
+            "p={p}: measured comm-thread AGD {got}s vs closed form {analytic}s"
+        );
+        t.row(&[
+            p.to_string(),
+            format!("{:.2}", 1e3 * blocking.mean_step_secs()),
+            format!("{:.2}", 1e3 * got),
+            format!("{:.2}", 1e3 * analytic),
+            format!("{:.1}", 100.0 * blocking.mean_overlap_frac()),
+            format!("{:.1}", 100.0 * ct.mean_overlap_frac()),
+        ]);
+    }
+    t.print(
+        "comm-thread AGD (non-blocking collective engine) vs blocking \
+         chain vs closed-form overlapped-AGD, measured virtual fabric",
+    );
+    println!("  comm-thread AGD matches the closed form within 5% up to p = 1024");
+}
+
 fn main() {
     let (p100, knl) = sim_sweep("Fig 10 — MNIST/LeNet3", &Workload::lenet3);
     sim_sweep("Fig 11 — CIFAR10/CIFARNet", &Workload::cifarnet);
     real_runs();
     virtual_runs();
+    comm_thread_runs();
     println!(
         "\nshape check @32: P100 speedup {p100:.2} > KNL speedup {knl:.2} > 1 (paper: ~1.9x MNIST/P100)"
     );

@@ -13,7 +13,8 @@ use gossipgrad::collectives::Algorithm;
 use gossipgrad::config::{Algo, RunConfig};
 use gossipgrad::coordinator::trainer::run_with_backend;
 use gossipgrad::nativenet::NativeMlp;
-use gossipgrad::sim::{efficiency::avg_efficiency, Schedule, Workload};
+use gossipgrad::sim::efficiency::{avg_efficiency, overlapped_agd_step_time};
+use gossipgrad::sim::{Schedule, Workload};
 use gossipgrad::transport::CostModel;
 use gossipgrad::util::bench::Table;
 use std::sync::Arc;
@@ -80,15 +81,18 @@ fn main() {
 /// layer's backprop slice charged individually, each layer's exchange
 /// posted at its grad-ready instant), β scaled so the small native
 /// stand-in model's messages cost what ResNet50's 100 MB would on
-/// IB-EDR.  Deterministic discrete-event timing makes the p = 1024 row
-/// a seconds-long run — and lets us assert it is bit-reproducible.
+/// IB-EDR.  AGD is measured under both collective schedules: blocking
+/// (dependency-chained rounds) and `comm_thread` (non-blocking engine,
+/// rounds advancing at arrival instants under later backprop) — the
+/// latter asserted against the closed-form overlapped-AGD curve.
+/// Deterministic discrete-event timing makes the p = 1024 rows
+/// seconds-long runs — and lets us assert they are bit-reproducible.
 fn virtual_measured(w: &Workload) {
     // stand-in net: fc0 = 784x32+32 params dominates its message sizes
     let dims = vec![784usize, 32, 10];
-    let standin_bytes: usize =
-        (0..dims.len() - 1).map(|i| (dims[i] * dims[i + 1] + dims[i + 1]) * 4).sum();
+    let standin_bytes = Workload::standin_mlp(0.0, 0.0, &dims).model_bytes();
     let beta = (w.model_bytes() as f64 / standin_bytes as f64) / 12.0e9;
-    let run = |algo: Algo, p: usize| {
+    let mk_cfg = |algo: Algo, p: usize, comm_thread: bool| {
         let mut cfg = RunConfig {
             model: "mlp".into(),
             algo,
@@ -98,26 +102,46 @@ fn virtual_measured(w: &Workload) {
             rows_per_rank: 32,
             sample_shuffle: false, // isolate gradient traffic
             layerwise: true,       // per-layer pipelined schedule
+            comm_thread,
             ..Default::default()
         };
         cfg.virtualize(w, 1.0e-6, beta);
+        cfg
+    };
+    let run = |algo: Algo, p: usize, comm_thread: bool| {
         let backend = Arc::new(NativeMlp::new(dims.clone(), 16, 0));
-        run_with_backend(&cfg, backend).expect("virtual run")
+        run_with_backend(&mk_cfg(algo, p, comm_thread), backend)
+            .expect("virtual run")
     };
     let mut t = Table::new(&[
         "p",
         "gossip eff % (measured)",
         "gossip overlap %",
-        "AGD rec-dbl eff % (measured)",
-        "AGD overlap %",
+        "AGD blocking eff %",
+        "AGD blocking overlap %",
+        "AGD comm-thread eff %",
+        "AGD comm-thread overlap %",
+        "overlapped-AGD closed form %",
     ]);
-    let mut last = (0.0f64, 0.0f64);
+    // analytic twin of the measured comm-thread AGD: the stand-in's own
+    // layer table (backprop order) under the same α–β and compute split
+    let ct_cfg = mk_cfg(Algo::Agd, 2, true);
+    let standin = Workload::standin_mlp(
+        ct_cfg.virt_fwd_secs,
+        ct_cfg.virt_compute_secs - ct_cfg.virt_fwd_secs,
+        &dims,
+    );
+    let mut last = (0.0f64, 0.0f64, 0.0f64);
     for p in [16usize, 128, 1024] {
-        let g = run(Algo::Gossip, p);
-        let a = run(Algo::Agd, p);
+        let g = run(Algo::Gossip, p, false);
+        let a = run(Algo::Agd, p, false);
+        let ct = run(Algo::Agd, p, true);
+        let analytic_step =
+            overlapped_agd_step_time(Algorithm::RecursiveDoubling, &standin, p, &ct_cfg.cost_model());
+        let analytic_eff = 100.0 * standin.t_compute() / analytic_step;
         if p == 1024 {
-            // acceptance: the p = 1024 layer-wise row is bit-reproducible
-            let g2 = run(Algo::Gossip, p);
+            // acceptance: the p = 1024 rows are bit-reproducible
+            let g2 = run(Algo::Gossip, p, false);
             assert_eq!(g.final_params, g2.final_params, "p=1024 model bits");
             for (ma, mb) in g.per_rank.iter().zip(&g2.per_rank) {
                 assert_eq!(ma.step_secs, mb.step_secs, "rank {}", ma.rank);
@@ -128,21 +152,60 @@ fn virtual_measured(w: &Workload) {
                     mb.overlap_frac().to_bits()
                 );
             }
-            println!("p=1024 layer-wise row verified bit-reproducible across two runs");
+            let ct2 = run(Algo::Agd, p, true);
+            assert_eq!(
+                ct.final_params, ct2.final_params,
+                "p=1024 comm-thread model bits"
+            );
+            for (ma, mb) in ct.per_rank.iter().zip(&ct2.per_rank) {
+                assert_eq!(ma.step_secs, mb.step_secs, "rank {}", ma.rank);
+                assert_eq!(ma.recv_wait_secs, mb.recv_wait_secs);
+                assert_eq!(ma.comm_hidden_secs, mb.comm_hidden_secs);
+            }
+            // comm-thread numerics must equal the blocking schedule's
+            assert_eq!(
+                a.final_params, ct.final_params,
+                "comm thread changed AGD numerics at p=1024"
+            );
+            // acceptance: overlap strictly above the blocking schedule
+            assert!(
+                ct.mean_overlap_frac() > a.mean_overlap_frac(),
+                "p=1024 comm-thread overlap {:.4} !> blocking {:.4}",
+                ct.mean_overlap_frac(),
+                a.mean_overlap_frac()
+            );
+            // acceptance: measured comm-thread AGD matches the
+            // closed-form overlapped-AGD curve within 5%
+            let got = ct.mean_step_secs();
+            assert!(
+                (got - analytic_step).abs() / analytic_step < 0.05,
+                "p=1024 measured comm-thread AGD {got}s vs closed form {analytic_step}s"
+            );
+            println!(
+                "p=1024 rows verified bit-reproducible; comm-thread AGD \
+                 within 5% of the closed-form overlapped-AGD curve"
+            );
         }
-        last = (g.mean_efficiency_pct(), a.mean_efficiency_pct());
+        last = (
+            g.mean_efficiency_pct(),
+            a.mean_efficiency_pct(),
+            ct.mean_efficiency_pct(),
+        );
         t.row(&[
             p.to_string(),
             format!("{:.1}", g.mean_efficiency_pct()),
             format!("{:.1}", 100.0 * g.mean_overlap_frac()),
             format!("{:.1}", a.mean_efficiency_pct()),
             format!("{:.1}", 100.0 * a.mean_overlap_frac()),
+            format!("{:.1}", ct.mean_efficiency_pct()),
+            format!("{:.1}", 100.0 * ct.mean_overlap_frac()),
+            format!("{analytic_eff:.1}"),
         ]);
     }
     t.print(
         "Table 7 shape, measured on the VIRTUAL-CLOCK fabric with the \
          layer-wise pipeline (ResNet50 compute window, byte-scaled wire \
-         costs, per-layer grad_ready_times)",
+         costs, per-layer grad_ready_times; AGD blocking vs comm-thread)",
     );
     assert!(
         last.0 > 97.0,
@@ -153,6 +216,12 @@ fn virtual_measured(w: &Workload) {
         last.0 > last.1,
         "gossip ({:.1}%) must beat blocking AGD ({:.1}%) at 1024",
         last.0,
+        last.1
+    );
+    assert!(
+        last.2 >= last.1,
+        "comm-thread AGD ({:.1}%) must not lose to blocking AGD ({:.1}%)",
+        last.2,
         last.1
     );
 }

@@ -2,66 +2,124 @@
 //! (⌈log₂ p⌉ rounds), then broadcast back down (⌈log₂ p⌉ rounds).
 //! This is the "binomial/k-nomial tree" the paper's §3.1 complexity
 //! argument references.
+//!
+//! Expressed as a per-round state machine ([`BinomialTreeMachine`]) for
+//! the non-blocking engine; reduction order (children added in
+//! ascending distance, root scales, broadcast mirrors the tree) is
+//! identical to the historical blocking implementation.
 
-use super::{add_into, scale};
+use super::engine::{RoundMachine, SendCtx, Step};
+use super::{add_into, scale, Algorithm};
 use crate::transport::{Endpoint, Tag};
 
+/// Blocking convenience wrapper (post + wait through the engine).
 pub fn binomial_tree_allreduce(ep: &Endpoint, buf: &mut [f32], round: usize) {
-    let p = ep.size();
-    let me = ep.rank();
-    if p == 1 {
-        return;
-    }
-    let tag = Tag::REDUCE.round(round);
-    let btag = Tag::BCAST.round(round);
+    Algorithm::BinomialTree.run(ep, buf, round);
+}
 
-    // reduce phase: at distance d, ranks with (me & d) != 0 send to me-d
-    let mut d = 1usize;
-    while d < p {
-        if me & d != 0 {
-            ep.send(me - d, tag, buf.to_vec());
-            break; // sender is done reducing
+enum TreePhase {
+    /// Awaiting the child at distance `d` in the reduce tree.
+    Reduce,
+    /// Awaiting the parent's broadcast of the reduced vector.
+    BcastWait,
+}
+
+pub(crate) struct BinomialTreeMachine {
+    p: usize,
+    me: usize,
+    tag: Tag,
+    btag: Tag,
+    d: usize,
+    recv_d: usize,
+    phase: TreePhase,
+}
+
+impl BinomialTreeMachine {
+    pub(crate) fn new(p: usize, me: usize, round: usize) -> Self {
+        BinomialTreeMachine {
+            p,
+            me,
+            tag: Tag::REDUCE.round(round),
+            btag: Tag::BCAST.round(round),
+            d: 1,
+            recv_d: 0,
+            phase: TreePhase::Reduce,
         }
-        if me + d < p {
-            let theirs = ep.recv(me + d, tag);
-            add_into(buf, &theirs);
-        }
-        d <<= 1;
     }
 
-    if me == 0 {
-        scale(buf, 1.0 / p as f32);
+    /// Walk the reduce tree from the current distance until we either
+    /// need a child's vector, have sent ours to the parent, or (rank 0)
+    /// exhaust the tree.
+    fn reduce_step(&mut self, buf: &mut [f32], ctx: &SendCtx) -> Step {
+        while self.d < self.p {
+            if self.me & self.d != 0 {
+                ctx.send(self.me - self.d, self.tag, buf.to_vec());
+                return self.enter_bcast(buf, ctx);
+            }
+            if self.me + self.d < self.p {
+                return Step::Pending(self.me + self.d, self.tag);
+            }
+            self.d <<= 1;
+        }
+        self.enter_bcast(buf, ctx)
     }
 
-    // broadcast phase: mirror of the reduce tree
-    let mut d = {
-        // first power of two >= p, halved down to my subtree
-        let mut d = 1usize;
-        while d < p {
-            d <<= 1;
+    fn enter_bcast(&mut self, buf: &mut [f32], ctx: &SendCtx) -> Step {
+        if self.me == 0 {
+            scale(buf, 1.0 / self.p as f32);
         }
-        d
-    };
-    // find the distance at which I received my value (me's lowest set bit),
-    // or the full tree for rank 0
-    let recv_d = if me == 0 { d } else { me & me.wrapping_neg() };
-    if me != 0 {
-        let parent = me - recv_d;
-        let v = ep.recv(parent, btag);
-        buf.copy_from_slice(&v);
+        // first power of two >= p: rank 0's whole subtree span
+        let mut full = 1usize;
+        while full < self.p {
+            full <<= 1;
+        }
+        // distance at which this rank received its value (lowest set
+        // bit), or the full tree for rank 0
+        self.recv_d = if self.me == 0 {
+            full
+        } else {
+            self.me & self.me.wrapping_neg()
+        };
+        if self.me != 0 {
+            self.phase = TreePhase::BcastWait;
+            return Step::Pending(self.me - self.recv_d, self.btag);
+        }
+        self.forward(buf, ctx);
+        Step::Finished
     }
-    d = recv_d;
-    // forward down: children are me + d' for d' < recv_d
-    let mut child_d = d >> 1;
-    while child_d >= 1 {
-        let child = me + child_d;
-        if child < p {
-            ep.isend(child, btag, buf.to_vec());
+
+    /// Forward down the broadcast tree: children are me + d' for
+    /// d' < recv_d, largest first.
+    fn forward(&mut self, buf: &mut [f32], ctx: &SendCtx) {
+        let mut child_d = self.recv_d >> 1;
+        while child_d >= 1 {
+            let child = self.me + child_d;
+            if child < self.p {
+                ctx.send(child, self.btag, buf.to_vec());
+            }
+            child_d >>= 1;
         }
-        if child_d == 0 {
-            break;
+    }
+}
+
+impl RoundMachine for BinomialTreeMachine {
+    fn start(&mut self, buf: &mut [f32], ctx: &SendCtx) -> Step {
+        self.reduce_step(buf, ctx)
+    }
+
+    fn deliver(&mut self, buf: &mut [f32], data: &[f32], ctx: &SendCtx) -> Step {
+        match self.phase {
+            TreePhase::Reduce => {
+                add_into(buf, data);
+                self.d <<= 1;
+                self.reduce_step(buf, ctx)
+            }
+            TreePhase::BcastWait => {
+                buf.copy_from_slice(data);
+                self.forward(buf, ctx);
+                Step::Finished
+            }
         }
-        child_d >>= 1;
     }
 }
 

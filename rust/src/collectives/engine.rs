@@ -1,0 +1,500 @@
+//! Non-blocking collective engine: per-round state machines driven by a
+//! modeled communication-progress thread.
+//!
+//! Every algorithm in this module's siblings (recursive doubling,
+//! binomial tree, ring) is expressed as a [`RoundMachine`]: a state
+//! machine that, given the message that just arrived, performs its
+//! reduction arithmetic, posts the next round's sends, and names the
+//! next receive it needs — MPI's `icollective` shape
+//! ([`IAllreduce::post`] / [`progress`](IAllreduce::progress) /
+//! [`test`](IAllreduce::test) / [`wait`](IAllreduce::wait)).
+//!
+//! ## The modeled comm-progress thread (virtual clock)
+//!
+//! A blocking all-reduce dependency-chains its Θ(log p) rounds on the
+//! caller: each round's send is stamped at the caller's clock, which
+//! drags forward with every arrival, so the rounds stay exposed even
+//! when later compute could hide them.  Real AGD stacks
+//! (S-Caffe/PowerAI, and the dedicated comm threads in Jin et al.)
+//! instead progress collectives on a separate thread while backprop
+//! continues.
+//!
+//! The engine models that thread without spawning one: a posted
+//! collective owns a **comm clock** that starts at the post instant and
+//! advances to each internal message's *arrival* instant; the next
+//! round's send is stamped at that comm clock — i.e. posted the moment
+//! the previous round's message arrives, regardless of where the
+//! caller's main clock (busy charging later compute slices) currently
+//! sits.  Because every timing quantity derives from arrival stamps,
+//! *when* the caller pumps [`progress`](IAllreduce::progress) in wall
+//! time is irrelevant: the virtual timeline is identical, so
+//! determinism is preserved (see docs/virtual-time.md).
+//!
+//! ## Ledger accounting
+//!
+//! Collective-internal messages bypass the transport's per-message
+//! hidden/exposed split (they are harvested raw) and settle the ledger
+//! when the main thread harvests the collective:
+//!
+//! * **Overlapped** ([`IAllreduce::post`], the `--comm-thread`
+//!   schedule): exposed wait is `max(0, completion − caller_now)` —
+//!   only the tail the caller actually blocks on; every other
+//!   nanosecond of internal wire time was hidden under the caller's
+//!   compute and is credited to `Counters::comm_hidden_ns`, which is
+//!   what makes `overlap_frac` meaningful for AGD.
+//! * **Blocking** ([`IAllreduce::post_blocking`], used by
+//!   [`Algorithm::run`](super::Algorithm::run)): per-message accounting
+//!   against the chain's own running clock, reproducing the
+//!   dependency-chained schedule's metrics exactly (bit-for-bit) —
+//!   the pre-engine behaviour.
+//!
+//! On a wall-clock fabric the engine falls back to the transport's
+//! measured accounting (`test`/`wait` per message); the comm clock is
+//! inert there.
+
+use super::binomial_tree::BinomialTreeMachine;
+use super::recursive_doubling::RecursiveDoublingMachine;
+use super::ring_allreduce::RingMachine;
+use super::Algorithm;
+use crate::transport::{Endpoint, RecvReq, Tag};
+use std::sync::atomic::Ordering;
+
+/// What a state machine needs next: the `(src, tag)` of the receive
+/// that unblocks its next round, or completion.
+pub(crate) enum Step {
+    Pending(usize, Tag),
+    Finished,
+}
+
+/// Send side of a machine round: sends are stamped at the collective's
+/// comm clock (virtual) or the real now (wall).
+pub(crate) struct SendCtx<'a> {
+    ep: &'a Endpoint,
+    comm_now_ns: u64,
+    virt: bool,
+}
+
+impl SendCtx<'_> {
+    pub(crate) fn send(&self, dst: usize, tag: Tag, data: Vec<f32>) {
+        if self.virt {
+            self.ep.isend_at(dst, tag, data, self.comm_now_ns);
+        } else {
+            self.ep.isend(dst, tag, data);
+        }
+    }
+}
+
+/// One collective algorithm expressed round-by-round.  `start` runs the
+/// rounds possible before any message arrives; `deliver` consumes the
+/// message named by the previous [`Step::Pending`].  Both perform the
+/// *same arithmetic in the same order* as the historical blocking
+/// implementations, so results are bit-identical.
+pub(crate) trait RoundMachine {
+    fn start(&mut self, buf: &mut [f32], ctx: &SendCtx) -> Step;
+    fn deliver(&mut self, buf: &mut [f32], data: &[f32], ctx: &SendCtx) -> Step;
+}
+
+enum Machine {
+    /// p == 1: nothing to exchange.
+    Solo,
+    Rd(RecursiveDoublingMachine),
+    Tree(BinomialTreeMachine),
+    Ring(RingMachine),
+}
+
+impl Machine {
+    fn build(alg: Algorithm, p: usize, me: usize, round: usize) -> Machine {
+        if p == 1 {
+            return Machine::Solo;
+        }
+        match alg {
+            Algorithm::RecursiveDoubling => {
+                Machine::Rd(RecursiveDoublingMachine::new(p, me, round))
+            }
+            Algorithm::BinomialTree => {
+                Machine::Tree(BinomialTreeMachine::new(p, me, round))
+            }
+            Algorithm::Ring => Machine::Ring(RingMachine::new(p, me, round)),
+        }
+    }
+
+    fn start(&mut self, buf: &mut [f32], ctx: &SendCtx) -> Step {
+        match self {
+            Machine::Solo => Step::Finished,
+            Machine::Rd(m) => m.start(buf, ctx),
+            Machine::Tree(m) => m.start(buf, ctx),
+            Machine::Ring(m) => m.start(buf, ctx),
+        }
+    }
+
+    fn deliver(&mut self, buf: &mut [f32], data: &[f32], ctx: &SendCtx) -> Step {
+        match self {
+            Machine::Solo => unreachable!("solo machine receives nothing"),
+            Machine::Rd(m) => m.deliver(buf, data, ctx),
+            Machine::Tree(m) => m.deliver(buf, data, ctx),
+            Machine::Ring(m) => m.deliver(buf, data, ctx),
+        }
+    }
+}
+
+/// An in-flight non-blocking all-reduce (MPI_Iallreduce analogue).
+pub struct IAllreduce {
+    buf: Vec<f32>,
+    machine: Machine,
+    pending: Option<RecvReq>,
+    done: bool,
+    /// The modeled comm thread's clock: post instant, then the running
+    /// max of internal arrival instants (virtual mode only).
+    comm_now_ns: u64,
+    /// Total wire time of internal messages (virtual mode only).
+    wire_ns: u64,
+    /// Overlapped (comm-thread) vs blocking (dependency-chained) ledger.
+    overlapped: bool,
+    virt: bool,
+}
+
+impl IAllreduce {
+    /// Post a non-blocking all-reduce with comm-thread (overlapped)
+    /// semantics: rounds advance at arrival instants concurrently with
+    /// whatever the caller charges next; only the completion tail the
+    /// caller blocks on in [`wait`](Self::wait) is exposed.
+    pub fn post(ep: &Endpoint, alg: Algorithm, buf: Vec<f32>, round: usize) -> IAllreduce {
+        IAllreduce::new(ep, alg, buf, round, true)
+    }
+
+    /// Post with the historical dependency-chained accounting: each
+    /// internal message is charged against the chain's running clock as
+    /// it arrives, exactly as the blocking implementations did.
+    pub fn post_blocking(
+        ep: &Endpoint,
+        alg: Algorithm,
+        buf: Vec<f32>,
+        round: usize,
+    ) -> IAllreduce {
+        IAllreduce::new(ep, alg, buf, round, false)
+    }
+
+    fn new(
+        ep: &Endpoint,
+        alg: Algorithm,
+        buf: Vec<f32>,
+        round: usize,
+        overlapped: bool,
+    ) -> IAllreduce {
+        let virt = ep.fabric().clock().is_virtual();
+        let comm_now_ns = ep.fabric().clock().now_ns(ep.rank());
+        let mut coll = IAllreduce {
+            buf,
+            machine: Machine::build(alg, ep.size(), ep.rank(), round),
+            pending: None,
+            done: false,
+            comm_now_ns,
+            wire_ns: 0,
+            overlapped,
+            virt,
+        };
+        let ctx = SendCtx {
+            ep,
+            comm_now_ns: coll.comm_now_ns,
+            virt,
+        };
+        let step = coll.machine.start(&mut coll.buf, &ctx);
+        coll.apply_step(ep, step);
+        coll
+    }
+
+    fn apply_step(&mut self, ep: &Endpoint, step: Step) {
+        match step {
+            Step::Pending(src, tag) => self.pending = Some(ep.irecv(src, tag)),
+            Step::Finished => {
+                self.pending = None;
+                self.done = true;
+            }
+        }
+    }
+
+    /// Feed one delivered internal message through the state machine,
+    /// advancing the comm clock and (in blocking mode) the ledger.
+    fn deliver(&mut self, ep: &Endpoint, data: Vec<f32>, sent_ns: u64, at_ns: u64) {
+        if self.virt {
+            let wire = at_ns - sent_ns;
+            self.wire_ns += wire;
+            if !self.overlapped {
+                // dependency-chained schedule: this arrival's wait is
+                // exposed relative to the chain's own running clock —
+                // identical arithmetic to the transport's blocking
+                // wait, so blocking-mode metrics are bit-stable
+                let exposed = at_ns.saturating_sub(self.comm_now_ns);
+                let c = ep.fabric().counters(ep.rank());
+                c.recv_wait_ns.fetch_add(exposed, Ordering::Relaxed);
+                c.comm_hidden_ns
+                    .fetch_add(wire.saturating_sub(exposed), Ordering::Relaxed);
+            }
+            self.comm_now_ns = self.comm_now_ns.max(at_ns);
+        }
+        let ctx = SendCtx {
+            ep,
+            comm_now_ns: self.comm_now_ns,
+            virt: self.virt,
+        };
+        let step = self.machine.deliver(&mut self.buf, &data, &ctx);
+        self.apply_step(ep, step);
+    }
+
+    /// Drive the state machine as far as available messages allow
+    /// without blocking; returns true once the collective is complete.
+    /// Pumping more or less often never changes the virtual timeline
+    /// (it is a pure function of arrival stamps) — only wall-clock
+    /// liveness.
+    pub fn progress(&mut self, ep: &Endpoint) -> bool {
+        while !self.done {
+            let Some(req) = self.pending.as_mut() else {
+                break;
+            };
+            if self.virt {
+                match req.test_raw() {
+                    Some((data, sent_ns, at_ns)) => {
+                        self.pending = None;
+                        self.deliver(ep, data, sent_ns, at_ns);
+                    }
+                    None => return false,
+                }
+            } else if req.test() {
+                let data = self.pending.take().unwrap().wait();
+                self.deliver(ep, data, 0, 0);
+            } else {
+                return false;
+            }
+        }
+        self.done
+    }
+
+    /// Non-blocking completion poll (MPI_Test).
+    pub fn test(&mut self, ep: &Endpoint) -> bool {
+        self.progress(ep)
+    }
+
+    /// Harvest the reduced vector (MPI_Wait): drives the machine to
+    /// completion (blocking only for payloads not yet queued), then
+    /// settles the caller's clock and the hidden/exposed wire-time
+    /// ledger per the posting mode.
+    pub fn wait(mut self, ep: &Endpoint) -> Vec<f32> {
+        while !self.done {
+            if self.progress(ep) {
+                break;
+            }
+            let req = self.pending.take().expect("incomplete collective with no pending recv");
+            if self.virt {
+                let (data, sent_ns, at_ns) = req.wait_raw();
+                self.deliver(ep, data, sent_ns, at_ns);
+            } else {
+                let data = req.wait();
+                self.deliver(ep, data, 0, 0);
+            }
+        }
+        if self.virt {
+            let clock = ep.fabric().clock();
+            let rank = ep.rank();
+            if self.overlapped {
+                // the caller pays only the completion tail; all other
+                // internal wire time elapsed under its compute
+                let exposed = self.comm_now_ns.saturating_sub(clock.now_ns(rank));
+                let c = ep.fabric().counters(rank);
+                c.recv_wait_ns.fetch_add(exposed, Ordering::Relaxed);
+                c.comm_hidden_ns
+                    .fetch_add(self.wire_ns.saturating_sub(exposed), Ordering::Relaxed);
+            }
+            clock.advance_to_ns(rank, self.comm_now_ns);
+        }
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{CostModel, Fabric};
+    use std::thread;
+
+    /// Overlapped collectives on the virtual fabric advance at arrival
+    /// instants, not at the caller's clock: with enough compute charged
+    /// after the post, the whole Θ(log p) chain hides.
+    #[test]
+    fn overlapped_chain_hides_under_compute() {
+        let p = 4;
+        let f = Fabric::new_virtual(p, CostModel::new(1e-3, 0.0, 0.0, 0));
+        let handles: Vec<_> = (0..p)
+            .map(|r| {
+                let ep = f.endpoint(r);
+                thread::spawn(move || {
+                    let mut h = IAllreduce::post(
+                        &ep,
+                        Algorithm::RecursiveDoubling,
+                        vec![r as f32; 8],
+                        0,
+                    );
+                    // 2 rounds x 1 ms chain < 10 ms compute
+                    ep.advance(10e-3);
+                    h.progress(&ep);
+                    h.wait(&ep)
+                })
+            })
+            .collect();
+        for h in handles {
+            let got = h.join().unwrap();
+            assert_eq!(got, vec![1.5; 8]);
+        }
+        for r in 0..p {
+            use std::sync::atomic::Ordering;
+            let c = f.counters(r);
+            assert_eq!(
+                c.recv_wait_ns.load(Ordering::Relaxed),
+                0,
+                "rank {r}: chain should be fully hidden"
+            );
+            assert_eq!(
+                c.comm_hidden_ns.load(Ordering::Relaxed),
+                2_000_000,
+                "rank {r}: 2 rounds x 1 ms of internal wire credited hidden"
+            );
+            assert_eq!(f.clock().now_ns(r), 10_000_000, "clock not rewound");
+        }
+        assert_eq!(f.in_flight(), 0);
+    }
+
+    /// Without compute after the post, the overlapped chain is fully
+    /// exposed at wait() and the caller's clock jumps to completion —
+    /// same step timing as the blocking schedule.
+    #[test]
+    fn overlapped_without_compute_exposes_chain() {
+        let p = 4;
+        let f = Fabric::new_virtual(p, CostModel::new(1e-3, 0.0, 0.0, 0));
+        let handles: Vec<_> = (0..p)
+            .map(|r| {
+                let ep = f.endpoint(r);
+                thread::spawn(move || {
+                    IAllreduce::post(&ep, Algorithm::RecursiveDoubling, vec![1.0; 4], 0)
+                        .wait(&ep)
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        for r in 0..p {
+            use std::sync::atomic::Ordering;
+            assert_eq!(f.clock().now_ns(r), 2_000_000, "2 chained 1 ms rounds");
+            assert_eq!(
+                f.counters(r).recv_wait_ns.load(Ordering::Relaxed),
+                2_000_000
+            );
+        }
+    }
+
+    /// Blocking mode (post_blocking + immediate wait) reproduces the
+    /// dependency-chained timing: identical clock and ledger to the
+    /// overlapped no-compute case, message by message.
+    #[test]
+    fn blocking_mode_matches_chained_timing() {
+        let p = 8;
+        let f = Fabric::new_virtual(p, CostModel::new(2e-3, 0.0, 0.0, 0));
+        let handles: Vec<_> = (0..p)
+            .map(|r| {
+                let ep = f.endpoint(r);
+                thread::spawn(move || {
+                    IAllreduce::post_blocking(
+                        &ep,
+                        Algorithm::RecursiveDoubling,
+                        vec![r as f32; 4],
+                        0,
+                    )
+                    .wait(&ep)
+                })
+            })
+            .collect();
+        let want = (0..p).map(|r| r as f32).sum::<f32>() / p as f32;
+        for h in handles {
+            assert_eq!(h.join().unwrap(), vec![want; 4]);
+        }
+        for r in 0..p {
+            use std::sync::atomic::Ordering;
+            // 3 rounds x 2 ms, every round exposed (no compute between)
+            assert_eq!(f.clock().now_ns(r), 6_000_000);
+            assert_eq!(
+                f.counters(r).recv_wait_ns.load(Ordering::Relaxed),
+                6_000_000
+            );
+            assert_eq!(f.counters(r).comm_hidden_ns.load(Ordering::Relaxed), 0);
+        }
+    }
+
+    /// Multiple overlapped collectives in flight on one rank progress
+    /// independently — different rounds, no message crossing.
+    #[test]
+    fn concurrent_collectives_do_not_cross() {
+        let p = 4;
+        let f = Fabric::new_virtual(p, CostModel::new(1e-3, 0.0, 0.0, 0));
+        let handles: Vec<_> = (0..p)
+            .map(|r| {
+                let ep = f.endpoint(r);
+                thread::spawn(move || {
+                    let a = IAllreduce::post(
+                        &ep,
+                        Algorithm::RecursiveDoubling,
+                        vec![r as f32; 8],
+                        0,
+                    );
+                    let b = IAllreduce::post(
+                        &ep,
+                        Algorithm::Ring,
+                        vec![(r * 10) as f32; 8],
+                        1,
+                    );
+                    ep.advance(50e-3);
+                    (a.wait(&ep), b.wait(&ep))
+                })
+            })
+            .collect();
+        let avg_a = (0..p).map(|r| r as f32).sum::<f32>() / p as f32;
+        let avg_b = (0..p).map(|r| (r * 10) as f32).sum::<f32>() / p as f32;
+        for h in handles {
+            let (a, b) = h.join().unwrap();
+            assert!((a[0] - avg_a).abs() < 1e-5, "{a:?}");
+            assert!((b[0] - avg_b).abs() < 1e-5, "{b:?}");
+        }
+        assert_eq!(f.in_flight(), 0);
+    }
+
+    /// p == 1 completes instantly in either mode.
+    #[test]
+    fn solo_is_identity() {
+        let f = Fabric::new_virtual(1, CostModel::new(1e-3, 0.0, 0.0, 0));
+        let ep = f.endpoint(0);
+        let mut h = IAllreduce::post(&ep, Algorithm::Ring, vec![4.0; 3], 0);
+        assert!(h.test(&ep));
+        assert_eq!(h.wait(&ep), vec![4.0; 3]);
+        assert_eq!(f.clock().now_ns(0), 0);
+    }
+
+    /// The engine also runs on the wall-clock fabric (measured
+    /// accounting), where correctness must be unchanged.
+    #[test]
+    fn wall_mode_engine_reduces_correctly() {
+        let p = 3;
+        let f = Fabric::new(p, CostModel::zero());
+        let handles: Vec<_> = (0..p)
+            .map(|r| {
+                let ep = f.endpoint(r);
+                thread::spawn(move || {
+                    IAllreduce::post(&ep, Algorithm::BinomialTree, vec![(r + 1) as f32; 5], 0)
+                        .wait(&ep)
+                })
+            })
+            .collect();
+        for h in handles {
+            let got = h.join().unwrap();
+            assert!((got[0] - 2.0).abs() < 1e-6, "{got:?}");
+        }
+        assert_eq!(f.in_flight(), 0);
+    }
+}

@@ -4,8 +4,11 @@
 //!
 //! All algorithms compute the elementwise **average** across ranks (the
 //! gradient all-reduce of data-parallel SGD) and are SPMD: every rank
-//! calls the same function with its own endpoint and buffer; the call
-//! returns when the rank holds the reduced vector.
+//! posts the same collective with its own endpoint and buffer.  Each is
+//! a per-round state machine run by the non-blocking [`engine`]
+//! ([`IAllreduce`]: post / progress / test / wait); the blocking
+//! [`Algorithm::run`] is post-plus-immediate-wait with the historical
+//! dependency-chained accounting.
 //!
 //! * [`recursive_doubling`] — ⌈log₂ p⌉ rounds of pairwise exchange of the
 //!   full vector (the binomial/k-nomial tree cost the paper's Θ(log p)
@@ -17,10 +20,12 @@
 //!   bandwidth-optimal "hierarchical ring" PowerAI uses (Table 7 note).
 
 pub mod binomial_tree;
+pub mod engine;
 pub mod recursive_doubling;
 pub mod ring_allreduce;
 
 pub use binomial_tree::binomial_tree_allreduce;
+pub use engine::IAllreduce;
 pub use recursive_doubling::recursive_doubling_allreduce;
 pub use ring_allreduce::ring_allreduce;
 
@@ -35,14 +40,16 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
+    /// Blocking all-reduce: post the state machine and harvest it
+    /// immediately, with the dependency-chained (pre-engine) ledger —
+    /// rounds stay exposed on the caller's clock, exactly the schedule
+    /// the paper's Θ(log p) critique targets.
     pub fn run(self, ep: &Endpoint, buf: &mut [f32], round: usize) {
-        match self {
-            Algorithm::RecursiveDoubling => {
-                recursive_doubling_allreduce(ep, buf, round)
-            }
-            Algorithm::BinomialTree => binomial_tree_allreduce(ep, buf, round),
-            Algorithm::Ring => ring_allreduce(ep, buf, round),
+        if ep.size() == 1 {
+            return; // average of one rank is itself — no traffic, no copies
         }
+        let out = IAllreduce::post_blocking(ep, self, buf.to_vec(), round).wait(ep);
+        buf.copy_from_slice(&out);
     }
 
     pub fn name(self) -> &'static str {

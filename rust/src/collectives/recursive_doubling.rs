@@ -2,49 +2,107 @@
 //! exchanges.  For non-power-of-two p, the standard fold: extra ranks
 //! first send their vector to a partner in the power-of-two core, the
 //! core runs recursive doubling, and the result is sent back.
+//!
+//! Expressed as a per-round state machine ([`RecursiveDoublingMachine`])
+//! so the engine can progress it non-blockingly; the arithmetic order
+//! (fold-add, core adds in doubling order, scale, unfold) is identical
+//! to the historical blocking implementation, so results are
+//! bit-identical.
 
-use super::{add_into, scale};
+use super::engine::{RoundMachine, SendCtx, Step};
+use super::{add_into, scale, Algorithm};
 use crate::transport::{Endpoint, Tag};
 
+/// Blocking convenience wrapper (post + wait through the engine).
 pub fn recursive_doubling_allreduce(ep: &Endpoint, buf: &mut [f32], round: usize) {
-    let p = ep.size();
-    let me = ep.rank();
-    if p == 1 {
-        return;
-    }
-    let tag = Tag::REDUCE.round(round);
-    let core = 1usize << crate::util::ceil_log2(p + 1).saturating_sub(1).min(63);
-    let core = if core > p { core >> 1 } else { core }; // largest pow2 <= p
-    let rem = p - core;
+    Algorithm::RecursiveDoubling.run(ep, buf, round);
+}
 
-    // fold phase: ranks >= core send to (rank - core)
-    if me >= core {
-        ep.send(me - core, tag, buf.to_vec());
-        // idle during the core exchange; wait for the result broadcast
-        let out = ep.recv(me - core, tag);
-        buf.copy_from_slice(&out);
-        return;
-    }
-    if me < rem {
-        let extra = ep.recv(me + core, tag);
-        add_into(buf, &extra);
+enum RdState {
+    /// me >= core: folded our vector in, awaiting the reduced result.
+    FoldedOut,
+    /// me < rem: awaiting the extra rank's fold-in.
+    AwaitExtra,
+    /// In the power-of-two core, awaiting the partner at `dist`.
+    Core,
+}
+
+pub(crate) struct RecursiveDoublingMachine {
+    p: usize,
+    me: usize,
+    core: usize,
+    rem: usize,
+    tag: Tag,
+    dist: usize,
+    state: RdState,
+}
+
+impl RecursiveDoublingMachine {
+    pub(crate) fn new(p: usize, me: usize, round: usize) -> Self {
+        let core = 1usize << crate::util::ceil_log2(p + 1).saturating_sub(1).min(63);
+        let core = if core > p { core >> 1 } else { core }; // largest pow2 <= p
+        RecursiveDoublingMachine {
+            p,
+            me,
+            core,
+            rem: p - core,
+            tag: Tag::REDUCE.round(round),
+            dist: 1,
+            state: RdState::Core,
+        }
     }
 
-    // core recursive doubling over `core` ranks
-    let mut dist = 1usize;
-    while dist < core {
-        let partner = me ^ dist;
-        ep.isend(partner, tag, buf.to_vec());
-        let theirs = ep.recv(partner, tag);
-        add_into(buf, &theirs);
-        dist <<= 1;
+    /// First core round: send to the dist-1 partner, await its vector.
+    fn enter_core(&mut self, buf: &mut [f32], ctx: &SendCtx) -> Step {
+        self.dist = 1;
+        self.state = RdState::Core;
+        let partner = self.me ^ 1;
+        ctx.send(partner, self.tag, buf.to_vec());
+        Step::Pending(partner, self.tag)
+    }
+}
+
+impl RoundMachine for RecursiveDoublingMachine {
+    fn start(&mut self, buf: &mut [f32], ctx: &SendCtx) -> Step {
+        if self.me >= self.core {
+            // fold phase: park our vector in the core, await the result
+            ctx.send(self.me - self.core, self.tag, buf.to_vec());
+            self.state = RdState::FoldedOut;
+            return Step::Pending(self.me - self.core, self.tag);
+        }
+        if self.me < self.rem {
+            self.state = RdState::AwaitExtra;
+            return Step::Pending(self.me + self.core, self.tag);
+        }
+        self.enter_core(buf, ctx)
     }
 
-    scale(buf, 1.0 / p as f32);
-
-    // unfold phase
-    if me < rem {
-        ep.send(me + core, tag, buf.to_vec());
+    fn deliver(&mut self, buf: &mut [f32], data: &[f32], ctx: &SendCtx) -> Step {
+        match self.state {
+            RdState::FoldedOut => {
+                buf.copy_from_slice(data);
+                Step::Finished
+            }
+            RdState::AwaitExtra => {
+                add_into(buf, data);
+                self.enter_core(buf, ctx)
+            }
+            RdState::Core => {
+                add_into(buf, data);
+                self.dist <<= 1;
+                if self.dist < self.core {
+                    let partner = self.me ^ self.dist;
+                    ctx.send(partner, self.tag, buf.to_vec());
+                    return Step::Pending(partner, self.tag);
+                }
+                scale(buf, 1.0 / self.p as f32);
+                // unfold phase: hand the result back to the folded rank
+                if self.me < self.rem {
+                    ctx.send(self.me + self.core, self.tag, buf.to_vec());
+                }
+                Step::Finished
+            }
+        }
     }
 }
 

@@ -1,48 +1,112 @@
 //! Ring all-reduce: reduce-scatter + all-gather over a ring, 2(p−1)
 //! rounds on n/p-sized chunks — bandwidth-optimal, the building block of
 //! PowerAI's "hierarchical rings" that Table 7 compares against.
+//!
+//! Expressed as a per-round state machine ([`RingMachine`]) for the
+//! non-blocking engine; chunk walk and accumulation order are identical
+//! to the historical blocking implementation.
 
-use super::scale;
+use super::engine::{RoundMachine, SendCtx, Step};
+use super::{scale, Algorithm};
 use crate::transport::{Endpoint, Tag};
 
+/// Blocking convenience wrapper (post + wait through the engine).
 pub fn ring_allreduce(ep: &Endpoint, buf: &mut [f32], round: usize) {
-    let p = ep.size();
-    let me = ep.rank();
-    if p == 1 {
-        return;
-    }
-    let tag = Tag::REDUCE.round(round);
-    let n = buf.len();
-    // chunk c covers [starts[c], starts[c+1])
-    let starts: Vec<usize> = (0..=p).map(|c| c * n / p).collect();
-    let next = (me + 1) % p;
-    let prev = (me + p - 1) % p;
+    Algorithm::Ring.run(ep, buf, round);
+}
 
-    // reduce-scatter: at step s, send chunk (me - s) and accumulate
-    // chunk (me - s - 1) from the left neighbour
-    for s in 0..p - 1 {
-        let send_c = (me + p - s) % p;
-        let recv_c = (me + p - s - 1) % p;
-        let chunk = buf[starts[send_c]..starts[send_c + 1]].to_vec();
-        ep.isend(next, tag.sub(s), chunk);
-        let theirs = ep.recv(prev, tag.sub(s));
-        let dst = &mut buf[starts[recv_c]..starts[recv_c + 1]];
-        for (a, b) in dst.iter_mut().zip(&theirs) {
-            *a += b;
+enum RingPhase {
+    ReduceScatter,
+    AllGather,
+}
+
+pub(crate) struct RingMachine {
+    p: usize,
+    me: usize,
+    tag: Tag,
+    /// chunk c covers [starts[c], starts[c+1]) — set once n is known.
+    starts: Vec<usize>,
+    next: usize,
+    prev: usize,
+    s: usize,
+    phase: RingPhase,
+}
+
+impl RingMachine {
+    pub(crate) fn new(p: usize, me: usize, round: usize) -> Self {
+        RingMachine {
+            p,
+            me,
+            tag: Tag::REDUCE.round(round),
+            starts: Vec::new(),
+            next: (me + 1) % p,
+            prev: (me + p - 1) % p,
+            s: 0,
+            phase: RingPhase::ReduceScatter,
         }
     }
-    // each rank now owns the fully reduced chunk (me + 1) % p
-    let owned = (me + 1) % p;
-    scale(&mut buf[starts[owned]..starts[owned + 1]], 1.0 / p as f32);
 
-    // all-gather: circulate the reduced chunks p-1 more steps
-    for s in 0..p - 1 {
-        let send_c = (me + 1 + p - s) % p;
-        let recv_c = (me + p - s) % p;
-        let chunk = buf[starts[send_c]..starts[send_c + 1]].to_vec();
-        ep.isend(next, tag.sub(p + s), chunk);
-        let theirs = ep.recv(prev, tag.sub(p + s));
-        buf[starts[recv_c]..starts[recv_c + 1]].copy_from_slice(&theirs);
+    fn chunk<'a>(&self, buf: &'a [f32], c: usize) -> &'a [f32] {
+        &buf[self.starts[c]..self.starts[c + 1]]
+    }
+
+    /// Send the reduce-scatter chunk for step `s` and name its matching
+    /// receive.
+    fn rs_round(&mut self, buf: &[f32], ctx: &SendCtx) -> Step {
+        let send_c = (self.me + self.p - self.s) % self.p;
+        ctx.send(self.next, self.tag.sub(self.s), self.chunk(buf, send_c).to_vec());
+        Step::Pending(self.prev, self.tag.sub(self.s))
+    }
+
+    /// Send the all-gather chunk for step `s` and name its receive.
+    fn ag_round(&mut self, buf: &[f32], ctx: &SendCtx) -> Step {
+        let send_c = (self.me + 1 + self.p - self.s) % self.p;
+        let t = self.tag.sub(self.p + self.s);
+        ctx.send(self.next, t, self.chunk(buf, send_c).to_vec());
+        Step::Pending(self.prev, t)
+    }
+}
+
+impl RoundMachine for RingMachine {
+    fn start(&mut self, buf: &mut [f32], ctx: &SendCtx) -> Step {
+        let n = buf.len();
+        self.starts = (0..=self.p).map(|c| c * n / self.p).collect();
+        self.rs_round(buf, ctx)
+    }
+
+    fn deliver(&mut self, buf: &mut [f32], data: &[f32], ctx: &SendCtx) -> Step {
+        match self.phase {
+            RingPhase::ReduceScatter => {
+                let recv_c = (self.me + self.p - self.s - 1) % self.p;
+                let dst = &mut buf[self.starts[recv_c]..self.starts[recv_c + 1]];
+                for (a, b) in dst.iter_mut().zip(data) {
+                    *a += b;
+                }
+                self.s += 1;
+                if self.s < self.p - 1 {
+                    return self.rs_round(buf, ctx);
+                }
+                // each rank now owns the fully reduced chunk (me + 1) % p
+                let owned = (self.me + 1) % self.p;
+                scale(
+                    &mut buf[self.starts[owned]..self.starts[owned + 1]],
+                    1.0 / self.p as f32,
+                );
+                self.phase = RingPhase::AllGather;
+                self.s = 0;
+                self.ag_round(buf, ctx)
+            }
+            RingPhase::AllGather => {
+                let recv_c = (self.me + self.p - self.s) % self.p;
+                buf[self.starts[recv_c]..self.starts[recv_c + 1]]
+                    .copy_from_slice(data);
+                self.s += 1;
+                if self.s < self.p - 1 {
+                    return self.ag_round(buf, ctx);
+                }
+                Step::Finished
+            }
+        }
     }
 }
 

@@ -148,6 +148,20 @@ pub struct RunConfig {
     /// model).  Combined with the serialized broadcast this reproduces
     /// the Fig 2(a) parameter-server bottleneck at scale.
     pub virt_ps_agg_secs: f64,
+    /// Model a dedicated communication-progress thread for AGD's
+    /// collectives (the S-Caffe/PowerAI/Jin-et-al. design): each
+    /// layer's all-reduce is *posted* non-blocking at its grad-ready
+    /// instant and its rounds advance at message-arrival instants
+    /// concurrently with later backprop slices, instead of being
+    /// dependency-chained on the caller; results are harvested at the
+    /// update point.  Only meaningful with `layerwise` on the AGD path
+    /// (see docs/virtual-time.md).  Numerics are identical to the
+    /// blocking schedule; only timing/overlap change.
+    pub comm_thread: bool,
+    /// Gossip mixes synchronously: block for the *current* step's
+    /// partner model instead of draining the previous exchange (the
+    /// convergence-property schedule — exposed comm is paid in full).
+    pub sync_mix: bool,
 }
 
 impl Default for RunConfig {
@@ -181,6 +195,8 @@ impl Default for RunConfig {
             virt_fwd_secs: 0.0,
             straggler_jitter: 0.0,
             virt_ps_agg_secs: 0.0,
+            comm_thread: false,
+            sync_mix: false,
         }
     }
 }
@@ -260,6 +276,12 @@ impl RunConfig {
         }
         if let Some(v) = j.get("layerwise").and_then(Json::as_bool) {
             c.layerwise = v;
+        }
+        if let Some(v) = j.get("comm_thread").and_then(Json::as_bool) {
+            c.comm_thread = v;
+        }
+        if let Some(v) = j.get("sync_mix").and_then(Json::as_bool) {
+            c.sync_mix = v;
         }
         if let Some(v) = j.get("rotation").and_then(Json::as_bool) {
             c.rotation = v;
@@ -379,7 +401,8 @@ mod tests {
     fn layerwise_and_jitter_fields_parse() {
         let j = Json::parse(
             r#"{"layerwise": true, "virt_fwd_secs": 0.002,
-                "straggler_jitter": 0.15, "virt_ps_agg_secs": 0.001}"#,
+                "straggler_jitter": 0.15, "virt_ps_agg_secs": 0.001,
+                "comm_thread": true, "sync_mix": true}"#,
         )
         .unwrap();
         let c = RunConfig::from_json(&j).unwrap();
@@ -387,8 +410,12 @@ mod tests {
         assert!((c.virt_fwd_secs - 0.002).abs() < 1e-12);
         assert!((c.straggler_jitter - 0.15).abs() < 1e-12);
         assert!((c.virt_ps_agg_secs - 0.001).abs() < 1e-12);
-        // defaults keep the monolithic schedule
+        assert!(c.comm_thread);
+        assert!(c.sync_mix);
+        // defaults keep the monolithic, dependency-chained schedule
         assert!(!RunConfig::default().layerwise);
+        assert!(!RunConfig::default().comm_thread);
+        assert!(!RunConfig::default().sync_mix);
         assert_eq!(RunConfig::default().straggler_jitter, 0.0);
     }
 

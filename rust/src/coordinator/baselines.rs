@@ -11,7 +11,7 @@
 //!   fabric (fabric size = workers + servers).
 
 use super::worker::Worker;
-use crate::collectives::Algorithm;
+use crate::collectives::{Algorithm, IAllreduce};
 use crate::config::RunConfig;
 use crate::nativenet::ops;
 use crate::transport::{Endpoint, Tag};
@@ -25,10 +25,20 @@ use crate::util::ceil_log2;
 /// *pipelined* compute schedule: each layer's backprop slice is charged
 /// right before that layer's all-reduce, so the collective for layer ℓ
 /// starts at ℓ's grad-ready instant (the §3.2 S-Caffe/PowerAI schedule)
-/// instead of after the whole backward pass.  The collectives themselves
-/// remain dependency-chained on each rank, so their rounds stay exposed
-/// — the measured AGD is the blocking-schedule bound the gossip pipeline
-/// is compared against.
+/// instead of after the whole backward pass.  Two collective schedules
+/// exist on top of that pipeline:
+///
+/// * **Blocking** (`cfg.comm_thread = false`): each layer's all-reduce
+///   is dependency-chained on the caller, so its Θ(log p) rounds stay
+///   exposed between compute slices — the pessimistic bound.
+/// * **Comm-thread** (`cfg.comm_thread = true`): each layer's
+///   [`IAllreduce`] is *posted* at its grad-ready instant and its rounds
+///   advance at message-arrival instants on the modeled comm-progress
+///   thread while later layers' backprop is still being charged; all
+///   results are harvested at the update point.  This is the
+///   S-Caffe/PowerAI/Jin-et-al. overlapped AGD the closed-form
+///   simulator's `overlapped_agd_step_time` curve describes.  Numerics
+///   are identical either way (same reductions in the same order).
 pub fn run_allreduce(w: &mut Worker, ep: &Endpoint, alg: Algorithm, layerwise: bool) {
     let steps = w.cfg.steps;
     let layers: Vec<(usize, usize)> = w
@@ -38,15 +48,51 @@ pub fn run_allreduce(w: &mut Worker, ep: &Endpoint, alg: Algorithm, layerwise: b
         .map(|l| (l.offset, l.len))
         .collect();
     let pipelined = layerwise && w.cfg.layerwise;
+    let comm_thread = pipelined && w.cfg.comm_thread;
     let sched = w.bwd_schedule(); // (layer, offset, len, slice secs), output first
     for step in 0..steps {
         let t0 = ep.mark();
         let lr = w.lr_at(step);
         let batch = w.shuffle.take(ep);
+        // sample starvation is communication time: fold the refill
+        // stall into the step's exposed-comm ledger
+        let mut comm_wait = w.shuffle.take_stall_secs();
         let (x, y) = w.to_batch_data(&batch);
         let (mut grads, loss) = w.backend.grad(&w.params, &x, &y);
 
-        let comm_wait = if pipelined {
+        comm_wait += if comm_thread {
+            // comm-thread AGD: post each layer's non-blocking all-reduce
+            // at its grad-ready instant; rounds progress at arrival
+            // instants while later slices are charged; harvest at the
+            // update point
+            w.charge_compute(ep, step, w.cfg.virt_fwd_secs);
+            let tw = ep.mark();
+            let mut posted: Vec<(usize, usize, IAllreduce)> =
+                Vec::with_capacity(sched.len());
+            for &(li, off, len, secs) in &sched {
+                w.charge_compute(ep, step, secs);
+                // pump in-flight collectives (wall-clock liveness only;
+                // the virtual timeline is fixed by arrival stamps)
+                for (_, _, h) in posted.iter_mut() {
+                    h.progress(ep);
+                }
+                posted.push((
+                    off,
+                    len,
+                    IAllreduce::post(
+                        ep,
+                        alg,
+                        grads[off..off + len].to_vec(),
+                        step * layers.len() + li,
+                    ),
+                ));
+            }
+            for (off, len, h) in posted {
+                let out = h.wait(ep);
+                grads[off..off + len].copy_from_slice(&out);
+            }
+            ep.comm_wait_since(&tw)
+        } else if pipelined {
             // per-layer pipeline: slice compute, then that layer's
             // all-reduce at its grad-ready instant (output layer first)
             w.charge_compute(ep, step, w.cfg.virt_fwd_secs);
@@ -78,6 +124,7 @@ pub fn run_allreduce(w: &mut Worker, ep: &Endpoint, alg: Algorithm, layerwise: b
             w.metrics.accuracy.push((step, acc));
         }
     }
+    w.shuffle.drain(ep);
     w.snapshot_counters(ep);
 }
 
@@ -91,16 +138,16 @@ pub fn run_periodic(w: &mut Worker, ep: &Endpoint, alg: Algorithm) {
         let t0 = ep.mark();
         let lr = w.lr_at(step);
         let batch = w.shuffle.take(ep);
+        let mut comm_wait = w.shuffle.take_stall_secs();
         let (x, y) = w.to_batch_data(&batch);
         let (grads, loss) = w.backend.grad(&w.params, &x, &y);
         w.charge_compute(ep, step, w.cfg.virt_compute_secs);
         w.backend.apply_update(&mut w.params, &mut w.mom, &grads, lr);
 
-        let mut comm_wait = 0.0;
         if step % period == period - 1 {
             let tw = ep.mark();
             alg.run(ep, &mut w.params, step);
-            comm_wait = ep.comm_wait_since(&tw);
+            comm_wait += ep.comm_wait_since(&tw);
         }
         w.shuffle.give_back(ep, batch);
         w.record_step(step, loss, ep.elapsed(&t0), comm_wait);
@@ -110,6 +157,7 @@ pub fn run_periodic(w: &mut Worker, ep: &Endpoint, alg: Algorithm) {
             w.metrics.accuracy.push((step, acc));
         }
     }
+    w.shuffle.drain(ep);
     w.snapshot_counters(ep);
 }
 
@@ -126,10 +174,11 @@ pub fn run_ps_worker(w: &mut Worker, ep: &Endpoint, server: usize) {
     for step in 0..steps {
         let t0 = ep.mark();
         let batch = w.shuffle.take(ep);
+        let shuffle_stall = w.shuffle.take_stall_secs();
         let (x, y) = w.to_batch_data(&batch);
         let (grads, loss) = w.backend.grad(&w.params, &x, &y);
 
-        let comm_wait = if w.cfg.layerwise {
+        let pull_wait = if w.cfg.layerwise {
             w.charge_compute(ep, step, w.cfg.virt_fwd_secs);
             for &(li, off, len, secs) in &sched {
                 w.charge_compute(ep, step, secs);
@@ -153,13 +202,14 @@ pub fn run_ps_worker(w: &mut Worker, ep: &Endpoint, server: usize) {
         };
 
         w.shuffle.give_back(ep, batch);
-        w.record_step(step, loss, ep.elapsed(&t0), comm_wait);
+        w.record_step(step, loss, ep.elapsed(&t0), shuffle_stall + pull_wait);
         if w.cfg.eval_every > 0 && (step % w.cfg.eval_every == 0 || step + 1 == steps)
         {
             let (_, acc) = w.evaluate();
             w.metrics.accuracy.push((step, acc));
         }
     }
+    w.shuffle.drain(ep);
     w.snapshot_counters(ep);
 }
 
@@ -211,10 +261,17 @@ pub fn run_ps_server(
         backend.apply_update(&mut params, &mut mom, &acc, lr);
         let wire = params.len() as f64 * 4.0 * beta;
         for dst in 0..workers {
+            if dst > 0 {
+                // transfer k cannot start until transfer k-1 clears the
+                // server's NIC: the broadcast serialization of Fig 2(a).
+                // Only *inter-send* gaps serialize — the final transfer
+                // drains while the server is already receiving step
+                // k+1's pushes (full-duplex link), so charging after
+                // the last send would delay the next step's first recv
+                // by a whole transfer the server can in fact overlap.
+                ep.advance(wire);
+            }
             ep.isend(dst, Tag::MODEL.round(step), params.clone());
-            // the next transfer cannot start until this one clears the
-            // server's NIC: the broadcast serialization of Fig 2(a)
-            ep.advance(wire);
         }
     }
 }

@@ -130,9 +130,10 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
 
     for step in 0..steps {
         let t0 = ep.mark();
-        let mut comm_wait = 0.0f64;
         let lr = w.lr_at(step);
         let batch = w.shuffle.take(ep);
+        // sample starvation is exposed communication, not compute
+        let mut comm_wait = w.shuffle.take_stall_secs();
         let (x, y) = w.to_batch_data(&batch);
 
         // ---- compute (overlaps the in-flight partner model) ----------
@@ -283,10 +284,13 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
         }
     }
 
-    // drain any final in-flight model so the fabric is clean
+    // drain any final in-flight model so the fabric is clean; raw
+    // harvest — the recorded steps are over, so this communication
+    // belongs to no step and must not perturb the overlap ledger
+    // (the mix itself still runs: numerics are unchanged)
     if let Some(pm) = pending.take() {
         for (off, req) in pm.reqs.into_iter().flatten() {
-            let data = req.wait();
+            let (data, _, _) = req.wait_raw();
             if layerwise {
                 ops::mix_into(&mut w.params[off..off + data.len()], &data);
             } else {
@@ -297,6 +301,8 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
             ops::mix_into(&mut w.params, &partner_buf);
         }
     }
+    // ... and any in-flight sample batches, so the fabric ends clean
+    w.shuffle.drain(ep);
 
     w.snapshot_counters(ep);
 }

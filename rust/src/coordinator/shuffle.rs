@@ -50,6 +50,10 @@ pub struct RingShuffle {
     step: usize,
     /// disabled ranks pass batches straight through the queue
     enabled: bool,
+    /// blocking-wait seconds accumulated by [`take`](Self::take) since
+    /// the last [`take_stall_secs`](Self::take_stall_secs) — sample
+    /// starvation the run loop folds into the step's comm ledger
+    stall_secs: f64,
 }
 
 impl RingShuffle {
@@ -75,6 +79,7 @@ impl RingShuffle {
             rows_per_batch,
             step: 0,
             enabled,
+            stall_secs: 0.0,
         }
     }
 
@@ -84,8 +89,13 @@ impl RingShuffle {
     }
 
     /// Take the next batch to train on.  Blocks on the oldest in-flight
-    /// receive only if the local queue is empty.
-    pub fn take(&mut self, _ep: &Endpoint) -> SampleBatch {
+    /// receive only if the local queue is empty; that stall is real
+    /// exposed communication (sample starvation), so it is bracketed
+    /// with the transport's wait ledger and surfaced through
+    /// [`take_stall_secs`](Self::take_stall_secs) — an unattributed
+    /// wait here would hide starvation from `comm_wait_secs` and let
+    /// step time silently masquerade as compute.
+    pub fn take(&mut self, ep: &Endpoint) -> SampleBatch {
         if let Some(b) = self.queue.pop_front() {
             return b;
         }
@@ -93,7 +103,31 @@ impl RingShuffle {
             .pending
             .pop_front()
             .expect("ring shuffle: queue empty with no in-flight batches");
-        SampleBatch::unpack(req.wait(), self.rows_per_batch)
+        let m = ep.mark();
+        let payload = req.wait();
+        self.stall_secs += ep.comm_wait_since(&m);
+        SampleBatch::unpack(payload, self.rows_per_batch)
+    }
+
+    /// Blocking-wait seconds accumulated by [`take`](Self::take) since
+    /// the last call (returns and resets) — the share the run loops add
+    /// to the step's `comm_wait_secs`.
+    pub fn take_stall_secs(&mut self) -> f64 {
+        std::mem::take(&mut self.stall_secs)
+    }
+
+    /// End-of-run cleanup: harvest every in-flight circulating batch
+    /// back into the local queue so the fabric ends with no queued
+    /// messages (the drain invariant checked by
+    /// tests/fabric_drain.rs).  Uses the raw unaccounted harvest — the
+    /// recorded steps are over, so these waits belong to no step and
+    /// must not perturb the timing ledger.
+    pub fn drain(&mut self, _ep: &Endpoint) {
+        while let Some(req) = self.pending.pop_front() {
+            let (payload, _, _) = req.wait_raw();
+            self.queue
+                .push_back(SampleBatch::unpack(payload, self.rows_per_batch));
+        }
     }
 
     /// Return a consumed batch: forward it around the ring (if enabled)
@@ -191,6 +225,42 @@ mod tests {
     }
 
     #[test]
+    fn take_stall_is_attributed_on_slow_link() {
+        // one batch per rank on a slow virtual link: every take() after
+        // the first blocks on the in-flight refill, and that stall must
+        // land in the wait ledger (regression: it used to be invisible
+        // to the per-step comm accounting, inflating efficiency)
+        let p = 2;
+        let f = Fabric::new_virtual(p, CostModel::new(5e-3, 0.0, 0.0, 0));
+        let handles: Vec<_> = (0..p)
+            .map(|r| {
+                let ep = f.endpoint(r);
+                thread::spawn(move || {
+                    let mut sh =
+                        RingShuffle::new(&ep, p, mk_batches(r, 1, 1, 1), 1, true);
+                    let mut stall = 0.0;
+                    for _ in 0..4 {
+                        let b = sh.take(&ep);
+                        stall += sh.take_stall_secs();
+                        sh.give_back(&ep, b);
+                    }
+                    sh.drain(&ep);
+                    stall
+                })
+            })
+            .collect();
+        for h in handles {
+            let stall = h.join().unwrap();
+            // 3 starved refills x 5 ms wire each
+            assert!(
+                (stall - 3.0 * 5e-3).abs() < 1e-9,
+                "stall {stall}s not attributed"
+            );
+        }
+        assert_eq!(f.in_flight(), 0, "drain left batches on the fabric");
+    }
+
+    #[test]
     fn conservation_no_batch_lost() {
         // total batches across ranks is conserved after many steps
         let p = 3;
@@ -206,11 +276,8 @@ mod tests {
                         let b = sh.take(&ep);
                         sh.give_back(&ep, b);
                     }
-                    // drain all in flight
-                    while !sh.pending.is_empty() {
-                        let req = sh.pending.pop_front().unwrap();
-                        sh.queue.push_back(SampleBatch::unpack(req.wait(), 1));
-                    }
+                    sh.drain(&ep);
+                    assert!(sh.pending.is_empty());
                     sh.queue.len()
                 })
             })

@@ -24,6 +24,10 @@ pub struct RunResult {
     /// rank-0 validation accuracy at the end (if eval was enabled).
     pub final_accuracy: Option<f64>,
     pub wall_secs: f64,
+    /// Messages still queued on the fabric after every rank finished —
+    /// must be 0 (leaked `isend`/`irecv` pairs; see
+    /// tests/fabric_drain.rs).
+    pub in_flight_msgs: usize,
 }
 
 impl RunResult {
@@ -150,6 +154,13 @@ pub fn run(cfg: &RunConfig) -> Result<RunResult> {
 pub fn run_with_backend(cfg: &RunConfig, backend: Backend) -> Result<RunResult> {
     let p = cfg.ranks;
     anyhow::ensure!(p >= 1, "need at least one rank");
+    // a comm thread only overlaps collectives posted mid-backprop;
+    // without the layer-wise pipeline it would silently measure the
+    // blocking schedule while claiming otherwise
+    anyhow::ensure!(
+        !cfg.comm_thread || cfg.layerwise,
+        "comm_thread requires layerwise (per-layer pipelined AGD)"
+    );
     let is_ps = cfg.algo == Algo::ParamServer;
     let fabric_size = if is_ps { p + cfg.ps_servers.max(1) } else { p };
     // Virtual-clock fabric makes all timing metrics deterministic
@@ -183,7 +194,7 @@ pub fn run_with_backend(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
                 Algo::Gossip | Algo::GossipHypercube | Algo::GossipRandom => {
                     let topo =
                         GossipTopology::build(cfg.algo, p, cfg.rotation, cfg.seed);
-                    run_gossip(&mut w, &ep, &topo, false);
+                    run_gossip(&mut w, &ep, &topo, cfg.sync_mix);
                 }
                 Algo::SgdSync => {
                     baselines::run_allreduce(&mut w, &ep, cfg.allreduce, false)
@@ -226,6 +237,7 @@ pub fn run_with_backend(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
         final_params,
         final_accuracy,
         wall_secs: t0.elapsed().as_secs_f64(),
+        in_flight_msgs: fabric.in_flight(),
     })
 }
 

@@ -17,7 +17,10 @@
 //!   (`transport::clock`, docs/virtual-time.md) that scales measured
 //!   runs to p = 256+ in seconds with bit-reproducible timings.
 //! * [`collectives`] — all-reduce algorithms (recursive doubling,
-//!   binomial tree, ring) built on the transport; the SGD/AGD baselines.
+//!   binomial tree, ring) built on the transport as per-round state
+//!   machines under a non-blocking engine (`IAllreduce`:
+//!   post/progress/test/wait) with a modeled comm-progress thread on
+//!   the virtual fabric; the SGD/AGD baselines.
 //! * [`coordinator`] — the paper's contribution: the GossipGraD engine
 //!   (partner selection + pairwise mixing + rotation + ring sample
 //!   shuffle + layer-wise asynchronous exchange) and every baseline it

@@ -38,6 +38,8 @@ fn real_main() -> Result<()> {
         "lr-scaling",
         "virtual-clock",
         "layerwise",
+        "comm-thread",
+        "sync-mix",
     ])
     .map_err(anyhow::Error::msg)?;
     match args.positional.first().map(|s| s.as_str()) {
@@ -72,7 +74,11 @@ fn print_usage() {
                   numerics on the native backend)   [--fwd-ms MS]\n\
                   forward-pass share of --compute-ms   [--jitter F]\n\
                   deterministic per-(rank,step) straggler noise on the\n\
-                  virtual fabric\n\
+                  virtual fabric   [--comm-thread]  non-blocking AGD\n\
+                  collectives on a modeled comm-progress thread (rounds\n\
+                  advance at arrival instants under later backprop;\n\
+                  needs --layerwise)   [--sync-mix]  gossip blocks for\n\
+                  the current step's partner model\n\
          sweep:   train across --ranks-list 2,4,8 (other train flags apply)\n\
          sim:     --workload resnet50|googlenet|lenet3|cifarnet\n\
                   --p-list 4,8,...  --algos gossip,agd-ring,sgd-rd,ps1\n\
@@ -130,6 +136,17 @@ pub fn config_from(args: &Args) -> Result<RunConfig> {
     }
     if args.flag("layerwise") {
         cfg.layerwise = true;
+    }
+    if args.flag("comm-thread") {
+        cfg.comm_thread = true;
+    }
+    if args.flag("sync-mix") {
+        cfg.sync_mix = true;
+    }
+    // a comm thread only overlaps collectives posted mid-backprop; the
+    // monolithic schedule has nothing left to hide them under
+    if cfg.comm_thread && !cfg.layerwise {
+        bail!("--comm-thread requires --layerwise (per-layer pipelined AGD)");
     }
     cfg.straggler_jitter = args.f64_or("jitter", cfg.straggler_jitter);
     cfg.virt_compute_secs =
@@ -202,15 +219,18 @@ fn report(res: &coordinator::RunResult) {
     if let Some(acc) = res.final_accuracy {
         println!("final validation accuracy: {:.2}%", 100.0 * acc);
     }
+    // metrics line is deterministic under --virtual-clock (the CI smoke
+    // diffs two runs); wall time goes on its own line so it can be
+    // filtered out
     println!(
-        "mean step {:.2} ms | efficiency {:.1}% | overlap {:.0}% | disagreement {:.3e} | {} msgs | wall {:.1}s",
+        "mean step {:.2} ms | efficiency {:.1}% | overlap {:.0}% | disagreement {:.3e} | {} msgs",
         1e3 * res.mean_step_secs(),
         res.mean_efficiency_pct(),
         100.0 * res.mean_overlap_frac(),
         res.max_disagreement(),
         res.per_rank.iter().map(|m| m.msgs_sent).sum::<u64>(),
-        res.wall_secs,
     );
+    println!("wall {:.1}s", res.wall_secs);
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {

@@ -69,7 +69,11 @@ impl RunMetrics {
     /// another message (concurrent waits cost the rank only once);
     /// `recv_wait_secs` is exactly the blocking time paid.  1.0 when the
     /// rank received no timed communication at all — nothing was
-    /// exposed.
+    /// exposed.  Collective-internal messages are in the ledger too
+    /// (settled when the collective is harvested), so this metric is
+    /// meaningful for AGD: under `--comm-thread` the chain rounds that
+    /// advanced beneath later backprop slices show up as hidden wire
+    /// time instead of vanishing.
     pub fn overlap_frac(&self) -> f64 {
         let total = self.comm_hidden_secs + self.recv_wait_secs;
         if total <= 0.0 {

@@ -206,6 +206,58 @@ pub fn step_time(
     }
 }
 
+/// Closed-form step time of **comm-thread AGD** (the measured
+/// `--comm-thread` schedule) on the pure α–β fabric: layer ℓ's
+/// collective is posted at its grad-ready instant r_ℓ and its
+/// `rounds(p)` dependency-chained rounds advance at message-arrival
+/// instants on a dedicated progress thread, concurrent with the
+/// remaining backprop; the harvest point is when both the compute and
+/// the slowest chain have finished:
+///
+/// ```text
+///   t_step = max( t_compute, max_ℓ ( r_ℓ + rounds(p) · (α + M_ℓ·β) ) )
+/// ```
+///
+/// Unlike [`Schedule::Agd`]'s curve this carries no software-stack
+/// overheads (`call_overhead`, `ROUND_OVERHEAD`, straggler
+/// amplification) and no NIC serialization, because the virtual fabric
+/// charges pure nominal wire costs — it is the analytic twin the
+/// measured comm-thread path is asserted against (within 5%) in the
+/// Fig 10/11 and Table 7 benches.
+pub fn overlapped_agd_step_time(
+    alg: Algorithm,
+    w: &Workload,
+    p: usize,
+    cost: &CostModel,
+) -> f64 {
+    let rounds = alg.rounds(p).max(1) as f64;
+    let mut t = w.t_compute();
+    for (&r, &b) in w.grad_ready_times().iter().zip(&w.layer_bytes) {
+        let per_round_bytes = match alg {
+            Algorithm::Ring => b / p.max(1),
+            _ => b,
+        };
+        t = t.max(r + rounds * cost.nominal(per_round_bytes));
+    }
+    t
+}
+
+/// [`overlapped_agd_step_time`] as an efficiency record.
+pub fn overlapped_agd_efficiency(
+    alg: Algorithm,
+    w: &Workload,
+    p: usize,
+    cost: &CostModel,
+) -> Efficiency {
+    let t_step = overlapped_agd_step_time(alg, w, p, cost);
+    Efficiency {
+        p,
+        t_compute: w.t_compute(),
+        t_step,
+        exposed_comm: (t_step - w.t_compute()).max(0.0),
+    }
+}
+
 /// Average efficiency over a window of steps (relevant for periodic
 /// schedules whose per-step time alternates).
 pub fn avg_efficiency(
@@ -322,6 +374,50 @@ mod tests {
             100,
         );
         assert!(per.percent() >= agd.percent());
+    }
+
+    #[test]
+    fn overlapped_agd_bounds_and_shape() {
+        let w = Workload::resnet50_p100();
+        let c = ib();
+        for p in [8usize, 128, 1024] {
+            let ov = overlapped_agd_step_time(Algorithm::RecursiveDoubling, &w, p, &c);
+            // never faster than compute, never slower than the
+            // overhead-laden Schedule::Agd curve
+            assert!(ov >= w.t_compute(), "p={p}");
+            let agd = step_time(
+                Schedule::Agd(Algorithm::RecursiveDoubling),
+                &w,
+                p,
+                &c,
+                0,
+            );
+            assert!(
+                ov <= agd.t_step + 1e-12,
+                "p={p}: pure-fabric overlapped AGD ({ov}) slower than \
+                 overheaded AGD ({})",
+                agd.t_step
+            );
+        }
+        // the exposed chain grows with p once log p rounds dominate
+        let e128 =
+            overlapped_agd_efficiency(Algorithm::RecursiveDoubling, &w, 128, &c);
+        let e1024 =
+            overlapped_agd_efficiency(Algorithm::RecursiveDoubling, &w, 1024, &c);
+        assert!(e1024.percent() <= e128.percent());
+        assert!(e1024.exposed_comm >= 0.0);
+    }
+
+    #[test]
+    fn standin_workload_matches_explicit_table() {
+        let w = Workload::standin(0.002, 0.004, vec![1000, 3000]);
+        assert_eq!(w.model_bytes(), 4000);
+        assert!((w.t_compute() - 0.006).abs() < 1e-12);
+        let ready = w.grad_ready_times();
+        // bwd split 1:3 over the table
+        assert!((ready[0] - 0.003).abs() < 1e-12);
+        assert!((ready[1] - 0.006).abs() < 1e-12);
+        assert_eq!(w.call_overhead, 0.0);
     }
 
     #[test]

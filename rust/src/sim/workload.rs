@@ -124,6 +124,38 @@ impl Workload {
         }
     }
 
+    /// Ad-hoc workload over an explicit layer table (backprop order,
+    /// output layer first) with zero software-stack overhead — the
+    /// analytic twin of a *measured* virtual-clock run, whose backend
+    /// layer table generally differs from the paper networks'.  The
+    /// benches build one from `RunConfig::{virt_fwd_secs,
+    /// virt_compute_secs}` and the backend's reversed layer table to
+    /// assert measured comm-thread AGD against
+    /// [`overlapped_agd_step_time`](crate::sim::efficiency::overlapped_agd_step_time).
+    pub fn standin(t_fwd: f64, t_bwd: f64, layer_bytes: Vec<usize>) -> Workload {
+        Workload {
+            name: "standin",
+            t_fwd,
+            t_bwd,
+            layer_bytes,
+            call_overhead: 0.0,
+        }
+    }
+
+    /// [`standin`](Self::standin) for an MLP layer stack: per-layer
+    /// gradient bytes `(d_i·d_{i+1} + d_{i+1})·4` in backprop order
+    /// (output layer first) — the same table
+    /// [`NativeMlp::new`](crate::nativenet::NativeMlp::new) builds, so
+    /// benches and tests construct the analytic twin of a measured
+    /// stand-in run from one place.
+    pub fn standin_mlp(t_fwd: f64, t_bwd: f64, dims: &[usize]) -> Workload {
+        let layer_bytes = (0..dims.len() - 1)
+            .rev()
+            .map(|i| (dims[i] * dims[i + 1] + dims[i + 1]) * 4)
+            .collect();
+        Workload::standin(t_fwd, t_bwd, layer_bytes)
+    }
+
     /// CIFARNet, batch 100/device; 0.75 s/epoch at 32 devices (§7.2.1).
     pub fn cifarnet(device_speed: f64) -> Workload {
         let t = 0.040 / device_speed;
@@ -199,6 +231,14 @@ mod tests {
             assert!(ready.windows(2).all(|p| p[0] < p[1]));
             assert!((ready.last().unwrap() - w.t_compute()).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn standin_mlp_reverses_layer_table() {
+        let w = Workload::standin_mlp(0.0, 0.0, &[4, 3, 2]);
+        // fc0 = 4*3+3 = 15 params, fc1 = 3*2+2 = 8; output layer first
+        assert_eq!(w.layer_bytes, vec![8 * 4, 15 * 4]);
+        assert_eq!(w.model_bytes(), (15 + 8) * 4);
     }
 
     #[test]

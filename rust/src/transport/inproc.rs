@@ -149,6 +149,25 @@ impl Fabric {
             c.comm_hidden_ns.store(0, Ordering::Relaxed);
         }
     }
+
+    /// Messages currently queued in mailboxes (sent but never received)
+    /// — the fabric-drain invariant: a finished run must leave this at
+    /// zero, or leaked `isend`/`irecv` pairs would silently accumulate
+    /// payloads (and skew a reused fabric's accounting).
+    pub fn in_flight(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| {
+                s.mbox
+                    .lock()
+                    .unwrap()
+                    .queues
+                    .values()
+                    .map(|q| q.len())
+                    .sum::<usize>()
+            })
+            .sum()
+    }
 }
 
 /// One rank's handle onto the fabric.
@@ -219,6 +238,76 @@ impl RecvReq {
             }
         }
         false
+    }
+
+    /// Raw non-blocking harvest: pop the message as soon as it is
+    /// *queued* — even if its arrival instant lies in this rank's
+    /// logical future — returning `(payload, sent_ns, arrival_ns)` and
+    /// counting it in `msgs_recv`, but leaving the rank clock and the
+    /// exposed/hidden wire-time ledger untouched.  This is the hook for
+    /// the collective engine's modeled comm-progress thread
+    /// ([`crate::collectives::IAllreduce`]), which advances its own comm
+    /// clock from the stamps and settles the ledger only when the main
+    /// thread harvests the whole collective.  On a wall fabric the
+    /// stamps degenerate to `(0, wire_ns)`.
+    pub fn test_raw(&mut self) -> Option<(Vec<f32>, u64, u64)> {
+        if let Some(d) = self.data.take() {
+            // already harvested by a normal test(): ledger settled
+            // there, but the real stamps are gone — a virtual-mode
+            // caller mixing accounted and raw harvests on one request
+            // would feed zeros into a comm clock, which no caller does
+            debug_assert!(
+                !self.fabric.clock.is_virtual(),
+                "raw harvest after an accounted test() on a virtual fabric"
+            );
+            return Some((d, 0, 0));
+        }
+        let slot = &self.fabric.slots[self.rank];
+        let mut mb = slot.mbox.lock().unwrap();
+        self.pop_raw(&mut mb)
+    }
+
+    /// Shared pop for the raw harvests: dequeue under the held mailbox
+    /// lock, count the receive, normalize the stamps.
+    fn pop_raw(&self, mb: &mut Mailbox) -> Option<(Vec<f32>, u64, u64)> {
+        let (stamp, data) = mb.queues.get_mut(&self.key)?.pop_front()?;
+        self.fabric.counters[self.rank]
+            .msgs_recv
+            .fetch_add(1, Ordering::Relaxed);
+        Some(match stamp {
+            Stamp::Virt { sent_ns, at_ns } => (data, sent_ns, at_ns),
+            Stamp::Wall { sent, at } => (data, 0, (at - sent).as_nanos() as u64),
+        })
+    }
+
+    /// Blocking counterpart of [`test_raw`]: parks on the mailbox
+    /// condvar until the payload is queued, then pops it without any
+    /// clock or ledger accounting.  Also used for end-of-run cleanup
+    /// drains (e.g. the sample-shuffle ring) that happen after the last
+    /// recorded step and must not perturb the timing metrics.
+    pub fn wait_raw(mut self) -> (Vec<f32>, u64, u64) {
+        if let Some(hit) = self.test_raw() {
+            return hit;
+        }
+        let slot = &self.fabric.slots[self.rank];
+        let mut mb = slot.mbox.lock().unwrap();
+        loop {
+            if let Some(hit) = self.pop_raw(&mut mb) {
+                return hit;
+            }
+            // wall fabrics use a timeout poll like wait_wall so a sender
+            // racing this drain cannot strand us; virtual fabrics never
+            // time their waits, so a plain park is safe and deterministic
+            mb = match self.fabric.clock.mode() {
+                ClockMode::Wall => {
+                    slot.cv
+                        .wait_timeout(mb, Duration::from_millis(50))
+                        .unwrap()
+                        .0
+                }
+                ClockMode::Virtual => slot.cv.wait(mb).unwrap(),
+            };
+        }
     }
 
     /// Blocking wait (MPI_Wait); returns the payload and records the
@@ -409,6 +498,24 @@ impl Endpoint {
     /// layer's grad-ready instant, so the arrival stamp is
     /// `grad_ready + α + M·β` exactly as in the closed-form simulator.
     pub fn isend(&self, dst: usize, tag: Tag, data: Vec<f32>) -> SendReq {
+        let send_ns = self.fabric.clock.now_ns(self.rank);
+        self.isend_at(dst, tag, data, send_ns)
+    }
+
+    /// Non-blocking send stamped at an explicit logical instant
+    /// (virtual mode).  The collective engine's modeled comm-progress
+    /// thread posts round k+1's send at round k's *arrival* instant,
+    /// which may lie ahead of this rank's main clock while later
+    /// compute slices are still being charged — `isend` would stamp the
+    /// main clock and break that timeline.  Wall mode ignores `send_ns`
+    /// and stamps the real now.
+    pub fn isend_at(
+        &self,
+        dst: usize,
+        tag: Tag,
+        data: Vec<f32>,
+        send_ns: u64,
+    ) -> SendReq {
         let bytes = data.len() * 4;
         let stamp = match self.fabric.clock.mode() {
             ClockMode::Wall => {
@@ -421,10 +528,9 @@ impl Endpoint {
             }
             ClockMode::Virtual => {
                 let cost = Clock::secs_to_ns(self.fabric.cost.nominal(bytes));
-                let sent_ns = self.fabric.clock.now_ns(self.rank);
                 Stamp::Virt {
-                    sent_ns,
-                    at_ns: sent_ns + cost,
+                    sent_ns: send_ns,
+                    at_ns: send_ns + cost,
                 }
             }
         };
@@ -710,6 +816,76 @@ mod tests {
         assert_eq!(got, vec![7.0]);
         // arrival = sender now (3ms) + alpha (1ms)
         assert_eq!(f.clock().now_ns(1), 4_000_000);
+    }
+
+    #[test]
+    fn raw_harvest_skips_clock_and_ledger() {
+        // test_raw pops a message whose arrival lies in the logical
+        // future, returns its stamps, and leaves clock + ledger alone
+        let f = Fabric::new_virtual(2, CostModel::new(10e-3, 0.0, 0.0, 0));
+        let a = f.endpoint(0);
+        a.advance(2e-3);
+        a.isend(1, Tag::MODEL, vec![1.0]);
+        let b = f.endpoint(1);
+        let mut r = b.irecv(0, Tag::MODEL);
+        let (data, sent_ns, at_ns) = loop {
+            // queued-not-arrived: a normal test() would refuse it
+            if let Some(hit) = r.test_raw() {
+                break hit;
+            }
+            thread::yield_now();
+        };
+        assert_eq!(data, vec![1.0]);
+        assert_eq!(sent_ns, 2_000_000);
+        assert_eq!(at_ns, 12_000_000);
+        assert_eq!(f.clock().now_ns(1), 0, "receiver clock untouched");
+        let c = f.counters(1);
+        assert_eq!(c.recv_wait_ns.load(Ordering::Relaxed), 0);
+        assert_eq!(c.comm_hidden_ns.load(Ordering::Relaxed), 0);
+        assert_eq!(c.msgs_recv.load(Ordering::Relaxed), 1);
+        assert_eq!(f.in_flight(), 0);
+    }
+
+    #[test]
+    fn wait_raw_blocks_until_queued_only() {
+        let f = Fabric::new_virtual(2, CostModel::new(5e-3, 0.0, 0.0, 0));
+        let b = f.endpoint(1);
+        let h = thread::spawn(move || b.irecv(0, Tag::MODEL).wait_raw());
+        thread::sleep(Duration::from_millis(10));
+        f.endpoint(0).isend(1, Tag::MODEL, vec![3.0]);
+        let (data, sent_ns, at_ns) = h.join().unwrap();
+        assert_eq!(data, vec![3.0]);
+        assert_eq!((sent_ns, at_ns), (0, 5_000_000));
+        assert_eq!(f.clock().now_ns(1), 0, "no clock jump on raw wait");
+        assert_eq!(f.counters(1).recv_wait_ns.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn isend_at_stamps_explicit_instant() {
+        let f = Fabric::new_virtual(2, CostModel::new(1e-3, 0.0, 0.0, 0));
+        let a = f.endpoint(0);
+        // sender main clock is 0, but the comm thread posts at 7 ms
+        a.isend_at(1, Tag::MODEL, vec![9.0], 7_000_000);
+        let mut r = f.endpoint(1).irecv(0, Tag::MODEL);
+        let (_, sent_ns, at_ns) = loop {
+            if let Some(hit) = r.test_raw() {
+                break hit;
+            }
+            thread::yield_now();
+        };
+        assert_eq!((sent_ns, at_ns), (7_000_000, 8_000_000));
+    }
+
+    #[test]
+    fn in_flight_counts_queued_messages() {
+        let f = Fabric::new(3, CostModel::zero());
+        f.endpoint(0).isend(1, Tag::MODEL, vec![0.0]);
+        f.endpoint(0).isend(2, Tag::MODEL, vec![0.0]);
+        assert_eq!(f.in_flight(), 2);
+        let _ = f.endpoint(1).recv(0, Tag::MODEL);
+        assert_eq!(f.in_flight(), 1);
+        let _ = f.endpoint(2).recv(0, Tag::MODEL);
+        assert_eq!(f.in_flight(), 0);
     }
 
     #[test]

@@ -37,6 +37,15 @@
 //! [`Endpoint::mark`] / [`Endpoint::elapsed`] /
 //! [`Endpoint::comm_wait_since`], which the coordinator uses in place of
 //! raw `Instant::now()` arithmetic.
+//!
+//! The non-blocking collective engine
+//! ([`crate::collectives::IAllreduce`]) additionally uses the *raw*
+//! primitives — [`Endpoint::isend_at`] (send stamped at an explicit
+//! logical instant) and [`RecvReq::test_raw`] / [`RecvReq::wait_raw`]
+//! (harvest as soon as queued, bypassing clock and ledger) — to model a
+//! dedicated communication-progress thread whose rounds advance at
+//! message-arrival instants independent of the caller's clock; the
+//! hidden/exposed ledger is settled when the collective is harvested.
 
 pub mod clock;
 pub mod inproc;

@@ -1,0 +1,98 @@
+//! Fabric-drain invariant: after a full run of ANY algorithm, no
+//! message may remain queued on the fabric.  Leaked `isend`/`irecv`
+//! pairs (an unconsumed final-step exchange, an undrained sample-ring
+//! refill, a collective abandoned mid-chain) would silently strand
+//! payloads in mailboxes — invisible to the numerics, poisonous to any
+//! accounting that reuses the fabric.
+//!
+//! The grid covers every algorithm × layerwise × sync_mix at worker
+//! counts exercising the edge topologies (p = 2 pairs, p = 3 non-power-
+//! of-two fold/ragged-ring, p = 8 full trees), plus the comm-thread AGD
+//! engine path.
+
+use gossipgrad::config::{Algo, RunConfig};
+use gossipgrad::coordinator::trainer::run_with_backend;
+use gossipgrad::nativenet::NativeMlp;
+use gossipgrad::sim::Workload;
+use std::sync::Arc;
+
+fn tiny_backend() -> gossipgrad::coordinator::worker::Backend {
+    Arc::new(NativeMlp::new(vec![784, 16, 10], 16, 0))
+}
+
+fn vcfg(algo: Algo, ranks: usize, steps: usize) -> RunConfig {
+    let mut c = RunConfig {
+        model: "mlp".into(),
+        algo,
+        ranks,
+        steps,
+        rows_per_rank: 32,
+        use_artifacts: false,
+        eval_every: 0,
+        seed: 42,
+        ..Default::default()
+    };
+    c.virtualize(&Workload::lenet3(4.0), 200e-6, 1.0 / 0.5e9);
+    c
+}
+
+#[test]
+fn no_in_flight_messages_after_any_schedule() {
+    for algo in [Algo::Gossip, Algo::Agd, Algo::PeriodicAgd, Algo::ParamServer] {
+        for layerwise in [false, true] {
+            for sync_mix in [false, true] {
+                for p in [2usize, 3, 8] {
+                    let mut c = vcfg(algo, p, 4);
+                    c.layerwise = layerwise;
+                    c.sync_mix = sync_mix;
+                    let res = run_with_backend(&c, tiny_backend())
+                        .unwrap_or_else(|e| {
+                            panic!("{algo:?} p={p} lw={layerwise} sm={sync_mix}: {e}")
+                        });
+                    assert_eq!(
+                        res.in_flight_msgs, 0,
+                        "{algo:?} p={p} layerwise={layerwise} \
+                         sync_mix={sync_mix}: leaked messages on the fabric"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn no_in_flight_messages_after_comm_thread_agd() {
+    for p in [2usize, 3, 8] {
+        let mut c = vcfg(Algo::Agd, p, 4);
+        c.layerwise = true;
+        c.comm_thread = true;
+        let res = run_with_backend(&c, tiny_backend()).unwrap();
+        assert_eq!(
+            res.in_flight_msgs, 0,
+            "comm-thread AGD p={p}: leaked collective-internal messages"
+        );
+    }
+}
+
+#[test]
+fn no_in_flight_messages_for_remaining_gossip_variants() {
+    // random gossip's unbalanced blocking drain and the hypercube
+    // topology (power-of-two only) have their own send/recv pairings
+    for (algo, ps) in [
+        (Algo::GossipRandom, vec![2usize, 3, 8]),
+        (Algo::GossipHypercube, vec![2usize, 8]),
+        (Algo::SgdSync, vec![2usize, 3, 8]),
+    ] {
+        for p in ps {
+            for layerwise in [false, true] {
+                let mut c = vcfg(algo, p, 4);
+                c.layerwise = layerwise;
+                let res = run_with_backend(&c, tiny_backend()).unwrap();
+                assert_eq!(
+                    res.in_flight_msgs, 0,
+                    "{algo:?} p={p} layerwise={layerwise}: leaked messages"
+                );
+            }
+        }
+    }
+}
