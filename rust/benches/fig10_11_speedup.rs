@@ -7,26 +7,28 @@
 //! Three layers of evidence:
 //! 1. simulator sweep at the paper's device speeds (P100 ≈ 4x KNL for
 //!    these nets) — regenerates the figures' curves;
-//! 2. a real measured run (threads + native backend + α–β fabric) at a
+//! 2. a real measured grid (threads + native backend + α–β fabric) at a
 //!    few rank counts to confirm the simulated ordering holds in running
 //!    code;
-//! 3. a **virtual-clock** measured sweep (deterministic discrete-event
+//! 3. a **virtual-clock** measured grid (deterministic discrete-event
 //!    timing, docs/virtual-time.md) that pushes the measured path to
 //!    p = 256 — rank counts the wall-clock fabric cannot reach — in
 //!    seconds of real time, with bit-reproducible step timings.
+//!
+//! All measured sections run on the experiment engine (`exp::Grid` +
+//! `exp::Engine`): the grid is declared once (`algo × p`, or
+//! `comm_thread × p`) and the engine owns fabric/dataset/backend setup.
 //!
 //! Expected shape: speedup > 1 everywhere, increasing with p, larger on
 //! the faster device (P100) — the paper reports ~1.9x for MNIST at 32.
 
 use gossipgrad::collectives::Algorithm;
 use gossipgrad::config::{Algo, RunConfig};
-use gossipgrad::coordinator::trainer::run_with_backend;
-use gossipgrad::nativenet::NativeMlp;
+use gossipgrad::exp::{Engine, Grid};
 use gossipgrad::sim::efficiency::{avg_efficiency, overlapped_agd_step_time};
 use gossipgrad::sim::{Schedule, Workload};
 use gossipgrad::transport::CostModel;
 use gossipgrad::util::bench::Table;
-use std::sync::Arc;
 
 fn sim_sweep(name: &str, mk: &dyn Fn(f64) -> Workload) -> (f64, f64) {
     let cost = CostModel::ib_edr(0);
@@ -59,36 +61,35 @@ fn sim_sweep(name: &str, mk: &dyn Fn(f64) -> Workload) -> (f64, f64) {
 }
 
 fn real_runs() {
+    let base = RunConfig {
+        model: "mlp".into(),
+        steps: 20,
+        use_artifacts: false, // native backend: stable timing
+        rows_per_rank: 256,
+        // slow fabric so the schedules separate measurably
+        net_alpha: 200e-6,
+        net_beta: 1.0 / 0.5e9,
+        ..Default::default()
+    };
+    let ranks = [2usize, 4, 8];
+    let grid = Grid::new(base).algos(&[Algo::Agd, Algo::Gossip]).ranks(&ranks);
+    // wall-clock timing: one scenario at a time, or they'd contend
+    let sweep = Engine::with_threads(1).run(&grid).expect("measured grid");
     let mut t = Table::new(&["ranks", "agd step ms", "gossip step ms", "speedup"]);
-    for ranks in [2usize, 4, 8] {
-        let mut step_ms = [0.0f64; 2];
-        for (i, algo) in [Algo::Agd, Algo::Gossip].into_iter().enumerate() {
-            let cfg = RunConfig {
-                model: "mlp".into(),
-                algo,
-                ranks,
-                steps: 20,
-                use_artifacts: false, // native backend: stable timing
-                rows_per_rank: 256,
-                // slow fabric so the schedules separate measurably
-                net_alpha: 200e-6,
-                net_beta: 1.0 / 0.5e9,
-                ..Default::default()
-            };
-            let res = gossipgrad::coordinator::run(&cfg).expect("run");
-            step_ms[i] = 1e3 * res.mean_step_secs();
-        }
+    for &p in &ranks {
+        let agd = sweep.get("agd", |c| c.algo == Algo::Agd && c.ranks == p);
+        let g = sweep.get("gossip", |c| c.algo == Algo::Gossip && c.ranks == p);
         t.row(&[
-            ranks.to_string(),
-            format!("{:.2}", step_ms[0]),
-            format!("{:.2}", step_ms[1]),
-            format!("{:.2}", step_ms[0] / step_ms[1]),
+            p.to_string(),
+            format!("{:.2}", 1e3 * agd.mean_step_secs),
+            format!("{:.2}", 1e3 * g.mean_step_secs),
+            format!("{:.2}", agd.mean_step_secs / g.mean_step_secs),
         ]);
     }
     t.print("measured (threads + fabric, MLP/native): AGD vs GossipGraD");
 }
 
-/// Virtual-clock measured sweep: same coordinator + transport code as
+/// Virtual-clock measured grid: same coordinator + transport code as
 /// `real_runs`, but with per-rank logical clocks charging the LeNet3
 /// compute model through the **layer-wise pipeline** (per-layer backprop
 /// slices, per-layer sends at grad-ready instants).  Timing is
@@ -97,6 +98,21 @@ fn real_runs() {
 /// measured fraction of received wire time hidden under compute.
 fn virtual_runs() {
     let w = Workload::lenet3(4.0);
+    let mut base = RunConfig {
+        model: "mlp-small".into(),
+        ranks: 64,
+        steps: 8,
+        use_artifacts: false,
+        rows_per_rank: 32,
+        layerwise: true, // per-layer pipelined schedule
+        ..Default::default()
+    };
+    // slow fabric so the schedules separate measurably (matches real_runs)
+    base.virtualize(&w, 200e-6, 1.0 / 0.5e9);
+    let ranks = [64usize, 128, 256];
+    let grid = Grid::new(base).algos(&[Algo::Agd, Algo::Gossip]).ranks(&ranks);
+    let t0 = std::time::Instant::now();
+    let sweep = Engine::default().run(&grid).expect("virtual grid");
     let mut t = Table::new(&[
         "ranks",
         "agd step ms",
@@ -108,50 +124,24 @@ fn virtual_runs() {
     ]);
     let mut last_speedup = 0.0f64;
     let mut last_overlap = 0.0f64;
-    let t0 = std::time::Instant::now();
-    for ranks in [64usize, 128, 256] {
-        let mut step_ms = [0.0f64; 2];
-        let mut overlap = [0.0f64; 2];
-        let mut eff = 0.0f64;
-        for (i, algo) in [Algo::Agd, Algo::Gossip].into_iter().enumerate() {
-            let mut cfg = RunConfig {
-                model: "mlp".into(),
-                algo,
-                ranks,
-                steps: 8,
-                use_artifacts: false,
-                rows_per_rank: 32,
-                layerwise: true, // per-layer pipelined schedule
-                // slow fabric so the schedules separate measurably
-                // (matches real_runs)
-                ..Default::default()
-            };
-            cfg.virtualize(&w, 200e-6, 1.0 / 0.5e9);
-            // small native net: wall cost is the real compute, virtual
-            // timing comes from the workload model
-            let backend = Arc::new(NativeMlp::new(vec![784, 32, 10], 16, 0));
-            let res = run_with_backend(&cfg, backend).expect("virtual run");
-            step_ms[i] = 1e3 * res.mean_step_secs();
-            overlap[i] = 100.0 * res.mean_overlap_frac();
-            if algo == Algo::Gossip {
-                eff = res.mean_efficiency_pct();
-            }
-        }
-        last_speedup = step_ms[0] / step_ms[1];
-        last_overlap = overlap[1];
+    for &p in &ranks {
+        let agd = sweep.get("agd", |c| c.algo == Algo::Agd && c.ranks == p);
+        let g = sweep.get("gossip", |c| c.algo == Algo::Gossip && c.ranks == p);
+        last_speedup = agd.mean_step_secs / g.mean_step_secs;
+        last_overlap = 100.0 * g.mean_overlap_frac;
         t.row(&[
-            ranks.to_string(),
-            format!("{:.2}", step_ms[0]),
-            format!("{:.2}", step_ms[1]),
+            p.to_string(),
+            format!("{:.2}", 1e3 * agd.mean_step_secs),
+            format!("{:.2}", 1e3 * g.mean_step_secs),
             format!("{:.2}", last_speedup),
-            format!("{eff:.1}"),
-            format!("{:.1}", overlap[1]),
-            format!("{:.1}", overlap[0]),
+            format!("{:.1}", g.mean_efficiency_pct),
+            format!("{:.1}", 100.0 * g.mean_overlap_frac),
+            format!("{:.1}", 100.0 * agd.mean_overlap_frac),
         ]);
     }
     t.print(
         "measured on the VIRTUAL-CLOCK fabric, layer-wise pipeline \
-         (deterministic, p to 256)",
+         (deterministic, p to 256, experiment engine)",
     );
     assert!(
         last_overlap > 50.0,
@@ -175,33 +165,27 @@ fn virtual_runs() {
 /// progress thread would hide them.
 fn comm_thread_runs() {
     let w = Workload::lenet3(4.0);
-    let dims = vec![784usize, 32, 10];
-    let mk = |p: usize, comm_thread: bool| {
-        let mut cfg = RunConfig {
-            model: "mlp".into(),
-            algo: Algo::Agd,
-            ranks: p,
-            steps: 6,
-            use_artifacts: false,
-            rows_per_rank: 32,
-            sample_shuffle: false,
-            layerwise: true,
-            comm_thread,
-            ..Default::default()
-        };
-        cfg.virtualize(&w, 200e-6, 1.0 / 0.5e9);
-        cfg
+    let dims = [784usize, 32, 10]; // = the mlp-small backend's stack
+    let mut base = RunConfig {
+        model: "mlp-small".into(),
+        algo: Algo::Agd,
+        steps: 6,
+        use_artifacts: false,
+        rows_per_rank: 32,
+        sample_shuffle: false,
+        layerwise: true,
+        ..Default::default()
     };
-    let run = |p: usize, comm_thread: bool| {
-        let backend = Arc::new(NativeMlp::new(dims.clone(), 16, 0));
-        run_with_backend(&mk(p, comm_thread), backend).expect("virtual run")
-    };
-    let cfg0 = mk(2, true);
+    base.virtualize(&w, 200e-6, 1.0 / 0.5e9);
     let standin = Workload::standin_mlp(
-        cfg0.virt_fwd_secs,
-        cfg0.virt_compute_secs - cfg0.virt_fwd_secs,
+        base.virt_fwd_secs,
+        base.virt_compute_secs - base.virt_fwd_secs,
         &dims,
     );
+    let cost = base.cost_model();
+    let ranks = [64usize, 256, 1024];
+    let grid = Grid::new(base).ranks(&ranks).comm_threads(&[false, true]);
+    let sweep = Engine::default().run(&grid).expect("comm-thread grid");
     let mut t = Table::new(&[
         "ranks",
         "blocking step ms",
@@ -210,37 +194,33 @@ fn comm_thread_runs() {
         "blocking overlap %",
         "comm-thread overlap %",
     ]);
-    for p in [64usize, 256, 1024] {
-        let blocking = run(p, false);
-        let ct = run(p, true);
-        let analytic = overlapped_agd_step_time(
-            Algorithm::RecursiveDoubling,
-            &standin,
-            p,
-            &cfg0.cost_model(),
-        );
+    for &p in &ranks {
+        let blocking = sweep.get("blocking", |c| !c.comm_thread && c.ranks == p);
+        let ct = sweep.get("comm-thread", |c| c.comm_thread && c.ranks == p);
+        let analytic =
+            overlapped_agd_step_time(Algorithm::RecursiveDoubling, &standin, p, &cost);
         assert_eq!(
-            blocking.final_params, ct.final_params,
+            blocking.param_hash, ct.param_hash,
             "p={p}: comm thread changed AGD numerics"
         );
         assert!(
-            ct.mean_overlap_frac() > blocking.mean_overlap_frac(),
+            ct.mean_overlap_frac > blocking.mean_overlap_frac,
             "p={p}: comm-thread overlap {:.4} !> blocking {:.4}",
-            ct.mean_overlap_frac(),
-            blocking.mean_overlap_frac()
+            ct.mean_overlap_frac,
+            blocking.mean_overlap_frac
         );
-        let got = ct.mean_step_secs();
+        let got = ct.mean_step_secs;
         assert!(
             (got - analytic).abs() / analytic < 0.05,
             "p={p}: measured comm-thread AGD {got}s vs closed form {analytic}s"
         );
         t.row(&[
             p.to_string(),
-            format!("{:.2}", 1e3 * blocking.mean_step_secs()),
+            format!("{:.2}", 1e3 * blocking.mean_step_secs),
             format!("{:.2}", 1e3 * got),
             format!("{:.2}", 1e3 * analytic),
-            format!("{:.1}", 100.0 * blocking.mean_overlap_frac()),
-            format!("{:.1}", 100.0 * ct.mean_overlap_frac()),
+            format!("{:.1}", 100.0 * blocking.mean_overlap_frac),
+            format!("{:.1}", 100.0 * ct.mean_overlap_frac),
         ]);
     }
     t.print(

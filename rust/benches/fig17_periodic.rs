@@ -5,15 +5,20 @@
 //! where the periodic baseline is hyperparameter-fragile.
 //!
 //!     cargo bench --bench fig17_periodic
+//!
+//! The measured section runs on the experiment engine (`exp::Grid` +
+//! `exp::Engine`): the algo axis is declared once and the engine owns
+//! fabric/dataset/backend setup.  A second grid mechanizes the figure's
+//! *trade-off* as a gossip-period autotune: largest period within 2% of
+//! peak throughput whose consensus still shrinks vs the no-mixing
+//! reference.
 
 use gossipgrad::collectives::Algorithm;
 use gossipgrad::config::{Algo, RunConfig};
-use gossipgrad::coordinator::trainer::run_with_backend;
-use gossipgrad::nativenet::NativeMlp;
+use gossipgrad::exp::{autotune, Engine, Grid};
 use gossipgrad::sim::{efficiency::avg_efficiency, Schedule, Workload};
 use gossipgrad::transport::CostModel;
 use gossipgrad::util::bench::Table;
-use std::sync::Arc;
 
 fn main() {
     // --- simulated sweep (the figure's x-axis goes to 32) ------------
@@ -59,29 +64,75 @@ fn main() {
     );
     assert!(at32.0 >= at32.1 * 0.98);
 
-    // --- measured run (virtual clock: deterministic, host-independent,
-    // and scalable to the figure's larger rank counts) -----------------
+    // --- measured run on the experiment engine (virtual clock:
+    // deterministic, host-independent, scalable) ----------------------
+    let mut base = RunConfig {
+        model: "mlp-small".into(),
+        algo: Algo::Gossip,
+        ranks: 32,
+        steps: 24,
+        use_artifacts: false,
+        rows_per_rank: 32,
+        ..Default::default()
+    };
+    base.virtualize(&w, 200e-6, 1.0 / 0.5e9);
+    let grid = Grid::new(base.clone())
+        .algos(&[Algo::Gossip, Algo::PeriodicAgd, Algo::Agd]);
+    // one engine for the measured grid *and* the autotune below: its
+    // in-memory memo hands the autotuner the period-1 gossip scenario
+    // (same config) without a re-run
+    let engine = Engine::default();
+    let sweep = engine.run(&grid).expect("measured sweep");
     let mut m = Table::new(&["algo", "step ms (simulated)", "msgs/rank/step"]);
-    for algo in [Algo::Gossip, Algo::PeriodicAgd, Algo::Agd] {
-        let mut cfg = RunConfig {
-            model: "mlp".into(),
-            algo,
-            ranks: 32,
-            steps: 24,
-            use_artifacts: false,
-            rows_per_rank: 32,
-            ..Default::default()
-        };
-        cfg.virtualize(&w, 200e-6, 1.0 / 0.5e9);
-        let backend = Arc::new(NativeMlp::new(vec![784, 32, 10], 16, 0));
-        let res = run_with_backend(&cfg, backend).expect("run");
-        let msgs = res.per_rank.iter().map(|r| r.msgs_sent).sum::<u64>() as f64
-            / (cfg.ranks * cfg.steps) as f64;
+    for r in &sweep.reports {
         m.row(&[
-            algo.name().to_string(),
-            format!("{:.2}", 1e3 * res.mean_step_secs()),
-            format!("{msgs:.1}"),
+            r.config.algo.name().to_string(),
+            format!("{:.2}", 1e3 * r.mean_step_secs),
+            format!("{:.1}", r.msgs_per_rank_step()),
         ]);
     }
-    m.print("measured (32 ranks, MLP/native, virtual-clock fabric)");
+    m.print("measured (32 ranks, mlp-small/native, virtual-clock fabric, experiment engine)");
+
+    // --- the figure's trade-off, mechanized: gossip-period autotune --
+    let periods = [1usize, 2, 4, 8];
+    let tuned = autotune::autotune_gossip_period(
+        &engine,
+        &base,
+        &periods,
+        autotune::AutotuneParams::default(),
+    )
+    .expect("autotune");
+    let mut a = Table::new(&["period", "steps/s", "disagreement", "fast", "mixes"]);
+    for c in &tuned.candidates {
+        a.row(&[
+            c.period.to_string(),
+            format!("{:.2}", c.steps_per_sec),
+            format!("{:.3e}", c.disagreement),
+            (if c.fast_enough { "y" } else { "n" }).to_string(),
+            (if c.consensus_shrinks { "y" } else { "n" }).to_string(),
+        ]);
+    }
+    a.print(&format!(
+        "gossip-period autotune @32 (peak {:.2} steps/s, no-mix drift {:.3e})",
+        tuned.peak_steps_per_sec, tuned.no_mix_disagreement
+    ));
+    assert_eq!(tuned.candidates.len(), periods.len());
+    assert!(
+        tuned.no_mix_disagreement > 0.0,
+        "independent SGD on distinct shards must drift"
+    );
+    // every-step mixing is the consensus gold standard: it must qualify
+    let c1 = &tuned.candidates[0];
+    assert!(
+        c1.consensus_shrinks,
+        "period 1 disagreement {:.3e} !< half of no-mix drift {:.3e}",
+        c1.disagreement, tuned.no_mix_disagreement
+    );
+    match tuned.chosen_period {
+        Some(p) => {
+            assert!(periods.contains(&p));
+            println!("chosen gossip_period = {p}");
+        }
+        None => println!("no period passed both gates (candidates above)"),
+    }
 }

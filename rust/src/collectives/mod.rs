@@ -60,6 +60,16 @@ impl Algorithm {
         }
     }
 
+    /// Inverse of [`name`](Self::name), plus the short CLI aliases.
+    pub fn parse(s: &str) -> Result<Algorithm, String> {
+        Ok(match s {
+            "recursive-doubling" | "rd" => Algorithm::RecursiveDoubling,
+            "binomial-tree" | "tree" => Algorithm::BinomialTree,
+            "ring" => Algorithm::Ring,
+            other => return Err(format!("unknown allreduce {other:?}")),
+        })
+    }
+
     /// Number of communication rounds on the critical path for `p` ranks
     /// — the Θ(log p) (or 2(p−1)) terms of Table 1 / §3.1.
     pub fn rounds(self, p: usize) -> usize {

@@ -1,0 +1,250 @@
+//! Shared CLI → [`RunConfig`] construction: one `args → RunConfig`
+//! helper used by the `train` and `sweep` subcommands (and any future
+//! entry point), so every config field is settable from the command
+//! line in exactly one place instead of per-subcommand copies.
+//!
+//! Layering: `--config file.json` loads a preset, CLI keys override it,
+//! `--workload NAME` virtualizes onto a calibrated compute model, and
+//! explicit `--compute-ms`/`--fwd-ms` override the workload's numbers.
+
+use super::{Algo, LrSchedule, RunConfig};
+use crate::collectives::Algorithm;
+use crate::sim::Workload;
+use crate::util::args::Args;
+
+use anyhow::{bail, Context, Result};
+
+/// Boolean flags (no value token) recognized by the CLI.  Pass this to
+/// [`Args::from_env`] so `--layerwise` etc. don't swallow the next
+/// token.
+pub const FLAGS: &[&str] = &[
+    "no-rotation",
+    "no-shuffle",
+    "native",
+    "lr-scaling",
+    "virtual-clock",
+    "layerwise",
+    "comm-thread",
+    "sync-mix",
+    "autotune-period",
+];
+
+/// Build a [`RunConfig`] from `--config` (optional preset) + CLI
+/// overrides.  Covers every `RunConfig` field:
+///
+/// | field | CLI |
+/// |---|---|
+/// | `model`, `algo`, `allreduce` | `--model`, `--algo`, `--allreduce` |
+/// | `ranks`, `steps`, `lr` | `--ranks`, `--steps`, `--lr` |
+/// | `lr_schedule` | `--lr-step-every N --lr-step-gamma G` |
+/// | `krizhevsky_lr_scaling` | `--lr-scaling` |
+/// | `rotation`, `sample_shuffle` | `--no-rotation`, `--no-shuffle` |
+/// | `gossip_period`, `seed` | `--gossip-period`, `--seed` |
+/// | `rows_per_rank`, `val_rows`, `eval_every` | same, dashed |
+/// | `net_alpha`, `net_beta`, `net_noise` | `--alpha`, `--beta-gbps`, `--noise` |
+/// | `use_artifacts`, `artifacts_dir` | `--native`, `--artifacts-dir` |
+/// | `ps_servers` | `--ps-servers` |
+/// | `resume_from` | `--resume DIR` |
+/// | `virtual_clock`, `virt_compute_secs`, `virt_fwd_secs` | `--virtual-clock`, `--compute-ms`, `--fwd-ms` (or `--workload NAME [--device-speed F]`, which implies the noiseless virtual fabric and rejects a nonzero `--noise`) |
+/// | `straggler_jitter` | `--jitter` |
+/// | `virt_ps_agg_secs` | `--ps-agg-ms` |
+/// | `layerwise`, `comm_thread`, `sync_mix` | flags of the same name |
+pub fn from_args(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::load(path).map_err(anyhow::Error::msg)?,
+        None => RunConfig::default(),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(a) = args.get("algo") {
+        cfg.algo = Algo::parse(a).map_err(anyhow::Error::msg)?;
+    }
+    if let Some(a) = args.get("allreduce") {
+        cfg.allreduce = Algorithm::parse(a).map_err(anyhow::Error::msg)?;
+    }
+    cfg.ranks = args.usize_or("ranks", cfg.ranks);
+    cfg.steps = args.usize_or("steps", cfg.steps);
+    cfg.lr = args.f64_or("lr", cfg.lr);
+    cfg.seed = args.usize_or("seed", cfg.seed as usize) as u64;
+    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every);
+    cfg.rows_per_rank = args.usize_or("rows-per-rank", cfg.rows_per_rank);
+    cfg.val_rows = args.usize_or("val-rows", cfg.val_rows);
+    cfg.gossip_period = args.usize_or("gossip-period", cfg.gossip_period);
+    cfg.ps_servers = args.usize_or("ps-servers", cfg.ps_servers);
+    if let Some(every) = args.get("lr-step-every") {
+        let every: usize = every.parse().context("--lr-step-every")?;
+        let gamma = args.f64_or("lr-step-gamma", 0.1);
+        cfg.lr_schedule = LrSchedule::Step { every, gamma };
+    }
+    cfg.net_alpha = args.f64_or("alpha", cfg.net_alpha);
+    if let Some(g) = args.get("beta-gbps") {
+        let gbps: f64 = g.parse().context("--beta-gbps")?;
+        cfg.net_beta = 1.0 / (gbps * 1e9);
+    }
+    cfg.net_noise = args.f64_or("noise", cfg.net_noise);
+    if args.flag("no-rotation") {
+        cfg.rotation = false;
+    }
+    if args.flag("no-shuffle") {
+        cfg.sample_shuffle = false;
+    }
+    if args.flag("native") {
+        cfg.use_artifacts = false;
+    }
+    if args.flag("lr-scaling") {
+        cfg.krizhevsky_lr_scaling = true;
+    }
+    if args.flag("virtual-clock") {
+        cfg.virtual_clock = true;
+    }
+    if args.flag("layerwise") {
+        cfg.layerwise = true;
+    }
+    if args.flag("comm-thread") {
+        cfg.comm_thread = true;
+    }
+    if args.flag("sync-mix") {
+        cfg.sync_mix = true;
+    }
+    // a comm thread only overlaps collectives posted mid-backprop; the
+    // monolithic schedule has nothing left to hide them under
+    if cfg.comm_thread && !cfg.layerwise {
+        bail!("--comm-thread requires --layerwise (per-layer pipelined AGD)");
+    }
+    cfg.straggler_jitter = args.f64_or("jitter", cfg.straggler_jitter);
+    // `--workload NAME` virtualizes onto a calibrated compute model
+    // (per-step compute, forward share, PS aggregation cost) using the
+    // α–β parsed above; explicit --compute-ms / --fwd-ms still override.
+    if let Some(name) = args.get("workload") {
+        // virtualize() zeroes net_noise by construction (the virtual
+        // fabric charges nominal, deterministic wire costs) — refuse a
+        // nonzero noise rather than silently dropping it
+        if cfg.net_noise != 0.0 {
+            bail!(
+                "--workload implies the deterministic virtual fabric, \
+                 which ignores wire noise — remove --noise (or the \
+                 preset's net_noise)"
+            );
+        }
+        let speed = args.f64_or("device-speed", 1.0);
+        let w = Workload::by_name(name, speed)
+            .ok_or_else(|| anyhow::anyhow!("unknown workload {name:?}"))?;
+        cfg.virtualize(&w, cfg.net_alpha, cfg.net_beta);
+    }
+    cfg.virt_compute_secs =
+        args.f64_or("compute-ms", cfg.virt_compute_secs * 1e3) * 1e-3;
+    cfg.virt_fwd_secs = args.f64_or("fwd-ms", cfg.virt_fwd_secs * 1e3) * 1e-3;
+    cfg.virt_ps_agg_secs =
+        args.f64_or("ps-agg-ms", cfg.virt_ps_agg_secs * 1e3) * 1e-3;
+    // A virtual run with no compute charge degenerates to pure exposed
+    // wait (0% efficiency, meaningless step times) — refuse it loudly.
+    if cfg.virtual_clock && cfg.virt_compute_secs <= 0.0 {
+        bail!(
+            "--virtual-clock needs a per-step compute cost: pass \
+             --compute-ms MS (e.g. 6.25 for LeNet3@P100), --workload \
+             NAME, or set virt_compute_secs in the config"
+        );
+    }
+    // A forward share exceeding the whole compute budget would silently
+    // clamp every backward slice to zero and overcharge the step.
+    if cfg.virtual_clock && cfg.virt_fwd_secs > cfg.virt_compute_secs {
+        bail!(
+            "--fwd-ms ({} ms) must not exceed --compute-ms ({} ms)",
+            cfg.virt_fwd_secs * 1e3,
+            cfg.virt_compute_secs * 1e3
+        );
+    }
+    if let Some(d) = args.get("artifacts-dir") {
+        cfg.artifacts_dir = d.to_string();
+    }
+    if let Some(d) = args.get("resume") {
+        cfg.resume_from = Some(d.to_string());
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()), FLAGS)
+            .unwrap()
+    }
+
+    #[test]
+    fn every_field_settable_from_cli() {
+        let a = parse(
+            "train --model mlp-small --algo periodic-agd --allreduce ring \
+             --ranks 16 --steps 9 --lr 0.2 --lr-step-every 3 \
+             --lr-step-gamma 0.5 --lr-scaling --no-rotation --no-shuffle \
+             --gossip-period 4 --seed 99 --rows-per-rank 64 --val-rows 32 \
+             --eval-every 2 --alpha 0.0002 --beta-gbps 0.5 --noise 0 \
+             --native --artifacts-dir elsewhere --ps-servers 3 \
+             --virtual-clock --compute-ms 6.25 --fwd-ms 2 --jitter 0.25 \
+             --ps-agg-ms 1.5 --layerwise --comm-thread --sync-mix",
+        );
+        let c = from_args(&a).unwrap();
+        assert_eq!(c.model, "mlp-small");
+        assert_eq!(c.algo, Algo::PeriodicAgd);
+        assert_eq!(c.allreduce, Algorithm::Ring);
+        assert_eq!((c.ranks, c.steps), (16, 9));
+        assert!((c.lr - 0.2).abs() < 1e-12);
+        assert_eq!(c.lr_schedule, LrSchedule::Step { every: 3, gamma: 0.5 });
+        assert!(c.krizhevsky_lr_scaling);
+        assert!(!c.rotation && !c.sample_shuffle);
+        assert_eq!(c.gossip_period, 4);
+        assert_eq!(c.seed, 99);
+        assert_eq!((c.rows_per_rank, c.val_rows, c.eval_every), (64, 32, 2));
+        assert!((c.net_alpha - 2e-4).abs() < 1e-12);
+        assert!((c.net_beta - 1.0 / 0.5e9).abs() < 1e-22);
+        assert!(!c.use_artifacts);
+        assert_eq!(c.artifacts_dir, "elsewhere");
+        assert_eq!(c.ps_servers, 3);
+        assert!(c.virtual_clock && c.layerwise && c.comm_thread && c.sync_mix);
+        assert!((c.virt_compute_secs - 6.25e-3).abs() < 1e-12);
+        assert!((c.virt_fwd_secs - 2e-3).abs() < 1e-12);
+        assert!((c.straggler_jitter - 0.25).abs() < 1e-12);
+        assert!((c.virt_ps_agg_secs - 1.5e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn workload_virtualizes_the_config() {
+        let a = parse(
+            "sweep --workload lenet3 --device-speed 4 --alpha 0.0002 \
+             --beta-gbps 0.5 --native --layerwise",
+        );
+        let c = from_args(&a).unwrap();
+        let w = Workload::lenet3(4.0);
+        assert!(c.virtual_clock, "--workload implies the virtual clock");
+        assert!((c.virt_compute_secs - w.t_compute()).abs() < 1e-12);
+        assert!((c.virt_fwd_secs - w.t_fwd).abs() < 1e-12);
+        assert!(c.virt_ps_agg_secs > 0.0);
+        assert_eq!(c.net_noise, 0.0, "virtual fabric charges nominal costs");
+        // an explicit nonzero --noise contradicts --workload: error,
+        // don't silently drop it
+        assert!(
+            from_args(&parse("train --workload lenet3 --noise 0.1")).is_err()
+        );
+    }
+
+    #[test]
+    fn comm_thread_requires_layerwise() {
+        assert!(from_args(&parse("train --comm-thread")).is_err());
+        assert!(from_args(&parse("train --comm-thread --layerwise")).is_ok());
+    }
+
+    #[test]
+    fn virtual_clock_requires_compute_budget() {
+        assert!(from_args(&parse("train --virtual-clock")).is_err());
+        assert!(
+            from_args(&parse("train --virtual-clock --compute-ms 6.25")).is_ok()
+        );
+        // fwd share must fit inside the compute budget
+        assert!(from_args(&parse(
+            "train --virtual-clock --compute-ms 2 --fwd-ms 3"
+        ))
+        .is_err());
+    }
+}

@@ -7,7 +7,9 @@
 
 use crate::collectives::Algorithm;
 use crate::transport::CostModel;
-use crate::util::json::Json;
+use crate::util::json::{self, num, obj, Json};
+
+pub mod cli;
 
 /// Which training algorithm the coordinator runs (paper Table 6 + §7.5).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -75,7 +77,7 @@ impl LrSchedule {
 }
 
 /// Full run configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RunConfig {
     pub algo: Algo,
     pub model: String,
@@ -238,6 +240,69 @@ impl RunConfig {
         self.net_noise = 0.0;
     }
 
+    /// Serialize every field under the same keys [`from_json`]
+    /// (Self::from_json) reads, so a config round-trips losslessly
+    /// through `util::json`.  Keys are emitted from a `BTreeMap`
+    /// (sorted) and `resume_from = None` / `LrSchedule::Const` are
+    /// omitted, so the serialization is *canonical*: equal configs
+    /// produce byte-equal JSON — the property
+    /// [`content_hash`](Self::content_hash) relies on.
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("algo", json::s(self.algo.name())),
+            ("model", json::s(&self.model)),
+            ("ranks", num(self.ranks as f64)),
+            ("steps", num(self.steps as f64)),
+            ("lr", num(self.lr)),
+            ("gossip_period", num(self.gossip_period as f64)),
+            // as a string: a u64 seed above 2^53 would round through
+            // the JSON f64 number type, and two configs differing only
+            // in such seeds would collide on content_hash
+            ("seed", json::s(&self.seed.to_string())),
+            ("rows_per_rank", num(self.rows_per_rank as f64)),
+            ("eval_every", num(self.eval_every as f64)),
+            ("val_rows", num(self.val_rows as f64)),
+            ("net_alpha", num(self.net_alpha)),
+            ("net_beta", num(self.net_beta)),
+            ("net_noise", num(self.net_noise)),
+            ("ps_servers", num(self.ps_servers as f64)),
+            ("virt_compute_secs", num(self.virt_compute_secs)),
+            ("virt_fwd_secs", num(self.virt_fwd_secs)),
+            ("straggler_jitter", num(self.straggler_jitter)),
+            ("virt_ps_agg_secs", num(self.virt_ps_agg_secs)),
+            ("virtual_clock", Json::Bool(self.virtual_clock)),
+            ("layerwise", Json::Bool(self.layerwise)),
+            ("comm_thread", Json::Bool(self.comm_thread)),
+            ("sync_mix", Json::Bool(self.sync_mix)),
+            ("rotation", Json::Bool(self.rotation)),
+            ("sample_shuffle", Json::Bool(self.sample_shuffle)),
+            (
+                "krizhevsky_lr_scaling",
+                Json::Bool(self.krizhevsky_lr_scaling),
+            ),
+            ("use_artifacts", Json::Bool(self.use_artifacts)),
+            ("artifacts_dir", json::s(&self.artifacts_dir)),
+            ("allreduce", json::s(self.allreduce.name())),
+        ];
+        if let Some(dir) = &self.resume_from {
+            pairs.push(("resume_from", json::s(dir)));
+        }
+        if let LrSchedule::Step { every, gamma } = self.lr_schedule {
+            pairs.push(("lr_step_every", num(every as f64)));
+            pairs.push(("lr_step_gamma", num(gamma)));
+        }
+        obj(pairs)
+    }
+
+    /// Stable content hash of this config (16 hex chars): FNV-1a over
+    /// the canonical JSON serialization.  Equal configs hash equal;
+    /// any field change reshapes the hash.  The experiment engine
+    /// (`crate::exp`) uses it as the scenario key for result caching
+    /// and artifact naming.
+    pub fn content_hash(&self) -> String {
+        format!("{:016x}", crate::util::fnv1a64(self.to_json().to_string().as_bytes()))
+    }
+
     /// Load a JSON preset, then apply this config's fields as defaults
     /// for anything missing.
     pub fn from_json(j: &Json) -> Result<RunConfig, String> {
@@ -259,7 +324,19 @@ impl RunConfig {
         num_field!("steps", steps, usize);
         num_field!("lr", lr, f64);
         num_field!("gossip_period", gossip_period, usize);
-        num_field!("seed", seed, u64);
+        // seed: string (lossless, what to_json emits) or number (hand
+        // written presets)
+        match j.get("seed") {
+            Some(Json::Str(s)) => {
+                c.seed = s.parse().map_err(|e| format!("seed: {e}"))?;
+            }
+            Some(v) => {
+                if let Some(n) = v.as_f64() {
+                    c.seed = n as u64;
+                }
+            }
+            None => {}
+        }
         num_field!("rows_per_rank", rows_per_rank, usize);
         num_field!("eval_every", eval_every, usize);
         num_field!("val_rows", val_rows, usize);
@@ -302,12 +379,7 @@ impl RunConfig {
             c.resume_from = Some(v.to_string());
         }
         if let Some(v) = j.get("allreduce").and_then(Json::as_str) {
-            c.allreduce = match v {
-                "recursive-doubling" => Algorithm::RecursiveDoubling,
-                "binomial-tree" => Algorithm::BinomialTree,
-                "ring" => Algorithm::Ring,
-                other => return Err(format!("unknown allreduce {other:?}")),
-            };
+            c.allreduce = Algorithm::parse(v)?;
         }
         if let Some(sched) = j.get("lr_step_every").and_then(Json::as_usize) {
             let gamma = j
@@ -417,6 +489,74 @@ mod tests {
         assert!(!RunConfig::default().comm_thread);
         assert!(!RunConfig::default().sync_mix);
         assert_eq!(RunConfig::default().straggler_jitter, 0.0);
+    }
+
+    #[test]
+    fn config_json_roundtrip_every_field() {
+        let mut c = RunConfig::default();
+        c.algo = Algo::PeriodicAgd;
+        c.model = "mlp-small".into();
+        c.ranks = 37;
+        c.steps = 11;
+        c.lr = 0.125;
+        c.lr_schedule = LrSchedule::Step { every: 30, gamma: 0.1 };
+        c.krizhevsky_lr_scaling = true;
+        c.allreduce = Algorithm::Ring;
+        c.rotation = false;
+        c.sample_shuffle = false;
+        c.gossip_period = 4;
+        c.seed = 1234567;
+        c.rows_per_rank = 48;
+        c.eval_every = 5;
+        c.val_rows = 96;
+        c.net_alpha = 2e-4;
+        c.net_beta = 1.0 / 0.5e9;
+        c.net_noise = 0.0;
+        c.use_artifacts = false;
+        c.artifacts_dir = "elsewhere".into();
+        c.ps_servers = 2;
+        c.resume_from = Some("ckpt".into());
+        c.virtual_clock = true;
+        c.virt_compute_secs = 6.25e-3;
+        c.layerwise = true;
+        c.virt_fwd_secs = 2.08e-3;
+        c.straggler_jitter = 0.3;
+        c.virt_ps_agg_secs = 1e-3;
+        c.comm_thread = true;
+        c.sync_mix = true;
+        let j = c.to_json();
+        let back = RunConfig::from_json(&j).unwrap();
+        assert_eq!(back, c, "to_json/from_json must round-trip losslessly");
+        // canonical: serializing the round-tripped config is byte-equal
+        assert_eq!(back.to_json().to_string(), j.to_string());
+        // and survives a parse through text
+        let reparsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(RunConfig::from_json(&reparsed).unwrap(), c);
+    }
+
+    #[test]
+    fn content_hash_stable_and_field_sensitive() {
+        let a = RunConfig::default();
+        let b = RunConfig::default();
+        assert_eq!(a.content_hash(), b.content_hash());
+        assert_eq!(a.content_hash().len(), 16);
+        let mut c = RunConfig::default();
+        c.gossip_period = 2;
+        assert_ne!(a.content_hash(), c.content_hash());
+        let mut d = RunConfig::default();
+        d.straggler_jitter = 0.1;
+        assert_ne!(a.content_hash(), d.content_hash());
+        assert_ne!(c.content_hash(), d.content_hash());
+        // seeds above 2^53 must not collide (lossless string encoding)
+        let mut s1 = RunConfig::default();
+        s1.seed = (1u64 << 53) + 1;
+        let mut s2 = RunConfig::default();
+        s2.seed = (1u64 << 53) + 3;
+        assert_ne!(s1.content_hash(), s2.content_hash());
+        assert_eq!(RunConfig::from_json(&s1.to_json()).unwrap().seed, s1.seed);
+        // numeric seeds in hand-written presets still parse
+        let j = Json::parse(r#"{"seed": 77}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().seed, 77);
     }
 
     #[test]

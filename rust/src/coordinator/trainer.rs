@@ -33,16 +33,45 @@ pub struct RunResult {
 impl RunResult {
     /// Max pairwise L∞ distance between rank models (consensus metric;
     /// Corollary 6.3 says this shrinks under gossip).
+    ///
+    /// For L∞ the pairwise max equals the max over coordinates of
+    /// (max − min) across ranks, so one coordinate-wise min/max pass —
+    /// O(p·params) — replaces the O(p²·params) all-pairs scan (at
+    /// p = 1024 that was ~1M vector comparisons per run).
     pub fn max_disagreement(&self) -> f32 {
-        let mut worst = 0.0f32;
-        for a in &self.final_params {
-            for b in &self.final_params {
-                for (x, y) in a.iter().zip(b) {
-                    worst = worst.max((x - y).abs());
-                }
+        let Some(first) = self.final_params.first() else {
+            return 0.0;
+        };
+        let n = first.len();
+        let mut lo = first.clone();
+        let mut hi = first.clone();
+        for params in &self.final_params[1..] {
+            debug_assert_eq!(params.len(), n);
+            for ((l, h), &x) in lo.iter_mut().zip(hi.iter_mut()).zip(params) {
+                *l = l.min(x);
+                *h = h.max(x);
             }
         }
-        worst
+        lo.iter()
+            .zip(&hi)
+            .map(|(&l, &h)| h - l)
+            .fold(0.0f32, f32::max)
+    }
+
+    /// FNV-1a checksum of every rank's final model bits (rank-major).
+    /// Two runs with equal hashes produced bit-identical models — the
+    /// cheap, serializable stand-in for comparing `final_params`
+    /// directly (which the experiment engine's cached reports cannot
+    /// carry).
+    pub fn param_hash(&self) -> u64 {
+        let mut bytes =
+            Vec::with_capacity(self.final_params.iter().map(|p| p.len() * 4).sum());
+        for params in &self.final_params {
+            for x in params {
+                bytes.extend_from_slice(&x.to_bits().to_le_bytes());
+            }
+        }
+        crate::util::fnv1a64(&bytes)
     }
 
     pub fn mean_efficiency_pct(&self) -> f64 {
@@ -88,7 +117,7 @@ pub fn build_datasets(
 ) -> (Dataset, Dataset) {
     let rows = cfg.rows_per_rank.max(batch * 2) * cfg.ranks;
     match cfg.model.as_str() {
-        "mlp" => (
+        m if m.starts_with("mlp") => (
             synthetic::mnist_analog_split(rows, cfg.seed, 0),
             synthetic::mnist_analog_split(cfg.val_rows, cfg.seed, 1),
         ),
@@ -135,11 +164,17 @@ pub fn build_backend(cfg: &RunConfig) -> Result<Backend> {
             .with_context(|| format!("loading {} artifacts", cfg.model))?;
         Ok(Arc::new(m))
     } else {
-        anyhow::ensure!(
-            cfg.model == "mlp",
-            "native backend only implements the mlp family"
-        );
-        Ok(Arc::new(NativeMlp::mnist(64)))
+        match cfg.model.as_str() {
+            "mlp" => Ok(Arc::new(NativeMlp::mnist(64))),
+            // tiny deterministic stand-in (same dims/batch/seed the
+            // figure benches use) — lets p = 1024 sweep scenarios fit
+            // in memory with one thread per rank
+            "mlp-small" => Ok(Arc::new(NativeMlp::new(vec![784, 32, 10], 16, 0))),
+            other => anyhow::bail!(
+                "native backend only implements the mlp family (mlp, \
+                 mlp-small), not {other:?}"
+            ),
+        }
     }
 }
 
@@ -305,5 +340,62 @@ fn build_worker(
         }
     } else {
         Worker::new(rank, ep, backend, train, val, cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result_with(params: Vec<Vec<f32>>) -> RunResult {
+        RunResult {
+            per_rank: Vec::new(),
+            final_params: params,
+            final_accuracy: None,
+            wall_secs: 0.0,
+            in_flight_msgs: 0,
+        }
+    }
+
+    /// The reference O(p²·params) all-pairs scan the min/max pass replaced.
+    fn pairwise_linf(params: &[Vec<f32>]) -> f32 {
+        let mut worst = 0.0f32;
+        for a in params {
+            for b in params {
+                for (x, y) in a.iter().zip(b) {
+                    worst = worst.max((x - y).abs());
+                }
+            }
+        }
+        worst
+    }
+
+    #[test]
+    fn max_disagreement_matches_pairwise_scan() {
+        let mut rng = crate::util::Rng::new(7);
+        for p in [1usize, 2, 3, 8, 17] {
+            let params: Vec<Vec<f32>> = (0..p)
+                .map(|_| (0..33).map(|_| rng.f32() * 4.0 - 2.0).collect())
+                .collect();
+            let r = result_with(params);
+            let fast = r.max_disagreement();
+            let slow = pairwise_linf(&r.final_params);
+            assert_eq!(fast, slow, "p={p}");
+        }
+        // empty + single-rank degenerate cases
+        assert_eq!(result_with(Vec::new()).max_disagreement(), 0.0);
+        assert_eq!(result_with(vec![vec![1.0, -3.0]]).max_disagreement(), 0.0);
+    }
+
+    #[test]
+    fn param_hash_distinguishes_model_bits() {
+        let a = result_with(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = result_with(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(a.param_hash(), b.param_hash());
+        let c = result_with(vec![vec![1.0, 2.0], vec![3.0, 4.0000005]]);
+        assert_ne!(a.param_hash(), c.param_hash());
+        // rank-major: swapping ranks changes the hash
+        let d = result_with(vec![vec![3.0, 4.0], vec![1.0, 2.0]]);
+        assert_ne!(a.param_hash(), d.param_hash());
     }
 }

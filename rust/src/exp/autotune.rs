@@ -1,0 +1,132 @@
+//! Gossip-period autotuning (the Fig 17 trade-off, mechanized).
+//!
+//! Raising `gossip_period` amortizes exchange cost over more steps —
+//! throughput rises toward the no-comm ceiling — but mixing becomes
+//! rarer, so cross-rank consensus (max pairwise L∞ disagreement,
+//! Corollary 6.3) decays toward the no-mixing drift of independent
+//! SGD.  The autotuner walks a period grid on the engine and picks
+//! **the largest period within `throughput_slack` (default 2%) of peak
+//! throughput whose consensus still shrinks** — "still shrinks"
+//! measured against an explicit no-mixing reference run (same config,
+//! `gossip_period > steps`, so no exchange ever fires): a period
+//! qualifies only if its final disagreement stays below
+//! `consensus_frac` (default ½) of the reference drift.
+
+use super::{Engine, Grid, ScenarioReport, Sweep};
+use crate::config::{Algo, RunConfig};
+
+use anyhow::{ensure, Result};
+
+/// One period's measurements + verdicts.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub period: usize,
+    pub steps_per_sec: f64,
+    pub disagreement: f64,
+    /// Within `throughput_slack` of the grid's peak throughput.
+    pub fast_enough: bool,
+    /// Disagreement below `consensus_frac ×` the no-mixing drift.
+    pub consensus_shrinks: bool,
+}
+
+/// Autotune outcome: the chosen period plus everything needed to audit
+/// the choice.
+#[derive(Clone, Debug)]
+pub struct AutotuneReport {
+    /// Largest period that is both fast enough and still mixing;
+    /// `None` when no candidate passes both gates (pathological grids —
+    /// e.g. every period's consensus already matches no-mixing drift).
+    pub chosen_period: Option<usize>,
+    pub peak_steps_per_sec: f64,
+    /// Final disagreement of the no-mixing reference run.
+    pub no_mix_disagreement: f64,
+    pub candidates: Vec<Candidate>,
+    /// The full scenario reports (periods in grid order, then the
+    /// no-mixing reference last) for artifact emission.
+    pub reports: Vec<ScenarioReport>,
+}
+
+/// Gate parameters; [`Default`] gives the paper-motivated 2% / ½.
+#[derive(Clone, Copy, Debug)]
+pub struct AutotuneParams {
+    /// Throughput may trail the peak by at most this fraction.
+    pub throughput_slack: f64,
+    /// Disagreement must stay below this fraction of no-mixing drift.
+    pub consensus_frac: f64,
+}
+
+impl Default for AutotuneParams {
+    fn default() -> AutotuneParams {
+        AutotuneParams {
+            throughput_slack: 0.02,
+            consensus_frac: 0.5,
+        }
+    }
+}
+
+/// Run the period grid + no-mixing reference on `engine` and pick the
+/// period per the rule above.  `base` must be a gossip-family config
+/// (the knob being tuned is gossip's); every other field is honored
+/// as-is, so the caller controls scale, fabric and pipeline mode.
+pub fn autotune_gossip_period(
+    engine: &Engine,
+    base: &RunConfig,
+    periods: &[usize],
+    params: AutotuneParams,
+) -> Result<AutotuneReport> {
+    ensure!(
+        matches!(
+            base.algo,
+            Algo::Gossip | Algo::GossipHypercube | Algo::GossipRandom
+        ),
+        "gossip-period autotuning needs a gossip-family algo, got {}",
+        base.algo.name()
+    );
+    ensure!(!periods.is_empty(), "need at least one candidate period");
+    ensure!(
+        periods.iter().all(|&p| (1..=base.steps).contains(&p)),
+        "candidate periods must be in 1..=steps ({}) — larger ones never mix",
+        base.steps
+    );
+    // the period grid, plus the no-mixing reference as a final scenario
+    // (gossip_period > steps ⇒ the exchange never fires)
+    let mut scenarios = Grid::new(base.clone()).gossip_periods(periods).scenarios();
+    let mut no_mix = base.clone();
+    no_mix.gossip_period = base.steps + 1;
+    scenarios.push(no_mix);
+    let Sweep { reports, .. } = engine.run_scenarios(&scenarios)?;
+    let (no_mix_report, period_reports) =
+        reports.split_last().expect("grid is non-empty");
+    let no_mix_disagreement = no_mix_report.max_disagreement;
+
+    let peak = period_reports
+        .iter()
+        .map(ScenarioReport::steps_per_sec)
+        .fold(0.0f64, f64::max);
+    let candidates: Vec<Candidate> = period_reports
+        .iter()
+        .map(|r| {
+            let tput = r.steps_per_sec();
+            Candidate {
+                period: r.config.gossip_period,
+                steps_per_sec: tput,
+                disagreement: r.max_disagreement,
+                fast_enough: tput >= peak * (1.0 - params.throughput_slack),
+                consensus_shrinks: r.max_disagreement
+                    < params.consensus_frac * no_mix_disagreement,
+            }
+        })
+        .collect();
+    let chosen_period = candidates
+        .iter()
+        .filter(|c| c.fast_enough && c.consensus_shrinks)
+        .map(|c| c.period)
+        .max();
+    Ok(AutotuneReport {
+        chosen_period,
+        peak_steps_per_sec: peak,
+        no_mix_disagreement,
+        candidates,
+        reports,
+    })
+}

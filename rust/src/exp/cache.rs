@@ -1,0 +1,112 @@
+//! On-disk scenario-result cache, keyed by `RunConfig::content_hash`.
+//!
+//! One JSON file per scenario (`<dir>/<key>.json`, the canonical
+//! `ScenarioReport` serialization).  Because reports round-trip
+//! byte-identically, a cache hit reproduces the artifact a fresh run
+//! would have written — sweeps resume for free after an interrupt, and
+//! re-running a sweep with a warm cache is a pure artifact re-emission.
+//!
+//! Corrupt or unreadable entries are treated as misses (the scenario
+//! re-runs and overwrites them), never as errors: a cache must not be
+//! able to wedge a sweep.  Writes go through a temp file + rename so a
+//! killed sweep can't leave a truncated entry that later parses as
+//! garbage.
+
+use super::report::ScenarioReport;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+pub struct DiskCache {
+    dir: PathBuf,
+}
+
+impl DiskCache {
+    /// Open (creating if needed) a cache directory.
+    pub fn open(dir: &Path) -> std::io::Result<DiskCache> {
+        std::fs::create_dir_all(dir)?;
+        Ok(DiskCache {
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn entry_path(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{key}.json"))
+    }
+
+    /// Load a cached report; `None` on miss *or* unparseable entry.
+    /// The stored config must actually hash to the requested key (not
+    /// just carry a matching `key` string) — a renamed, hand-edited,
+    /// or stale-format entry is a miss, not a silent wrong answer.
+    pub fn load(&self, key: &str) -> Option<ScenarioReport> {
+        let text = std::fs::read_to_string(self.entry_path(key)).ok()?;
+        let report = Json::parse(&text)
+            .ok()
+            .and_then(|j| ScenarioReport::from_json(&j).ok())?;
+        (report.key == key && report.config.content_hash() == key)
+            .then_some(report)
+    }
+
+    /// Persist a report under its key (temp file + atomic rename).
+    pub fn store(&self, report: &ScenarioReport) -> std::io::Result<PathBuf> {
+        let path = self.entry_path(&report.key);
+        let tmp = self.dir.join(format!(".{}.tmp", report.key));
+        std::fs::write(&tmp, report.to_json().to_string() + "\n")?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    fn tiny_report() -> ScenarioReport {
+        let mut cfg = RunConfig::default();
+        cfg.use_artifacts = false;
+        cfg.ranks = 1;
+        ScenarioReport {
+            key: cfg.content_hash(),
+            config: cfg,
+            ranks: Vec::new(),
+            mean_step_secs: 0.25,
+            mean_efficiency_pct: 99.0,
+            mean_overlap_frac: 0.5,
+            max_disagreement: 0.0,
+            param_hash: "00deadbeef00cafe".into(),
+            in_flight_msgs: 0,
+            final_accuracy: None,
+        }
+    }
+
+    #[test]
+    fn store_then_load_roundtrips() {
+        let dir = std::env::temp_dir().join("gg_exp_cache_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = DiskCache::open(&dir).unwrap();
+        let r = tiny_report();
+        assert!(cache.load(&r.key).is_none(), "cold cache misses");
+        let path = cache.store(&r).unwrap();
+        assert!(path.ends_with(format!("{}.json", r.key)));
+        assert_eq!(cache.load(&r.key).as_ref(), Some(&r));
+        // corrupt entry degrades to a miss
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(cache.load(&r.key).is_none());
+        // an entry stored under the wrong key is rejected
+        let other = "0000000000000000";
+        std::fs::write(
+            cache.entry_path(other),
+            r.to_json().to_string(),
+        )
+        .unwrap();
+        assert!(cache.load(other).is_none());
+        // an entry whose embedded config was edited (key string left
+        // intact) no longer hashes to its key — also a miss
+        cache.store(&r).unwrap();
+        let tampered = std::fs::read_to_string(cache.entry_path(&r.key))
+            .unwrap()
+            .replace("\"ranks\":1", "\"ranks\":3");
+        std::fs::write(cache.entry_path(&r.key), tampered).unwrap();
+        assert!(cache.load(&r.key).is_none());
+    }
+}

@@ -1,0 +1,351 @@
+//! Declarative scenario grids: declare the sweep once, get the
+//! cartesian product of concrete [`RunConfig`]s in a fixed, documented
+//! order.
+//!
+//! Every axis left empty pins that field at the base config's value, so
+//! a `Grid` is "the base scenario, varied along these axes".  Axis
+//! nesting order (outer → inner) is `algo → ranks → gossip_period →
+//! straggler_jitter → layerwise → comm_thread → sync_mix → allreduce →
+//! seed`; scenario index order — and therefore artifact row order — is
+//! a pure function of the declaration, never of execution timing.
+//!
+//! Invalid combinations are skipped, not errored: `comm_thread` without
+//! `layerwise` measures nothing (the collective engine has no backprop
+//! slices to hide rounds under), so the product silently drops those
+//! points — a `comm_thread × layerwise` grid yields the three runnable
+//! corners.
+
+use crate::collectives::Algorithm;
+use crate::config::{Algo, RunConfig};
+use crate::sim::Workload;
+use crate::util::args::Args;
+
+use anyhow::{bail, Context, Result};
+
+/// Cartesian scenario grid over a base [`RunConfig`].
+#[derive(Clone, Debug)]
+pub struct Grid {
+    pub base: RunConfig,
+    algos: Vec<Algo>,
+    ranks: Vec<usize>,
+    gossip_periods: Vec<usize>,
+    jitters: Vec<f64>,
+    layerwise: Vec<bool>,
+    comm_threads: Vec<bool>,
+    sync_mixes: Vec<bool>,
+    allreduces: Vec<Algorithm>,
+    seeds: Vec<u64>,
+}
+
+impl Grid {
+    pub fn new(base: RunConfig) -> Grid {
+        Grid {
+            base,
+            algos: Vec::new(),
+            ranks: Vec::new(),
+            gossip_periods: Vec::new(),
+            jitters: Vec::new(),
+            layerwise: Vec::new(),
+            comm_threads: Vec::new(),
+            sync_mixes: Vec::new(),
+            allreduces: Vec::new(),
+            seeds: Vec::new(),
+        }
+    }
+
+    pub fn algos(mut self, v: &[Algo]) -> Self {
+        self.algos = v.to_vec();
+        self
+    }
+    pub fn ranks(mut self, v: &[usize]) -> Self {
+        self.ranks = v.to_vec();
+        self
+    }
+    pub fn gossip_periods(mut self, v: &[usize]) -> Self {
+        self.gossip_periods = v.to_vec();
+        self
+    }
+    pub fn jitters(mut self, v: &[f64]) -> Self {
+        self.jitters = v.to_vec();
+        self
+    }
+    pub fn layerwise(mut self, v: &[bool]) -> Self {
+        self.layerwise = v.to_vec();
+        self
+    }
+    pub fn comm_threads(mut self, v: &[bool]) -> Self {
+        self.comm_threads = v.to_vec();
+        self
+    }
+    pub fn sync_mixes(mut self, v: &[bool]) -> Self {
+        self.sync_mixes = v.to_vec();
+        self
+    }
+    pub fn allreduces(mut self, v: &[Algorithm]) -> Self {
+        self.allreduces = v.to_vec();
+        self
+    }
+    pub fn seeds(mut self, v: &[u64]) -> Self {
+        self.seeds = v.to_vec();
+        self
+    }
+
+    /// The declared gossip-period axis (empty when pinned at the base
+    /// value) — the `sweep --autotune-period` CLI reuses a grid's axis
+    /// as the autotuner's candidate list.
+    pub fn period_axis(&self) -> &[usize] {
+        &self.gossip_periods
+    }
+
+    /// Materialize the product as concrete configs, in declaration
+    /// order, with unrunnable `comm_thread && !layerwise` points
+    /// dropped.
+    pub fn scenarios(&self) -> Vec<RunConfig> {
+        fn axis<T: Copy>(v: &[T], base: T) -> Vec<T> {
+            if v.is_empty() {
+                vec![base]
+            } else {
+                v.to_vec()
+            }
+        }
+        let algos = axis(&self.algos, self.base.algo);
+        let ranks = axis(&self.ranks, self.base.ranks);
+        let periods = axis(&self.gossip_periods, self.base.gossip_period);
+        let jitters = axis(&self.jitters, self.base.straggler_jitter);
+        let layerwise = axis(&self.layerwise, self.base.layerwise);
+        let comm_threads = axis(&self.comm_threads, self.base.comm_thread);
+        let sync_mixes = axis(&self.sync_mixes, self.base.sync_mix);
+        let allreduces = axis(&self.allreduces, self.base.allreduce);
+        let seeds = axis(&self.seeds, self.base.seed);
+        let mut out = Vec::new();
+        for &algo in &algos {
+            for &p in &ranks {
+                for &period in &periods {
+                    for &jitter in &jitters {
+                        for &lw in &layerwise {
+                            for &ct in &comm_threads {
+                                for &sm in &sync_mixes {
+                                    for &ar in &allreduces {
+                                        for &seed in &seeds {
+                                            if ct && !lw {
+                                                continue;
+                                            }
+                                            let mut c = self.base.clone();
+                                            c.algo = algo;
+                                            c.ranks = p;
+                                            c.gossip_period = period;
+                                            c.straggler_jitter = jitter;
+                                            c.layerwise = lw;
+                                            c.comm_thread = ct;
+                                            c.sync_mix = sm;
+                                            c.allreduce = ar;
+                                            c.seed = seed;
+                                            out.push(c);
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of runnable scenarios in the product.
+    pub fn len(&self) -> usize {
+        self.scenarios().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Read `--*-list` axes from CLI args onto a base config:
+    /// `--algo-list`, `--ranks-list`, `--gossip-period-list`,
+    /// `--jitter-list`, `--layerwise-list`, `--comm-thread-list`,
+    /// `--sync-mix-list`, `--allreduce-list`, `--seed-list` — all
+    /// comma-separated.
+    pub fn from_args(base: RunConfig, args: &Args) -> Result<Grid> {
+        let mut g = Grid::new(base);
+        if let Some(v) = args.get("algo-list") {
+            g.algos = split(v)
+                .map(|t| Algo::parse(t).map_err(anyhow::Error::msg))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = args.get("ranks-list") {
+            g.ranks = parse_list(v, "--ranks-list")?;
+        }
+        if let Some(v) = args.get("gossip-period-list") {
+            g.gossip_periods = parse_list(v, "--gossip-period-list")?;
+        }
+        if let Some(v) = args.get("jitter-list") {
+            g.jitters = parse_list(v, "--jitter-list")?;
+        }
+        if let Some(v) = args.get("layerwise-list") {
+            g.layerwise = parse_bools(v, "--layerwise-list")?;
+        }
+        if let Some(v) = args.get("comm-thread-list") {
+            g.comm_threads = parse_bools(v, "--comm-thread-list")?;
+        }
+        if let Some(v) = args.get("sync-mix-list") {
+            g.sync_mixes = parse_bools(v, "--sync-mix-list")?;
+        }
+        if let Some(v) = args.get("allreduce-list") {
+            g.allreduces = split(v)
+                .map(|t| Algorithm::parse(t).map_err(anyhow::Error::msg))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = args.get("seed-list") {
+            g.seeds = parse_list(v, "--seed-list")?;
+        }
+        Ok(g)
+    }
+
+    /// Named grids for the ROADMAP sweeps: `period-jitter-<p>` is the
+    /// layer-wise `gossip_period × straggler_jitter` product on the
+    /// virtual LeNet3 fabric at `p` ranks (the Fig 17-style trade-off
+    /// crossed with the straggler ablation — where does `overlap_frac`
+    /// stop compensating?).
+    pub fn preset(name: &str) -> Result<Grid> {
+        if let Some(p) = name.strip_prefix("period-jitter-") {
+            let p: usize = p.parse().with_context(|| {
+                format!("preset {name:?}: rank count suffix")
+            })?;
+            return Ok(Grid::period_jitter(p));
+        }
+        bail!("unknown preset {name:?} (try period-jitter-1024)")
+    }
+
+    /// The ROADMAP `gossip_period × jitter` grid at `p` ranks: gossip
+    /// with the layer-wise pipeline on the virtual-clock LeNet3 fabric
+    /// (same α–β and device speed as the Fig 10/11 benches), periods
+    /// 1–16 crossed with jitter amplitudes 0–0.5.  24 steps so even the
+    /// period-16 row actually mixes (a period above the step count
+    /// would silently measure the no-mixing schedule) and the whole
+    /// axis stays eligible for `--autotune-period`.
+    pub fn period_jitter(p: usize) -> Grid {
+        let mut base = RunConfig {
+            model: "mlp-small".into(),
+            algo: Algo::Gossip,
+            ranks: p,
+            steps: 24,
+            use_artifacts: false,
+            rows_per_rank: 32,
+            layerwise: true,
+            ..Default::default()
+        };
+        base.virtualize(&Workload::lenet3(4.0), 200e-6, 1.0 / 0.5e9);
+        Grid::new(base)
+            .gossip_periods(&[1, 2, 4, 8, 16])
+            .jitters(&[0.0, 0.1, 0.3, 0.5])
+    }
+}
+
+fn split(v: &str) -> impl Iterator<Item = &str> {
+    v.split(',').map(str::trim).filter(|t| !t.is_empty())
+}
+
+fn parse_list<T: std::str::FromStr>(v: &str, what: &str) -> Result<Vec<T>>
+where
+    T::Err: std::error::Error + Send + Sync + 'static,
+{
+    split(v)
+        .map(|t| t.parse::<T>().with_context(|| format!("{what}: {t:?}")))
+        .collect()
+}
+
+fn parse_bools(v: &str, what: &str) -> Result<Vec<bool>> {
+    split(v)
+        .map(|t| match t {
+            "true" | "1" | "yes" | "on" => Ok(true),
+            "false" | "0" | "no" | "off" => Ok(false),
+            other => bail!("{what}: expected bool, got {other:?}"),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_axes_yield_the_base_scenario() {
+        let g = Grid::new(RunConfig::default());
+        let s = g.scenarios();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0], RunConfig::default());
+    }
+
+    #[test]
+    fn product_order_is_declaration_order() {
+        let g = Grid::new(RunConfig::default())
+            .algos(&[Algo::Gossip, Algo::Agd])
+            .ranks(&[2, 4])
+            .gossip_periods(&[1, 3]);
+        let s = g.scenarios();
+        assert_eq!(s.len(), 8);
+        // algo outermost, period innermost
+        assert_eq!((s[0].algo, s[0].ranks, s[0].gossip_period), (Algo::Gossip, 2, 1));
+        assert_eq!((s[1].algo, s[1].ranks, s[1].gossip_period), (Algo::Gossip, 2, 3));
+        assert_eq!((s[2].algo, s[2].ranks, s[2].gossip_period), (Algo::Gossip, 4, 1));
+        assert_eq!((s[4].algo, s[4].ranks, s[4].gossip_period), (Algo::Agd, 2, 1));
+        // every scenario gets a distinct content hash
+        let mut keys: Vec<String> =
+            s.iter().map(RunConfig::content_hash).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), 8);
+    }
+
+    #[test]
+    fn comm_thread_without_layerwise_is_dropped() {
+        let g = Grid::new(RunConfig::default())
+            .layerwise(&[false, true])
+            .comm_threads(&[false, true]);
+        let s = g.scenarios();
+        assert_eq!(s.len(), 3, "the ct ∧ ¬lw corner must be skipped");
+        assert!(s.iter().all(|c| !c.comm_thread || c.layerwise));
+    }
+
+    #[test]
+    fn from_args_reads_every_axis() {
+        let args = Args::parse(
+            "sweep --algo-list gossip,agd --ranks-list 2,4,8 \
+             --gossip-period-list 1,2 --jitter-list 0,0.25 \
+             --layerwise-list true --comm-thread-list false,true \
+             --sync-mix-list false --allreduce-list rd,ring \
+             --seed-list 1,2,3"
+                .split_whitespace()
+                .map(|t| t.to_string()),
+            &[],
+        )
+        .unwrap();
+        let g = Grid::from_args(RunConfig::default(), &args).unwrap();
+        // 2 × 3 × 2 × 2 × 1 × 2 × 1 × 2 × 3
+        assert_eq!(g.len(), 2 * 3 * 2 * 2 * 2 * 2 * 3);
+        assert!(Grid::from_args(
+            RunConfig::default(),
+            &Args::parse(
+                ["--algo-list".to_string(), "nope".to_string()].into_iter(),
+                &[]
+            )
+            .unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn preset_parses_rank_suffix() {
+        let g = Grid::preset("period-jitter-64").unwrap();
+        assert_eq!(g.base.ranks, 64);
+        assert_eq!(g.len(), 20, "5 periods × 4 jitters");
+        assert!(g.base.virtual_clock && g.base.layerwise);
+        // every period row must mix at least once within the run (and
+        // stay eligible for --autotune-period, which rejects periods
+        // beyond the step count)
+        assert!(g.period_axis().iter().all(|&p| p <= g.base.steps));
+        assert!(Grid::preset("nope").is_err());
+    }
+}

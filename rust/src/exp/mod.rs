@@ -1,0 +1,256 @@
+//! Declarative experiment engine: scenario grids → parallel execution
+//! on the virtual fabric → cached, serializable reports.
+//!
+//! The paper's headline results are *sweeps* — efficiency vs p (Figs
+//! 10/11, Table 7), gossip-period trade-offs (Fig 17), straggler
+//! ablations — so the run-entry layer is grid-shaped, not point-shaped:
+//!
+//! 1. declare a [`Grid`] (cartesian product over `algo × p ×
+//!    gossip_period × straggler_jitter × layerwise × comm_thread ×
+//!    sync_mix × allreduce × seed`) over a base [`RunConfig`];
+//! 2. an [`Engine`] executes the scenarios on a work-stealing pool of
+//!    host threads — each scenario is an independent deterministic
+//!    virtual-clock run, so an N-thread sweep is **byte-identical** to
+//!    a 1-thread sweep (asserted in `tests/experiment.rs`);
+//! 3. results land as [`ScenarioReport`]s, cached on disk under the
+//!    config's content hash ([`RunConfig::content_hash`]) and emitted
+//!    as JSON + CSV artifacts (the `BENCH_*.json` trajectory).
+//!
+//! The `gossipgrad sweep` subcommand, the Fig 10/11 / Table 7 / Fig 17
+//! benches, and the [`autotune`] pass are all thin layers over this
+//! module.  See `docs/experiments.md`.
+
+pub mod autotune;
+pub mod cache;
+pub mod grid;
+pub mod report;
+
+pub use autotune::{autotune_gossip_period, AutotuneReport};
+pub use cache::DiskCache;
+pub use grid::Grid;
+pub use report::ScenarioReport;
+
+use crate::config::RunConfig;
+use crate::util::json::{arr, obj, Json};
+
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Scenario executor: a work-stealing pool of host threads over a
+/// [`Grid`]'s scenarios, with optional on-disk result caching.
+pub struct Engine {
+    /// Host worker threads.  Each *scenario* additionally spawns one
+    /// thread per rank (the trainer's threads-as-ranks model), so for
+    /// large-p grids a few engine threads saturate the host.
+    pub threads: usize,
+    /// Cache directory (`None` disables on-disk caching).
+    pub cache_dir: Option<PathBuf>,
+    /// In-memory memo (config hash → report): scenarios already run by
+    /// *this* engine value are never re-executed, so e.g. `sweep
+    /// --autotune-period` reuses the sweep's own runs for the period
+    /// scenarios the autotuner revisits.  Deterministic runs make this
+    /// transparent.
+    memo: Mutex<HashMap<String, ScenarioReport>>,
+}
+
+impl Default for Engine {
+    fn default() -> Engine {
+        Engine::with_threads(default_threads())
+    }
+}
+
+/// Default engine parallelism: the host's logical CPUs, capped at 8 —
+/// scenarios themselves are multi-threaded (one thread per rank), so
+/// more engine threads than this oversubscribes without speedup.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2)
+        .clamp(1, 8)
+}
+
+impl Engine {
+    /// Engine with `threads` workers and no on-disk cache.
+    pub fn with_threads(threads: usize) -> Engine {
+        Engine {
+            threads,
+            cache_dir: None,
+            memo: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Attach an on-disk cache directory.
+    pub fn cached(mut self, dir: &Path) -> Engine {
+        self.cache_dir = Some(dir.to_path_buf());
+        self
+    }
+
+    /// Execute every scenario of `grid` (cache-aware), returning the
+    /// reports in grid order regardless of which worker finished which
+    /// scenario when.
+    pub fn run(&self, grid: &Grid) -> Result<Sweep> {
+        self.run_scenarios(&grid.scenarios())
+    }
+
+    /// Execute an explicit scenario list (the engine primitive `run`
+    /// and the autotuner share).
+    pub fn run_scenarios(&self, scenarios: &[RunConfig]) -> Result<Sweep> {
+        let cache = match &self.cache_dir {
+            Some(dir) => Some(DiskCache::open(dir)?),
+            None => None,
+        };
+        let n = scenarios.len();
+        let next = AtomicUsize::new(0);
+        let executed = AtomicUsize::new(0);
+        let hits = AtomicUsize::new(0);
+        let done: Mutex<Vec<(usize, Result<ScenarioReport, String>)>> =
+            Mutex::new(Vec::with_capacity(n));
+        let workers = self.threads.clamp(1, n.max(1));
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r =
+                        self.run_one(&scenarios[i], cache.as_ref(), &executed, &hits);
+                    done.lock().unwrap().push((i, r));
+                });
+            }
+        });
+        let mut slots = done.into_inner().unwrap();
+        slots.sort_by_key(|(i, _)| *i);
+        let mut reports = Vec::with_capacity(n);
+        for (i, r) in slots {
+            reports.push(r.map_err(|e| anyhow!("scenario {i}: {e}"))?);
+        }
+        Ok(Sweep {
+            reports,
+            runs_executed: executed.load(Ordering::Relaxed),
+            cache_hits: hits.load(Ordering::Relaxed),
+        })
+    }
+
+    fn run_one(
+        &self,
+        cfg: &RunConfig,
+        cache: Option<&DiskCache>,
+        executed: &AtomicUsize,
+        hits: &AtomicUsize,
+    ) -> Result<ScenarioReport, String> {
+        let key = cfg.content_hash();
+        if let Some(report) = self.memo.lock().unwrap().get(&key) {
+            hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(report.clone());
+        }
+        if let Some(c) = cache {
+            if let Some(report) = c.load(&key) {
+                hits.fetch_add(1, Ordering::Relaxed);
+                self.memo.lock().unwrap().insert(key, report.clone());
+                return Ok(report);
+            }
+        }
+        let res =
+            crate::coordinator::run(cfg).map_err(|e| format!("{key}: {e:#}"))?;
+        executed.fetch_add(1, Ordering::Relaxed);
+        let report = ScenarioReport::from_run(cfg, &res);
+        if let Some(c) = cache {
+            c.store(&report)
+                .map_err(|e| format!("{key}: cache store: {e}"))?;
+        }
+        self.memo.lock().unwrap().insert(key, report.clone());
+        Ok(report)
+    }
+}
+
+/// Outcome of an [`Engine::run`]: reports in grid order plus execution
+/// accounting (how many scenarios actually ran vs were served from the
+/// engine's in-memory memo or the on-disk cache — the determinism
+/// tests assert on these).
+pub struct Sweep {
+    pub reports: Vec<ScenarioReport>,
+    pub runs_executed: usize,
+    pub cache_hits: usize,
+}
+
+impl Sweep {
+    /// First report whose config matches `pred` (benches use this to
+    /// pull named corners out of a grid).
+    pub fn find<F: Fn(&RunConfig) -> bool>(&self, pred: F) -> Option<&ScenarioReport> {
+        self.reports.iter().find(|r| pred(&r.config))
+    }
+
+    /// Like [`find`](Self::find) but panics with `what` — for benches
+    /// whose grid provably contains the corner.
+    pub fn get<F: Fn(&RunConfig) -> bool>(&self, what: &str, pred: F) -> &ScenarioReport {
+        self.find(pred)
+            .unwrap_or_else(|| panic!("sweep has no scenario matching {what}"))
+    }
+
+    /// Canonical JSON artifact: the reports, in grid order.  Contains
+    /// *only* deterministic content (no wall times, no cache
+    /// accounting), so two sweeps of the same grid — any thread count,
+    /// warm or cold cache — serialize byte-identically.
+    pub fn to_json(&self) -> Json {
+        obj(vec![(
+            "scenarios",
+            arr(self.reports.iter().map(ScenarioReport::to_json).collect()),
+        )])
+    }
+
+    /// Flat CSV companion (one row per scenario, grid order) for
+    /// spreadsheet/plot ingestion.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "key,algo,model,ranks,steps,gossip_period,straggler_jitter,\
+             layerwise,comm_thread,sync_mix,allreduce,seed,step_ms,\
+             efficiency_pct,overlap_frac,max_disagreement,\
+             msgs_per_rank_step,in_flight_msgs,param_hash\n",
+        );
+        for r in &self.reports {
+            let c = &r.config;
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                r.key,
+                c.algo.name(),
+                c.model,
+                c.ranks,
+                c.steps,
+                c.gossip_period,
+                c.straggler_jitter,
+                c.layerwise,
+                c.comm_thread,
+                c.sync_mix,
+                c.allreduce.name(),
+                c.seed,
+                1e3 * r.mean_step_secs,
+                r.mean_efficiency_pct,
+                r.mean_overlap_frac,
+                r.max_disagreement,
+                r.msgs_per_rank_step(),
+                r.in_flight_msgs,
+                r.param_hash,
+            ));
+        }
+        out
+    }
+
+    /// Write `<dir>/BENCH_<name>.json` + `<dir>/BENCH_<name>.csv`;
+    /// returns both paths.
+    pub fn write_artifacts(
+        &self,
+        dir: &Path,
+        name: &str,
+    ) -> std::io::Result<(PathBuf, PathBuf)> {
+        std::fs::create_dir_all(dir)?;
+        let json_path = dir.join(format!("BENCH_{name}.json"));
+        let csv_path = dir.join(format!("BENCH_{name}.csv"));
+        std::fs::write(&json_path, self.to_json().to_string() + "\n")?;
+        std::fs::write(&csv_path, self.to_csv())?;
+        Ok((json_path, csv_path))
+    }
+}

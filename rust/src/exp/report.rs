@@ -1,0 +1,196 @@
+//! Scenario reports: the serializable outcome of one grid point.
+//!
+//! A [`ScenarioReport`] pairs the exact [`RunConfig`] that produced it
+//! (so an artifact is self-describing and re-runnable) with per-rank
+//! [`RankSummary`] digests and the run-level aggregates the paper's
+//! tables plot — efficiency, overlap, consensus disagreement, in-flight
+//! leak count.  Reports round-trip losslessly through `util::json`:
+//! parsing a cached report and re-serializing it is byte-identical,
+//! which is what lets the engine's disk cache return artifacts that
+//! diff clean against a fresh run.
+//!
+//! Deliberately absent: wall-clock time and full parameter vectors.
+//! Wall time is nondeterministic (it would break the byte-identical
+//! sweep guarantee); model bits are summarized by `param_hash`, an
+//! FNV-1a checksum strong enough for the benches' "same numerics"
+//! assertions.
+
+use crate::config::RunConfig;
+use crate::coordinator::RunResult;
+use crate::metrics::RankSummary;
+use crate::util::json::{self, arr, num, obj, Json};
+
+/// Outcome of one scenario (one grid point), keyed by the config's
+/// content hash.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioReport {
+    /// `config.content_hash()` — the cache / artifact key.
+    pub key: String,
+    pub config: RunConfig,
+    /// Per-rank metric digests, rank order.
+    pub ranks: Vec<RankSummary>,
+    pub mean_step_secs: f64,
+    pub mean_efficiency_pct: f64,
+    pub mean_overlap_frac: f64,
+    /// Max pairwise L∞ distance between rank models (consensus).
+    pub max_disagreement: f64,
+    /// FNV-1a checksum of every rank's final model bits (16 hex chars).
+    pub param_hash: String,
+    /// Messages still queued on the fabric after the run — must be 0.
+    pub in_flight_msgs: usize,
+    /// rank-0 final validation accuracy, when eval was enabled.
+    pub final_accuracy: Option<f64>,
+}
+
+impl ScenarioReport {
+    pub fn from_run(cfg: &RunConfig, res: &RunResult) -> ScenarioReport {
+        ScenarioReport {
+            key: cfg.content_hash(),
+            config: cfg.clone(),
+            ranks: res.per_rank.iter().map(RankSummary::from_metrics).collect(),
+            mean_step_secs: res.mean_step_secs(),
+            mean_efficiency_pct: res.mean_efficiency_pct(),
+            mean_overlap_frac: res.mean_overlap_frac(),
+            max_disagreement: res.max_disagreement() as f64,
+            param_hash: format!("{:016x}", res.param_hash()),
+            in_flight_msgs: res.in_flight_msgs,
+            final_accuracy: res.final_accuracy,
+        }
+    }
+
+    /// Scenario throughput in steps (batch updates) per simulated
+    /// second — the autotuner's objective.
+    pub fn steps_per_sec(&self) -> f64 {
+        if self.mean_step_secs > 0.0 {
+            1.0 / self.mean_step_secs
+        } else {
+            0.0
+        }
+    }
+
+    /// Messages per rank per step, the sweep table's traffic column.
+    pub fn msgs_per_rank_step(&self) -> f64 {
+        let total: u64 = self.ranks.iter().map(|r| r.msgs_sent).sum();
+        let denom = (self.config.ranks * self.config.steps) as f64;
+        if denom > 0.0 {
+            total as f64 / denom
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("key", json::s(&self.key)),
+            ("config", self.config.to_json()),
+            (
+                "ranks",
+                arr(self.ranks.iter().map(RankSummary::to_json).collect()),
+            ),
+            ("mean_step_secs", num(self.mean_step_secs)),
+            ("mean_efficiency_pct", num(self.mean_efficiency_pct)),
+            ("mean_overlap_frac", num(self.mean_overlap_frac)),
+            ("max_disagreement", num(self.max_disagreement)),
+            ("param_hash", json::s(&self.param_hash)),
+            ("in_flight_msgs", num(self.in_flight_msgs as f64)),
+            (
+                "final_accuracy",
+                self.final_accuracy.map(num).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ScenarioReport, String> {
+        let key = j
+            .get("key")
+            .and_then(Json::as_str)
+            .ok_or("report: missing key")?
+            .to_string();
+        let config =
+            RunConfig::from_json(j.get("config").ok_or("report: missing config")?)?;
+        let ranks = j
+            .get("ranks")
+            .and_then(Json::as_arr)
+            .ok_or("report: missing ranks")?
+            .iter()
+            .map(RankSummary::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let f = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("report: missing {k}"))
+        };
+        Ok(ScenarioReport {
+            key,
+            config,
+            ranks,
+            mean_step_secs: f("mean_step_secs")?,
+            mean_efficiency_pct: f("mean_efficiency_pct")?,
+            mean_overlap_frac: f("mean_overlap_frac")?,
+            max_disagreement: f("max_disagreement")?,
+            param_hash: j
+                .get("param_hash")
+                .and_then(Json::as_str)
+                .ok_or("report: missing param_hash")?
+                .to_string(),
+            in_flight_msgs: f("in_flight_msgs")? as usize,
+            final_accuracy: j.get("final_accuracy").and_then(Json::as_f64),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RunMetrics;
+
+    fn sample_report() -> ScenarioReport {
+        let mut cfg = RunConfig::default();
+        cfg.model = "mlp-small".into();
+        cfg.ranks = 2;
+        cfg.steps = 3;
+        cfg.use_artifacts = false;
+        let mut m0 = RunMetrics::new(0);
+        m0.step_secs = vec![0.01, 0.02, 0.03];
+        m0.comm_wait_secs = vec![0.001, 0.001, 0.001];
+        m0.loss = vec![(0, 2.0), (2, 1.0)];
+        m0.msgs_sent = 6;
+        let mut m1 = RunMetrics::new(1);
+        m1.step_secs = vec![0.015, 0.02, 0.025];
+        m1.recv_wait_secs = 0.004;
+        m1.comm_hidden_secs = 0.012;
+        let res = RunResult {
+            per_rank: vec![m0, m1],
+            final_params: vec![vec![1.0, 2.5], vec![1.5, 2.0]],
+            final_accuracy: Some(0.5),
+            wall_secs: 123.0, // must NOT appear in the report
+            in_flight_msgs: 0,
+        };
+        ScenarioReport::from_run(&cfg, &res)
+    }
+
+    #[test]
+    fn report_roundtrips_byte_identically() {
+        let r = sample_report();
+        assert_eq!(r.key, r.config.content_hash());
+        assert_eq!(r.param_hash.len(), 16);
+        assert!((r.max_disagreement - 0.5).abs() < 1e-12);
+        let j = r.to_json();
+        let text = j.to_string();
+        assert!(
+            !text.contains("wall"),
+            "wall time is nondeterministic and must stay out of artifacts"
+        );
+        let back = ScenarioReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn throughput_and_traffic_helpers() {
+        let r = sample_report();
+        assert!((r.steps_per_sec() - 1.0 / r.mean_step_secs).abs() < 1e-9);
+        // 6 msgs over 2 ranks × 3 steps
+        assert!((r.msgs_per_rank_step() - 1.0).abs() < 1e-12);
+    }
+}

@@ -34,6 +34,11 @@
 //!   sharding, ring shuffle buffers.
 //! * [`sim`] — discrete-event scale simulator regenerating the paper's
 //!   128-GPU efficiency tables from calibrated per-step costs.
+//! * [`exp`] — declarative experiment engine: scenario [`exp::Grid`]s
+//!   executed by a work-stealing [`exp::Engine`] on parallel host
+//!   threads, with content-hash result caching and JSON/CSV artifact
+//!   emission (docs/experiments.md); drives the `sweep` subcommand and
+//!   the figure/table benches.
 //! * [`metrics`], [`config`], [`util`] — supporting infrastructure
 //!   (the offline environment has no clap/serde/criterion/proptest, so
 //!   `util` carries small hand-rolled equivalents).
@@ -42,6 +47,7 @@ pub mod collectives;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod exp;
 pub mod metrics;
 pub mod nativenet;
 pub mod runtime;

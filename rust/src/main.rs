@@ -2,20 +2,25 @@
 //!
 //! Subcommands:
 //!   train      run a distributed training job (threads-as-ranks)
-//!   sweep      efficiency sweep over rank counts (real runs)
+//!   sweep      declarative scenario grid on the experiment engine
 //!   sim        scale simulation (Table 7-style, up to 1024 devices)
 //!   inspect    print artifact metadata
 //!
 //! Examples:
 //!   gossipgrad train --model mlp --algo gossip --ranks 8 --steps 200
 //!   gossipgrad train --config configs/mnist_gossip_32.json
+//!   gossipgrad sweep --native --model mlp-small --workload lenet3 \
+//!       --device-speed 4 --alpha 0.0002 --beta-gbps 0.5 --layerwise \
+//!       --ranks 1024 --gossip-period-list 1,2,4,8 --jitter-list 0,0.3
+//!   gossipgrad sweep --preset period-jitter-1024
 //!   gossipgrad sim --workload resnet50 --algos gossip,agd-ring
 //!   gossipgrad inspect --model transformer
 
 use anyhow::{bail, Context, Result};
 use gossipgrad::collectives::Algorithm;
-use gossipgrad::config::{Algo, RunConfig};
+use gossipgrad::config::cli;
 use gossipgrad::coordinator;
+use gossipgrad::exp::{autotune, Engine, Grid, Sweep};
 use gossipgrad::metrics::sparkline;
 use gossipgrad::runtime::artifacts::{default_dir, ArtifactSet};
 use gossipgrad::sim::{self, Schedule, Workload};
@@ -31,17 +36,7 @@ fn main() {
 }
 
 fn real_main() -> Result<()> {
-    let args = Args::from_env(&[
-        "no-rotation",
-        "no-shuffle",
-        "native",
-        "lr-scaling",
-        "virtual-clock",
-        "layerwise",
-        "comm-thread",
-        "sync-mix",
-    ])
-    .map_err(anyhow::Error::msg)?;
+    let args = Args::from_env(cli::FLAGS).map_err(anyhow::Error::msg)?;
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("sweep") => cmd_sweep(&args),
@@ -61,126 +56,43 @@ fn print_usage() {
     println!(
         "gossipgrad — GossipGraD (Daily et al. 2018) reproduction\n\n\
          USAGE: gossipgrad <train|sweep|sim|inspect> [--key value ...]\n\n\
-         train:   --model mlp|cnn|transformer  --algo gossip|gossip-hypercube|\n\
-                  gossip-random|sgd|agd|periodic-agd|ps  --ranks N --steps N\n\
-                  --lr F --eval-every N --config file.json --seed N\n\
-                  --alpha S --beta-gbps G --noise F\n\
+         train:   --model mlp|mlp-small|cnn|transformer  --algo gossip|\n\
+                  gossip-hypercube|gossip-random|sgd|agd|periodic-agd|ps\n\
+                  --ranks N --steps N --lr F --eval-every N\n\
+                  --config file.json --seed N --alpha S --beta-gbps G\n\
+                  --noise F --ps-servers N --val-rows N\n\
+                  --lr-step-every N --lr-step-gamma F --ps-agg-ms MS\n\
                   [--no-rotation] [--no-shuffle] [--native] [--lr-scaling]\n\
                   [--virtual-clock] [--compute-ms MS]   deterministic\n\
                   discrete-event timing (docs/virtual-time.md)\n\
-                  [--layerwise]  per-layer async pipeline: charge backprop\n\
-                  in layer slices, post each layer's exchange at its\n\
-                  grad-ready instant (measured overlap; bit-identical\n\
-                  numerics on the native backend)   [--fwd-ms MS]\n\
-                  forward-pass share of --compute-ms   [--jitter F]\n\
-                  deterministic per-(rank,step) straggler noise on the\n\
-                  virtual fabric   [--comm-thread]  non-blocking AGD\n\
-                  collectives on a modeled comm-progress thread (rounds\n\
-                  advance at arrival instants under later backprop;\n\
-                  needs --layerwise)   [--sync-mix]  gossip blocks for\n\
-                  the current step's partner model\n\
-         sweep:   train across --ranks-list 2,4,8 (other train flags apply)\n\
+                  [--workload lenet3|cifarnet|resnet50|googlenet\n\
+                  [--device-speed F]]  virtualize onto a calibrated\n\
+                  compute model   [--layerwise]  per-layer async\n\
+                  pipeline   [--fwd-ms MS]   [--jitter F]  deterministic\n\
+                  straggler noise   [--comm-thread]  non-blocking AGD\n\
+                  collectives (needs --layerwise)   [--sync-mix]\n\
+         sweep:   declarative grid on the experiment engine\n\
+                  (docs/experiments.md).  Takes every train flag as the\n\
+                  base scenario, plus axes --algo-list --ranks-list\n\
+                  --gossip-period-list --jitter-list --layerwise-list\n\
+                  --comm-thread-list --sync-mix-list --allreduce-list\n\
+                  --seed-list (comma-separated; omitted axes pin at the\n\
+                  base value), or --preset period-jitter-1024.\n\
+                  --sweep-threads N  host worker threads (N-thread and\n\
+                  1-thread sweeps are byte-identical)   --cache-dir DIR\n\
+                  content-hash result cache   --out-dir DIR --out-name S\n\
+                  BENCH_<name>.json/.csv artifacts (default bench_out/\n\
+                  sweep)   [--autotune-period]  pick the largest gossip\n\
+                  period within 2% of peak throughput whose consensus\n\
+                  still shrinks (Fig 17 trade-off)\n\
          sim:     --workload resnet50|googlenet|lenet3|cifarnet\n\
                   --p-list 4,8,...  --algos gossip,agd-ring,sgd-rd,ps1\n\
          inspect: --model NAME [--dir artifacts]"
     );
 }
 
-/// Build a RunConfig from `--config` (optional) + CLI overrides.
-pub fn config_from(args: &Args) -> Result<RunConfig> {
-    let mut cfg = match args.get("config") {
-        Some(path) => RunConfig::load(path).map_err(anyhow::Error::msg)?,
-        None => RunConfig::default(),
-    };
-    if let Some(m) = args.get("model") {
-        cfg.model = m.to_string();
-    }
-    if let Some(a) = args.get("algo") {
-        cfg.algo = Algo::parse(a).map_err(anyhow::Error::msg)?;
-    }
-    if let Some(a) = args.get("allreduce") {
-        cfg.allreduce = match a {
-            "recursive-doubling" | "rd" => Algorithm::RecursiveDoubling,
-            "binomial-tree" | "tree" => Algorithm::BinomialTree,
-            "ring" => Algorithm::Ring,
-            other => bail!("unknown allreduce {other:?}"),
-        };
-    }
-    cfg.ranks = args.usize_or("ranks", cfg.ranks);
-    cfg.steps = args.usize_or("steps", cfg.steps);
-    cfg.lr = args.f64_or("lr", cfg.lr);
-    cfg.seed = args.usize_or("seed", cfg.seed as usize) as u64;
-    cfg.eval_every = args.usize_or("eval-every", cfg.eval_every);
-    cfg.rows_per_rank = args.usize_or("rows-per-rank", cfg.rows_per_rank);
-    cfg.gossip_period = args.usize_or("gossip-period", cfg.gossip_period);
-    cfg.net_alpha = args.f64_or("alpha", cfg.net_alpha);
-    if let Some(g) = args.get("beta-gbps") {
-        let gbps: f64 = g.parse().context("--beta-gbps")?;
-        cfg.net_beta = 1.0 / (gbps * 1e9);
-    }
-    cfg.net_noise = args.f64_or("noise", cfg.net_noise);
-    if args.flag("no-rotation") {
-        cfg.rotation = false;
-    }
-    if args.flag("no-shuffle") {
-        cfg.sample_shuffle = false;
-    }
-    if args.flag("native") {
-        cfg.use_artifacts = false;
-    }
-    if args.flag("lr-scaling") {
-        cfg.krizhevsky_lr_scaling = true;
-    }
-    if args.flag("virtual-clock") {
-        cfg.virtual_clock = true;
-    }
-    if args.flag("layerwise") {
-        cfg.layerwise = true;
-    }
-    if args.flag("comm-thread") {
-        cfg.comm_thread = true;
-    }
-    if args.flag("sync-mix") {
-        cfg.sync_mix = true;
-    }
-    // a comm thread only overlaps collectives posted mid-backprop; the
-    // monolithic schedule has nothing left to hide them under
-    if cfg.comm_thread && !cfg.layerwise {
-        bail!("--comm-thread requires --layerwise (per-layer pipelined AGD)");
-    }
-    cfg.straggler_jitter = args.f64_or("jitter", cfg.straggler_jitter);
-    cfg.virt_compute_secs =
-        args.f64_or("compute-ms", cfg.virt_compute_secs * 1e3) * 1e-3;
-    cfg.virt_fwd_secs = args.f64_or("fwd-ms", cfg.virt_fwd_secs * 1e3) * 1e-3;
-    // A virtual run with no compute charge degenerates to pure exposed
-    // wait (0% efficiency, meaningless step times) — refuse it loudly.
-    if cfg.virtual_clock && cfg.virt_compute_secs <= 0.0 {
-        bail!(
-            "--virtual-clock needs a per-step compute cost: pass \
-             --compute-ms MS (e.g. 6.25 for LeNet3@P100) or set \
-             virt_compute_secs in the config"
-        );
-    }
-    // A forward share exceeding the whole compute budget would silently
-    // clamp every backward slice to zero and overcharge the step.
-    if cfg.virtual_clock && cfg.virt_fwd_secs > cfg.virt_compute_secs {
-        bail!(
-            "--fwd-ms ({} ms) must not exceed --compute-ms ({} ms)",
-            cfg.virt_fwd_secs * 1e3,
-            cfg.virt_compute_secs * 1e3
-        );
-    }
-    if let Some(d) = args.get("artifacts-dir") {
-        cfg.artifacts_dir = d.to_string();
-    }
-    if let Some(d) = args.get("resume") {
-        cfg.resume_from = Some(d.to_string());
-    }
-    Ok(cfg)
-}
-
 fn cmd_train(args: &Args) -> Result<()> {
-    let cfg = config_from(args)?;
+    let cfg = cli::from_args(args)?;
     println!(
         "train: model={} algo={} ranks={} steps={} lr={} (effective {:.4})",
         cfg.model,
@@ -233,26 +145,160 @@ fn report(res: &coordinator::RunResult) {
     println!("wall {:.1}s", res.wall_secs);
 }
 
+/// Axis options that turn a base config into a grid; with none present
+/// (and no preset) `sweep` falls back to the historical rank sweep.
+const AXIS_KEYS: &[&str] = &[
+    "algo-list",
+    "ranks-list",
+    "gossip-period-list",
+    "jitter-list",
+    "layerwise-list",
+    "comm-thread-list",
+    "sync-mix-list",
+    "allreduce-list",
+    "seed-list",
+];
+
 fn cmd_sweep(args: &Args) -> Result<()> {
-    let base = config_from(args)?;
-    let list = args.get_or("ranks-list", "2,4,8");
-    let mut table = Table::new(&["ranks", "step_ms", "eff_%", "msgs/rank/step"]);
-    for tok in list.split(',') {
-        let ranks: usize = tok.trim().parse().context("--ranks-list")?;
-        let mut cfg = base.clone();
-        cfg.ranks = ranks;
-        let res = coordinator::run(&cfg)?;
-        let msgs = res.per_rank.iter().map(|m| m.msgs_sent).sum::<u64>() as f64
-            / (ranks * cfg.steps) as f64;
-        table.row(&[
-            ranks.to_string(),
-            format!("{:.2}", 1e3 * res.mean_step_secs()),
-            format!("{:.1}", res.mean_efficiency_pct()),
-            format!("{msgs:.1}"),
+    let grid = match args.get("preset") {
+        Some(name) => Grid::preset(name)?,
+        None => {
+            let base = cli::from_args(args)?;
+            let mut grid = Grid::from_args(base, args)?;
+            if !AXIS_KEYS.iter().any(|k| args.get(k).is_some()) {
+                // historical default: a rank sweep
+                grid = grid.ranks(&[2, 4, 8]);
+            }
+            grid
+        }
+    };
+    let mut engine = Engine::with_threads(
+        args.usize_or("sweep-threads", gossipgrad::exp::default_threads()),
+    );
+    if let Some(d) = args.get("cache-dir") {
+        engine = engine.cached(std::path::Path::new(d));
+    }
+    let n = grid.len();
+    println!(
+        "sweep: {n} scenarios on {} host threads (cache: {})",
+        engine.threads,
+        engine
+            .cache_dir
+            .as_deref()
+            .map(|p| p.display().to_string())
+            .unwrap_or_else(|| "off".into()),
+    );
+    let t0 = std::time::Instant::now();
+    let sweep = engine.run(&grid)?;
+    print_sweep_table(&sweep);
+    for r in &sweep.reports {
+        if r.in_flight_msgs != 0 {
+            bail!("scenario {} leaked {} in-flight messages", r.key, r.in_flight_msgs);
+        }
+    }
+    let out_dir = std::path::PathBuf::from(args.get_or("out-dir", "bench_out"));
+    let name = args.get_or("out-name", "sweep");
+    let (json_path, csv_path) = sweep
+        .write_artifacts(&out_dir, &name)
+        .with_context(|| format!("writing artifacts under {}", out_dir.display()))?;
+    // wall line is nondeterministic: keep it separate from the table so
+    // CI can diff sweep output (grep -v '^wall ')
+    println!(
+        "{} executed, {} cache hits | artifacts: {} {}",
+        sweep.runs_executed,
+        sweep.cache_hits,
+        json_path.display(),
+        csv_path.display()
+    );
+    println!("wall {:.1}s", t0.elapsed().as_secs_f64());
+
+    if args.flag("autotune-period") {
+        let base = grid.base.clone();
+        let periods: Vec<usize> = match args.get("gossip-period-list") {
+            Some(v) => v
+                .split(',')
+                .map(|t| t.trim().parse().context("--gossip-period-list"))
+                .collect::<Result<_>>()?,
+            None => grid.period_axis().to_vec(),
+        };
+        if periods.is_empty() {
+            bail!("--autotune-period needs --gossip-period-list (or a preset with a period axis)");
+        }
+        let tuned = autotune::autotune_gossip_period(
+            &engine,
+            &base,
+            &periods,
+            autotune::AutotuneParams::default(),
+        )?;
+        print_autotune_table(&tuned);
+    }
+    Ok(())
+}
+
+fn print_sweep_table(sweep: &Sweep) {
+    let mut t = Table::new(&[
+        "algo",
+        "p",
+        "period",
+        "jitter",
+        "lw",
+        "ct",
+        "step ms",
+        "eff %",
+        "overlap %",
+        "disagreement",
+        "msgs/rank/step",
+    ]);
+    for r in &sweep.reports {
+        let c = &r.config;
+        t.row(&[
+            c.algo.name().to_string(),
+            c.ranks.to_string(),
+            c.gossip_period.to_string(),
+            format!("{}", c.straggler_jitter),
+            (if c.layerwise { "y" } else { "n" }).to_string(),
+            (if c.comm_thread { "y" } else { "n" }).to_string(),
+            format!("{:.2}", 1e3 * r.mean_step_secs),
+            format!("{:.1}", r.mean_efficiency_pct),
+            format!("{:.1}", 100.0 * r.mean_overlap_frac),
+            format!("{:.3e}", r.max_disagreement),
+            format!("{:.1}", r.msgs_per_rank_step()),
         ]);
     }
-    table.print(&format!("sweep: {} / {}", base.model, base.algo.name()));
-    Ok(())
+    t.print("sweep (experiment engine, grid order)");
+}
+
+fn print_autotune_table(tuned: &autotune::AutotuneReport) {
+    let mut t = Table::new(&[
+        "period",
+        "steps/s",
+        "disagreement",
+        "fast enough",
+        "consensus shrinks",
+    ]);
+    for c in &tuned.candidates {
+        t.row(&[
+            c.period.to_string(),
+            format!("{:.2}", c.steps_per_sec),
+            format!("{:.3e}", c.disagreement),
+            (if c.fast_enough { "y" } else { "n" }).to_string(),
+            (if c.consensus_shrinks { "y" } else { "n" }).to_string(),
+        ]);
+    }
+    t.print(&format!(
+        "gossip-period autotune (peak {:.2} steps/s, no-mix drift {:.3e})",
+        tuned.peak_steps_per_sec, tuned.no_mix_disagreement
+    ));
+    match tuned.chosen_period {
+        Some(p) => println!(
+            "chosen gossip_period = {p} (largest within 2% of peak whose \
+             consensus still shrinks)"
+        ),
+        None => println!(
+            "no period passed both gates — keep gossip_period = 1 and \
+             inspect the candidates above"
+        ),
+    }
 }
 
 fn parse_sched(tok: &str) -> Result<Schedule> {
@@ -272,13 +318,9 @@ fn parse_sched(tok: &str) -> Result<Schedule> {
 }
 
 fn cmd_sim(args: &Args) -> Result<()> {
-    let w = match args.get_or("workload", "resnet50").as_str() {
-        "resnet50" => Workload::resnet50_p100(),
-        "googlenet" => Workload::googlenet_p100(),
-        "lenet3" => Workload::lenet3(args.f64_or("device-speed", 1.0)),
-        "cifarnet" => Workload::cifarnet(args.f64_or("device-speed", 1.0)),
-        other => bail!("unknown workload {other:?}"),
-    };
+    let name = args.get_or("workload", "resnet50");
+    let w = Workload::by_name(&name, args.f64_or("device-speed", 1.0))
+        .ok_or_else(|| anyhow::anyhow!("unknown workload {name:?}"))?;
     let cost = CostModel::ib_edr(0);
     let p_list = args.get_or("p-list", "4,8,16,32,64,128");
     let algos = args.get_or("algos", "gossip,agd-ring,agd-rd,sgd-rd,ps1");

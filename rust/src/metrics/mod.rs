@@ -113,6 +113,81 @@ impl RunMetrics {
     }
 }
 
+/// Compact, serializable digest of one rank's [`RunMetrics`] — the
+/// per-rank payload of an experiment-engine `ScenarioReport`
+/// (`crate::exp::ScenarioReport`).  Unlike [`RunMetrics::to_json`] it
+/// round-trips: [`from_json`](Self::from_json) restores exactly what
+/// [`to_json`](Self::to_json) emitted (derived means are stored, not
+/// recomputed, so a cached report re-serializes byte-identically).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RankSummary {
+    pub rank: usize,
+    pub mean_step_secs: f64,
+    pub mean_comm_wait_secs: f64,
+    pub recv_wait_secs: f64,
+    pub comm_hidden_secs: f64,
+    pub overlap_frac: f64,
+    pub efficiency_pct: f64,
+    pub msgs_sent: u64,
+    pub bytes_sent: u64,
+    pub final_loss: Option<f64>,
+}
+
+impl RankSummary {
+    pub fn from_metrics(m: &RunMetrics) -> RankSummary {
+        RankSummary {
+            rank: m.rank,
+            mean_step_secs: m.mean_step_secs(),
+            mean_comm_wait_secs: m.mean_comm_wait(),
+            recv_wait_secs: m.recv_wait_secs,
+            comm_hidden_secs: m.comm_hidden_secs,
+            overlap_frac: m.overlap_frac(),
+            efficiency_pct: m.efficiency_pct(),
+            msgs_sent: m.msgs_sent,
+            bytes_sent: m.bytes_sent,
+            final_loss: m.final_loss(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("rank", num(self.rank as f64)),
+            ("mean_step_secs", num(self.mean_step_secs)),
+            ("mean_comm_wait_secs", num(self.mean_comm_wait_secs)),
+            ("recv_wait_secs", num(self.recv_wait_secs)),
+            ("comm_hidden_secs", num(self.comm_hidden_secs)),
+            ("overlap_frac", num(self.overlap_frac)),
+            ("efficiency_pct", num(self.efficiency_pct)),
+            ("msgs_sent", num(self.msgs_sent as f64)),
+            ("bytes_sent", num(self.bytes_sent as f64)),
+            (
+                "final_loss",
+                self.final_loss.map(num).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RankSummary, String> {
+        let f = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("rank summary: missing {k}"))
+        };
+        Ok(RankSummary {
+            rank: f("rank")? as usize,
+            mean_step_secs: f("mean_step_secs")?,
+            mean_comm_wait_secs: f("mean_comm_wait_secs")?,
+            recv_wait_secs: f("recv_wait_secs")?,
+            comm_hidden_secs: f("comm_hidden_secs")?,
+            overlap_frac: f("overlap_frac")?,
+            efficiency_pct: f("efficiency_pct")?,
+            msgs_sent: f("msgs_sent")? as u64,
+            bytes_sent: f("bytes_sent")? as u64,
+            final_loss: j.get("final_loss").and_then(Json::as_f64),
+        })
+    }
+}
+
 /// Aggregate across ranks for a run summary line.
 pub fn summarize(runs: &[RunMetrics]) -> Json {
     let losses: Vec<f64> = runs.iter().filter_map(|r| r.final_loss()).collect();
@@ -223,6 +298,39 @@ mod tests {
             parsed.get("loss").unwrap().idx(1).unwrap().idx(1).unwrap().as_f64(),
             Some(1.1)
         );
+    }
+
+    #[test]
+    fn rank_summary_roundtrips() {
+        let mut m = RunMetrics::new(3);
+        m.loss = vec![(0, 2.3), (9, 0.7)];
+        m.step_secs = vec![0.01, 0.03];
+        m.comm_wait_secs = vec![0.001, 0.002];
+        m.recv_wait_secs = 0.004;
+        m.comm_hidden_secs = 0.012;
+        m.msgs_sent = 42;
+        m.bytes_sent = 4096;
+        let s = RankSummary::from_metrics(&m);
+        assert_eq!(s.rank, 3);
+        assert_eq!(s.final_loss, Some(0.7));
+        assert!((s.overlap_frac - 0.75).abs() < 1e-12);
+        let j = s.to_json();
+        let back = RankSummary::from_json(&j).unwrap();
+        assert_eq!(back, s);
+        // text round-trip re-serializes byte-identically (caching needs this)
+        let reparsed =
+            Json::parse(&j.to_string()).expect("valid summary json");
+        assert_eq!(
+            RankSummary::from_json(&reparsed).unwrap().to_json().to_string(),
+            j.to_string()
+        );
+        // absent final_loss survives as None
+        let mut empty = RunMetrics::new(0);
+        empty.step_secs = vec![0.01];
+        let s2 = RankSummary::from_metrics(&empty);
+        assert_eq!(s2.final_loss, None);
+        let back2 = RankSummary::from_json(&s2.to_json()).unwrap();
+        assert_eq!(back2, s2);
     }
 
     #[test]

@@ -156,6 +156,19 @@ impl Workload {
         Workload::standin(t_fwd, t_bwd, layer_bytes)
     }
 
+    /// CLI name → calibrated workload.  `device_speed` scales the
+    /// tiny-net compute models (LeNet3/CIFARNet); the P100-calibrated
+    /// networks ignore it.
+    pub fn by_name(name: &str, device_speed: f64) -> Option<Workload> {
+        Some(match name {
+            "resnet50" => Workload::resnet50_p100(),
+            "googlenet" => Workload::googlenet_p100(),
+            "lenet3" => Workload::lenet3(device_speed),
+            "cifarnet" => Workload::cifarnet(device_speed),
+            _ => return None,
+        })
+    }
+
     /// CIFARNet, batch 100/device; 0.75 s/epoch at 32 devices (§7.2.1).
     pub fn cifarnet(device_speed: f64) -> Workload {
         let t = 0.040 / device_speed;

@@ -28,6 +28,19 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
+/// FNV-1a 64-bit hash — stable across platforms and runs (unlike
+/// `std::hash`, which is seeded per-process).  Used for config content
+/// hashes (`RunConfig::content_hash`) and model-bit checksums
+/// (`RunResult::param_hash`).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// Sample standard deviation.
 pub fn stddev(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
@@ -61,6 +74,14 @@ mod tests {
         for (p, want) in cases {
             assert_eq!(ceil_log2(p), want, "p={p}");
         }
+    }
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // reference values from the FNV spec
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a64(b"ab"), fnv1a64(b"ba"));
     }
 
     #[test]

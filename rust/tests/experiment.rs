@@ -1,0 +1,187 @@
+//! Experiment-engine integration tests: sweep determinism across host
+//! thread counts, cache-hit semantics, report fidelity vs direct runs,
+//! and the gossip-period autotuner's gates.
+//!
+//! The engine's core contract: scenarios are independent deterministic
+//! virtual-clock runs, so *how* the work-stealing pool schedules them
+//! (1 thread, N threads, cache-warm, cache-cold) must never show up in
+//! the serialized artifacts.
+
+use gossipgrad::config::{Algo, RunConfig};
+use gossipgrad::exp::{autotune, Engine, Grid};
+use gossipgrad::sim::Workload;
+use std::path::PathBuf;
+
+/// A small virtual-clock gossip base: LeNet3 compute model on the
+/// mlp-small native backend, measurably slow fabric.
+fn small_base() -> RunConfig {
+    let mut base = RunConfig {
+        model: "mlp-small".into(),
+        algo: Algo::Gossip,
+        ranks: 4,
+        steps: 6,
+        use_artifacts: false,
+        rows_per_rank: 32,
+        layerwise: true,
+        ..Default::default()
+    };
+    base.virtualize(&Workload::lenet3(4.0), 200e-6, 1.0 / 0.5e9);
+    base
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("gg_exp_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn n_thread_sweep_is_byte_identical_to_single_thread() {
+    let grid = Grid::new(small_base())
+        .algos(&[Algo::Gossip, Algo::Agd])
+        .ranks(&[2, 4])
+        .jitters(&[0.0, 0.2]);
+    let s1 = Engine::with_threads(1).run(&grid).expect("1-thread sweep");
+    let s4 = Engine::with_threads(4).run(&grid).expect("4-thread sweep");
+    assert_eq!(s1.reports.len(), 8);
+    assert_eq!(
+        s1.to_json().to_string(),
+        s4.to_json().to_string(),
+        "host parallelism leaked into the artifact"
+    );
+    assert_eq!(s1.to_csv(), s4.to_csv());
+    assert_eq!(s1.runs_executed, 8);
+    assert_eq!((s1.cache_hits, s4.cache_hits), (0, 0), "no cache attached");
+    // reports come back in grid order no matter which worker ran what
+    for (report, cfg) in s4.reports.iter().zip(grid.scenarios()) {
+        assert_eq!(report.config, cfg);
+        assert_eq!(report.key, cfg.content_hash());
+        assert_eq!(report.in_flight_msgs, 0, "fabric must drain");
+    }
+}
+
+#[test]
+fn cache_hit_returns_identical_artifact_without_rerunning() {
+    let dir = tmp_dir("cache");
+    let grid = Grid::new(small_base()).gossip_periods(&[1, 3]);
+    let engine = Engine::with_threads(2).cached(&dir);
+    let cold = engine.run(&grid).expect("cold sweep");
+    assert_eq!(cold.runs_executed, 2, "cold cache runs everything");
+    assert_eq!(cold.cache_hits, 0);
+    // a *fresh* engine (empty in-memory memo) must be served entirely
+    // from the on-disk cache
+    let warm = Engine::with_threads(2)
+        .cached(&dir)
+        .run(&grid)
+        .expect("warm sweep");
+    assert_eq!(warm.runs_executed, 0, "warm cache must not re-run");
+    assert_eq!(warm.cache_hits, 2);
+    assert_eq!(
+        cold.to_json().to_string(),
+        warm.to_json().to_string(),
+        "cache hits must reproduce the artifact byte-identically"
+    );
+    // ... and through write_artifacts on disk too
+    let (j1, c1) = cold.write_artifacts(&dir.join("out1"), "sweep").unwrap();
+    let (j2, c2) = warm.write_artifacts(&dir.join("out2"), "sweep").unwrap();
+    assert_eq!(std::fs::read(&j1).unwrap(), std::fs::read(&j2).unwrap());
+    assert_eq!(std::fs::read(&c1).unwrap(), std::fs::read(&c2).unwrap());
+    assert!(j1.file_name().unwrap().to_str().unwrap() == "BENCH_sweep.json");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn engine_memoizes_repeated_scenarios_in_memory() {
+    // no cache dir: the second run on the *same* engine value is served
+    // from its in-memory memo — this is what lets `sweep
+    // --autotune-period` reuse the sweep's own runs
+    let grid = Grid::new(small_base()).gossip_periods(&[1, 2]);
+    let engine = Engine::with_threads(2);
+    let first = engine.run(&grid).expect("first run");
+    assert_eq!((first.runs_executed, first.cache_hits), (2, 0));
+    let again = engine.run(&grid).expect("memoized run");
+    assert_eq!((again.runs_executed, again.cache_hits), (0, 2));
+    assert_eq!(first.to_json().to_string(), again.to_json().to_string());
+}
+
+#[test]
+fn engine_report_matches_a_direct_coordinator_run() {
+    let base = small_base();
+    let sweep = Engine::with_threads(2)
+        .run(&Grid::new(base.clone()))
+        .expect("singleton sweep");
+    assert_eq!(sweep.reports.len(), 1);
+    let r = &sweep.reports[0];
+    let direct = gossipgrad::coordinator::run(&base).expect("direct run");
+    assert_eq!(r.param_hash, format!("{:016x}", direct.param_hash()));
+    assert_eq!(r.mean_step_secs, direct.mean_step_secs());
+    assert_eq!(r.mean_efficiency_pct, direct.mean_efficiency_pct());
+    assert_eq!(r.mean_overlap_frac, direct.mean_overlap_frac());
+    assert_eq!(r.max_disagreement, direct.max_disagreement() as f64);
+    assert_eq!(r.ranks.len(), base.ranks);
+}
+
+#[test]
+fn autotune_picks_a_period_that_passes_both_gates() {
+    // negligible wire cost ⇒ every period is within 2% of peak
+    // throughput, so the choice is decided by the consensus gate alone
+    let mut base = small_base();
+    base.steps = 12;
+    base.virtualize(&Workload::lenet3(4.0), 1e-6, 1e-12);
+    let engine = Engine::with_threads(4);
+    let tuned = autotune::autotune_gossip_period(
+        &engine,
+        &base,
+        &[1, 2, 4],
+        autotune::AutotuneParams::default(),
+    )
+    .expect("autotune");
+    assert_eq!(tuned.candidates.len(), 3);
+    assert!(
+        tuned.no_mix_disagreement > 0.0,
+        "independent SGD on distinct shards must drift"
+    );
+    assert!(
+        tuned.candidates[0].consensus_shrinks,
+        "every-step mixing must beat half the no-mix drift"
+    );
+    let chosen = tuned.chosen_period.expect("period 1 qualifies at minimum");
+    let c = tuned
+        .candidates
+        .iter()
+        .find(|c| c.period == chosen)
+        .expect("chosen period is a candidate");
+    assert!(c.fast_enough && c.consensus_shrinks);
+    // no qualifying candidate is larger than the chosen one
+    assert!(tuned
+        .candidates
+        .iter()
+        .filter(|c| c.fast_enough && c.consensus_shrinks)
+        .all(|c| c.period <= chosen));
+    // reports: one per period + the no-mixing reference
+    assert_eq!(tuned.reports.len(), 4);
+    assert_eq!(tuned.reports[3].config.gossip_period, base.steps + 1);
+}
+
+#[test]
+fn autotune_rejects_bad_inputs() {
+    let engine = Engine::with_threads(1);
+    let base = small_base();
+    let params = autotune::AutotuneParams::default();
+    let mut agd = base.clone();
+    agd.algo = Algo::Agd;
+    assert!(
+        autotune::autotune_gossip_period(&engine, &agd, &[1], params).is_err(),
+        "non-gossip algo has no gossip period to tune"
+    );
+    assert!(
+        autotune::autotune_gossip_period(&engine, &base, &[], params).is_err(),
+        "empty candidate list"
+    );
+    assert!(
+        autotune::autotune_gossip_period(&engine, &base, &[base.steps + 5], params)
+            .is_err(),
+        "periods beyond the step count never mix"
+    );
+}
