@@ -51,6 +51,14 @@
 //! On a wall-clock fabric the engine falls back to the transport's
 //! measured accounting (`test`/`wait` per message); the comm clock is
 //! inert there.
+//!
+//! The engine is link-agnostic: the raw harvest reads stamps the
+//! accounting layer has already normalized to `(sent_ns, at_ns)` pairs,
+//! so the same state machines drive collectives over the in-process
+//! link and over `TcpLink` process meshes (where only the wall path is
+//! reachable — TCP fabrics reject the virtual clock).  The TCP parity
+//! tests (`tests/tcp_transport.rs`) run comm-thread AGD over a real
+//! socket mesh through this engine.
 
 use super::binomial_tree::BinomialTreeMachine;
 use super::recursive_doubling::RecursiveDoublingMachine;

@@ -7,7 +7,7 @@
 //! `--workload NAME` virtualizes onto a calibrated compute model, and
 //! explicit `--compute-ms`/`--fwd-ms` override the workload's numbers.
 
-use super::{Algo, LrSchedule, RunConfig};
+use super::{Algo, LrSchedule, RunConfig, Transport};
 use crate::collectives::Algorithm;
 use crate::sim::Workload;
 use crate::util::args::Args;
@@ -27,6 +27,7 @@ pub const FLAGS: &[&str] = &[
     "comm-thread",
     "sync-mix",
     "autotune-period",
+    "keep-dir",
 ];
 
 /// Build a [`RunConfig`] from `--config` (optional preset) + CLI
@@ -62,6 +63,9 @@ pub fn from_args(args: &Args) -> Result<RunConfig> {
     }
     if let Some(a) = args.get("allreduce") {
         cfg.allreduce = Algorithm::parse(a).map_err(anyhow::Error::msg)?;
+    }
+    if let Some(t) = args.get("transport") {
+        cfg.transport = Transport::parse(t).map_err(anyhow::Error::msg)?;
     }
     cfg.ranks = args.usize_or("ranks", cfg.ranks);
     cfg.steps = args.usize_or("steps", cfg.steps);
@@ -155,6 +159,14 @@ pub fn from_args(args: &Args) -> Result<RunConfig> {
             cfg.virt_compute_secs * 1e3
         );
     }
+    // TCP arrival stamps are receiver-side Instants, which cannot carry
+    // deterministic virtual time across a process boundary
+    if cfg.transport == Transport::Tcp && cfg.virtual_clock {
+        bail!(
+            "--transport tcp runs on the wall clock only — drop \
+             --virtual-clock/--workload (docs/transport.md)"
+        );
+    }
     if let Some(d) = args.get("artifacts-dir") {
         cfg.artifacts_dir = d.to_string();
     }
@@ -233,6 +245,25 @@ mod tests {
     fn comm_thread_requires_layerwise() {
         assert!(from_args(&parse("train --comm-thread")).is_err());
         assert!(from_args(&parse("train --comm-thread --layerwise")).is_ok());
+    }
+
+    #[test]
+    fn transport_flag_parses_and_rejects_virtual_tcp() {
+        let c = from_args(&parse("train --transport tcp")).unwrap();
+        assert_eq!(c.transport, Transport::Tcp);
+        assert_eq!(
+            from_args(&parse("train")).unwrap().transport,
+            Transport::Inproc
+        );
+        assert!(from_args(&parse("train --transport carrier-pigeon")).is_err());
+        // the TCP link is wall-clock only
+        assert!(from_args(&parse(
+            "train --transport tcp --virtual-clock --compute-ms 6.25"
+        ))
+        .is_err());
+        assert!(
+            from_args(&parse("train --transport tcp --workload lenet3")).is_err()
+        );
     }
 
     #[test]

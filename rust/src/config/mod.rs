@@ -57,6 +57,37 @@ impl Algo {
     }
 }
 
+/// Which wire the fabric runs over (the transport's link layer; see
+/// docs/transport.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Transport {
+    /// Threads-as-ranks over in-process mailboxes (the default; wall or
+    /// virtual clock).
+    #[default]
+    Inproc,
+    /// One OS process per rank over TCP sockets (wall clock only; run
+    /// via the `rank`/`launch` subcommands or
+    /// `coordinator::trainer::run_tcp_loopback`).
+    Tcp,
+}
+
+impl Transport {
+    pub fn parse(s: &str) -> Result<Transport, String> {
+        Ok(match s {
+            "inproc" | "in-proc" | "threads" => Transport::Inproc,
+            "tcp" => Transport::Tcp,
+            other => return Err(format!("unknown transport {other:?}")),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Transport::Inproc => "inproc",
+            Transport::Tcp => "tcp",
+        }
+    }
+}
+
 /// Learning-rate schedule (§7.3.2: ResNet50 step regimen ×0.1/30 epochs).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum LrSchedule {
@@ -164,6 +195,10 @@ pub struct RunConfig {
     /// partner model instead of draining the previous exchange (the
     /// convergence-property schedule — exposed comm is paid in full).
     pub sync_mix: bool,
+    /// Which wire the fabric runs over: in-process mailboxes (threads
+    /// as ranks) or TCP sockets (one process per rank, wall clock
+    /// only).  Recorded in experiment artifacts so sweeps key on it.
+    pub transport: Transport,
 }
 
 impl Default for RunConfig {
@@ -199,6 +234,7 @@ impl Default for RunConfig {
             virt_ps_agg_secs: 0.0,
             comm_thread: false,
             sync_mix: false,
+            transport: Transport::Inproc,
         }
     }
 }
@@ -283,6 +319,7 @@ impl RunConfig {
             ("use_artifacts", Json::Bool(self.use_artifacts)),
             ("artifacts_dir", json::s(&self.artifacts_dir)),
             ("allreduce", json::s(self.allreduce.name())),
+            ("transport", json::s(self.transport.name())),
         ];
         if let Some(dir) = &self.resume_from {
             pairs.push(("resume_from", json::s(dir)));
@@ -380,6 +417,9 @@ impl RunConfig {
         }
         if let Some(v) = j.get("allreduce").and_then(Json::as_str) {
             c.allreduce = Algorithm::parse(v)?;
+        }
+        if let Some(v) = j.get("transport").and_then(Json::as_str) {
+            c.transport = Transport::parse(v)?;
         }
         if let Some(sched) = j.get("lr_step_every").and_then(Json::as_usize) {
             let gamma = j
@@ -524,6 +564,7 @@ mod tests {
         c.virt_ps_agg_secs = 1e-3;
         c.comm_thread = true;
         c.sync_mix = true;
+        c.transport = Transport::Tcp;
         let j = c.to_json();
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(back, c, "to_json/from_json must round-trip losslessly");
@@ -557,6 +598,22 @@ mod tests {
         // numeric seeds in hand-written presets still parse
         let j = Json::parse(r#"{"seed": 77}"#).unwrap();
         assert_eq!(RunConfig::from_json(&j).unwrap().seed, 77);
+    }
+
+    #[test]
+    fn transport_axis_parses_and_reshapes_hash() {
+        assert_eq!(RunConfig::default().transport, Transport::Inproc);
+        for t in [Transport::Inproc, Transport::Tcp] {
+            assert_eq!(Transport::parse(t.name()).unwrap(), t);
+        }
+        assert!(Transport::parse("udp").is_err());
+        let mut c = RunConfig::default();
+        c.transport = Transport::Tcp;
+        // the transport is part of the scenario identity: a TCP run must
+        // not collide with the equivalent in-proc run in a sweep cache
+        assert_ne!(c.content_hash(), RunConfig::default().content_hash());
+        let j = Json::parse(r#"{"transport": "tcp"}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().transport, Transport::Tcp);
     }
 
     #[test]

@@ -1,19 +1,33 @@
-//! Multi-threaded training launcher: builds the fabric, dataset and
-//! backend, spawns one thread per rank, runs the selected algorithm and
-//! collects per-rank metrics.
+//! Training launchers: build the fabric (over either link), dataset and
+//! backend, run the selected algorithm on every rank and collect
+//! per-rank metrics.
+//!
+//! Three entry shapes share one per-rank body ([`drive_worker`]):
+//!
+//! * [`run`] / [`run_with_backend`] — the historical threads-as-ranks
+//!   launcher over the in-process link (wall or virtual clock).
+//! * [`run_rank_with_link`] — ONE rank over a caller-supplied
+//!   [`Link`]; the unit the `rank` subcommand executes, one process
+//!   per rank over [`TcpLink`](crate::transport::TcpLink).
+//! * [`run_tcp_loopback`] — all ranks as threads, but each over its own
+//!   TCP link on loopback ephemeral ports: the full socket wire path
+//!   inside one process, powering the numerics-parity and drain tests
+//!   (`tests/tcp_transport.rs`) and `run_with_backend`'s dispatch for
+//!   `RunConfig::transport == Tcp`.
 
 use super::baselines;
 use super::gossip::{run_gossip, GossipTopology};
 use super::worker::{Backend, Worker};
-use crate::config::{Algo, RunConfig};
+use crate::config::{Algo, RunConfig, Transport};
 use crate::data::synthetic::{self, Dataset};
 use crate::metrics::RunMetrics;
 use crate::nativenet::NativeMlp;
 use crate::runtime::PjrtModel;
-use crate::transport::Fabric;
+use crate::transport::{ClockMode, Endpoint, Fabric, Link, TcpLinkBuilder};
 
 use anyhow::{Context, Result};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Outcome of one distributed run.
 pub struct RunResult {
@@ -178,17 +192,46 @@ pub fn build_backend(cfg: &RunConfig) -> Result<Backend> {
     }
 }
 
-/// Run a full distributed training job per `cfg`; blocks until done.
-pub fn run(cfg: &RunConfig) -> Result<RunResult> {
-    let backend = build_backend(cfg)?;
-    run_with_backend(cfg, backend)
+/// Ranks the fabric must address for `cfg`: the workers, plus the
+/// parameter-server rank(s) occupying the top of the fabric for the PS
+/// algorithm.  A multi-process launch spawns exactly this many
+/// processes.
+pub fn fabric_size(cfg: &RunConfig) -> usize {
+    if cfg.algo == Algo::ParamServer {
+        cfg.ranks + cfg.ps_servers.max(1)
+    } else {
+        cfg.ranks
+    }
 }
 
-/// Like [`run`] but with a caller-provided backend (tests inject the
-/// native backend or tiny models here).
-pub fn run_with_backend(cfg: &RunConfig, backend: Backend) -> Result<RunResult> {
+/// The per-rank training body shared by every launcher: build the
+/// worker, run the configured algorithm, hand back its metrics and
+/// final parameters.
+fn drive_worker(
+    rank: usize,
+    ep: &Endpoint,
+    backend: Backend,
+    train: &Dataset,
+    val: Arc<Dataset>,
+    cfg: &RunConfig,
+) -> (RunMetrics, Vec<f32>) {
     let p = cfg.ranks;
-    anyhow::ensure!(p >= 1, "need at least one rank");
+    let mut w = build_worker(rank, ep, backend, train, val, cfg);
+    match cfg.algo {
+        Algo::Gossip | Algo::GossipHypercube | Algo::GossipRandom => {
+            let topo = GossipTopology::build(cfg.algo, p, cfg.rotation, cfg.seed);
+            run_gossip(&mut w, ep, &topo, cfg.sync_mix);
+        }
+        Algo::SgdSync => baselines::run_allreduce(&mut w, ep, cfg.allreduce, false),
+        Algo::Agd => baselines::run_allreduce(&mut w, ep, cfg.allreduce, true),
+        Algo::PeriodicAgd => baselines::run_periodic(&mut w, ep, cfg.allreduce),
+        Algo::ParamServer => baselines::run_ps_worker(&mut w, ep, p),
+    }
+    (w.metrics, w.params)
+}
+
+fn validate(cfg: &RunConfig) -> Result<()> {
+    anyhow::ensure!(cfg.ranks >= 1, "need at least one rank");
     // a comm thread only overlaps collectives posted mid-backprop;
     // without the layer-wise pipeline it would silently measure the
     // blocking schedule while claiming otherwise
@@ -196,14 +239,35 @@ pub fn run_with_backend(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
         !cfg.comm_thread || cfg.layerwise,
         "comm_thread requires layerwise (per-layer pipelined AGD)"
     );
-    let is_ps = cfg.algo == Algo::ParamServer;
-    let fabric_size = if is_ps { p + cfg.ps_servers.max(1) } else { p };
+    anyhow::ensure!(
+        !(cfg.transport == Transport::Tcp && cfg.virtual_clock),
+        "the TCP link runs on the wall clock only (docs/transport.md)"
+    );
+    Ok(())
+}
+
+/// Run a full distributed training job per `cfg`; blocks until done.
+pub fn run(cfg: &RunConfig) -> Result<RunResult> {
+    let backend = build_backend(cfg)?;
+    run_with_backend(cfg, backend)
+}
+
+/// Like [`run`] but with a caller-provided backend (tests inject the
+/// native backend or tiny models here).  Dispatches on
+/// `cfg.transport`: threads-as-ranks over the in-process link, or one
+/// TCP link per rank on loopback ([`run_tcp_loopback`]).
+pub fn run_with_backend(cfg: &RunConfig, backend: Backend) -> Result<RunResult> {
+    validate(cfg)?;
+    if cfg.transport == Transport::Tcp {
+        return run_tcp_loopback(cfg, backend);
+    }
+    let p = cfg.ranks;
     // Virtual-clock fabric makes all timing metrics deterministic
     // discrete-event simulated seconds (docs/virtual-time.md).
     let fabric = if cfg.virtual_clock {
-        Fabric::new_virtual(fabric_size, cfg.cost_model())
+        Fabric::new_virtual(fabric_size(cfg), cfg.cost_model())
     } else {
-        Fabric::new(fabric_size, cfg.cost_model())
+        Fabric::new(fabric_size(cfg), cfg.cost_model())
     };
 
     let batch = backend.batch();
@@ -224,30 +288,10 @@ pub fn run_with_backend(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
         let val = Arc::clone(&val);
         let cfg = cfg.clone();
         handles.push(std::thread::spawn(move || {
-            let mut w = build_worker(rank, &ep, backend, &train, val, &cfg);
-            match cfg.algo {
-                Algo::Gossip | Algo::GossipHypercube | Algo::GossipRandom => {
-                    let topo =
-                        GossipTopology::build(cfg.algo, p, cfg.rotation, cfg.seed);
-                    run_gossip(&mut w, &ep, &topo, cfg.sync_mix);
-                }
-                Algo::SgdSync => {
-                    baselines::run_allreduce(&mut w, &ep, cfg.allreduce, false)
-                }
-                Algo::Agd => {
-                    baselines::run_allreduce(&mut w, &ep, cfg.allreduce, true)
-                }
-                Algo::PeriodicAgd => {
-                    baselines::run_periodic(&mut w, &ep, cfg.allreduce)
-                }
-                Algo::ParamServer => {
-                    baselines::run_ps_worker(&mut w, &ep, p);
-                }
-            }
-            (w.metrics, w.params)
+            drive_worker(rank, &ep, backend, &train, val, &cfg)
         }));
     }
-    if is_ps {
+    if cfg.algo == Algo::ParamServer {
         // dedicate this thread to the (first) server; extra servers are
         // future work — the paper's critique targets the 1-server case
         let ep = fabric.endpoint(p);
@@ -273,6 +317,129 @@ pub fn run_with_backend(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
         final_accuracy,
         wall_secs: t0.elapsed().as_secs_f64(),
         in_flight_msgs: fabric.in_flight(),
+    })
+}
+
+/// What one rank of a multi-process run produces.  Worker ranks carry
+/// metrics + final parameters; parameter-server ranks (fabric ranks ≥
+/// `cfg.ranks`) carry neither.  `in_flight` is this rank's post-quiesce
+/// link count — the launcher sums them for the global drain invariant.
+pub struct RankOutcome {
+    pub rank: usize,
+    pub metrics: Option<RunMetrics>,
+    pub params: Option<Vec<f32>>,
+    pub in_flight: usize,
+}
+
+/// Run exactly ONE fabric rank over a caller-supplied link — the unit
+/// of multi-process execution (`gossipgrad rank`).  Every process
+/// derives the same datasets/backend deterministically from `cfg`, so
+/// the numerics match the threads-as-ranks run bit for bit.
+pub fn run_rank_with_link(
+    cfg: &RunConfig,
+    backend: Backend,
+    rank: usize,
+    link: Arc<dyn Link>,
+) -> Result<RankOutcome> {
+    validate(cfg)?;
+    anyhow::ensure!(!cfg.virtual_clock, "multi-process links are wall-clock only");
+    let n = fabric_size(cfg);
+    anyhow::ensure!(
+        link.size() == n,
+        "link addresses {} ranks but the config needs {n}",
+        link.size()
+    );
+    anyhow::ensure!(rank < n, "rank {rank} outside fabric of {n}");
+    let fabric = Fabric::with_link(link, cfg.cost_model(), ClockMode::Wall);
+    let ep = fabric.endpoint(rank);
+    let p = cfg.ranks;
+    let (metrics, params) = if rank < p {
+        let batch = backend.batch();
+        let x_len = backend.x_len();
+        let (train, val) = build_datasets(cfg, batch, x_len, backend.classes());
+        let (m, params) = drive_worker(rank, &ep, backend, &train, Arc::new(val), cfg);
+        (Some(m), Some(params))
+    } else {
+        if rank == p {
+            baselines::run_ps_server(&ep, &backend, p, cfg);
+        }
+        // extra server ranks (ps_servers > 1) idle, as in-proc
+        (None, None)
+    };
+    // flush our sends, ingest peer streams to EOF, then count leaks
+    fabric.quiesce(rank);
+    Ok(RankOutcome {
+        rank,
+        metrics,
+        params,
+        in_flight: fabric.in_flight(),
+    })
+}
+
+/// All ranks as threads, each over its **own TCP link** on loopback
+/// ephemeral ports — the full socket wire path (frames, handshakes,
+/// reader/writer threads) without spawning processes.  Used by
+/// `run_with_backend` when `cfg.transport == Tcp` and by the parity and
+/// drain tests.
+pub fn run_tcp_loopback(cfg: &RunConfig, backend: Backend) -> Result<RunResult> {
+    validate(cfg)?;
+    let n = fabric_size(cfg);
+    // bind every rank first so the full peer table is known before any
+    // rank dials (ephemeral ports: no collisions, parallel-test safe)
+    let builders = (0..n)
+        .map(|_| TcpLinkBuilder::bind("127.0.0.1:0"))
+        .collect::<std::io::Result<Vec<_>>>()
+        .context("binding loopback listeners")?;
+    let peers: Vec<String> =
+        builders.iter().map(|b| b.local_addr().to_string()).collect();
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for (rank, b) in builders.into_iter().enumerate() {
+        let peers = peers.clone();
+        let cfg = cfg.clone();
+        let backend = Arc::clone(&backend);
+        handles.push(std::thread::spawn(move || -> Result<RankOutcome> {
+            let link: Arc<dyn Link> = b
+                .establish(rank, &peers, cfg.cost_model(), Duration::from_secs(60))
+                .with_context(|| format!("rank {rank}: establishing tcp mesh"))?;
+            run_rank_with_link(&cfg, backend, rank, link)
+        }));
+    }
+    // join EVERY rank before surfacing an error: returning on the first
+    // failure would leak still-running rank threads (sockets, io
+    // threads) into the caller's process
+    let joined: Vec<Result<RankOutcome>> = handles
+        .into_iter()
+        .map(|h| {
+            h.join()
+                .map_err(|_| anyhow::anyhow!("rank panicked"))
+                .and_then(|r| r)
+        })
+        .collect();
+    let mut outcomes = Vec::with_capacity(joined.len());
+    for r in joined {
+        outcomes.push(r?);
+    }
+    outcomes.sort_by_key(|o| o.rank);
+    let in_flight_msgs = outcomes.iter().map(|o| o.in_flight).sum();
+    let mut per_rank = Vec::new();
+    let mut final_params = Vec::new();
+    for o in outcomes {
+        if let (Some(m), Some(p)) = (o.metrics, o.params) {
+            per_rank.push(m);
+            final_params.push(p);
+        }
+    }
+    let final_accuracy = per_rank
+        .first()
+        .and_then(|m| m.accuracy.last())
+        .map(|&(_, a)| a);
+    Ok(RunResult {
+        per_rank,
+        final_params,
+        final_accuracy,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        in_flight_msgs,
     })
 }
 

@@ -207,14 +207,14 @@ impl Sweep {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "key,algo,model,ranks,steps,gossip_period,straggler_jitter,\
-             layerwise,comm_thread,sync_mix,allreduce,seed,step_ms,\
-             efficiency_pct,overlap_frac,max_disagreement,\
+             layerwise,comm_thread,sync_mix,allreduce,seed,transport,\
+             step_ms,efficiency_pct,overlap_frac,max_disagreement,\
              msgs_per_rank_step,in_flight_msgs,param_hash\n",
         );
         for r in &self.reports {
             let c = &r.config;
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.key,
                 c.algo.name(),
                 c.model,
@@ -227,6 +227,7 @@ impl Sweep {
                 c.sync_mix,
                 c.allreduce.name(),
                 c.seed,
+                c.transport.name(),
                 1e3 * r.mean_step_secs,
                 r.mean_efficiency_pct,
                 r.mean_overlap_frac,

@@ -10,12 +10,16 @@
 //! * [`topology`] — virtual communication topologies: dissemination,
 //!   hypercube, ring, random gossip, plus communicator **rotation**
 //!   (paper §4.3–4.5).
-//! * [`transport`] — MPI-like in-process message substrate with
-//!   non-blocking isend/irecv/test_all/wait_all and an α–β network cost
-//!   model (`simnet`) standing in for InfiniBand/Aries.  Runs under a
-//!   wall clock (default) or a deterministic virtual clock
-//!   (`transport::clock`, docs/virtual-time.md) that scales measured
-//!   runs to p = 256+ in seconds with bit-reproducible timings.
+//! * [`transport`] — MPI-like message substrate, split into a **link
+//!   layer** (`transport::link`: delivery only, behind the `Link`
+//!   trait — in-process mailboxes or one-process-per-rank TCP frames,
+//!   `transport::tcp`, docs/transport.md) and an **accounting layer**
+//!   (non-blocking isend/irecv/test_all/wait_all, the α–β cost model
+//!   (`simnet`) standing in for InfiniBand/Aries, the hidden/exposed
+//!   overlap ledger).  Runs under a wall clock (default) or a
+//!   deterministic virtual clock (`transport::clock`,
+//!   docs/virtual-time.md) that scales measured runs to p = 256+ in
+//!   seconds with bit-reproducible timings.
 //! * [`collectives`] — all-reduce algorithms (recursive doubling,
 //!   binomial tree, ring) built on the transport as per-round state
 //!   machines under a non-blocking engine (`IAllreduce`:

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train      run a distributed training job (threads-as-ranks)
+//!   launch     spawn one OS process per rank over TCP on localhost
+//!   rank       run a single rank of a multi-process TCP job
 //!   sweep      declarative scenario grid on the experiment engine
 //!   sim        scale simulation (Table 7-style, up to 1024 devices)
 //!   inspect    print artifact metadata
@@ -9,6 +11,10 @@
 //! Examples:
 //!   gossipgrad train --model mlp --algo gossip --ranks 8 --steps 200
 //!   gossipgrad train --config configs/mnist_gossip_32.json
+//!   gossipgrad launch --transport tcp --native --model mlp-small \
+//!       --algo gossip --ranks 4 --steps 50
+//!   gossipgrad rank --transport tcp --rank 0 \
+//!       --peers host0:29500,host1:29500 --native --algo agd --ranks 2
 //!   gossipgrad sweep --native --model mlp-small --workload lenet3 \
 //!       --device-speed 4 --alpha 0.0002 --beta-gbps 0.5 --layerwise \
 //!       --ranks 1024 --gossip-period-list 1,2,4,8 --jitter-list 0,0.3
@@ -18,15 +24,19 @@
 
 use anyhow::{bail, Context, Result};
 use gossipgrad::collectives::Algorithm;
-use gossipgrad::config::cli;
+use gossipgrad::config::{cli, Transport};
 use gossipgrad::coordinator;
+use gossipgrad::coordinator::trainer::{
+    build_backend, fabric_size, run_rank_with_link,
+};
 use gossipgrad::exp::{autotune, Engine, Grid, Sweep};
-use gossipgrad::metrics::sparkline;
+use gossipgrad::metrics::{sparkline, RankSummary};
 use gossipgrad::runtime::artifacts::{default_dir, ArtifactSet};
 use gossipgrad::sim::{self, Schedule, Workload};
-use gossipgrad::transport::CostModel;
+use gossipgrad::transport::{CostModel, Link, TcpLinkBuilder};
 use gossipgrad::util::args::Args;
 use gossipgrad::util::bench::Table;
+use gossipgrad::util::json::{self, num, obj, Json};
 
 fn main() {
     if let Err(e) = real_main() {
@@ -39,6 +49,8 @@ fn real_main() -> Result<()> {
     let args = Args::from_env(cli::FLAGS).map_err(anyhow::Error::msg)?;
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
+        Some("launch") => cmd_launch(&args),
+        Some("rank") => cmd_rank(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("sim") => cmd_sim(&args),
         Some("inspect") => cmd_inspect(&args),
@@ -55,7 +67,8 @@ fn real_main() -> Result<()> {
 fn print_usage() {
     println!(
         "gossipgrad — GossipGraD (Daily et al. 2018) reproduction\n\n\
-         USAGE: gossipgrad <train|sweep|sim|inspect> [--key value ...]\n\n\
+         USAGE: gossipgrad <train|launch|rank|sweep|sim|inspect> \
+         [--key value ...]\n\n\
          train:   --model mlp|mlp-small|cnn|transformer  --algo gossip|\n\
                   gossip-hypercube|gossip-random|sgd|agd|periodic-agd|ps\n\
                   --ranks N --steps N --lr F --eval-every N\n\
@@ -71,6 +84,19 @@ fn print_usage() {
                   pipeline   [--fwd-ms MS]   [--jitter F]  deterministic\n\
                   straggler noise   [--comm-thread]  non-blocking AGD\n\
                   collectives (needs --layerwise)   [--sync-mix]\n\
+                  [--transport inproc|tcp]  wire layer (tcp = one\n\
+                  loopback socket mesh, wall clock; docs/transport.md)\n\
+         launch:  spawn one OS process per rank on localhost over TCP\n\
+                  and merge their metrics.  Takes every train flag,\n\
+                  plus --port-base P (default 29500) [--keep-dir]\n\
+                  (requires --transport tcp)\n\
+         rank:    run ONE rank of a multi-process TCP job:\n\
+                  --rank R --peers host:port,...  (one entry per\n\
+                  fabric rank, in rank order; entry R is this rank's\n\
+                  listen address)  [--result-dir DIR]  write\n\
+                  rank_R.json for the launcher  [--handshake-timeout-\n\
+                  secs N]  plus every train flag (requires\n\
+                  --transport tcp)\n\
          sweep:   declarative grid on the experiment engine\n\
                   (docs/experiments.md).  Takes every train flag as the\n\
                   base scenario, plus axes --algo-list --ranks-list\n\
@@ -142,7 +168,240 @@ fn report(res: &coordinator::RunResult) {
         res.max_disagreement(),
         res.per_rank.iter().map(|m| m.msgs_sent).sum::<u64>(),
     );
+    // numerics fingerprint on its own line so CI can diff a TCP
+    // multi-process run against the equivalent threads-as-ranks run
+    println!("param_hash {:016x}", res.param_hash());
     println!("wall {:.1}s", res.wall_secs);
+}
+
+/// One rank of a multi-process TCP job: bind `peers[rank]`, handshake
+/// the full mesh, run the rank, optionally write `rank_<R>.json` (the
+/// launcher's merge input).
+fn cmd_rank(args: &Args) -> Result<()> {
+    let cfg = cli::from_args(args)?;
+    if cfg.transport != Transport::Tcp {
+        bail!("the rank subcommand needs --transport tcp");
+    }
+    let rank: usize = args
+        .get("rank")
+        .context("rank: --rank R is required")?
+        .parse()
+        .context("--rank")?;
+    let peers: Vec<String> = args
+        .get("peers")
+        .context("rank: --peers host:port,... is required")?
+        .split(',')
+        .map(|t| t.trim().to_string())
+        .collect();
+    let n = fabric_size(&cfg);
+    if peers.len() != n {
+        bail!(
+            "--peers lists {} addresses but the config needs {n} fabric \
+             ranks ({} workers{})",
+            peers.len(),
+            cfg.ranks,
+            if n > cfg.ranks {
+                format!(" + {} server(s)", n - cfg.ranks)
+            } else {
+                String::new()
+            }
+        );
+    }
+    if rank >= n {
+        bail!("--rank {rank} outside fabric of {n}");
+    }
+    let backend = build_backend(&cfg)?;
+    let builder = TcpLinkBuilder::bind(&peers[rank])
+        .with_context(|| format!("binding {}", peers[rank]))?;
+    let timeout = std::time::Duration::from_secs(
+        args.usize_or("handshake-timeout-secs", 30) as u64,
+    );
+    let link: std::sync::Arc<dyn Link> = builder
+        .establish(rank, &peers, cfg.cost_model(), timeout)
+        .context("establishing the tcp mesh")?;
+    let out = run_rank_with_link(&cfg, backend, rank, link)?;
+
+    if let Some(dir) = args.get("result-dir") {
+        let dir = std::path::Path::new(dir);
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(
+            dir.join(format!("rank_{rank}.json")),
+            rank_result_json(&out).to_string() + "\n",
+        )?;
+    }
+    match &out.metrics {
+        Some(m) => println!(
+            "rank {rank}: mean step {:.2} ms | efficiency {:.1}% | {} msgs \
+             | in-flight {}",
+            1e3 * m.mean_step_secs(),
+            m.efficiency_pct(),
+            m.msgs_sent,
+            out.in_flight
+        ),
+        None => println!("rank {rank}: server role done | in-flight {}", out.in_flight),
+    }
+    if out.in_flight != 0 {
+        bail!("rank {rank} left {} messages in flight", out.in_flight);
+    }
+    Ok(())
+}
+
+/// Serialize one rank's outcome for the launcher: metric digest +
+/// parameter bits (hex of each f32's bit pattern, so the merge can
+/// recompute the exact rank-major `param_hash`).
+fn rank_result_json(out: &coordinator::trainer::RankOutcome) -> Json {
+    let mut pairs = vec![
+        ("rank", num(out.rank as f64)),
+        ("in_flight", num(out.in_flight as f64)),
+    ];
+    if let Some(m) = &out.metrics {
+        pairs.push(("summary", RankSummary::from_metrics(m).to_json()));
+        if let Some(&(_, acc)) = m.accuracy.last() {
+            pairs.push(("final_accuracy", num(acc)));
+        }
+    }
+    if let Some(params) = &out.params {
+        use std::fmt::Write as _;
+        let mut hex = String::with_capacity(params.len() * 8);
+        for x in params {
+            let _ = write!(hex, "{:08x}", x.to_bits());
+        }
+        pairs.push(("params_hex", json::s(&hex)));
+    }
+    obj(pairs)
+}
+
+/// Spawn one `rank` process per fabric rank on localhost and merge
+/// their results: metrics table, global drain invariant, rank-major
+/// `param_hash` (bit-comparable with a `train` run of the same config).
+fn cmd_launch(args: &Args) -> Result<()> {
+    let cfg = cli::from_args(args)?;
+    if cfg.transport != Transport::Tcp {
+        bail!("launch currently supports --transport tcp only");
+    }
+    let n = fabric_size(&cfg);
+    if n == 0 {
+        bail!("need at least one rank");
+    }
+    let port_base = args.usize_or("port-base", 29500);
+    let peers: Vec<String> =
+        (0..n).map(|i| format!("127.0.0.1:{}", port_base + i)).collect();
+    let dir = std::env::temp_dir()
+        .join(format!("gossipgrad_launch_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let cfg_path = dir.join("config.json");
+    std::fs::write(&cfg_path, cfg.to_json().to_string() + "\n")?;
+    let exe = std::env::current_exe()?;
+    println!(
+        "launch: transport=tcp algo={} workers={} processes={n} ports {}..{}",
+        cfg.algo.name(),
+        cfg.ranks,
+        port_base,
+        port_base + n - 1
+    );
+    let t0 = std::time::Instant::now();
+    let mut children = Vec::with_capacity(n);
+    for rank in 0..n {
+        let child = std::process::Command::new(&exe)
+            .arg("rank")
+            .arg("--transport")
+            .arg("tcp")
+            .arg("--config")
+            .arg(&cfg_path)
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--peers")
+            .arg(peers.join(","))
+            .arg("--result-dir")
+            .arg(&dir)
+            .stdout(std::process::Stdio::null())
+            .spawn()
+            .with_context(|| format!("spawning rank {rank}"))?;
+        children.push(child);
+    }
+    let mut failed = Vec::new();
+    for (rank, mut child) in children.into_iter().enumerate() {
+        let status = child.wait()?;
+        if !status.success() {
+            failed.push(rank);
+        }
+    }
+    if !failed.is_empty() {
+        bail!("rank processes {failed:?} exited with failure (see stderr above)");
+    }
+
+    // ---- merge the per-rank result files -----------------------------
+    let mut summaries: Vec<RankSummary> = Vec::new();
+    let mut param_bytes: Vec<u8> = Vec::new();
+    let mut total_in_flight = 0usize;
+    for rank in 0..n {
+        let path = dir.join(format!("rank_{rank}.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(anyhow::Error::msg)?;
+        total_in_flight += j
+            .get("in_flight")
+            .and_then(Json::as_usize)
+            .with_context(|| format!("rank {rank}: missing in_flight"))?;
+        if let Some(s) = j.get("summary") {
+            summaries.push(RankSummary::from_json(s).map_err(anyhow::Error::msg)?);
+        }
+        if rank < cfg.ranks {
+            let hex = j
+                .get("params_hex")
+                .and_then(Json::as_str)
+                .with_context(|| format!("rank {rank}: missing params_hex"))?;
+            append_param_bits(&mut param_bytes, hex)
+                .with_context(|| format!("rank {rank}: params_hex"))?;
+        }
+    }
+    if !args.flag("keep-dir") {
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    let mut t = Table::new(&["rank", "step ms", "eff %", "overlap %", "msgs"]);
+    for s in &summaries {
+        t.row(&[
+            s.rank.to_string(),
+            format!("{:.2}", 1e3 * s.mean_step_secs),
+            format!("{:.1}", s.efficiency_pct),
+            format!("{:.1}", 100.0 * s.overlap_frac),
+            s.msgs_sent.to_string(),
+        ]);
+    }
+    t.print("merged per-rank metrics (tcp multi-process)");
+    if total_in_flight != 0 {
+        bail!("{total_in_flight} messages left in flight across the mesh");
+    }
+    println!(
+        "mean step {:.2} ms | efficiency {:.1}% | in-flight 0",
+        1e3 * gossipgrad::util::mean(
+            &summaries.iter().map(|s| s.mean_step_secs).collect::<Vec<_>>()
+        ),
+        gossipgrad::util::mean(
+            &summaries.iter().map(|s| s.efficiency_pct).collect::<Vec<_>>()
+        ),
+    );
+    println!(
+        "param_hash {:016x}",
+        gossipgrad::util::fnv1a64(&param_bytes)
+    );
+    println!("wall {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Decode a `params_hex` string (8 hex chars per f32 bit pattern) into
+/// the same little-endian byte stream `RunResult::param_hash` hashes.
+fn append_param_bits(out: &mut Vec<u8>, hex: &str) -> Result<()> {
+    if hex.len() % 8 != 0 {
+        bail!("length {} is not a multiple of 8", hex.len());
+    }
+    for chunk in hex.as_bytes().chunks_exact(8) {
+        let s = std::str::from_utf8(chunk).context("non-utf8 hex")?;
+        let bits = u32::from_str_radix(s, 16).context("bad hex digit")?;
+        out.extend_from_slice(&bits.to_le_bytes());
+    }
+    Ok(())
 }
 
 /// Axis options that turn a base config into a grid; with none present

@@ -1,5 +1,16 @@
-//! In-process fabric: one mailbox per rank, real buffers, MPI-like
-//! non-blocking request handles.
+//! Accounting layer: MPI-like request handles, clocks and the overlap
+//! ledger over a pluggable [`Link`].
+//!
+//! Historically this module *was* the in-process fabric; the delivery
+//! mechanics now live in the link layer ([`super::link`]) and this
+//! module keeps everything about **time and measurement**: which clock
+//! the fabric runs under, how a message's wire time is split into
+//! hidden vs exposed communication, and the per-rank traffic counters.
+//! The public API (`Fabric`/`Endpoint`/`SendReq`/`RecvReq`) is
+//! unchanged, so collectives and coordinator code is untouched by the
+//! split, and the default construction paths ([`Fabric::new`],
+//! [`Fabric::new_virtual`]) still build the in-process link with
+//! bit-identical timing behaviour.
 //!
 //! Visibility time: a message sent at time t with simulated cost c
 //! becomes matchable at `t + c` (see [`super::simnet`]).  `RecvReq::test`
@@ -11,44 +22,24 @@
 //!
 //! * **Wall** (default, [`Fabric::new`]) — arrival instants are real
 //!   [`Instant`]s; `wait` sleeps out the simulated wire time; exposed
-//!   wait is measured with the OS clock.
+//!   wait is measured with the OS clock.  The only mode a real-network
+//!   link ([`super::tcp::TcpLink`]) supports.
 //! * **Virtual** ([`Fabric::new_virtual`]) — arrival instants are
 //!   logical nanoseconds on the sender's per-rank clock; `test` compares
 //!   logical instants; `wait` never sleeps on simulated time — it blocks
-//!   only until the payload is *queued* (plain condvar, no timeout),
-//!   then jumps the receiver's clock to the arrival instant and records
-//!   `max(0, arrival − now)` as exposed wait.  All timing quantities are
-//!   deterministic (see the determinism argument in [`super::clock`]).
+//!   only until the payload is *queued* (an atomic link park, no
+//!   timeout), then jumps the receiver's clock to the arrival instant
+//!   and records `max(0, arrival − now)` as exposed wait.  All timing
+//!   quantities are deterministic (see the determinism argument in
+//!   [`super::clock`]).
 
 use super::clock::{Clock, ClockMode, TimeMark};
+use super::link::{InprocLink, Key, Link, Stamp};
 use super::simnet::CostModel;
 use super::Tag;
-use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
-
-type Key = (usize, Tag); // (src, tag)
-
-/// Send/arrival stamps of a queued message — variant always matches the
-/// fabric's clock mode.  The send instant rides along so the receiver
-/// can split the wire time into its *hidden* part (elapsed under the
-/// receiver's compute) and its *exposed* part (blocked wait) — the two
-/// halves of the overlap ledger behind `overlap_frac`.
-#[derive(Clone, Copy, Debug)]
-enum Stamp {
-    Wall { sent: Instant, at: Instant },
-    Virt { sent_ns: u64, at_ns: u64 },
-}
-
-struct Mailbox {
-    queues: HashMap<Key, VecDeque<(Stamp, Vec<f32>)>>,
-}
-
-struct RankSlot {
-    mbox: Mutex<Mailbox>,
-    cv: Condvar,
-}
 
 /// Per-rank traffic counters — the data behind the Table-1
 /// communication-complexity assertions and the EXPERIMENTS.md imbalance
@@ -75,37 +66,48 @@ pub struct Counters {
     pub comm_hidden_ns: AtomicU64,
 }
 
-/// The shared interconnect: `p` mailboxes + a cost model + a clock.
+/// The interconnect a run sees: a [`Link`] (delivery) + a cost model +
+/// a clock + per-rank counters (accounting).  On a multi-process link
+/// only the local rank's counters and clock are meaningful; each
+/// process reports its own and the launcher merges them.
 pub struct Fabric {
-    slots: Vec<RankSlot>,
+    link: Arc<dyn Link>,
     pub cost: CostModel,
     counters: Vec<Counters>,
     clock: Clock,
 }
 
 impl Fabric {
-    /// Wall-clock fabric (the default; real sleeps, measured waits).
+    /// Wall-clock in-process fabric (the default; real sleeps, measured
+    /// waits).
     pub fn new(p: usize, cost: CostModel) -> Arc<Fabric> {
         Fabric::with_clock(p, cost, ClockMode::Wall)
     }
 
-    /// Virtual-clock fabric: deterministic discrete-event time.  Message
-    /// costs use [`CostModel::nominal`] (the noise term is skipped — its
-    /// RNG draw order would depend on thread scheduling).
+    /// Virtual-clock in-process fabric: deterministic discrete-event
+    /// time.  Message costs use [`CostModel::nominal`] (the noise term
+    /// is skipped — its RNG draw order would depend on thread
+    /// scheduling).
     pub fn new_virtual(p: usize, cost: CostModel) -> Arc<Fabric> {
         Fabric::with_clock(p, cost, ClockMode::Virtual)
     }
 
     pub fn with_clock(p: usize, cost: CostModel, mode: ClockMode) -> Arc<Fabric> {
+        Fabric::with_link(Arc::new(InprocLink::new(p)), cost, mode)
+    }
+
+    /// Accounting layer over an arbitrary link — the factory the TCP
+    /// runner uses.  Panics if the link cannot carry the requested
+    /// clock mode (real-network links are wall-clock only: their
+    /// arrival stamps are made of receiver-side `Instant`s).
+    pub fn with_link(link: Arc<dyn Link>, cost: CostModel, mode: ClockMode) -> Arc<Fabric> {
+        assert!(
+            mode == ClockMode::Wall || link.supports_virtual(),
+            "this link is wall-clock only (virtual stamps cannot cross it)"
+        );
+        let p = link.size();
         Arc::new(Fabric {
-            slots: (0..p)
-                .map(|_| RankSlot {
-                    mbox: Mutex::new(Mailbox {
-                        queues: HashMap::new(),
-                    }),
-                    cv: Condvar::new(),
-                })
-                .collect(),
+            link,
             cost,
             counters: (0..p).map(|_| Counters::default()).collect(),
             clock: Clock::new(mode, p),
@@ -113,7 +115,7 @@ impl Fabric {
     }
 
     pub fn size(&self) -> usize {
-        self.slots.len()
+        self.link.size()
     }
 
     pub fn clock(&self) -> &Clock {
@@ -133,6 +135,7 @@ impl Fabric {
     }
 
     /// Total messages sent across all ranks (for complexity assertions).
+    /// On a multi-process link this covers the local ranks only.
     pub fn total_msgs(&self) -> u64 {
         self.counters
             .iter()
@@ -150,23 +153,22 @@ impl Fabric {
         }
     }
 
-    /// Messages currently queued in mailboxes (sent but never received)
-    /// — the fabric-drain invariant: a finished run must leave this at
-    /// zero, or leaked `isend`/`irecv` pairs would silently accumulate
-    /// payloads (and skew a reused fabric's accounting).
+    /// Messages accepted by the link but never harvested — the
+    /// fabric-drain invariant: a finished run must leave this at zero,
+    /// or leaked `isend`/`irecv` pairs would silently accumulate
+    /// payloads (and skew a reused fabric's accounting).  A
+    /// real-network link also counts frames still in its writer queues
+    /// (call [`quiesce`](Self::quiesce) first so only true leaks
+    /// remain).
     pub fn in_flight(&self) -> usize {
-        self.slots
-            .iter()
-            .map(|s| {
-                s.mbox
-                    .lock()
-                    .unwrap()
-                    .queues
-                    .values()
-                    .map(|q| q.len())
-                    .sum::<usize>()
-            })
-            .sum()
+        self.link.in_flight()
+    }
+
+    /// End-of-run link barrier for `rank` (flush sends, ingest peer
+    /// streams to EOF); no-op on the in-process link.  See
+    /// [`Link::quiesce`].
+    pub fn quiesce(&self, rank: usize) {
+        self.link.quiesce(rank);
     }
 }
 
@@ -211,33 +213,31 @@ impl RecvReq {
         if self.data.is_some() {
             return true;
         }
-        let slot = &self.fabric.slots[self.rank];
-        let mut mb = slot.mbox.lock().unwrap();
-        if let Some(q) = mb.queues.get_mut(&self.key) {
-            if let Some((stamp, _)) = q.front() {
-                let wire_ns = match *stamp {
-                    Stamp::Wall { sent, at } => {
-                        if Instant::now() < at {
-                            return false;
-                        }
-                        (at - sent).as_nanos() as u64
-                    }
-                    Stamp::Virt { sent_ns, at_ns } => {
-                        if self.fabric.clock.now_ns(self.rank) < at_ns {
-                            return false;
-                        }
-                        at_ns - sent_ns
-                    }
-                };
-                let (_, data) = q.pop_front().unwrap();
-                self.data = Some(data);
-                let c = &self.fabric.counters[self.rank];
-                c.msgs_recv.fetch_add(1, Ordering::Relaxed);
-                c.comm_hidden_ns.fetch_add(wire_ns, Ordering::Relaxed);
-                return true;
+        let link = &self.fabric.link;
+        let Some(stamp) = link.peek(self.rank, self.key) else {
+            return false;
+        };
+        let wire_ns = match stamp {
+            Stamp::Wall { sent, at } => {
+                if Instant::now() < at {
+                    return false;
+                }
+                (at - sent).as_nanos() as u64
             }
-        }
-        false
+            Stamp::Virt { sent_ns, at_ns } => {
+                if self.fabric.clock.now_ns(self.rank) < at_ns {
+                    return false;
+                }
+                at_ns - sent_ns
+            }
+        };
+        // single consumer per rank: the peeked front is still the front
+        let (_, data) = link.pop(self.rank, self.key).expect("front vanished");
+        self.data = Some(data);
+        let c = &self.fabric.counters[self.rank];
+        c.msgs_recv.fetch_add(1, Ordering::Relaxed);
+        c.comm_hidden_ns.fetch_add(wire_ns, Ordering::Relaxed);
+        true
     }
 
     /// Raw non-blocking harvest: pop the message as soon as it is
@@ -262,15 +262,7 @@ impl RecvReq {
             );
             return Some((d, 0, 0));
         }
-        let slot = &self.fabric.slots[self.rank];
-        let mut mb = slot.mbox.lock().unwrap();
-        self.pop_raw(&mut mb)
-    }
-
-    /// Shared pop for the raw harvests: dequeue under the held mailbox
-    /// lock, count the receive, normalize the stamps.
-    fn pop_raw(&self, mb: &mut Mailbox) -> Option<(Vec<f32>, u64, u64)> {
-        let (stamp, data) = mb.queues.get_mut(&self.key)?.pop_front()?;
+        let (stamp, data) = self.fabric.link.pop(self.rank, self.key)?;
         self.fabric.counters[self.rank]
             .msgs_recv
             .fetch_add(1, Ordering::Relaxed);
@@ -280,33 +272,19 @@ impl RecvReq {
         })
     }
 
-    /// Blocking counterpart of [`test_raw`]: parks on the mailbox
-    /// condvar until the payload is queued, then pops it without any
+    /// Blocking counterpart of [`test_raw`](Self::test_raw): parks on
+    /// the link until the payload is queued, then pops it without any
     /// clock or ledger accounting.  Also used for end-of-run cleanup
     /// drains (e.g. the sample-shuffle ring) that happen after the last
-    /// recorded step and must not perturb the timing metrics.
+    /// recorded step and must not perturb the timing metrics.  The park
+    /// is atomic with respect to enqueue (no lost wake-ups), so no
+    /// timeout poll is needed in either clock mode.
     pub fn wait_raw(mut self) -> (Vec<f32>, u64, u64) {
-        if let Some(hit) = self.test_raw() {
-            return hit;
-        }
-        let slot = &self.fabric.slots[self.rank];
-        let mut mb = slot.mbox.lock().unwrap();
         loop {
-            if let Some(hit) = self.pop_raw(&mut mb) {
+            if let Some(hit) = self.test_raw() {
                 return hit;
             }
-            // wall fabrics use a timeout poll like wait_wall so a sender
-            // racing this drain cannot strand us; virtual fabrics never
-            // time their waits, so a plain park is safe and deterministic
-            mb = match self.fabric.clock.mode() {
-                ClockMode::Wall => {
-                    slot.cv
-                        .wait_timeout(mb, Duration::from_millis(50))
-                        .unwrap()
-                        .0
-                }
-                ClockMode::Virtual => slot.cv.wait(mb).unwrap(),
-            };
+            self.fabric.link.park(self.rank, self.key, None);
         }
     }
 
@@ -326,28 +304,19 @@ impl RecvReq {
     /// interval with the OS clock.
     fn wait_wall(self) -> Vec<f32> {
         let t0 = Instant::now();
-        let slot = &self.fabric.slots[self.rank];
-        let mut mb = slot.mbox.lock().unwrap();
+        let link = &self.fabric.link;
         loop {
-            let now = Instant::now();
-            let deliver_at = mb
-                .queues
-                .get(&self.key)
-                .and_then(|q| q.front())
-                .map(|(stamp, _)| match *stamp {
-                    Stamp::Wall { sent, at } => (sent, at),
-                    Stamp::Virt { .. } => {
-                        unreachable!("virtual stamp on wall fabric")
+            match link.peek(self.rank, self.key) {
+                Some(Stamp::Wall { sent, at }) => {
+                    let now = Instant::now();
+                    if now < at {
+                        // queued but not yet "arrived": sleep out the
+                        // simulated wire time
+                        std::thread::sleep(at - now);
+                        continue;
                     }
-                });
-            match deliver_at {
-                Some((sent, at)) if now >= at => {
-                    let (_, data) = mb
-                        .queues
-                        .get_mut(&self.key)
-                        .unwrap()
-                        .pop_front()
-                        .unwrap();
+                    let (_, data) =
+                        link.pop(self.rank, self.key).expect("front vanished");
                     let c = &self.fabric.counters[self.rank];
                     c.msgs_recv.fetch_add(1, Ordering::Relaxed);
                     let exposed = t0.elapsed().as_nanos() as u64;
@@ -357,42 +326,21 @@ impl RecvReq {
                         .fetch_add(wire.saturating_sub(exposed), Ordering::Relaxed);
                     return data;
                 }
-                Some((_, at)) => {
-                    // message queued but not yet "arrived": sleep out the
-                    // simulated wire time without holding the lock
-                    drop(mb);
-                    std::thread::sleep(at - now);
-                    mb = slot.mbox.lock().unwrap();
+                Some(Stamp::Virt { .. }) => {
+                    unreachable!("virtual stamp on wall fabric")
                 }
-                None => {
-                    let (g, _) = slot
-                        .cv
-                        .wait_timeout(mb, Duration::from_millis(50))
-                        .unwrap();
-                    mb = g;
-                }
+                None => link.park(self.rank, self.key, None),
             }
         }
     }
 
-    /// Virtual mode: block (plain condvar, no timeout) only until the
+    /// Virtual mode: block (atomic park, no timeout) only until the
     /// payload is queued, then jump this rank's clock to the arrival
     /// instant; the exposed wait is computed, never measured.
     fn wait_virtual(self) -> Vec<f32> {
-        let slot = &self.fabric.slots[self.rank];
-        let mut mb = slot.mbox.lock().unwrap();
+        let link = &self.fabric.link;
         loop {
-            let queued = mb
-                .queues
-                .get(&self.key)
-                .map_or(false, |q| !q.is_empty());
-            if queued {
-                let (stamp, data) = mb
-                    .queues
-                    .get_mut(&self.key)
-                    .unwrap()
-                    .pop_front()
-                    .unwrap();
+            if let Some((stamp, data)) = link.pop(self.rank, self.key) {
                 let (sent_ns, at_ns) = match stamp {
                     Stamp::Virt { sent_ns, at_ns } => (sent_ns, at_ns),
                     Stamp::Wall { .. } => {
@@ -411,7 +359,7 @@ impl RecvReq {
                 );
                 return data;
             }
-            mb = slot.cv.wait(mb).unwrap();
+            link.park(self.rank, self.key, None);
         }
     }
 }
@@ -537,15 +485,7 @@ impl Endpoint {
         let c = &self.fabric.counters[self.rank];
         c.msgs_sent.fetch_add(1, Ordering::Relaxed);
         c.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
-        let slot = &self.fabric.slots[dst];
-        {
-            let mut mb = slot.mbox.lock().unwrap();
-            mb.queues
-                .entry((self.rank, tag))
-                .or_default()
-                .push_back((stamp, data));
-        }
-        slot.cv.notify_all();
+        self.fabric.link.enqueue(self.rank, dst, tag, stamp, data);
         SendReq { done: false }
     }
 
@@ -584,6 +524,7 @@ impl Endpoint {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::deadline_poll;
     use std::thread;
 
     #[test]
@@ -626,19 +567,9 @@ mod tests {
         let mut r = b.irecv(0, Tag::MODEL);
         assert!(!r.test()); // nothing sent yet
         f.endpoint(0).send(1, Tag::MODEL, vec![9.0]);
-        // deadline-based poll (not a fixed spin count): with zero cost
-        // the message is visible as soon as it is enqueued, but give a
-        // loaded machine time rather than a flaky iteration bound
-        let deadline = Instant::now() + Duration::from_secs(5);
-        let mut ok = false;
-        while Instant::now() < deadline {
-            if r.test() {
-                ok = true;
-                break;
-            }
-            thread::yield_now();
-        }
-        assert!(ok, "message never became visible to test()");
+        // with zero cost the message is visible as soon as it is
+        // enqueued; poll with a deadline, not a fixed spin count
+        deadline_poll("message visible to test()", || r.test().then_some(()));
     }
 
     #[test]
@@ -828,13 +759,8 @@ mod tests {
         a.isend(1, Tag::MODEL, vec![1.0]);
         let b = f.endpoint(1);
         let mut r = b.irecv(0, Tag::MODEL);
-        let (data, sent_ns, at_ns) = loop {
-            // queued-not-arrived: a normal test() would refuse it
-            if let Some(hit) = r.test_raw() {
-                break hit;
-            }
-            thread::yield_now();
-        };
+        // queued-not-arrived: a normal test() would refuse it
+        let (data, sent_ns, at_ns) = deadline_poll("raw harvest", || r.test_raw());
         assert_eq!(data, vec![1.0]);
         assert_eq!(sent_ns, 2_000_000);
         assert_eq!(at_ns, 12_000_000);
@@ -867,12 +793,7 @@ mod tests {
         // sender main clock is 0, but the comm thread posts at 7 ms
         a.isend_at(1, Tag::MODEL, vec![9.0], 7_000_000);
         let mut r = f.endpoint(1).irecv(0, Tag::MODEL);
-        let (_, sent_ns, at_ns) = loop {
-            if let Some(hit) = r.test_raw() {
-                break hit;
-            }
-            thread::yield_now();
-        };
+        let (_, sent_ns, at_ns) = deadline_poll("raw harvest", || r.test_raw());
         assert_eq!((sent_ns, at_ns), (7_000_000, 8_000_000));
     }
 
@@ -902,5 +823,35 @@ mod tests {
         assert_eq!(f.clock().now_ns(2), 12_000_000);
         let w = f.counters(2).recv_wait_ns.load(Ordering::Relaxed);
         assert_eq!(w, 12_000_000, "2ms + 10ms exposed across the two recvs");
+    }
+
+    #[test]
+    fn with_link_refuses_virtual_on_wall_only_links() {
+        struct WallOnly;
+        impl Link for WallOnly {
+            fn size(&self) -> usize {
+                1
+            }
+            fn enqueue(&self, _: usize, _: usize, _: Tag, _: Stamp, _: Vec<f32>) {}
+            fn peek(&self, _: usize, _: Key) -> Option<Stamp> {
+                None
+            }
+            fn pop(&self, _: usize, _: Key) -> Option<(Stamp, Vec<f32>)> {
+                None
+            }
+            fn park(&self, _: usize, _: Key, _: Option<Duration>) {}
+            fn in_flight(&self) -> usize {
+                0
+            }
+            fn supports_virtual(&self) -> bool {
+                false
+            }
+        }
+        let r = std::panic::catch_unwind(|| {
+            Fabric::with_link(Arc::new(WallOnly), CostModel::zero(), ClockMode::Virtual)
+        });
+        assert!(r.is_err(), "virtual clock over a wall-only link must panic");
+        let f = Fabric::with_link(Arc::new(WallOnly), CostModel::zero(), ClockMode::Wall);
+        assert_eq!(f.size(), 1);
     }
 }

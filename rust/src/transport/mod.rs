@@ -1,8 +1,20 @@
-//! MPI-like in-process transport substrate.
+//! MPI-like transport substrate, split into two layers:
 //!
-//! The paper runs on MPI over InfiniBand/Aries; here each rank is a
-//! thread and messages are real buffers moved through per-rank mailboxes
-//! ([`inproc`]).  Non-blocking semantics mirror the MPI primitives the
+//! * **Link layer** ([`link`]) — message *delivery* only: enqueue,
+//!   poll, park, drain, in-flight accounting, behind the [`Link`]
+//!   trait.  Two implementations: [`link::InprocLink`] (threads as
+//!   ranks, the historical in-process fabric, bit-identical timings)
+//!   and [`tcp::TcpLink`] (one OS process per rank, length-prefixed
+//!   frames over `TcpStream`, wall clock only — docs/transport.md).
+//! * **Accounting layer** ([`inproc`]) — clocks, the α–β cost stamps,
+//!   the hidden/exposed overlap ledger and per-rank traffic counters,
+//!   link-agnostic.  Its public API (`Fabric`/`Endpoint`/request
+//!   handles) predates the split and is unchanged, so collectives and
+//!   coordinator code never see which wire they run over.
+//!
+//! The paper runs on MPI over InfiniBand/Aries; by default each rank is
+//! a thread and messages are real buffers moved through per-rank
+//! mailboxes.  Non-blocking semantics mirror the MPI primitives the
 //! paper uses (§5.1): `isend` / `irecv` return request handles;
 //! `test` is a non-blocking progress poll (MPI_Test/MPI_TestAll);
 //! `wait` blocks (MPI_Wait/MPI_WaitAll).
@@ -49,11 +61,15 @@
 
 pub mod clock;
 pub mod inproc;
+pub mod link;
 pub mod simnet;
+pub mod tcp;
 
 pub use clock::{Clock, ClockMode, TimeMark};
 pub use inproc::{Counters, Endpoint, Fabric, RecvReq, SendReq};
+pub use link::{InprocLink, Link, Stamp};
 pub use simnet::CostModel;
+pub use tcp::{TcpLink, TcpLinkBuilder};
 
 /// Message tags name the logical channel, mirroring MPI tags.
 /// Layer-wise gradient exchange uses `Tag::layer(i)`.

@@ -1,0 +1,641 @@
+//! TCP link: one OS process per rank, std-only sockets.
+//!
+//! This is the real-network implementation of the [`Link`] seam: the
+//! same gossip/AGD/PS code that runs threads-as-ranks over
+//! [`InprocLink`](super::link::InprocLink) runs as `p` processes
+//! exchanging length-prefixed frames over loopback or a LAN.  Wall
+//! clock only — arrival stamps are receiver-side [`Instant`]s, which
+//! cannot cross a process boundary, so `--virtual-clock` is rejected up
+//! front (see `docs/transport.md` for the full wire format and failure
+//! modes).
+//!
+//! ## Topology
+//!
+//! Full mesh, two sockets per pair, each used in one direction: rank R
+//! listens on `peers[R]` and dials every other rank, using the dialed
+//! stream exclusively for R→S frames.  Accepted streams are read-only.
+//! This needs no pair-ordering protocol and keeps every stream
+//! single-writer/single-reader.
+//!
+//! ## Handshake
+//!
+//! The dialer opens with 16 bytes, all little-endian u32:
+//! `[magic][version][p][src_rank]`.  The listener validates each field
+//! and answers one u32 status ([`HS_OK`] or a rejection code), then
+//! closes on rejection.  Both sides turn a rejection into an
+//! `establish` error — a misconfigured launch (wrong `p`, mixed binary
+//! versions) fails loudly instead of hanging (regression-tested in
+//! `tests/tcp_transport.rs`).
+//!
+//! ## Frames
+//!
+//! `[payload_bytes: u32 LE][tag: u64 LE][payload: f32 LE × n]`.  The
+//! source rank is implied by the stream (learned at handshake).
+//!
+//! ## Delivery & accounting
+//!
+//! Per peer, a writer thread drains an unbounded channel (so `enqueue`
+//! is buffered-eager, like the in-process link) and a reader thread
+//! ingests frames into the local [`Mailbox`], stamping arrival as
+//! `recv_instant + cost.message_time(bytes)` — the α–β model charges on
+//! the receiving side, on top of whatever time the real wire took.
+//! [`Link::in_flight`] counts local mailbox messages plus frames handed
+//! to writers but not yet flushed to the socket; after
+//! [`Link::quiesce`] (flush + close writers, drain readers to EOF) only
+//! genuinely leaked messages remain, which is what lets the
+//! fabric-drain invariant extend across processes: the launcher sums
+//! each rank's post-quiesce count.
+
+use super::link::{Key, Link, Mailbox, Stamp};
+use super::simnet::CostModel;
+use super::Tag;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+/// First handshake word — rejects strangers speaking other protocols.
+pub const WIRE_MAGIC: u32 = 0x4747_5244; // "GGRD"
+/// Wire-format version; bumped on any frame/handshake change.
+pub const WIRE_VERSION: u32 = 1;
+
+/// Handshake accepted.
+pub const HS_OK: u32 = 1;
+/// Rejection codes (the dialer surfaces them in its error message).
+pub const HS_BAD_MAGIC: u32 = 2;
+pub const HS_BAD_VERSION: u32 = 3;
+pub const HS_BAD_P: u32 = 4;
+pub const HS_BAD_RANK: u32 = 5;
+
+fn hs_explain(code: u32) -> &'static str {
+    match code {
+        HS_BAD_MAGIC => "bad magic (not a gossipgrad peer?)",
+        HS_BAD_VERSION => "wire version mismatch (mixed binaries?)",
+        HS_BAD_P => "world-size mismatch (peers lists disagree)",
+        HS_BAD_RANK => "bad or duplicate source rank",
+        _ => "unknown rejection code",
+    }
+}
+
+/// One frame as handed to a writer thread (serialization happens there).
+type FrameSender = mpsc::Sender<(Tag, Vec<f32>)>;
+type IoThread = JoinHandle<io::Result<()>>;
+
+fn err(msg: String) -> io::Error {
+    io::Error::other(msg)
+}
+
+/// Half-constructed [`TcpLink`]: the listener is bound (so the local
+/// port is known — bind to port 0 to let the OS pick one) but no peer
+/// connections exist yet.  Two-phase construction lets a launcher or
+/// test collect every rank's actual address before any rank dials.
+pub struct TcpLinkBuilder {
+    listener: TcpListener,
+    addr: SocketAddr,
+}
+
+impl TcpLinkBuilder {
+    pub fn bind(addr: &str) -> io::Result<TcpLinkBuilder> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        Ok(TcpLinkBuilder { listener, addr })
+    }
+
+    /// The bound address (with the OS-assigned port resolved).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Connect the full mesh: accept a handshake from every other rank
+    /// and dial every other rank, retrying dials until `timeout`.
+    /// `peers[rank]` must be this builder's own address; `peers.len()`
+    /// is the world size announced in (and checked against) every
+    /// handshake.  Errors instead of hanging on any handshake
+    /// rejection, duplicate rank, or deadline overrun.
+    pub fn establish(
+        self,
+        rank: usize,
+        peers: &[String],
+        cost: CostModel,
+        timeout: Duration,
+    ) -> io::Result<Arc<TcpLink>> {
+        let p = peers.len();
+        if rank >= p {
+            return Err(err(format!("rank {rank} outside peer list of {p}")));
+        }
+        let deadline = Instant::now() + timeout;
+        // a failed acceptor flips this so the dial-retry loop can abort
+        // early instead of spinning to the deadline
+        let accept_failed = Arc::new(AtomicBool::new(false));
+
+        let listener = self.listener;
+        listener.set_nonblocking(true)?;
+        let fail_flag = Arc::clone(&accept_failed);
+        let acceptor = thread::spawn(move || {
+            let r = accept_peers(&listener, rank, p, deadline);
+            if r.is_err() {
+                fail_flag.store(true, Ordering::Relaxed);
+            }
+            r
+        });
+
+        // dial every peer; hold the streams until the acceptor confirms
+        let mut outbound: Vec<Option<TcpStream>> = (0..p).map(|_| None).collect();
+        let mut dial_err = None;
+        'dialing: for (peer, addr) in peers.iter().enumerate() {
+            if peer == rank {
+                continue;
+            }
+            match dial_peer(rank, p, peer, addr, deadline, &accept_failed) {
+                Ok(s) => outbound[peer] = Some(s),
+                Err(e) => {
+                    dial_err = Some(e);
+                    break 'dialing;
+                }
+            }
+        }
+        // always join the acceptor (it exits on success, failure or
+        // deadline) so its error — usually the root cause — wins
+        let inbound = match acceptor.join() {
+            Ok(r) => r,
+            Err(_) => Err(err("acceptor thread panicked".into())),
+        };
+        if let Some(e) = dial_err {
+            return match inbound {
+                // the peer that rejected our dial also failed our
+                // acceptor side; report whichever carries more detail
+                Err(ae) => Err(err(format!("{e}; accept side: {ae}"))),
+                Ok(_) => Err(e),
+            };
+        }
+        let inbound = inbound?;
+
+        TcpLink::over_streams(rank, p, outbound, inbound, cost)
+    }
+}
+
+/// Accept `p - 1` valid peer handshakes (one per rank) before
+/// `deadline`.
+///
+/// Strangers are tolerated, misconfigured peers are not: a connection
+/// that sends nothing (within a capped per-handshake timeout), closes
+/// early, or opens with the wrong magic is a **stray** (port scanner,
+/// health probe) — it is dropped and accepting continues.  A correct
+/// magic with a wrong version / world size / rank is a gossipgrad peer
+/// from a broken launch — that errors out the whole establish so the
+/// job fails instead of hanging.
+fn accept_peers(
+    listener: &TcpListener,
+    rank: usize,
+    p: usize,
+    deadline: Instant,
+) -> io::Result<Vec<(usize, TcpStream)>> {
+    let mut got: Vec<(usize, TcpStream)> = Vec::with_capacity(p - 1);
+    let mut seen = vec![false; p];
+    while got.len() < p - 1 {
+        match listener.accept() {
+            Ok((mut s, _)) => {
+                s.set_nonblocking(false)?;
+                // cap the per-handshake read tightly: a real peer's 16
+                // handshake bytes are written right after its connect()
+                // returns, so they are already buffered by the time the
+                // connection leaves the backlog — while each *silent*
+                // stray serializes the accept loop for the full cap, so
+                // a generous cap would let a few idle probes exhaust
+                // the whole establish deadline
+                s.set_read_timeout(Some(
+                    remaining(deadline).min(Duration::from_secs(1)),
+                ))?;
+                let mut hdr = [0u8; 16];
+                if s.read_exact(&mut hdr).is_err() {
+                    // unreadable handshake: stray connection, drop it
+                    continue;
+                }
+                let word = |i: usize| {
+                    u32::from_le_bytes([hdr[i], hdr[i + 1], hdr[i + 2], hdr[i + 3]])
+                };
+                let (magic, version, their_p, src) =
+                    (word(0), word(4), word(8), word(12));
+                let src = src as usize;
+                if magic != WIRE_MAGIC {
+                    // not a gossipgrad peer: answer and keep accepting
+                    s.write_all(&HS_BAD_MAGIC.to_le_bytes()).ok();
+                    continue;
+                }
+                let status = if version != WIRE_VERSION {
+                    HS_BAD_VERSION
+                } else if their_p as usize != p {
+                    HS_BAD_P
+                } else if src >= p || src == rank || seen[src] {
+                    HS_BAD_RANK
+                } else {
+                    HS_OK
+                };
+                s.write_all(&status.to_le_bytes())?;
+                if status != HS_OK {
+                    return Err(err(format!(
+                        "rank {rank}: rejected inbound handshake \
+                         (version {version} p {their_p} src {src}): {}",
+                        hs_explain(status)
+                    )));
+                }
+                s.set_read_timeout(None)?;
+                s.set_nodelay(true).ok();
+                seen[src] = true;
+                got.push((src, s));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(err(format!(
+                        "rank {rank}: accept timeout — {}/{} peers connected",
+                        got.len(),
+                        p - 1
+                    )));
+                }
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(got)
+}
+
+/// Dial one peer with connect-retry until `deadline`, send our
+/// handshake and check the ack.
+fn dial_peer(
+    rank: usize,
+    p: usize,
+    peer: usize,
+    addr: &str,
+    deadline: Instant,
+    accept_failed: &AtomicBool,
+) -> io::Result<TcpStream> {
+    let mut stream = loop {
+        if accept_failed.load(Ordering::Relaxed) {
+            return Err(err(format!(
+                "rank {rank}: aborting dial to peer {peer} — accept side failed"
+            )));
+        }
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(err(format!(
+                        "rank {rank}: dial timeout to peer {peer} at {addr}: {e}"
+                    )));
+                }
+                thread::sleep(Duration::from_millis(25));
+            }
+        }
+    };
+    stream.set_nodelay(true).ok();
+    let mut hs = [0u8; 16];
+    hs[0..4].copy_from_slice(&WIRE_MAGIC.to_le_bytes());
+    hs[4..8].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    hs[8..12].copy_from_slice(&(p as u32).to_le_bytes());
+    hs[12..16].copy_from_slice(&(rank as u32).to_le_bytes());
+    stream.write_all(&hs)?;
+    stream.set_read_timeout(Some(remaining(deadline)))?;
+    let mut ack = [0u8; 4];
+    stream.read_exact(&mut ack).map_err(|e| {
+        err(format!(
+            "rank {rank}: no handshake ack from peer {peer} at {addr}: {e}"
+        ))
+    })?;
+    let code = u32::from_le_bytes(ack);
+    if code != HS_OK {
+        return Err(err(format!(
+            "rank {rank}: peer {peer} rejected handshake (code {code}): {}",
+            hs_explain(code)
+        )));
+    }
+    stream.set_read_timeout(None)?;
+    Ok(stream)
+}
+
+/// Time left until `deadline`, floored at 1 ms (socket timeouts reject
+/// zero durations).
+fn remaining(deadline: Instant) -> Duration {
+    deadline
+        .saturating_duration_since(Instant::now())
+        .max(Duration::from_millis(1))
+}
+
+/// The established TCP link for one rank: local mailbox + per-peer
+/// writer/reader threads.  See the module docs for the delivery and
+/// in-flight accounting model.
+pub struct TcpLink {
+    rank: usize,
+    p: usize,
+    mbox: Arc<Mailbox>,
+    /// `writers[dst]` feeds dst's writer thread; `None` for self and
+    /// after [`quiesce`](Link::quiesce) closed them.
+    writers: Mutex<Vec<Option<FrameSender>>>,
+    /// Frames handed to writer threads and not yet flushed to a socket.
+    unsent: Arc<AtomicUsize>,
+    /// Writer + reader thread handles, joined at quiesce.
+    io_threads: Mutex<Vec<IoThread>>,
+}
+
+impl TcpLink {
+    fn over_streams(
+        rank: usize,
+        p: usize,
+        outbound: Vec<Option<TcpStream>>,
+        inbound: Vec<(usize, TcpStream)>,
+        cost: CostModel,
+    ) -> io::Result<Arc<TcpLink>> {
+        let mbox = Arc::new(Mailbox::new());
+        let unsent = Arc::new(AtomicUsize::new(0));
+        let mut writers: Vec<Option<FrameSender>> = (0..p).map(|_| None).collect();
+        let mut io_threads = Vec::with_capacity(2 * (p - 1));
+        for (dst, stream) in outbound.into_iter().enumerate() {
+            let Some(stream) = stream else { continue };
+            let (tx, rx) = mpsc::channel::<(Tag, Vec<f32>)>();
+            let unsent = Arc::clone(&unsent);
+            io_threads.push(thread::spawn(move || {
+                let r = write_frames(stream, rx, &unsent);
+                if let Err(e) = &r {
+                    // report at failure time: the training thread only
+                    // sees a closed channel (and quiesce may never run
+                    // if it panics on that), so the root cause must not
+                    // wait to be joined
+                    eprintln!("tcp link rank {rank}: writer to rank {dst} failed: {e}");
+                }
+                r
+            }));
+            writers[dst] = Some(tx);
+        }
+        for (src, stream) in inbound {
+            let mbox = Arc::clone(&mbox);
+            let cost = cost.clone();
+            io_threads.push(thread::spawn(move || {
+                let r = read_frames(stream, src, &mbox, &cost);
+                if let Err(e) = &r {
+                    eprintln!("tcp link rank {rank}: reader from rank {src} failed: {e}");
+                }
+                r
+            }));
+        }
+        Ok(Arc::new(TcpLink {
+            rank,
+            p,
+            mbox,
+            writers: Mutex::new(writers),
+            unsent,
+            io_threads: Mutex::new(io_threads),
+        }))
+    }
+
+    /// The local rank this link serves.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+}
+
+/// Largest frame a reader will accept.  Far above any model this
+/// fabric moves (whole ResNet50 ≈ 100 MB), far below a garbage length
+/// field's 4 GiB — a desynced stream fails as a protocol error instead
+/// of an allocation attempt.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Writer thread: serialize frames from the channel onto the socket.
+/// Exits (flushing and closing the stream, which EOFs the peer's
+/// reader) when the sender half is dropped at quiesce.
+fn write_frames(
+    stream: TcpStream,
+    rx: mpsc::Receiver<(Tag, Vec<f32>)>,
+    unsent: &AtomicUsize,
+) -> io::Result<()> {
+    let mut w = io::BufWriter::new(stream);
+    for (tag, data) in rx {
+        let bytes = data.len() * 4;
+        w.write_all(&(bytes as u32).to_le_bytes())?;
+        w.write_all(&tag.0.to_le_bytes())?;
+        // straight into the BufWriter — no intermediate payload buffer
+        // (this is the hot path: one model/layer slice per frame)
+        for x in &data {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        w.flush()?;
+        // decrement only once the frame is on the socket: between
+        // enqueue and here the message is "in flight" and must be
+        // visible to the drain invariant
+        unsent.fetch_sub(1, Ordering::Relaxed);
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Reader thread: ingest frames from one peer into the local mailbox
+/// until the peer closes its write side (EOF).  Arrival is stamped
+/// receiver-side: `now + cost.message_time(bytes)` — the simulated α–β
+/// cost rides on top of the real socket latency already paid.
+fn read_frames(
+    stream: TcpStream,
+    src: usize,
+    mbox: &Mailbox,
+    cost: &CostModel,
+) -> io::Result<()> {
+    let mut r = io::BufReader::new(stream);
+    loop {
+        let mut len = [0u8; 4];
+        match r.read_exact(&mut len) {
+            Ok(()) => {}
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(()),
+            Err(e) => return Err(e),
+        }
+        let bytes = u32::from_le_bytes(len) as usize;
+        // validate before trusting the length with an allocation: a
+        // desynced or corrupt stream must be a protocol error, not a
+        // silently-truncated payload or a 4 GiB alloc
+        if bytes % 4 != 0 || bytes > MAX_FRAME_BYTES {
+            return Err(err(format!(
+                "frame from rank {src}: bad payload length {bytes} \
+                 (not a multiple of 4 or over {MAX_FRAME_BYTES})"
+            )));
+        }
+        let mut tag = [0u8; 8];
+        r.read_exact(&mut tag)?;
+        let tag = Tag(u64::from_le_bytes(tag));
+        let mut payload = vec![0u8; bytes];
+        r.read_exact(&mut payload)?;
+        let data: Vec<f32> = payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let now = Instant::now();
+        let at = now + Duration::from_secs_f64(cost.message_time(bytes));
+        mbox.push((src, tag), Stamp::Wall { sent: now, at }, data);
+    }
+}
+
+impl Link for TcpLink {
+    fn size(&self) -> usize {
+        self.p
+    }
+
+    fn enqueue(&self, src: usize, dst: usize, tag: Tag, stamp: Stamp, data: Vec<f32>) {
+        assert_eq!(
+            src, self.rank,
+            "tcp link sends only from its local rank"
+        );
+        if dst == self.rank {
+            // loopback: deliver locally with the caller's stamp, exactly
+            // like the in-process link
+            self.mbox.push((src, tag), stamp, data);
+            return;
+        }
+        // count before handing off so in_flight never under-reports
+        self.unsent.fetch_add(1, Ordering::Relaxed);
+        let writers = self.writers.lock().unwrap();
+        let tx = writers[dst]
+            .as_ref()
+            .unwrap_or_else(|| panic!("send to rank {dst} after quiesce"));
+        tx.send((tag, data)).expect("writer thread terminated early");
+    }
+
+    fn peek(&self, rank: usize, key: Key) -> Option<Stamp> {
+        debug_assert_eq!(rank, self.rank, "tcp link serves its local rank only");
+        self.mbox.peek(key)
+    }
+
+    fn pop(&self, rank: usize, key: Key) -> Option<(Stamp, Vec<f32>)> {
+        debug_assert_eq!(rank, self.rank, "tcp link serves its local rank only");
+        self.mbox.pop(key)
+    }
+
+    fn park(&self, rank: usize, key: Key, timeout: Option<Duration>) {
+        debug_assert_eq!(rank, self.rank, "tcp link serves its local rank only");
+        self.mbox.park(key, timeout)
+    }
+
+    fn in_flight(&self) -> usize {
+        self.mbox.queued() + self.unsent.load(Ordering::Relaxed)
+    }
+
+    fn supports_virtual(&self) -> bool {
+        false
+    }
+
+    /// Close this rank's write side (writer threads flush their queues
+    /// and drop their sockets, which EOFs the peers' readers) and join
+    /// every io thread — readers return once each peer has quiesced in
+    /// turn.  Afterwards every frame this process sent is delivered and
+    /// every frame peers sent sits in the local mailbox, so
+    /// [`in_flight`](Link::in_flight) counts only true leaks.
+    ///
+    /// This is a **cross-rank barrier**: it blocks until every peer has
+    /// also closed its write side, so each rank must call it from its
+    /// own thread/process (as the trainer does).  Quiescing several
+    /// ranks' links sequentially on one thread would deadlock.
+    fn quiesce(&self, rank: usize) {
+        debug_assert_eq!(rank, self.rank, "tcp link serves its local rank only");
+        for w in self.writers.lock().unwrap().iter_mut() {
+            w.take();
+        }
+        let handles = std::mem::take(&mut *self.io_threads.lock().unwrap());
+        for h in handles {
+            // io errors were already reported by the failing thread
+            // itself, at failure time
+            if h.join().is_err() {
+                eprintln!("tcp link rank {}: io thread panicked", self.rank);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build an established p-rank mesh on loopback ephemeral ports.
+    fn mesh(p: usize, cost: CostModel) -> Vec<Arc<TcpLink>> {
+        let builders: Vec<TcpLinkBuilder> = (0..p)
+            .map(|_| TcpLinkBuilder::bind("127.0.0.1:0").unwrap())
+            .collect();
+        let peers: Vec<String> =
+            builders.iter().map(|b| b.local_addr().to_string()).collect();
+        let handles: Vec<_> = builders
+            .into_iter()
+            .enumerate()
+            .map(|(rank, b)| {
+                let peers = peers.clone();
+                let cost = cost.clone();
+                thread::spawn(move || {
+                    b.establish(rank, &peers, cost, Duration::from_secs(20))
+                        .unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    /// Quiesce every link concurrently (it's a cross-rank barrier —
+    /// sequential quiesce on one thread would deadlock on reader join).
+    fn quiesce_all(links: &[Arc<TcpLink>]) {
+        let handles: Vec<_> = links
+            .iter()
+            .enumerate()
+            .map(|(rank, l)| {
+                let l = Arc::clone(l);
+                thread::spawn(move || l.quiesce(rank))
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn frames_cross_the_mesh_fifo_per_channel() {
+        let links = mesh(3, CostModel::zero());
+        for i in 0..5 {
+            let t = Instant::now();
+            links[0].enqueue(
+                0,
+                2,
+                Tag::MODEL,
+                Stamp::Wall { sent: t, at: t },
+                vec![i as f32, 0.5],
+            );
+        }
+        let key = (0usize, Tag::MODEL);
+        for i in 0..5 {
+            let (_, data) = crate::util::deadline_poll("tcp frame", || {
+                links[2].pop(2, key)
+            });
+            assert_eq!(data, vec![i as f32, 0.5], "fifo order per channel");
+        }
+        quiesce_all(&links);
+        for l in &links {
+            assert_eq!(l.in_flight(), 0);
+        }
+    }
+
+    #[test]
+    fn quiesce_surfaces_leaked_messages() {
+        let links = mesh(2, CostModel::zero());
+        let t = Instant::now();
+        links[0].enqueue(0, 1, Tag::CTRL, Stamp::Wall { sent: t, at: t }, vec![1.0]);
+        quiesce_all(&links);
+        assert_eq!(links[0].in_flight(), 0, "sender side fully flushed");
+        assert_eq!(
+            links[1].in_flight(),
+            1,
+            "unharvested frame must count as in flight after quiesce"
+        );
+    }
+
+    #[test]
+    fn loopback_send_delivers_locally() {
+        let links = mesh(2, CostModel::zero());
+        let t = Instant::now();
+        links[0].enqueue(0, 0, Tag::MODEL, Stamp::Wall { sent: t, at: t }, vec![9.0]);
+        let (_, data) = links[0].pop(0, (0, Tag::MODEL)).unwrap();
+        assert_eq!(data, vec![9.0]);
+        quiesce_all(&links);
+    }
+}

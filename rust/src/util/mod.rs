@@ -41,6 +41,27 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
+/// Poll `f` until it yields a value, panicking after a 5 s deadline —
+/// the one shared replacement for the `loop { …; yield_now() }`
+/// busy-wait blocks tests used to copy-paste around non-blocking
+/// `test()`/`test_raw()` calls.  Sleeps 1 ms between attempts, so a
+/// loaded machine gets real time instead of a flaky spin count and idle
+/// cores aren't burned while waiting.
+pub fn deadline_poll<T>(what: &str, mut f: impl FnMut() -> Option<T>) -> T {
+    let deadline =
+        std::time::Instant::now() + std::time::Duration::from_secs(5);
+    loop {
+        if let Some(v) = f() {
+            return v;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "deadline_poll: {what} did not complete within 5s"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+}
+
 /// Sample standard deviation.
 pub fn stddev(xs: &[f64]) -> f64 {
     if xs.len() < 2 {

@@ -8,9 +8,12 @@
 //! The grid covers every algorithm × layerwise × sync_mix at worker
 //! counts exercising the edge topologies (p = 2 pairs, p = 3 non-power-
 //! of-two fold/ragged-ring, p = 8 full trees), plus the comm-thread AGD
-//! engine path.
+//! engine path, plus a **transport axis**: the same invariant over the
+//! loopback-TCP link, where `in_flight` additionally counts frames in
+//! writer queues and each rank's post-quiesce mailbox (a frame sent but
+//! never harvested lands in the receiver's count).
 
-use gossipgrad::config::{Algo, RunConfig};
+use gossipgrad::config::{Algo, RunConfig, Transport};
 use gossipgrad::coordinator::trainer::run_with_backend;
 use gossipgrad::nativenet::NativeMlp;
 use gossipgrad::sim::Workload;
@@ -71,6 +74,47 @@ fn no_in_flight_messages_after_comm_thread_agd() {
             res.in_flight_msgs, 0,
             "comm-thread AGD p={p}: leaked collective-internal messages"
         );
+    }
+}
+
+/// Wall-clock config for the TCP link (which rejects the virtual
+/// clock): zero wire cost, same tiny shard shape as the virtual grid.
+fn tcpcfg(algo: Algo, ranks: usize, steps: usize) -> RunConfig {
+    RunConfig {
+        model: "mlp".into(),
+        algo,
+        ranks,
+        steps,
+        rows_per_rank: 32,
+        use_artifacts: false,
+        eval_every: 0,
+        seed: 42,
+        transport: Transport::Tcp,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn no_in_flight_messages_over_the_tcp_link() {
+    // p kept small: each scenario is a real socket mesh (2 threads +
+    // 2 io threads per rank); the message-pairing logic under test is
+    // identical at larger p
+    for algo in [Algo::Gossip, Algo::Agd, Algo::ParamServer] {
+        for layerwise in [false, true] {
+            for p in [2usize, 3] {
+                let mut c = tcpcfg(algo, p, 3);
+                c.layerwise = layerwise;
+                let res = run_with_backend(&c, tiny_backend())
+                    .unwrap_or_else(|e| {
+                        panic!("tcp {algo:?} p={p} lw={layerwise}: {e}")
+                    });
+                assert_eq!(
+                    res.in_flight_msgs, 0,
+                    "tcp {algo:?} p={p} layerwise={layerwise}: frames \
+                     left on the mesh after quiesce"
+                );
+            }
+        }
     }
 }
 

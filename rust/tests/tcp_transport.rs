@@ -1,0 +1,157 @@
+//! TCP link integration: numerics parity with the in-process link and
+//! handshake failure modes.
+//!
+//! Every algorithm's message consumption is fully keyed — blocking
+//! receives name their `(src, tag)` channel, never a wildcard — so the
+//! final model bits are a pure function of the config, independent of
+//! wire timing.  A p = 4 loopback-TCP run must therefore reproduce the
+//! zero-cost in-process run's `param_hash` **bit for bit**; anything
+//! else means the wire reordered, dropped or corrupted a frame.
+//!
+//! The handshake tests pin the failure modes documented in
+//! docs/transport.md: wrong world size and wrong wire version must
+//! error out on *both* sides of the connection, not hang.
+
+use gossipgrad::config::{Algo, RunConfig, Transport};
+use gossipgrad::coordinator::trainer::run_with_backend;
+use gossipgrad::nativenet::NativeMlp;
+use gossipgrad::transport::tcp::{HS_BAD_VERSION, HS_OK, WIRE_MAGIC};
+use gossipgrad::transport::{CostModel, TcpLinkBuilder};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+fn tiny_backend() -> gossipgrad::coordinator::worker::Backend {
+    Arc::new(NativeMlp::new(vec![784, 16, 10], 16, 0))
+}
+
+fn base(algo: Algo) -> RunConfig {
+    RunConfig {
+        model: "mlp".into(),
+        algo,
+        ranks: 4,
+        steps: 4,
+        rows_per_rank: 32,
+        use_artifacts: false,
+        eval_every: 0,
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+/// Gossip, AGD, PS — each with the layer-wise pipeline on and off — over
+/// loopback TCP must match the in-proc zero-cost run bit for bit.
+#[test]
+fn tcp_numerics_match_inproc_bit_for_bit() {
+    for algo in [Algo::Gossip, Algo::Agd, Algo::ParamServer] {
+        for layerwise in [false, true] {
+            let mut c = base(algo);
+            c.layerwise = layerwise;
+            let inproc = run_with_backend(&c, tiny_backend())
+                .unwrap_or_else(|e| panic!("{algo:?} inproc: {e}"));
+            let mut t = c.clone();
+            t.transport = Transport::Tcp;
+            let tcp = run_with_backend(&t, tiny_backend())
+                .unwrap_or_else(|e| panic!("{algo:?} tcp: {e}"));
+            assert_eq!(
+                tcp.param_hash(),
+                inproc.param_hash(),
+                "{algo:?} layerwise={layerwise}: tcp numerics diverged from in-proc"
+            );
+            assert_eq!(
+                tcp.in_flight_msgs, 0,
+                "{algo:?} layerwise={layerwise}: leaked frames on the tcp mesh"
+            );
+            assert_eq!(tcp.per_rank.len(), c.ranks);
+        }
+    }
+}
+
+/// The non-blocking collective engine's wall-clock path over a real
+/// socket mesh: comm-thread AGD numerics are identical to in-proc.
+#[test]
+fn tcp_comm_thread_agd_matches_inproc() {
+    let mut c = base(Algo::Agd);
+    c.layerwise = true;
+    c.comm_thread = true;
+    let inproc = run_with_backend(&c, tiny_backend()).unwrap();
+    let mut t = c.clone();
+    t.transport = Transport::Tcp;
+    let tcp = run_with_backend(&t, tiny_backend()).unwrap();
+    assert_eq!(tcp.param_hash(), inproc.param_hash());
+    assert_eq!(tcp.in_flight_msgs, 0);
+}
+
+/// Sync-mix gossip blocks for the current step's partner model — the
+/// schedule with the most exposed wire traffic — and must still match.
+#[test]
+fn tcp_sync_mix_gossip_matches_inproc() {
+    let mut c = base(Algo::Gossip);
+    c.sync_mix = true;
+    let inproc = run_with_backend(&c, tiny_backend()).unwrap();
+    let mut t = c.clone();
+    t.transport = Transport::Tcp;
+    let tcp = run_with_backend(&t, tiny_backend()).unwrap();
+    assert_eq!(tcp.param_hash(), inproc.param_hash());
+}
+
+/// A peers-list (world size) mismatch must fail both establishes — the
+/// rejected dialer and the rejecting acceptor — before their deadlines.
+#[test]
+fn handshake_rejects_wrong_world_size_instead_of_hanging() {
+    let a = TcpLinkBuilder::bind("127.0.0.1:0").unwrap();
+    let b = TcpLinkBuilder::bind("127.0.0.1:0").unwrap();
+    let a_addr = a.local_addr().to_string();
+    let b_addr = b.local_addr().to_string();
+    let peers2 = vec![a_addr.clone(), b_addr.clone()];
+    // rank 1 believes the world has three ranks (third addr never
+    // answers — its handshake to rank 0 announces p=3 and is rejected
+    // before that matters)
+    let peers3 = vec![a_addr, b_addr, "127.0.0.1:1".into()];
+    let ha = thread::spawn(move || {
+        a.establish(0, &peers2, CostModel::zero(), Duration::from_secs(15))
+    });
+    let hb = thread::spawn(move || {
+        b.establish(1, &peers3, CostModel::zero(), Duration::from_secs(15))
+    });
+    let ra = ha.join().unwrap();
+    let rb = hb.join().unwrap();
+    assert!(ra.is_err(), "p=2 side accepted a p=3 handshake");
+    assert!(rb.is_err(), "p=3 side should have been rejected");
+    let msg = format!("{:#}", rb.err().unwrap());
+    assert!(
+        msg.contains("world-size") || msg.contains("rejected"),
+        "error should name the mismatch: {msg}"
+    );
+}
+
+/// A wire-version mismatch is acked with `HS_BAD_VERSION` and errors
+/// the acceptor out (mixed binary versions must not hang a launch).
+#[test]
+fn handshake_rejects_wrong_version_instead_of_hanging() {
+    let a = TcpLinkBuilder::bind("127.0.0.1:0").unwrap();
+    let addr = a.local_addr();
+    let peers = vec![addr.to_string(), "127.0.0.1:1".into()];
+    let h = thread::spawn(move || {
+        a.establish(0, &peers, CostModel::zero(), Duration::from_secs(15))
+    });
+    // raw peer speaking a future wire version
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut hs = [0u8; 16];
+    hs[0..4].copy_from_slice(&WIRE_MAGIC.to_le_bytes());
+    hs[4..8].copy_from_slice(&999u32.to_le_bytes()); // bad version
+    hs[8..12].copy_from_slice(&2u32.to_le_bytes());
+    hs[12..16].copy_from_slice(&1u32.to_le_bytes());
+    s.write_all(&hs).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut ack = [0u8; 4];
+    s.read_exact(&mut ack).unwrap();
+    let code = u32::from_le_bytes(ack);
+    assert_ne!(code, HS_OK, "bad version must not be acked OK");
+    assert_eq!(code, HS_BAD_VERSION);
+    // the acceptor error aborts the whole establish (dial side included)
+    let r = h.join().unwrap();
+    assert!(r.is_err(), "establish must fail after a version rejection");
+}
