@@ -1,0 +1,649 @@
+//! Wire codecs: the typed payload every transport layer carries, plus
+//! the encoders that trade exchange fidelity for wire bytes.
+//!
+//! GossipGraD's premise is that the wire is the bottleneck at scale
+//! (paper §1, Fig 2(a)); the related gossip-SGD work (GoSGD, Elastic
+//! Gossip — PAPERS.md) competes on exactly the bandwidth axis this
+//! module opens.  Every message on the fabric is a [`Payload`]: either
+//! a dense `f32` vector (the historical wire format, bit-identical
+//! default) or an encoded byte buffer tagged with its [`Encoding`].
+//! The accounting layer charges [`Payload::wire_bytes`] — *compressed*
+//! bytes — to the α–β cost model, so both the measured fabric and the
+//! closed-form efficiency curves ([`crate::sim::efficiency`]) see the
+//! bandwidth win.  See `docs/wire-codecs.md`.
+//!
+//! Four codecs ship:
+//!
+//! * [`Codec::F32`] — identity.  4 bytes/element; payloads stay
+//!   `Payload::F32` end to end, so runs are bit-identical
+//!   (`param_hash`) to the pre-codec stack.
+//! * [`Codec::Bf16`] — bfloat16 truncation with round-to-nearest-even.
+//!   2 bytes/element, relative error ≤ 2⁻⁸.
+//! * [`Codec::Int8`] — linear 8-bit quantization with one `f32` scale
+//!   per [`INT8_CHUNK`]-element chunk (scale = chunk max-abs / 127).
+//!   ~1 byte/element; absolute error ≤ scale/2 per chunk.
+//! * [`Codec::TopK`] — magnitude sparsification: the k = max(1, n/16)
+//!   largest-|v| coordinates as `(u32 index, f32 value)` pairs, with
+//!   **error feedback**: unsent mass is held rank-side in a
+//!   per-(destination, stream) residual ([`Encoder`]) and added to the
+//!   next message on that stream, so no gradient/model mass is ever
+//!   dropped — only delayed (encoded + residual == input exactly; the
+//!   selected values cross the wire unquantized).
+//!
+//! Stateless codecs (F32/Bf16/Int8) can be applied anywhere — the
+//! transport auto-encodes payload-kind tags via
+//! [`Codec::encode_stateless`].  TopK is stateful (residuals) and
+//! sparse (a dense decode zero-fills unsent coordinates), so it is only
+//! applied at coordinator sites that own an [`Encoder`] and mix
+//! sparsely ([`mix_payload_into`]) or sum densely (PS aggregation,
+//! where zero-filling is exact); the stateless fallback for TopK is
+//! dense f32.
+
+use std::collections::HashMap;
+
+/// Elements per int8 quantization chunk (one f32 scale each).
+pub const INT8_CHUNK: usize = 256;
+
+/// Coordinates kept by top-k sparsification: max(1, n/16).
+pub fn top_k(n: usize) -> usize {
+    if n == 0 {
+        0
+    } else {
+        (n / 16).max(1)
+    }
+}
+
+/// On-wire encoding id, carried in TCP frames as one byte.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Encoding {
+    F32 = 0,
+    Bf16 = 1,
+    Int8 = 2,
+    TopK = 3,
+}
+
+impl Encoding {
+    pub fn from_u8(b: u8) -> Option<Encoding> {
+        match b {
+            0 => Some(Encoding::F32),
+            1 => Some(Encoding::Bf16),
+            2 => Some(Encoding::Int8),
+            3 => Some(Encoding::TopK),
+            _ => None,
+        }
+    }
+}
+
+/// A message body as it crosses the wire.  `F32` is the dense fast
+/// path (no serialization on the in-process link — the vector moves by
+/// pointer); `Bytes` is an encoded buffer plus the element count `n`
+/// needed to decode it.  The accounting layer charges
+/// [`wire_bytes`](Self::wire_bytes), so compressed payloads cost
+/// compressed bytes on the simulated wire.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    F32(Vec<f32>),
+    Bytes {
+        enc: Encoding,
+        n: u32,
+        bytes: Vec<u8>,
+    },
+}
+
+impl Payload {
+    /// Element count of the decoded vector.
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len(),
+            Payload::Bytes { n, .. } => *n as usize,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn encoding(&self) -> Encoding {
+        match self {
+            Payload::F32(_) => Encoding::F32,
+            Payload::Bytes { enc, .. } => *enc,
+        }
+    }
+
+    /// Bytes this payload occupies on the wire — what the α–β cost
+    /// model and the traffic counters charge.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len() * 4,
+            Payload::Bytes { bytes, .. } => bytes.len(),
+        }
+    }
+
+    /// Decode to a dense `f32` vector.  TopK zero-fills unsent
+    /// coordinates (exact for summation — PS aggregation — but *not*
+    /// for averaging; mixing uses [`mix_payload_into`] instead).
+    pub fn decode(self) -> Vec<f32> {
+        match self {
+            Payload::F32(v) => v,
+            Payload::Bytes { enc, n, bytes } => match enc {
+                Encoding::F32 => f32_decode(&bytes),
+                Encoding::Bf16 => bf16_decode(&bytes),
+                Encoding::Int8 => int8_decode(n as usize, &bytes),
+                Encoding::TopK => topk_decode(n as usize, &bytes),
+            },
+        }
+    }
+}
+
+/// The configured wire codec (a `RunConfig` axis, `--codec`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Codec {
+    #[default]
+    F32,
+    Bf16,
+    Int8,
+    TopK,
+}
+
+impl Codec {
+    pub fn parse(s: &str) -> Result<Codec, String> {
+        match s {
+            "f32" => Ok(Codec::F32),
+            "bf16" => Ok(Codec::Bf16),
+            "int8" => Ok(Codec::Int8),
+            "topk" => Ok(Codec::TopK),
+            other => Err(format!(
+                "unknown codec '{other}' (expected f32|bf16|int8|topk)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Codec::F32 => "f32",
+            Codec::Bf16 => "bf16",
+            Codec::Int8 => "int8",
+            Codec::TopK => "topk",
+        }
+    }
+
+    /// Stateless encode — the transport's auto path for payload-kind
+    /// tags.  TopK needs rank-side residual state and a sparse-aware
+    /// receiver, so here it falls back to dense f32 (compression for
+    /// TopK happens only at coordinator sites owning an [`Encoder`]).
+    pub fn encode_stateless(&self, data: Vec<f32>) -> Payload {
+        match self {
+            Codec::F32 | Codec::TopK => Payload::F32(data),
+            Codec::Bf16 => Payload::Bytes {
+                enc: Encoding::Bf16,
+                n: data.len() as u32,
+                bytes: bf16_encode(&data),
+            },
+            Codec::Int8 => Payload::Bytes {
+                enc: Encoding::Int8,
+                n: data.len() as u32,
+                bytes: int8_encode(&data),
+            },
+        }
+    }
+
+    /// Closed-form wire bytes for an `n`-element message under this
+    /// codec's *compressing* path (the [`Encoder`] path) — what the
+    /// closed-form efficiency curves scale message sizes by.
+    pub fn wire_bytes_for(&self, n: usize) -> usize {
+        match self {
+            Codec::F32 => 4 * n,
+            Codec::Bf16 => 2 * n,
+            Codec::Int8 => n + 4 * n.div_ceil(INT8_CHUNK),
+            Codec::TopK => 8 * top_k(n),
+        }
+    }
+
+    /// Closed-form wire bytes under the *stateless* path
+    /// ([`encode_stateless`](Self::encode_stateless)): TopK rides dense
+    /// f32 there (collective rounds, PS model broadcast).
+    pub fn stateless_wire_bytes_for(&self, n: usize) -> usize {
+        match self {
+            Codec::TopK => 4 * n,
+            _ => self.wire_bytes_for(n),
+        }
+    }
+}
+
+/// Stateful encoder: one per sending rank, holding the per-destination
+/// per-stream error-feedback residuals that make TopK lossless over
+/// time.  `stream` is the logical channel (layer index for layer-wise
+/// exchange; 0 for monolithic) — residuals never mix across layers or
+/// destinations.  For stateless codecs this is a thin wrapper.
+pub struct Encoder {
+    codec: Codec,
+    residuals: HashMap<(usize, usize), Vec<f32>>,
+}
+
+impl Encoder {
+    pub fn new(codec: Codec) -> Encoder {
+        Encoder {
+            codec,
+            residuals: HashMap::new(),
+        }
+    }
+
+    pub fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    /// Encode `data` for transmission to `dst` on `stream`.  TopK adds
+    /// the stream's residual first (acc = data + residual), sends the
+    /// top-k coordinates of acc exactly, and keeps the rest as the new
+    /// residual — so `decode(payload) + residual == data + old_residual`
+    /// bit-for-bit (values are partitioned, never quantized).
+    pub fn encode(&mut self, dst: usize, stream: usize, data: &[f32]) -> Payload {
+        match self.codec {
+            Codec::F32 => Payload::F32(data.to_vec()),
+            Codec::Bf16 => Payload::Bytes {
+                enc: Encoding::Bf16,
+                n: data.len() as u32,
+                bytes: bf16_encode(data),
+            },
+            Codec::Int8 => Payload::Bytes {
+                enc: Encoding::Int8,
+                n: data.len() as u32,
+                bytes: int8_encode(data),
+            },
+            Codec::TopK => {
+                let res = self
+                    .residuals
+                    .entry((dst, stream))
+                    .or_insert_with(|| vec![0.0; data.len()]);
+                assert_eq!(res.len(), data.len(), "stream {stream} length changed");
+                let mut acc: Vec<f32> =
+                    data.iter().zip(res.iter()).map(|(&d, &r)| d + r).collect();
+                let bytes = topk_extract(&mut acc);
+                res.copy_from_slice(&acc);
+                Payload::Bytes {
+                    enc: Encoding::TopK,
+                    n: data.len() as u32,
+                    bytes,
+                }
+            }
+        }
+    }
+
+    /// The current residual for `(dst, stream)` (empty if none) — test
+    /// and introspection hook for the conservation property.
+    pub fn residual(&self, dst: usize, stream: usize) -> &[f32] {
+        self.residuals
+            .get(&(dst, stream))
+            .map_or(&[], |v| v.as_slice())
+    }
+}
+
+/// GossipGraD pairwise mixing against an encoded partner payload:
+/// `dst[i] <- (dst[i] + v[i]) / 2`.  Dense payloads mix every
+/// coordinate (bit-identical to `ops::mix_into` on the decoded
+/// vector); TopK payloads mix **only the transmitted coordinates**
+/// (partial/elastic averaging — zero-filled coords would otherwise
+/// halve untouched parameters).
+pub fn mix_payload_into(dst: &mut [f32], p: Payload) {
+    match p {
+        Payload::Bytes {
+            enc: Encoding::TopK,
+            n,
+            bytes,
+        } => {
+            assert_eq!(n as usize, dst.len(), "mix length mismatch");
+            for c in bytes.chunks_exact(8) {
+                let i = u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as usize;
+                let v = f32::from_le_bytes([c[4], c[5], c[6], c[7]]);
+                dst[i] = (dst[i] + v) * 0.5;
+            }
+        }
+        other => {
+            let v = other.decode();
+            assert_eq!(v.len(), dst.len(), "mix length mismatch");
+            for (x, &y) in dst.iter_mut().zip(&v) {
+                *x = (*x + y) * 0.5;
+            }
+        }
+    }
+}
+
+// ---- encode/decode kernels ---------------------------------------------
+
+/// Bulk LE-bytes → f32 decode into one pre-sized buffer (the TCP
+/// reader's frame payload lands here exactly once, at harvest).
+pub fn f32_decode(bytes: &[u8]) -> Vec<f32> {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    let mut out = Vec::with_capacity(bytes.len() / 4);
+    for c in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    out
+}
+
+/// f32 → bfloat16 with round-to-nearest-even on the dropped 16
+/// mantissa bits.
+fn bf16_bits(x: f32) -> u16 {
+    let b = x.to_bits();
+    let r = 0x7fff + ((b >> 16) & 1);
+    (b.wrapping_add(r) >> 16) as u16
+}
+
+fn bf16_encode(data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(2 * data.len());
+    for &x in data {
+        out.extend_from_slice(&bf16_bits(x).to_le_bytes());
+    }
+    out
+}
+
+fn bf16_decode(bytes: &[u8]) -> Vec<f32> {
+    debug_assert_eq!(bytes.len() % 2, 0);
+    let mut out = Vec::with_capacity(bytes.len() / 2);
+    for c in bytes.chunks_exact(2) {
+        out.push(f32::from_bits((u16::from_le_bytes([c[0], c[1]]) as u32) << 16));
+    }
+    out
+}
+
+/// Layout: `[scale f32 LE × ceil(n/INT8_CHUNK)][q i8 × n]`.
+fn int8_encode(data: &[f32]) -> Vec<u8> {
+    let n = data.len();
+    let nchunks = n.div_ceil(INT8_CHUNK);
+    let mut scales = Vec::with_capacity(nchunks);
+    for chunk in data.chunks(INT8_CHUNK) {
+        let max = chunk.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        scales.push(if max > 0.0 { max / 127.0 } else { 0.0 });
+    }
+    let mut out = Vec::with_capacity(4 * nchunks + n);
+    for &s in &scales {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    for (ci, chunk) in data.chunks(INT8_CHUNK).enumerate() {
+        let s = scales[ci];
+        for &x in chunk {
+            let q = if s > 0.0 {
+                (x / s).round().clamp(-127.0, 127.0) as i8
+            } else {
+                0
+            };
+            out.push(q as u8);
+        }
+    }
+    out
+}
+
+fn int8_decode(n: usize, bytes: &[u8]) -> Vec<f32> {
+    let nchunks = n.div_ceil(INT8_CHUNK);
+    debug_assert_eq!(bytes.len(), 4 * nchunks + n);
+    let (sb, qb) = bytes.split_at(4 * nchunks);
+    let scales = f32_decode(sb);
+    let mut out = Vec::with_capacity(n);
+    for (i, &q) in qb.iter().enumerate() {
+        out.push((q as i8) as f32 * scales[i / INT8_CHUNK]);
+    }
+    out
+}
+
+/// Select the top-k coordinates of `acc` by |v| (ties broken by lower
+/// index), serialize them as `(u32 idx LE, f32 val LE)` pairs in index
+/// order, and zero them in `acc` (which becomes the new residual).
+fn topk_extract(acc: &mut [f32]) -> Vec<u8> {
+    let n = acc.len();
+    let k = top_k(n);
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    idx.sort_unstable_by(|&a, &b| {
+        let (xa, xb) = (acc[a as usize].abs(), acc[b as usize].abs());
+        xb.partial_cmp(&xa)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut sel = idx[..k].to_vec();
+    sel.sort_unstable();
+    let mut bytes = Vec::with_capacity(8 * k);
+    for &i in &sel {
+        bytes.extend_from_slice(&i.to_le_bytes());
+        bytes.extend_from_slice(&acc[i as usize].to_le_bytes());
+        acc[i as usize] = 0.0;
+    }
+    bytes
+}
+
+/// Dense decode: zeros everywhere but the transmitted coordinates.
+fn topk_decode(n: usize, bytes: &[u8]) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    for c in bytes.chunks_exact(8) {
+        let i = u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as usize;
+        out[i] = f32::from_le_bytes([c[4], c[5], c[6], c[7]]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wave(n: usize) -> Vec<f32> {
+        // deterministic, sign-varying, multi-scale values
+        (0..n)
+            .map(|i| ((i as f32 * 0.7).sin() + 0.001 * i as f32) * if i % 3 == 0 { -2.0 } else { 1.0 })
+            .collect()
+    }
+
+    #[test]
+    fn f32_payload_is_identity_and_charges_4_bytes_per_elem() {
+        let data = wave(100);
+        let p = Codec::F32.encode_stateless(data.clone());
+        assert_eq!(p.wire_bytes(), 400);
+        assert_eq!(p.encoding(), Encoding::F32);
+        assert_eq!(p.decode(), data, "identity codec must be bit-exact");
+    }
+
+    #[test]
+    fn bf16_roundtrip_within_relative_error_bound() {
+        let data = wave(1000);
+        let p = Codec::Bf16.encode_stateless(data.clone());
+        assert_eq!(p.wire_bytes(), 2000, "2 bytes per element");
+        let dec = p.decode();
+        for (&x, &y) in data.iter().zip(&dec) {
+            // 7 explicit mantissa bits + RNE: rel err <= 2^-8
+            assert!(
+                (x - y).abs() <= x.abs() / 256.0 + f32::MIN_POSITIVE,
+                "bf16 error too large: {x} -> {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn bf16_exactly_representable_values_survive() {
+        let data = vec![0.0, 1.0, -2.5, 0.5, -0.25, 104.0];
+        let p = Codec::Bf16.encode_stateless(data.clone());
+        assert_eq!(p.decode(), data);
+    }
+
+    #[test]
+    fn int8_roundtrip_within_half_scale_per_chunk() {
+        let data = wave(600); // 3 chunks, last one partial
+        let p = Codec::Int8.encode_stateless(data.clone());
+        assert_eq!(p.wire_bytes(), 600 + 4 * 3);
+        let dec = p.decode();
+        for (ci, chunk) in data.chunks(INT8_CHUNK).enumerate() {
+            let max = chunk.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let half_scale = max / 127.0 / 2.0 + 1e-7;
+            for (j, &x) in chunk.iter().enumerate() {
+                let y = dec[ci * INT8_CHUNK + j];
+                assert!(
+                    (x - y).abs() <= half_scale,
+                    "int8 chunk {ci} error: {x} -> {y}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn int8_chunks_isolate_scales() {
+        // a huge value in chunk 0 must not destroy chunk 1's precision
+        let mut data = vec![0.01f32; 2 * INT8_CHUNK];
+        data[0] = 1000.0;
+        let dec = Codec::Int8.encode_stateless(data.clone()).decode();
+        assert!((dec[INT8_CHUNK] - 0.01).abs() <= 0.01 / 127.0 / 2.0 + 1e-7);
+    }
+
+    #[test]
+    fn int8_all_zero_chunk_decodes_to_zero() {
+        let dec = Codec::Int8.encode_stateless(vec![0.0; 300]).decode();
+        assert!(dec.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn topk_error_feedback_conserves_mass_exactly() {
+        let data = wave(256);
+        let mut enc = Encoder::new(Codec::TopK);
+        let p = enc.encode(3, 1, &data);
+        assert_eq!(p.wire_bytes(), 8 * 16, "k = 256/16 pairs of 8 bytes");
+        let dec = p.decode();
+        let res = enc.residual(3, 1);
+        // partition, not quantization: decoded + residual == input, bitwise
+        for i in 0..data.len() {
+            assert_eq!(
+                (dec[i] + res[i]).to_bits(),
+                data[i].to_bits(),
+                "coordinate {i} not conserved"
+            );
+            assert!(
+                dec[i] == 0.0 || res[i] == 0.0,
+                "coordinate {i} split across wire and residual"
+            );
+        }
+    }
+
+    #[test]
+    fn topk_residual_feeds_into_next_message() {
+        // round 1 sends the single largest coord; round 2's selection
+        // sees data + residual, so a coord starved in round 1 wins
+        let mut enc = Encoder::new(Codec::TopK);
+        let p1 = enc.encode(0, 0, &[1.0, 0.9, 0.0, 0.0]).decode();
+        assert_eq!(p1, vec![1.0, 0.0, 0.0, 0.0]);
+        // acc = [0.1 + 0, 0.1 + 0.9, 0, 0] -> coord 1 now largest
+        let p2 = enc.encode(0, 0, &[0.1, 0.1, 0.0, 0.0]).decode();
+        assert_eq!(p2, vec![0.0, 1.0, 0.0, 0.0]);
+        assert_eq!(enc.residual(0, 0), &[0.1, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_selection_is_deterministic_under_ties() {
+        let mut e1 = Encoder::new(Codec::TopK);
+        let mut e2 = Encoder::new(Codec::TopK);
+        let data = vec![0.5f32; 64]; // all tied: lowest indices win
+        let p1 = e1.encode(0, 0, &data);
+        let p2 = e2.encode(0, 0, &data);
+        match (&p1, &p2) {
+            (
+                Payload::Bytes { bytes: b1, .. },
+                Payload::Bytes { bytes: b2, .. },
+            ) => assert_eq!(b1, b2),
+            _ => panic!("topk must produce byte payloads"),
+        }
+        let dec = p1.decode();
+        for (i, &v) in dec.iter().enumerate() {
+            assert_eq!(v, if i < 4 { 0.5 } else { 0.0 }, "ties break low-index");
+        }
+    }
+
+    #[test]
+    fn residuals_are_per_destination_and_stream() {
+        let mut enc = Encoder::new(Codec::TopK);
+        enc.encode(1, 0, &[1.0, 0.5]);
+        enc.encode(2, 0, &[1.0, 0.25]);
+        enc.encode(1, 7, &[1.0, 0.125]);
+        assert_eq!(enc.residual(1, 0), &[0.0, 0.5]);
+        assert_eq!(enc.residual(2, 0), &[0.0, 0.25]);
+        assert_eq!(enc.residual(1, 7), &[0.0, 0.125]);
+        assert_eq!(enc.residual(9, 9), &[] as &[f32]);
+    }
+
+    #[test]
+    fn mix_payload_dense_matches_elementwise_average() {
+        let mut a = wave(50);
+        let want: Vec<f32> = a.iter().map(|&x| (x + 1.0) * 0.5).collect();
+        mix_payload_into(&mut a, Payload::F32(vec![1.0; 50]));
+        assert_eq!(a, want);
+    }
+
+    #[test]
+    fn mix_payload_topk_touches_only_sent_coords() {
+        let mut enc = Encoder::new(Codec::TopK);
+        let mut theirs = vec![0.0f32; 32];
+        theirs[5] = 8.0; // the one coord that crosses the wire (k = 2)
+        theirs[9] = 4.0;
+        let p = enc.encode(0, 0, &theirs);
+        let mut mine = vec![1.0f32; 32];
+        mix_payload_into(&mut mine, p);
+        for (i, &v) in mine.iter().enumerate() {
+            match i {
+                5 => assert_eq!(v, 4.5),
+                9 => assert_eq!(v, 2.5),
+                _ => assert_eq!(v, 1.0, "untouched coord {i} perturbed"),
+            }
+        }
+    }
+
+    #[test]
+    fn wire_bytes_for_matches_actual_encoded_size() {
+        for n in [1usize, 15, 16, 100, 256, 257, 1000] {
+            let data = wave(n);
+            for codec in [Codec::F32, Codec::Bf16, Codec::Int8] {
+                let p = codec.encode_stateless(data.clone());
+                assert_eq!(
+                    p.wire_bytes(),
+                    codec.wire_bytes_for(n),
+                    "{codec:?} n={n}"
+                );
+            }
+            let mut enc = Encoder::new(Codec::TopK);
+            let p = enc.encode(0, 0, &data);
+            assert_eq!(p.wire_bytes(), Codec::TopK.wire_bytes_for(n), "topk n={n}");
+            // stateless TopK rides dense
+            assert_eq!(Codec::TopK.stateless_wire_bytes_for(n), 4 * n);
+            assert_eq!(
+                Codec::TopK.encode_stateless(data.clone()).wire_bytes(),
+                4 * n
+            );
+        }
+    }
+
+    #[test]
+    fn codec_names_parse_back() {
+        for codec in [Codec::F32, Codec::Bf16, Codec::Int8, Codec::TopK] {
+            assert_eq!(Codec::parse(codec.name()), Ok(codec));
+        }
+        assert!(Codec::parse("fp8").is_err());
+        assert_eq!(Codec::default(), Codec::F32);
+    }
+
+    #[test]
+    fn encoding_byte_roundtrip() {
+        for enc in [Encoding::F32, Encoding::Bf16, Encoding::Int8, Encoding::TopK] {
+            assert_eq!(Encoding::from_u8(enc as u8), Some(enc));
+        }
+        assert_eq!(Encoding::from_u8(9), None);
+    }
+
+    #[test]
+    fn raw_f32_bytes_decode_bulk() {
+        // the TCP reader path: frame bytes held raw, decoded at harvest
+        let data = wave(33);
+        let mut bytes = Vec::new();
+        for &x in &data {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        let p = Payload::Bytes {
+            enc: Encoding::F32,
+            n: 33,
+            bytes,
+        };
+        assert_eq!(p.wire_bytes(), 132);
+        assert_eq!(p.decode(), data);
+    }
+}

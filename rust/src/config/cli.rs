@@ -8,6 +8,7 @@
 //! explicit `--compute-ms`/`--fwd-ms` override the workload's numbers.
 
 use super::{Algo, LrSchedule, RunConfig, Transport};
+use crate::codec::Codec;
 use crate::collectives::Algorithm;
 use crate::sim::Workload;
 use crate::util::args::Args;
@@ -50,6 +51,7 @@ pub const FLAGS: &[&str] = &[
 /// | `straggler_jitter` | `--jitter` |
 /// | `virt_ps_agg_secs` | `--ps-agg-ms` |
 /// | `layerwise`, `comm_thread`, `sync_mix` | flags of the same name |
+/// | `codec` | `--codec f32\|bf16\|int8\|topk` |
 pub fn from_args(args: &Args) -> Result<RunConfig> {
     let mut cfg = match args.get("config") {
         Some(path) => RunConfig::load(path).map_err(anyhow::Error::msg)?,
@@ -66,6 +68,9 @@ pub fn from_args(args: &Args) -> Result<RunConfig> {
     }
     if let Some(t) = args.get("transport") {
         cfg.transport = Transport::parse(t).map_err(anyhow::Error::msg)?;
+    }
+    if let Some(c) = args.get("codec") {
+        cfg.codec = Codec::parse(c).map_err(anyhow::Error::msg)?;
     }
     cfg.ranks = args.usize_or("ranks", cfg.ranks);
     cfg.steps = args.usize_or("steps", cfg.steps);
@@ -195,7 +200,8 @@ mod tests {
              --eval-every 2 --alpha 0.0002 --beta-gbps 0.5 --noise 0 \
              --native --artifacts-dir elsewhere --ps-servers 3 \
              --virtual-clock --compute-ms 6.25 --fwd-ms 2 --jitter 0.25 \
-             --ps-agg-ms 1.5 --layerwise --comm-thread --sync-mix",
+             --ps-agg-ms 1.5 --layerwise --comm-thread --sync-mix \
+             --codec bf16",
         );
         let c = from_args(&a).unwrap();
         assert_eq!(c.model, "mlp-small");
@@ -219,6 +225,22 @@ mod tests {
         assert!((c.virt_fwd_secs - 2e-3).abs() < 1e-12);
         assert!((c.straggler_jitter - 0.25).abs() < 1e-12);
         assert!((c.virt_ps_agg_secs - 1.5e-3).abs() < 1e-12);
+        assert_eq!(c.codec, Codec::Bf16);
+    }
+
+    #[test]
+    fn codec_flag_parses_and_defaults_to_f32() {
+        assert_eq!(from_args(&parse("train")).unwrap().codec, Codec::F32);
+        for (s, codec) in [
+            ("f32", Codec::F32),
+            ("bf16", Codec::Bf16),
+            ("int8", Codec::Int8),
+            ("topk", Codec::TopK),
+        ] {
+            let c = from_args(&parse(&format!("train --codec {s}"))).unwrap();
+            assert_eq!(c.codec, codec);
+        }
+        assert!(from_args(&parse("train --codec fp8")).is_err());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! `mnist_gossip_32.json` = LeNet3-analog, 32 ranks, dissemination +
 //! rotation + ring shuffle, IB-EDR cost model.
 
+use crate::codec::Codec;
 use crate::collectives::Algorithm;
 use crate::transport::CostModel;
 use crate::util::json::{self, num, obj, Json};
@@ -199,6 +200,12 @@ pub struct RunConfig {
     /// as ranks) or TCP sockets (one process per rank, wall clock
     /// only).  Recorded in experiment artifacts so sweeps key on it.
     pub transport: Transport,
+    /// Wire codec for model/gradient payloads (`--codec`,
+    /// docs/wire-codecs.md): `f32` (bit-parity default), `bf16`,
+    /// `int8`, or `topk` (error-feedback sparsification).  Compressed
+    /// bytes are what the fabric charges, so this axis moves both
+    /// measured and closed-form efficiency.
+    pub codec: Codec,
 }
 
 impl Default for RunConfig {
@@ -235,6 +242,7 @@ impl Default for RunConfig {
             comm_thread: false,
             sync_mix: false,
             transport: Transport::Inproc,
+            codec: Codec::F32,
         }
     }
 }
@@ -320,6 +328,7 @@ impl RunConfig {
             ("artifacts_dir", json::s(&self.artifacts_dir)),
             ("allreduce", json::s(self.allreduce.name())),
             ("transport", json::s(self.transport.name())),
+            ("codec", json::s(self.codec.name())),
         ];
         if let Some(dir) = &self.resume_from {
             pairs.push(("resume_from", json::s(dir)));
@@ -420,6 +429,9 @@ impl RunConfig {
         }
         if let Some(v) = j.get("transport").and_then(Json::as_str) {
             c.transport = Transport::parse(v)?;
+        }
+        if let Some(v) = j.get("codec").and_then(Json::as_str) {
+            c.codec = Codec::parse(v)?;
         }
         if let Some(sched) = j.get("lr_step_every").and_then(Json::as_usize) {
             let gamma = j
@@ -565,6 +577,7 @@ mod tests {
         c.comm_thread = true;
         c.sync_mix = true;
         c.transport = Transport::Tcp;
+        c.codec = Codec::TopK;
         let j = c.to_json();
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(back, c, "to_json/from_json must round-trip losslessly");
@@ -614,6 +627,25 @@ mod tests {
         assert_ne!(c.content_hash(), RunConfig::default().content_hash());
         let j = Json::parse(r#"{"transport": "tcp"}"#).unwrap();
         assert_eq!(RunConfig::from_json(&j).unwrap().transport, Transport::Tcp);
+    }
+
+    #[test]
+    fn codec_axis_parses_and_reshapes_hash() {
+        assert_eq!(RunConfig::default().codec, Codec::F32);
+        for codec in [Codec::F32, Codec::Bf16, Codec::Int8, Codec::TopK] {
+            let j = Json::parse(&format!(r#"{{"codec": "{}"}}"#, codec.name()))
+                .unwrap();
+            assert_eq!(RunConfig::from_json(&j).unwrap().codec, codec);
+        }
+        assert!(RunConfig::from_json(
+            &Json::parse(r#"{"codec": "fp8"}"#).unwrap()
+        )
+        .is_err());
+        // a compressed run must never share a cache entry with the
+        // bit-parity f32 run of the same scenario
+        let mut c = RunConfig::default();
+        c.codec = Codec::Bf16;
+        assert_ne!(c.content_hash(), RunConfig::default().content_hash());
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //!   fabric (fabric size = workers + servers).
 
 use super::worker::Worker;
+use crate::codec::Encoder;
 use crate::collectives::{Algorithm, IAllreduce};
 use crate::config::RunConfig;
 use crate::nativenet::ops;
@@ -171,6 +172,11 @@ pub fn run_periodic(w: &mut Worker, ep: &Endpoint, alg: Algorithm) {
 pub fn run_ps_worker(w: &mut Worker, ep: &Endpoint, server: usize) {
     let steps = w.cfg.steps;
     let sched = w.bwd_schedule();
+    // gradient pushes go through the wire codec; under top-k the unsent
+    // gradient mass stays in a per-layer residual toward the server
+    // (zero-filled decode is exact for the server's *summation*), while
+    // the model pull rides the transport's stateless auto path
+    let mut enc = Encoder::new(w.cfg.codec);
     for step in 0..steps {
         let t0 = ep.mark();
         let batch = w.shuffle.take(ep);
@@ -182,10 +188,10 @@ pub fn run_ps_worker(w: &mut Worker, ep: &Endpoint, server: usize) {
             w.charge_compute(ep, step, w.cfg.virt_fwd_secs);
             for &(li, off, len, secs) in &sched {
                 w.charge_compute(ep, step, secs);
-                ep.isend(
+                ep.isend_payload(
                     server,
                     Tag::layer(li).round(step),
-                    grads[off..off + len].to_vec(),
+                    enc.encode(server, li, &grads[off..off + len]),
                 );
             }
             let tw = ep.mark();
@@ -195,7 +201,11 @@ pub fn run_ps_worker(w: &mut Worker, ep: &Endpoint, server: usize) {
         } else {
             w.charge_compute(ep, step, w.cfg.virt_compute_secs);
             let tw = ep.mark();
-            ep.isend(server, Tag::REDUCE.round(step), grads);
+            ep.isend_payload(
+                server,
+                Tag::REDUCE.round(step),
+                enc.encode(server, 0, &grads),
+            );
             let fresh = ep.recv(server, Tag::MODEL.round(step));
             w.params.copy_from_slice(&fresh);
             ep.comm_wait_since(&tw)
@@ -259,7 +269,10 @@ pub fn run_ps_server(
         ops::scale(&mut acc, 1.0 / workers as f32);
         let lr = cfg.lr_schedule.lr_at(cfg.effective_lr(), step) as f32;
         backend.apply_update(&mut params, &mut mom, &acc, lr);
-        let wire = params.len() as f64 * 4.0 * beta;
+        // serialized-broadcast occupancy matches what each send actually
+        // charges: the model rides the stateless auto path, so its wire
+        // bytes are codec-compressed (top-k falls back to dense there)
+        let wire = cfg.codec.stateless_wire_bytes_for(params.len()) as f64 * beta;
         for dst in 0..workers {
             if dst > 0 {
                 // transfer k cannot start until transfer k-1 clears the

@@ -12,7 +12,11 @@
 //! 4. Applies the fused momentum-SGD update.
 //! 5. **Sends** its updated model to this step's dissemination partner,
 //!    one message per layer slice (layer-wise, so a real NIC would
-//!    pipeline them; tags carry (layer, step)).
+//!    pipeline them; tags carry (layer, step)), each slice encoded under
+//!    the configured wire codec ([`crate::codec`], docs/wire-codecs.md)
+//!    so compressed bytes are what the fabric charges; under top-k the
+//!    unsent mass stays in a per-(partner, layer) error-feedback
+//!    residual and only transmitted coordinates are mixed.
 //! 6. Forwards its consumed batch around the sample-shuffle ring.
 //!
 //! Partner selection is a rotated dissemination topology by default
@@ -41,8 +45,8 @@
 //! the exposed communication time.
 
 use super::worker::Worker;
+use crate::codec::{mix_payload_into, Encoder};
 use crate::config::Algo;
-use crate::nativenet::ops;
 use crate::topology::{
     Dissemination, Exchange, Hypercube, RandomGossip, Rotation, Topology,
 };
@@ -126,7 +130,12 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
     let layerwise = w.cfg.layerwise;
     let sched = w.bwd_schedule(); // (layer, offset, len, slice secs), output first
     let mut pending: Option<PendingModel> = None;
-    let mut partner_buf = vec![0.0f32; w.params.len()];
+    // wire codec: every outgoing model slice goes through this encoder
+    // (per-destination/per-layer error-feedback residuals under top-k);
+    // incoming slices mix via `mix_payload_into`, which for dense
+    // payloads is bit-identical to `ops::mix_into` on the decoded
+    // vector — `--codec f32` keeps the historical param_hash exactly
+    let mut enc = Encoder::new(w.cfg.codec);
 
     for step in 0..steps {
         let t0 = ep.mark();
@@ -167,9 +176,9 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
                 if let Some(pm) = pending.as_mut() {
                     if let Some((o2, req)) = pm.reqs[li].take() {
                         let tw = ep.mark();
-                        let data = req.wait();
+                        let data = req.wait_payload();
                         comm_wait += ep.comm_wait_since(&tw);
-                        ops::mix_into(&mut w.params[o2..o2 + data.len()], &data);
+                        mix_payload_into(&mut w.params[o2..o2 + data.len()], data);
                     }
                 }
                 w.backend.apply_update_slice(
@@ -182,10 +191,10 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
                 // instant — later layers' backprop continues past it
                 if let Some(ex) = &exchange {
                     if ex.send_to != w.rank {
-                        ep.isend(
+                        ep.isend_payload(
                             ex.send_to,
                             Tag::layer(li).round(step),
-                            w.params[off..off + len].to_vec(),
+                            enc.encode(ex.send_to, li, &w.params[off..off + len]),
                         );
                         if random_senders.is_none() && !sync_mix {
                             new_reqs[li] = Some((
@@ -205,15 +214,17 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
             // virtual clock: charge the whole modeled compute cost
             w.charge_compute(ep, step, w.cfg.virt_compute_secs);
 
-            // drain previous step's partner model & mix (§6)
+            // drain previous step's partner model & mix (§6) — slice by
+            // slice; the layer slices are disjoint, so per-slice mixing
+            // is elementwise-identical to buffering the whole partner
+            // model first
             if let Some(pm) = pending.take() {
                 let tw = ep.mark();
                 for (off, req) in pm.reqs.into_iter().flatten() {
-                    let data = req.wait();
-                    partner_buf[off..off + data.len()].copy_from_slice(&data);
+                    let data = req.wait_payload();
+                    mix_payload_into(&mut w.params[off..off + data.len()], data);
                 }
                 comm_wait += ep.comm_wait_since(&tw);
-                ops::mix_into(&mut w.params, &partner_buf);
             }
 
             // local update
@@ -221,22 +232,23 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
 
             if let Some(ex) = &exchange {
                 if random_senders.is_none() && ex.send_to != w.rank {
-                    send_model(ep, ex.send_to, step, &w.params, &layers);
+                    send_model(ep, ex.send_to, step, &w.params, &layers, &mut enc);
                     let pm = post_recvs(ep, ex.recv_from, step, &layers);
                     if sync_mix {
                         let tw = ep.mark();
                         for (off, req) in pm.reqs.into_iter().flatten() {
-                            let data = req.wait();
-                            partner_buf[off..off + data.len()]
-                                .copy_from_slice(&data);
+                            let data = req.wait_payload();
+                            mix_payload_into(
+                                &mut w.params[off..off + data.len()],
+                                data,
+                            );
                         }
                         comm_wait += ep.comm_wait_since(&tw);
-                        ops::mix_into(&mut w.params, &partner_buf);
                     } else {
                         pending = Some(pm);
                     }
                 } else if random_senders.is_some() {
-                    send_model(ep, ex.send_to, step, &w.params, &layers);
+                    send_model(ep, ex.send_to, step, &w.params, &layers, &mut enc);
                 }
             }
         }
@@ -248,10 +260,9 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
             for src in senders {
                 let pm = post_recvs(ep, src, step, &layers);
                 for (off, req) in pm.reqs.into_iter().flatten() {
-                    let data = req.wait();
-                    partner_buf[off..off + data.len()].copy_from_slice(&data);
+                    let data = req.wait_payload();
+                    mix_payload_into(&mut w.params[off..off + data.len()], data);
                 }
-                ops::mix_into(&mut w.params, &partner_buf);
             }
             comm_wait += ep.comm_wait_since(&tw);
         } else if layerwise && sync_mix {
@@ -262,11 +273,10 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
                     let pm = post_recvs(ep, ex.recv_from, step, &layers);
                     let tw = ep.mark();
                     for (off, req) in pm.reqs.into_iter().flatten() {
-                        let data = req.wait();
-                        partner_buf[off..off + data.len()].copy_from_slice(&data);
+                        let data = req.wait_payload();
+                        mix_payload_into(&mut w.params[off..off + data.len()], data);
                     }
                     comm_wait += ep.comm_wait_since(&tw);
-                    ops::mix_into(&mut w.params, &partner_buf);
                 }
             }
         }
@@ -290,15 +300,8 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
     // (the mix itself still runs: numerics are unchanged)
     if let Some(pm) = pending.take() {
         for (off, req) in pm.reqs.into_iter().flatten() {
-            let (data, _, _) = req.wait_raw();
-            if layerwise {
-                ops::mix_into(&mut w.params[off..off + data.len()], &data);
-            } else {
-                partner_buf[off..off + data.len()].copy_from_slice(&data);
-            }
-        }
-        if !layerwise {
-            ops::mix_into(&mut w.params, &partner_buf);
+            let (data, _, _) = req.wait_raw_payload();
+            mix_payload_into(&mut w.params[off..off + data.len()], data);
         }
     }
     // ... and any in-flight sample batches, so the fabric ends clean
@@ -307,19 +310,22 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
     w.snapshot_counters(ep);
 }
 
-/// Send the model to `dst`, one message per layer slice (§5 layer-wise).
+/// Send the model to `dst`, one message per layer slice (§5 layer-wise),
+/// each slice encoded under the configured wire codec (the encoder's
+/// residual stream for a slice is its layer index).
 fn send_model(
     ep: &Endpoint,
     dst: usize,
     step: usize,
     params: &[f32],
     layers: &[(usize, usize)],
+    enc: &mut Encoder,
 ) {
     for (li, &(off, len)) in layers.iter().enumerate() {
-        ep.isend(
+        ep.isend_payload(
             dst,
             Tag::layer(li).round(step),
-            params[off..off + len].to_vec(),
+            enc.encode(dst, li, &params[off..off + len]),
         );
     }
 }

@@ -42,6 +42,9 @@ pub struct RunResult {
     /// must be 0 (leaked `isend`/`irecv` pairs; see
     /// tests/fabric_drain.rs).
     pub in_flight_msgs: usize,
+    /// Wire bytes those leaked messages occupy — the byte half of the
+    /// drain invariant, also 0 on a clean run.
+    pub in_flight_bytes: usize,
 }
 
 impl RunResult {
@@ -263,12 +266,16 @@ pub fn run_with_backend(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
     }
     let p = cfg.ranks;
     // Virtual-clock fabric makes all timing metrics deterministic
-    // discrete-event simulated seconds (docs/virtual-time.md).
-    let fabric = if cfg.virtual_clock {
-        Fabric::new_virtual(fabric_size(cfg), cfg.cost_model())
+    // discrete-event simulated seconds (docs/virtual-time.md).  The
+    // configured wire codec rides on the fabric so the transport's
+    // stateless auto path compresses payload-kind messages.
+    let mode = if cfg.virtual_clock {
+        ClockMode::Virtual
     } else {
-        Fabric::new(fabric_size(cfg), cfg.cost_model())
+        ClockMode::Wall
     };
+    let fabric =
+        Fabric::with_clock_codec(fabric_size(cfg), cfg.cost_model(), mode, cfg.codec);
 
     let batch = backend.batch();
     let x_len = backend.x_len();
@@ -317,6 +324,7 @@ pub fn run_with_backend(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
         final_accuracy,
         wall_secs: t0.elapsed().as_secs_f64(),
         in_flight_msgs: fabric.in_flight(),
+        in_flight_bytes: fabric.in_flight_bytes(),
     })
 }
 
@@ -329,6 +337,8 @@ pub struct RankOutcome {
     pub metrics: Option<RunMetrics>,
     pub params: Option<Vec<f32>>,
     pub in_flight: usize,
+    /// Wire bytes of the leaked messages `in_flight` counts.
+    pub in_flight_bytes: usize,
 }
 
 /// Run exactly ONE fabric rank over a caller-supplied link — the unit
@@ -350,7 +360,8 @@ pub fn run_rank_with_link(
         link.size()
     );
     anyhow::ensure!(rank < n, "rank {rank} outside fabric of {n}");
-    let fabric = Fabric::with_link(link, cfg.cost_model(), ClockMode::Wall);
+    let fabric =
+        Fabric::with_link_codec(link, cfg.cost_model(), ClockMode::Wall, cfg.codec);
     let ep = fabric.endpoint(rank);
     let p = cfg.ranks;
     let (metrics, params) = if rank < p {
@@ -373,6 +384,7 @@ pub fn run_rank_with_link(
         metrics,
         params,
         in_flight: fabric.in_flight(),
+        in_flight_bytes: fabric.in_flight_bytes(),
     })
 }
 
@@ -422,6 +434,7 @@ pub fn run_tcp_loopback(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
     }
     outcomes.sort_by_key(|o| o.rank);
     let in_flight_msgs = outcomes.iter().map(|o| o.in_flight).sum();
+    let in_flight_bytes = outcomes.iter().map(|o| o.in_flight_bytes).sum();
     let mut per_rank = Vec::new();
     let mut final_params = Vec::new();
     for o in outcomes {
@@ -440,6 +453,7 @@ pub fn run_tcp_loopback(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
         final_accuracy,
         wall_secs: t0.elapsed().as_secs_f64(),
         in_flight_msgs,
+        in_flight_bytes,
     })
 }
 
@@ -521,6 +535,7 @@ mod tests {
             final_accuracy: None,
             wall_secs: 0.0,
             in_flight_msgs: 0,
+            in_flight_bytes: 0,
         }
     }
 

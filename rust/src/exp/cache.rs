@@ -75,6 +75,7 @@ mod tests {
             max_disagreement: 0.0,
             param_hash: "00deadbeef00cafe".into(),
             in_flight_msgs: 0,
+            in_flight_bytes: 0,
             final_accuracy: None,
         }
     }

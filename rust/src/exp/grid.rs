@@ -6,8 +6,9 @@
 //! a `Grid` is "the base scenario, varied along these axes".  Axis
 //! nesting order (outer → inner) is `algo → ranks → gossip_period →
 //! straggler_jitter → layerwise → comm_thread → sync_mix → allreduce →
-//! seed`; scenario index order — and therefore artifact row order — is
-//! a pure function of the declaration, never of execution timing.
+//! codec → seed`; scenario index order — and therefore artifact row
+//! order — is a pure function of the declaration, never of execution
+//! timing.
 //!
 //! Invalid combinations are skipped, not errored: `comm_thread` without
 //! `layerwise` measures nothing (the collective engine has no backprop
@@ -15,6 +16,7 @@
 //! points — a `comm_thread × layerwise` grid yields the three runnable
 //! corners.
 
+use crate::codec::Codec;
 use crate::collectives::Algorithm;
 use crate::config::{Algo, RunConfig};
 use crate::sim::Workload;
@@ -34,6 +36,7 @@ pub struct Grid {
     comm_threads: Vec<bool>,
     sync_mixes: Vec<bool>,
     allreduces: Vec<Algorithm>,
+    codecs: Vec<Codec>,
     seeds: Vec<u64>,
 }
 
@@ -49,6 +52,7 @@ impl Grid {
             comm_threads: Vec::new(),
             sync_mixes: Vec::new(),
             allreduces: Vec::new(),
+            codecs: Vec::new(),
             seeds: Vec::new(),
         }
     }
@@ -85,6 +89,10 @@ impl Grid {
         self.allreduces = v.to_vec();
         self
     }
+    pub fn codecs(mut self, v: &[Codec]) -> Self {
+        self.codecs = v.to_vec();
+        self
+    }
     pub fn seeds(mut self, v: &[u64]) -> Self {
         self.seeds = v.to_vec();
         self
@@ -116,6 +124,7 @@ impl Grid {
         let comm_threads = axis(&self.comm_threads, self.base.comm_thread);
         let sync_mixes = axis(&self.sync_mixes, self.base.sync_mix);
         let allreduces = axis(&self.allreduces, self.base.allreduce);
+        let codecs = axis(&self.codecs, self.base.codec);
         let seeds = axis(&self.seeds, self.base.seed);
         let mut out = Vec::new();
         for &algo in &algos {
@@ -126,21 +135,24 @@ impl Grid {
                             for &ct in &comm_threads {
                                 for &sm in &sync_mixes {
                                     for &ar in &allreduces {
-                                        for &seed in &seeds {
-                                            if ct && !lw {
-                                                continue;
+                                        for &codec in &codecs {
+                                            for &seed in &seeds {
+                                                if ct && !lw {
+                                                    continue;
+                                                }
+                                                let mut c = self.base.clone();
+                                                c.algo = algo;
+                                                c.ranks = p;
+                                                c.gossip_period = period;
+                                                c.straggler_jitter = jitter;
+                                                c.layerwise = lw;
+                                                c.comm_thread = ct;
+                                                c.sync_mix = sm;
+                                                c.allreduce = ar;
+                                                c.codec = codec;
+                                                c.seed = seed;
+                                                out.push(c);
                                             }
-                                            let mut c = self.base.clone();
-                                            c.algo = algo;
-                                            c.ranks = p;
-                                            c.gossip_period = period;
-                                            c.straggler_jitter = jitter;
-                                            c.layerwise = lw;
-                                            c.comm_thread = ct;
-                                            c.sync_mix = sm;
-                                            c.allreduce = ar;
-                                            c.seed = seed;
-                                            out.push(c);
                                         }
                                     }
                                 }
@@ -165,8 +177,8 @@ impl Grid {
     /// Read `--*-list` axes from CLI args onto a base config:
     /// `--algo-list`, `--ranks-list`, `--gossip-period-list`,
     /// `--jitter-list`, `--layerwise-list`, `--comm-thread-list`,
-    /// `--sync-mix-list`, `--allreduce-list`, `--seed-list` — all
-    /// comma-separated.
+    /// `--sync-mix-list`, `--allreduce-list`, `--codec-list`,
+    /// `--seed-list` — all comma-separated.
     pub fn from_args(base: RunConfig, args: &Args) -> Result<Grid> {
         let mut g = Grid::new(base);
         if let Some(v) = args.get("algo-list") {
@@ -197,6 +209,11 @@ impl Grid {
                 .map(|t| Algorithm::parse(t).map_err(anyhow::Error::msg))
                 .collect::<Result<_>>()?;
         }
+        if let Some(v) = args.get("codec-list") {
+            g.codecs = split(v)
+                .map(|t| Codec::parse(t).map_err(anyhow::Error::msg))
+                .collect::<Result<_>>()?;
+        }
         if let Some(v) = args.get("seed-list") {
             g.seeds = parse_list(v, "--seed-list")?;
         }
@@ -207,7 +224,10 @@ impl Grid {
     /// layer-wise `gossip_period × straggler_jitter` product on the
     /// virtual LeNet3 fabric at `p` ranks (the Fig 17-style trade-off
     /// crossed with the straggler ablation — where does `overlap_frac`
-    /// stop compensating?).
+    /// stop compensating?); `codec-frontier-<p>` is the wire-codec ×
+    /// `gossip_period` product at `p` ranks (the bandwidth/fidelity
+    /// frontier: how much wire compression buys once mixing is already
+    /// overlapped, and what it costs in convergence).
     pub fn preset(name: &str) -> Result<Grid> {
         if let Some(p) = name.strip_prefix("period-jitter-") {
             let p: usize = p.parse().with_context(|| {
@@ -215,7 +235,13 @@ impl Grid {
             })?;
             return Ok(Grid::period_jitter(p));
         }
-        bail!("unknown preset {name:?} (try period-jitter-1024)")
+        if let Some(p) = name.strip_prefix("codec-frontier-") {
+            let p: usize = p.parse().with_context(|| {
+                format!("preset {name:?}: rank count suffix")
+            })?;
+            return Ok(Grid::codec_frontier(p));
+        }
+        bail!("unknown preset {name:?} (try period-jitter-1024 or codec-frontier-1024)")
     }
 
     /// The ROADMAP `gossip_period × jitter` grid at `p` ranks: gossip
@@ -240,6 +266,29 @@ impl Grid {
         Grid::new(base)
             .gossip_periods(&[1, 2, 4, 8, 16])
             .jitters(&[0.0, 0.1, 0.3, 0.5])
+    }
+
+    /// The wire-codec frontier at `p` ranks: every codec × gossip
+    /// periods 1–4, layer-wise gossip on the same virtual LeNet3 fabric
+    /// as [`period_jitter`](Self::period_jitter).  `eval_every` is on so
+    /// each cell reports end-of-run accuracy next to its efficiency —
+    /// the convergence column of the BENCH_codec_frontier artifact.
+    pub fn codec_frontier(p: usize) -> Grid {
+        let mut base = RunConfig {
+            model: "mlp-small".into(),
+            algo: Algo::Gossip,
+            ranks: p,
+            steps: 24,
+            use_artifacts: false,
+            rows_per_rank: 32,
+            layerwise: true,
+            eval_every: 8,
+            ..Default::default()
+        };
+        base.virtualize(&Workload::lenet3(4.0), 200e-6, 1.0 / 0.5e9);
+        Grid::new(base)
+            .codecs(&[Codec::F32, Codec::Bf16, Codec::Int8, Codec::TopK])
+            .gossip_periods(&[1, 2, 4])
     }
 }
 
@@ -316,15 +365,15 @@ mod tests {
              --gossip-period-list 1,2 --jitter-list 0,0.25 \
              --layerwise-list true --comm-thread-list false,true \
              --sync-mix-list false --allreduce-list rd,ring \
-             --seed-list 1,2,3"
+             --codec-list f32,bf16 --seed-list 1,2,3"
                 .split_whitespace()
                 .map(|t| t.to_string()),
             &[],
         )
         .unwrap();
         let g = Grid::from_args(RunConfig::default(), &args).unwrap();
-        // 2 × 3 × 2 × 2 × 1 × 2 × 1 × 2 × 3
-        assert_eq!(g.len(), 2 * 3 * 2 * 2 * 2 * 2 * 3);
+        // 2 × 3 × 2 × 2 × 1 × 2 × 1 × 2 × 2 × 3
+        assert_eq!(g.len(), 2 * 3 * 2 * 2 * 2 * 2 * 2 * 3);
         assert!(Grid::from_args(
             RunConfig::default(),
             &Args::parse(
@@ -347,5 +396,35 @@ mod tests {
         // beyond the step count)
         assert!(g.period_axis().iter().all(|&p| p <= g.base.steps));
         assert!(Grid::preset("nope").is_err());
+    }
+
+    #[test]
+    fn codec_axis_multiplies_the_product() {
+        let g = Grid::new(RunConfig::default())
+            .codecs(&[Codec::F32, Codec::Bf16, Codec::TopK])
+            .gossip_periods(&[1, 2]);
+        let s = g.scenarios();
+        assert_eq!(s.len(), 6);
+        // period outer, codec inner
+        assert_eq!((s[0].gossip_period, s[0].codec), (1, Codec::F32));
+        assert_eq!((s[1].gossip_period, s[1].codec), (1, Codec::Bf16));
+        assert_eq!((s[3].gossip_period, s[3].codec), (2, Codec::F32));
+        let mut keys: Vec<String> = s.iter().map(RunConfig::content_hash).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), 6, "codec must reshape every scenario key");
+    }
+
+    #[test]
+    fn codec_frontier_preset_covers_every_codec() {
+        let g = Grid::preset("codec-frontier-64").unwrap();
+        assert_eq!(g.base.ranks, 64);
+        assert_eq!(g.len(), 12, "4 codecs × 3 periods");
+        assert!(g.base.virtual_clock && g.base.layerwise);
+        assert!(g.base.eval_every > 0, "frontier rows carry accuracy");
+        let s = g.scenarios();
+        for codec in [Codec::F32, Codec::Bf16, Codec::Int8, Codec::TopK] {
+            assert!(s.iter().any(|c| c.codec == codec), "{codec:?} missing");
+        }
     }
 }

@@ -7,7 +7,7 @@
 //!
 //! 1. declare a [`Grid`] (cartesian product over `algo × p ×
 //!    gossip_period × straggler_jitter × layerwise × comm_thread ×
-//!    sync_mix × allreduce × seed`) over a base [`RunConfig`];
+//!    sync_mix × allreduce × codec × seed`) over a base [`RunConfig`];
 //! 2. an [`Engine`] executes the scenarios on a work-stealing pool of
 //!    host threads — each scenario is an independent deterministic
 //!    virtual-clock run, so an N-thread sweep is **byte-identical** to
@@ -207,14 +207,14 @@ impl Sweep {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "key,algo,model,ranks,steps,gossip_period,straggler_jitter,\
-             layerwise,comm_thread,sync_mix,allreduce,seed,transport,\
+             layerwise,comm_thread,sync_mix,allreduce,codec,seed,transport,\
              step_ms,efficiency_pct,overlap_frac,max_disagreement,\
-             msgs_per_rank_step,in_flight_msgs,param_hash\n",
+             msgs_per_rank_step,in_flight_msgs,in_flight_bytes,param_hash\n",
         );
         for r in &self.reports {
             let c = &r.config;
             out.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.key,
                 c.algo.name(),
                 c.model,
@@ -226,6 +226,7 @@ impl Sweep {
                 c.comm_thread,
                 c.sync_mix,
                 c.allreduce.name(),
+                c.codec.name(),
                 c.seed,
                 c.transport.name(),
                 1e3 * r.mean_step_secs,
@@ -234,6 +235,7 @@ impl Sweep {
                 r.max_disagreement,
                 r.msgs_per_rank_step(),
                 r.in_flight_msgs,
+                r.in_flight_bytes,
                 r.param_hash,
             ));
         }

@@ -38,6 +38,9 @@ pub struct ScenarioReport {
     pub param_hash: String,
     /// Messages still queued on the fabric after the run — must be 0.
     pub in_flight_msgs: usize,
+    /// Encoded payload bytes still queued on the fabric after the run —
+    /// the byte half of the drain invariant, also must be 0.
+    pub in_flight_bytes: usize,
     /// rank-0 final validation accuracy, when eval was enabled.
     pub final_accuracy: Option<f64>,
 }
@@ -54,6 +57,7 @@ impl ScenarioReport {
             max_disagreement: res.max_disagreement() as f64,
             param_hash: format!("{:016x}", res.param_hash()),
             in_flight_msgs: res.in_flight_msgs,
+            in_flight_bytes: res.in_flight_bytes,
             final_accuracy: res.final_accuracy,
         }
     }
@@ -93,6 +97,7 @@ impl ScenarioReport {
             ("max_disagreement", num(self.max_disagreement)),
             ("param_hash", json::s(&self.param_hash)),
             ("in_flight_msgs", num(self.in_flight_msgs as f64)),
+            ("in_flight_bytes", num(self.in_flight_bytes as f64)),
             (
                 "final_accuracy",
                 self.final_accuracy.map(num).unwrap_or(Json::Null),
@@ -134,6 +139,7 @@ impl ScenarioReport {
                 .ok_or("report: missing param_hash")?
                 .to_string(),
             in_flight_msgs: f("in_flight_msgs")? as usize,
+            in_flight_bytes: f("in_flight_bytes")? as usize,
             final_accuracy: j.get("final_accuracy").and_then(Json::as_f64),
         })
     }
@@ -165,6 +171,7 @@ mod tests {
             final_accuracy: Some(0.5),
             wall_secs: 123.0, // must NOT appear in the report
             in_flight_msgs: 0,
+            in_flight_bytes: 0,
         };
         ScenarioReport::from_run(&cfg, &res)
     }

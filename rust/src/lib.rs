@@ -43,10 +43,15 @@
 //!   threads, with content-hash result caching and JSON/CSV artifact
 //!   emission (docs/experiments.md); drives the `sweep` subcommand and
 //!   the figure/table benches.
+//! * [`codec`] — wire codecs: the typed [`codec::Payload`] every
+//!   transport message carries, with f32/bf16/int8/top-k encoders and
+//!   per-destination error-feedback residuals; compressed bytes are
+//!   what the fabric charges (docs/wire-codecs.md).
 //! * [`metrics`], [`config`], [`util`] — supporting infrastructure
 //!   (the offline environment has no clap/serde/criterion/proptest, so
 //!   `util` carries small hand-rolled equivalents).
 
+pub mod codec;
 pub mod collectives;
 pub mod config;
 pub mod coordinator;

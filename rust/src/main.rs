@@ -86,6 +86,9 @@ fn print_usage() {
                   collectives (needs --layerwise)   [--sync-mix]\n\
                   [--transport inproc|tcp]  wire layer (tcp = one\n\
                   loopback socket mesh, wall clock; docs/transport.md)\n\
+                  [--codec f32|bf16|int8|topk]  wire codec for model/\n\
+                  gradient payloads, charged in compressed bytes\n\
+                  (docs/wire-codecs.md)\n\
          launch:  spawn one OS process per rank on localhost over TCP\n\
                   and merge their metrics.  Takes every train flag,\n\
                   plus --port-base P (default 29500) [--keep-dir]\n\
@@ -102,8 +105,9 @@ fn print_usage() {
                   base scenario, plus axes --algo-list --ranks-list\n\
                   --gossip-period-list --jitter-list --layerwise-list\n\
                   --comm-thread-list --sync-mix-list --allreduce-list\n\
-                  --seed-list (comma-separated; omitted axes pin at the\n\
-                  base value), or --preset period-jitter-1024.\n\
+                  --codec-list --seed-list (comma-separated; omitted\n\
+                  axes pin at the base value), or --preset\n\
+                  period-jitter-1024 | codec-frontier-1024.\n\
                   --sweep-threads N  host worker threads (N-thread and\n\
                   1-thread sweeps are byte-identical)   --cache-dir DIR\n\
                   content-hash result cache   --out-dir DIR --out-name S\n\
@@ -232,16 +236,23 @@ fn cmd_rank(args: &Args) -> Result<()> {
     match &out.metrics {
         Some(m) => println!(
             "rank {rank}: mean step {:.2} ms | efficiency {:.1}% | {} msgs \
-             | in-flight {}",
+             | in-flight {} ({} B)",
             1e3 * m.mean_step_secs(),
             m.efficiency_pct(),
             m.msgs_sent,
-            out.in_flight
+            out.in_flight,
+            out.in_flight_bytes
         ),
-        None => println!("rank {rank}: server role done | in-flight {}", out.in_flight),
+        None => println!(
+            "rank {rank}: server role done | in-flight {} ({} B)",
+            out.in_flight, out.in_flight_bytes
+        ),
     }
     if out.in_flight != 0 {
         bail!("rank {rank} left {} messages in flight", out.in_flight);
+    }
+    if out.in_flight_bytes != 0 {
+        bail!("rank {rank} left {} bytes in flight", out.in_flight_bytes);
     }
     Ok(())
 }
@@ -253,6 +264,7 @@ fn rank_result_json(out: &coordinator::trainer::RankOutcome) -> Json {
     let mut pairs = vec![
         ("rank", num(out.rank as f64)),
         ("in_flight", num(out.in_flight as f64)),
+        ("in_flight_bytes", num(out.in_flight_bytes as f64)),
     ];
     if let Some(m) = &out.metrics {
         pairs.push(("summary", RankSummary::from_metrics(m).to_json()));
@@ -334,6 +346,7 @@ fn cmd_launch(args: &Args) -> Result<()> {
     let mut summaries: Vec<RankSummary> = Vec::new();
     let mut param_bytes: Vec<u8> = Vec::new();
     let mut total_in_flight = 0usize;
+    let mut total_in_flight_bytes = 0usize;
     for rank in 0..n {
         let path = dir.join(format!("rank_{rank}.json"));
         let text = std::fs::read_to_string(&path)
@@ -343,6 +356,10 @@ fn cmd_launch(args: &Args) -> Result<()> {
             .get("in_flight")
             .and_then(Json::as_usize)
             .with_context(|| format!("rank {rank}: missing in_flight"))?;
+        total_in_flight_bytes += j
+            .get("in_flight_bytes")
+            .and_then(Json::as_usize)
+            .with_context(|| format!("rank {rank}: missing in_flight_bytes"))?;
         if let Some(s) = j.get("summary") {
             summaries.push(RankSummary::from_json(s).map_err(anyhow::Error::msg)?);
         }
@@ -372,6 +389,9 @@ fn cmd_launch(args: &Args) -> Result<()> {
     t.print("merged per-rank metrics (tcp multi-process)");
     if total_in_flight != 0 {
         bail!("{total_in_flight} messages left in flight across the mesh");
+    }
+    if total_in_flight_bytes != 0 {
+        bail!("{total_in_flight_bytes} bytes left in flight across the mesh");
     }
     println!(
         "mean step {:.2} ms | efficiency {:.1}% | in-flight 0",
@@ -415,6 +435,7 @@ const AXIS_KEYS: &[&str] = &[
     "comm-thread-list",
     "sync-mix-list",
     "allreduce-list",
+    "codec-list",
     "seed-list",
 ];
 
@@ -453,6 +474,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     for r in &sweep.reports {
         if r.in_flight_msgs != 0 {
             bail!("scenario {} leaked {} in-flight messages", r.key, r.in_flight_msgs);
+        }
+        if r.in_flight_bytes != 0 {
+            bail!("scenario {} leaked {} in-flight bytes", r.key, r.in_flight_bytes);
         }
     }
     let out_dir = std::path::PathBuf::from(args.get_or("out-dir", "bench_out"));

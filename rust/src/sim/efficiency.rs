@@ -25,6 +25,7 @@
 //!   NIC is the contended resource (the §1 bottleneck).
 
 use super::workload::Workload;
+use crate::codec::Codec;
 use crate::collectives::Algorithm;
 use crate::transport::CostModel;
 use crate::util::ceil_log2;
@@ -131,13 +132,42 @@ fn nic_drain(mut msgs: Vec<(f64, f64)>) -> f64 {
     nic_free
 }
 
-/// Simulate one step; returns the efficiency record.
+/// Wire bytes of a dense-f32 buffer of `bytes` bytes under `codec` on
+/// the rank-side [`crate::codec::Encoder`] path (gossip model
+/// exchanges, PS gradient pushes) — top-k genuinely sparsifies here.
+fn coded(codec: Codec, bytes: usize) -> usize {
+    codec.wire_bytes_for(bytes / 4)
+}
+
+/// Same, on the stateless auto-encode path (collective rounds, PS model
+/// broadcast), where top-k rides dense f32.
+fn coded_stateless(codec: Codec, bytes: usize) -> usize {
+    codec.stateless_wire_bytes_for(bytes / 4)
+}
+
+/// Simulate one step with the default dense-f32 codec.
 pub fn step_time(
     sched: Schedule,
     w: &Workload,
     p: usize,
     cost: &CostModel,
     step_idx: usize,
+) -> Efficiency {
+    step_time_with_codec(sched, w, p, cost, step_idx, Codec::F32)
+}
+
+/// Simulate one step; returns the efficiency record.  Payload byte
+/// counts are scaled by `codec` exactly where the measured coordinator
+/// compresses: gossip exchanges and PS pushes on the Encoder path,
+/// collective rounds and PS broadcasts on the stateless path.
+/// `Codec::F32` reproduces the uncoded curve bit-for-bit.
+pub fn step_time_with_codec(
+    sched: Schedule,
+    w: &Workload,
+    p: usize,
+    cost: &CostModel,
+    step_idx: usize,
+    codec: Codec,
 ) -> Efficiency {
     let t_compute = w.t_compute();
     let ready = grad_ready_times(w);
@@ -149,17 +179,26 @@ pub fn step_time(
             let msgs: Vec<(f64, f64)> = ready
                 .iter()
                 .zip(&w.layer_bytes)
-                .map(|(&r, &b)| (r, cost.nominal(b)))
+                .map(|(&r, &b)| (r, cost.nominal(coded(codec, b))))
                 .collect();
             let comm_done = nic_drain(msgs);
             // mixing cost: one streaming pass over the model in device
-            // memory (P100 HBM2 ~500 GB/s effective for 2R+1W)
+            // memory (P100 HBM2 ~500 GB/s effective for 2R+1W) — the
+            // mix runs on *decoded* f32s, so it does not shrink with
+            // the codec
             let mix = 3.0 * w.model_bytes() as f64 / 500.0e9;
             t_compute.max(comm_done) + mix
         }
         Schedule::SgdSync(alg) => {
             // blocking all-reduce of the whole model after backprop
-            t_compute + chain_time(alg, p, w.model_bytes(), cost, w.call_overhead)
+            t_compute
+                + chain_time(
+                    alg,
+                    p,
+                    coded_stateless(codec, w.model_bytes()),
+                    cost,
+                    w.call_overhead,
+                )
         }
         Schedule::Agd(alg) => {
             // per-layer all-reduce, overlapped: layer ℓ's chain starts
@@ -168,12 +207,13 @@ pub fn step_time(
             let mut comm_done = 0.0f64;
             let mut msgs = Vec::new();
             for (&r, &b) in ready.iter().zip(&w.layer_bytes) {
+                let cb = coded_stateless(codec, b);
                 comm_done =
-                    comm_done.max(r + chain_time(alg, p, b, cost, w.call_overhead));
+                    comm_done.max(r + chain_time(alg, p, cb, cost, w.call_overhead));
                 let rounds = alg.rounds(p).max(1);
                 let per_round_bytes = match alg {
-                    Algorithm::Ring => b / p.max(1),
-                    _ => b,
+                    Algorithm::Ring => cb / p.max(1),
+                    _ => cb,
                 };
                 for _ in 0..rounds {
                     msgs.push((r, per_round_bytes as f64 * cost.beta));
@@ -186,16 +226,26 @@ pub fn step_time(
             let period = ceil_log2(p).max(1);
             if step_idx % period == period - 1 {
                 // communication step: same as Agd
-                return step_time(Schedule::Agd(alg), w, p, cost, 0);
+                return step_time_with_codec(
+                    Schedule::Agd(alg),
+                    w,
+                    p,
+                    cost,
+                    0,
+                    codec,
+                );
             }
             t_compute
         }
         Schedule::ParamServer { servers } => {
             // each device pushes grads + pulls weights; each server link
-            // carries 2·p/servers model-sized transfers serially
+            // carries 2·p/servers model-sized transfers serially.  The
+            // push is the compressing Encoder path; the pull (model
+            // broadcast) is the stateless path.
             let per_server = (p as f64 / servers.max(1) as f64).ceil();
-            let xfer = cost.nominal(w.model_bytes());
-            t_compute + 2.0 * per_server * xfer
+            let push = cost.nominal(coded(codec, w.model_bytes()));
+            let pull = cost.nominal(coded_stateless(codec, w.model_bytes()));
+            t_compute + per_server * (push + pull)
         }
     };
     Efficiency {
@@ -230,12 +280,26 @@ pub fn overlapped_agd_step_time(
     p: usize,
     cost: &CostModel,
 ) -> f64 {
+    overlapped_agd_step_time_with_codec(alg, w, p, cost, Codec::F32)
+}
+
+/// [`overlapped_agd_step_time`] with collective payloads scaled by the
+/// codec's stateless path (comm-thread collectives auto-encode at the
+/// endpoint, so top-k rides dense f32 here too).
+pub fn overlapped_agd_step_time_with_codec(
+    alg: Algorithm,
+    w: &Workload,
+    p: usize,
+    cost: &CostModel,
+    codec: Codec,
+) -> f64 {
     let rounds = alg.rounds(p).max(1) as f64;
     let mut t = w.t_compute();
     for (&r, &b) in w.grad_ready_times().iter().zip(&w.layer_bytes) {
+        let cb = coded_stateless(codec, b);
         let per_round_bytes = match alg {
-            Algorithm::Ring => b / p.max(1),
-            _ => b,
+            Algorithm::Ring => cb / p.max(1),
+            _ => cb,
         };
         t = t.max(r + rounds * cost.nominal(per_round_bytes));
     }
@@ -267,10 +331,22 @@ pub fn avg_efficiency(
     cost: &CostModel,
     steps: usize,
 ) -> Efficiency {
+    avg_efficiency_with_codec(sched, w, p, cost, steps, Codec::F32)
+}
+
+/// [`avg_efficiency`] under a wire codec.
+pub fn avg_efficiency_with_codec(
+    sched: Schedule,
+    w: &Workload,
+    p: usize,
+    cost: &CostModel,
+    steps: usize,
+    codec: Codec,
+) -> Efficiency {
     let mut tot_step = 0.0;
     let mut tot_comp = 0.0;
     for s in 0..steps {
-        let e = step_time(sched, w, p, cost, s);
+        let e = step_time_with_codec(sched, w, p, cost, s, codec);
         tot_step += e.t_step;
         tot_comp += e.t_compute;
     }
@@ -418,6 +494,96 @@ mod tests {
         assert!((ready[0] - 0.003).abs() < 1e-12);
         assert!((ready[1] - 0.006).abs() < 1e-12);
         assert_eq!(w.call_overhead, 0.0);
+    }
+
+    #[test]
+    fn f32_codec_is_the_identity_curve() {
+        let w = Workload::resnet50_p100();
+        let c = ib();
+        for sched in [
+            Schedule::Gossip,
+            Schedule::SgdSync(Algorithm::RecursiveDoubling),
+            Schedule::Agd(Algorithm::Ring),
+            Schedule::ParamServer { servers: 1 },
+        ] {
+            let plain = step_time(sched, &w, 64, &c, 0);
+            let coded = step_time_with_codec(sched, &w, 64, &c, 0, Codec::F32);
+            assert_eq!(
+                plain.t_step.to_bits(),
+                coded.t_step.to_bits(),
+                "{}: f32 codec must be bit-identical",
+                sched.name()
+            );
+        }
+    }
+
+    #[test]
+    fn bf16_lifts_comm_bound_schedules() {
+        let w = Workload::resnet50_p100();
+        let c = ib();
+        // PS at p=64 is comm-bound: halving the bytes must lift
+        // efficiency substantially
+        let f32e =
+            step_time_with_codec(Schedule::ParamServer { servers: 1 }, &w, 64, &c, 0, Codec::F32);
+        let bf16 =
+            step_time_with_codec(Schedule::ParamServer { servers: 1 }, &w, 64, &c, 0, Codec::Bf16);
+        assert!(
+            bf16.percent() > 1.5 * f32e.percent(),
+            "bf16 ps eff {:.1}% vs f32 {:.1}%",
+            bf16.percent(),
+            f32e.percent()
+        );
+        // blocking sgd-sync also sees a strictly faster step
+        let s32 = step_time_with_codec(
+            Schedule::SgdSync(Algorithm::RecursiveDoubling),
+            &w,
+            64,
+            &c,
+            0,
+            Codec::F32,
+        );
+        let s16 = step_time_with_codec(
+            Schedule::SgdSync(Algorithm::RecursiveDoubling),
+            &w,
+            64,
+            &c,
+            0,
+            Codec::Bf16,
+        );
+        assert!(s16.t_step < s32.t_step);
+    }
+
+    #[test]
+    fn topk_is_sparse_on_gossip_but_dense_on_collectives() {
+        // comm-bound standin so gossip's exposed comm is visible
+        let w = Workload::standin(0.0001, 0.0001, vec![4_000_000]);
+        let c = ib();
+        let g32 = step_time_with_codec(Schedule::Gossip, &w, 64, &c, 0, Codec::F32);
+        let gtk = step_time_with_codec(Schedule::Gossip, &w, 64, &c, 0, Codec::TopK);
+        assert!(
+            gtk.t_step < g32.t_step,
+            "top-k gossip {:.6}s vs f32 {:.6}s",
+            gtk.t_step,
+            g32.t_step
+        );
+        // collectives ride the stateless path: top-k is dense there
+        let a32 = step_time_with_codec(
+            Schedule::SgdSync(Algorithm::RecursiveDoubling),
+            &w,
+            64,
+            &c,
+            0,
+            Codec::F32,
+        );
+        let atk = step_time_with_codec(
+            Schedule::SgdSync(Algorithm::RecursiveDoubling),
+            &w,
+            64,
+            &c,
+            0,
+            Codec::TopK,
+        );
+        assert_eq!(a32.t_step.to_bits(), atk.t_step.to_bits());
     }
 
     #[test]

@@ -37,6 +37,7 @@ use super::clock::{Clock, ClockMode, TimeMark};
 use super::link::{InprocLink, Key, Link, Stamp};
 use super::simnet::CostModel;
 use super::Tag;
+use crate::codec::{Codec, Payload};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -75,6 +76,10 @@ pub struct Fabric {
     pub cost: CostModel,
     counters: Vec<Counters>,
     clock: Clock,
+    /// Wire codec for payload-kind tags on the auto-encode path
+    /// ([`Endpoint::isend`]); the traffic counters and the α–β stamps
+    /// always charge *compressed* bytes ([`Payload::wire_bytes`]).
+    codec: Codec,
 }
 
 impl Fabric {
@@ -96,11 +101,32 @@ impl Fabric {
         Fabric::with_link(Arc::new(InprocLink::new(p)), cost, mode)
     }
 
+    /// In-process fabric with an explicit wire codec (`with_clock`
+    /// defaults to the bit-parity [`Codec::F32`]).
+    pub fn with_clock_codec(
+        p: usize,
+        cost: CostModel,
+        mode: ClockMode,
+        codec: Codec,
+    ) -> Arc<Fabric> {
+        Fabric::with_link_codec(Arc::new(InprocLink::new(p)), cost, mode, codec)
+    }
+
     /// Accounting layer over an arbitrary link — the factory the TCP
     /// runner uses.  Panics if the link cannot carry the requested
     /// clock mode (real-network links are wall-clock only: their
     /// arrival stamps are made of receiver-side `Instant`s).
     pub fn with_link(link: Arc<dyn Link>, cost: CostModel, mode: ClockMode) -> Arc<Fabric> {
+        Fabric::with_link_codec(link, cost, mode, Codec::F32)
+    }
+
+    /// [`with_link`](Self::with_link) with an explicit wire codec.
+    pub fn with_link_codec(
+        link: Arc<dyn Link>,
+        cost: CostModel,
+        mode: ClockMode,
+        codec: Codec,
+    ) -> Arc<Fabric> {
         assert!(
             mode == ClockMode::Wall || link.supports_virtual(),
             "this link is wall-clock only (virtual stamps cannot cross it)"
@@ -111,7 +137,13 @@ impl Fabric {
             cost,
             counters: (0..p).map(|_| Counters::default()).collect(),
             clock: Clock::new(mode, p),
+            codec,
         })
+    }
+
+    /// The fabric's wire codec.
+    pub fn codec(&self) -> Codec {
+        self.codec
     }
 
     pub fn size(&self) -> usize {
@@ -164,6 +196,12 @@ impl Fabric {
         self.link.in_flight()
     }
 
+    /// Wire bytes accepted by the link but never harvested — the byte
+    /// half of the drain invariant (see [`in_flight`](Self::in_flight)).
+    pub fn in_flight_bytes(&self) -> usize {
+        self.link.in_flight_bytes()
+    }
+
     /// End-of-run link barrier for `rank` (flush sends, ingest peer
     /// streams to EOF); no-op on the in-process link.  See
     /// [`Link::quiesce`].
@@ -196,12 +234,16 @@ impl SendReq {
     }
 }
 
-/// Non-blocking receive handle.
+/// Non-blocking receive handle.  Harvest methods come in pairs: the
+/// historical `Vec<f32>` forms decode at harvest (so existing callers
+/// — collectives, PS aggregation, the shuffle ring — are untouched by
+/// the codec seam), and the `_payload` forms hand back the encoded
+/// [`Payload`] for receivers that decode sparsely (gossip mixing).
 pub struct RecvReq {
     fabric: Arc<Fabric>,
     rank: usize,
     key: Key,
-    data: Option<Vec<f32>>,
+    data: Option<Payload>,
 }
 
 impl RecvReq {
@@ -251,6 +293,13 @@ impl RecvReq {
     /// thread harvests the whole collective.  On a wall fabric the
     /// stamps degenerate to `(0, wire_ns)`.
     pub fn test_raw(&mut self) -> Option<(Vec<f32>, u64, u64)> {
+        self.test_raw_payload()
+            .map(|(p, sent_ns, at_ns)| (p.decode(), sent_ns, at_ns))
+    }
+
+    /// [`test_raw`](Self::test_raw) without the decode: the payload
+    /// comes back still encoded.
+    pub fn test_raw_payload(&mut self) -> Option<(Payload, u64, u64)> {
         if let Some(d) = self.data.take() {
             // already harvested by a normal test(): ledger settled
             // there, but the real stamps are gone — a virtual-mode
@@ -279,18 +328,32 @@ impl RecvReq {
     /// recorded step and must not perturb the timing metrics.  The park
     /// is atomic with respect to enqueue (no lost wake-ups), so no
     /// timeout poll is needed in either clock mode.
-    pub fn wait_raw(mut self) -> (Vec<f32>, u64, u64) {
+    pub fn wait_raw(self) -> (Vec<f32>, u64, u64) {
+        let (p, sent_ns, at_ns) = self.wait_raw_payload();
+        (p.decode(), sent_ns, at_ns)
+    }
+
+    /// [`wait_raw`](Self::wait_raw) without the decode.
+    pub fn wait_raw_payload(mut self) -> (Payload, u64, u64) {
         loop {
-            if let Some(hit) = self.test_raw() {
+            if let Some(hit) = self.test_raw_payload() {
                 return hit;
             }
             self.fabric.link.park(self.rank, self.key, None);
         }
     }
 
-    /// Blocking wait (MPI_Wait); returns the payload and records the
-    /// exposed communication time in `Counters::recv_wait_ns`.
-    pub fn wait(mut self) -> Vec<f32> {
+    /// Blocking wait (MPI_Wait); returns the decoded payload and
+    /// records the exposed communication time in
+    /// `Counters::recv_wait_ns`.
+    pub fn wait(self) -> Vec<f32> {
+        self.wait_payload().decode()
+    }
+
+    /// [`wait`](Self::wait) without the decode: full clock/ledger
+    /// accounting, payload handed back still encoded (the gossip mixer
+    /// applies TopK payloads sparsely instead of densifying them).
+    pub fn wait_payload(mut self) -> Payload {
         if let Some(d) = self.data.take() {
             return d;
         }
@@ -302,7 +365,7 @@ impl RecvReq {
 
     /// Wall mode: sleep out the simulated wire time; measure the blocked
     /// interval with the OS clock.
-    fn wait_wall(self) -> Vec<f32> {
+    fn wait_wall(self) -> Payload {
         let t0 = Instant::now();
         let link = &self.fabric.link;
         loop {
@@ -337,7 +400,7 @@ impl RecvReq {
     /// Virtual mode: block (atomic park, no timeout) only until the
     /// payload is queued, then jump this rank's clock to the arrival
     /// instant; the exposed wait is computed, never measured.
-    fn wait_virtual(self) -> Vec<f32> {
+    fn wait_virtual(self) -> Payload {
         let link = &self.fabric.link;
         loop {
             if let Some((stamp, data)) = link.pop(self.rank, self.key) {
@@ -457,14 +520,38 @@ impl Endpoint {
     /// compute slices are still being charged — `isend` would stamp the
     /// main clock and break that timeline.  Wall mode ignores `send_ns`
     /// and stamps the real now.
-    pub fn isend_at(
+    pub fn isend_at(&self, dst: usize, tag: Tag, data: Vec<f32>, send_ns: u64) -> SendReq {
+        // codec auto path: payload-kind tags (model/reduce/layer/bcast)
+        // are encoded with the fabric's stateless codec; bookkeeping
+        // channels (samples/labels/ctrl) always ride dense f32 — class
+        // labels and shuffled sample rows must cross bit-exact.
+        let payload = if tag.is_payload_kind() {
+            self.fabric.codec.encode_stateless(data)
+        } else {
+            Payload::F32(data)
+        };
+        self.isend_payload_at(dst, tag, payload, send_ns)
+    }
+
+    /// Send an already-encoded payload (the coordinator's [`Encoder`]
+    /// (crate::codec::Encoder) sites — TopK with error feedback).  The
+    /// payload is never re-encoded; the stamp and the traffic counters
+    /// charge its *compressed* wire bytes.
+    pub fn isend_payload(&self, dst: usize, tag: Tag, payload: Payload) -> SendReq {
+        let send_ns = self.fabric.clock.now_ns(self.rank);
+        self.isend_payload_at(dst, tag, payload, send_ns)
+    }
+
+    /// [`isend_payload`](Self::isend_payload) stamped at an explicit
+    /// logical instant — see [`isend_at`](Self::isend_at).
+    pub fn isend_payload_at(
         &self,
         dst: usize,
         tag: Tag,
-        data: Vec<f32>,
+        payload: Payload,
         send_ns: u64,
     ) -> SendReq {
-        let bytes = data.len() * 4;
+        let bytes = payload.wire_bytes();
         let stamp = match self.fabric.clock.mode() {
             ClockMode::Wall => {
                 let delay = self.fabric.cost.message_time(bytes);
@@ -485,7 +572,7 @@ impl Endpoint {
         let c = &self.fabric.counters[self.rank];
         c.msgs_sent.fetch_add(1, Ordering::Relaxed);
         c.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
-        self.fabric.link.enqueue(self.rank, dst, tag, stamp, data);
+        self.fabric.link.enqueue(self.rank, dst, tag, stamp, payload);
         SendReq { done: false }
     }
 
@@ -832,15 +919,18 @@ mod tests {
             fn size(&self) -> usize {
                 1
             }
-            fn enqueue(&self, _: usize, _: usize, _: Tag, _: Stamp, _: Vec<f32>) {}
+            fn enqueue(&self, _: usize, _: usize, _: Tag, _: Stamp, _: Payload) {}
             fn peek(&self, _: usize, _: Key) -> Option<Stamp> {
                 None
             }
-            fn pop(&self, _: usize, _: Key) -> Option<(Stamp, Vec<f32>)> {
+            fn pop(&self, _: usize, _: Key) -> Option<(Stamp, Payload)> {
                 None
             }
             fn park(&self, _: usize, _: Key, _: Option<Duration>) {}
             fn in_flight(&self) -> usize {
+                0
+            }
+            fn in_flight_bytes(&self) -> usize {
                 0
             }
             fn supports_virtual(&self) -> bool {
@@ -853,5 +943,85 @@ mod tests {
         assert!(r.is_err(), "virtual clock over a wall-only link must panic");
         let f = Fabric::with_link(Arc::new(WallOnly), CostModel::zero(), ClockMode::Wall);
         assert_eq!(f.size(), 1);
+    }
+
+    // ---- wire-codec charging ------------------------------------------
+
+    #[test]
+    fn compressed_payloads_charge_compressed_bytes_and_time() {
+        // beta-only cost: arrival instant is proportional to wire bytes,
+        // so bf16 halves both the counter and the stamped wire time
+        let cost = CostModel::new(0.0, 1e-3 / 4.0, 0.0, 0); // 1 ms per f32
+        let f = Fabric::with_clock_codec(2, cost, ClockMode::Virtual, Codec::Bf16);
+        f.endpoint(0).isend(1, Tag::MODEL, vec![1.0; 4]);
+        assert_eq!(
+            f.counters(0).bytes_sent.load(Ordering::Relaxed),
+            8,
+            "4 elements x 2 bytes on the wire"
+        );
+        let b = f.endpoint(1);
+        let got = b.recv(0, Tag::MODEL);
+        assert_eq!(got, vec![1.0; 4], "1.0 is bf16-exact");
+        assert_eq!(
+            f.clock().now_ns(1),
+            2_000_000,
+            "wire time halved vs the 4 ms an f32 payload would cost"
+        );
+    }
+
+    #[test]
+    fn bookkeeping_tags_stay_dense_under_compression() {
+        let f = Fabric::with_clock_codec(
+            2,
+            CostModel::zero(),
+            ClockMode::Wall,
+            Codec::Int8,
+        );
+        let odd = vec![0.1234567_f32, -9.87654e-3];
+        f.endpoint(0).send(1, Tag::SAMPLES, odd.clone());
+        assert_eq!(
+            f.counters(0).bytes_sent.load(Ordering::Relaxed),
+            8,
+            "samples ride dense f32"
+        );
+        assert_eq!(f.endpoint(1).recv(0, Tag::SAMPLES), odd, "bit-exact");
+    }
+
+    #[test]
+    fn isend_payload_charges_wire_bytes_without_reencoding() {
+        let f = Fabric::new(2, CostModel::zero());
+        let p = Payload::Bytes {
+            enc: crate::codec::Encoding::TopK,
+            n: 32,
+            bytes: {
+                let mut b = 5u32.to_le_bytes().to_vec();
+                b.extend_from_slice(&2.5f32.to_le_bytes());
+                b
+            },
+        };
+        assert_eq!(f.in_flight_bytes(), 0);
+        f.endpoint(0).isend_payload(1, Tag::layer(0), p);
+        assert_eq!(f.counters(0).bytes_sent.load(Ordering::Relaxed), 8);
+        assert_eq!(f.in_flight(), 1);
+        assert_eq!(f.in_flight_bytes(), 8, "compressed bytes on the gauge");
+        let (got, _, _) = f.endpoint(1).irecv(0, Tag::layer(0)).wait_raw_payload();
+        assert_eq!(got.wire_bytes(), 8);
+        let dense = got.decode();
+        assert_eq!(dense.len(), 32);
+        assert_eq!(dense[5], 2.5);
+        assert_eq!(f.in_flight_bytes(), 0);
+    }
+
+    #[test]
+    fn default_codec_is_bit_parity_f32() {
+        let f = Fabric::new_virtual(2, CostModel::zero());
+        assert_eq!(f.codec(), Codec::F32);
+        let data = vec![0.1, -0.2, 0.3];
+        f.endpoint(0).isend(1, Tag::MODEL, data.clone());
+        let got = f.endpoint(1).irecv(0, Tag::MODEL).wait_payload();
+        match got {
+            Payload::F32(v) => assert_eq!(v, data, "no encode round-trip"),
+            other => panic!("f32 codec produced {other:?}"),
+        }
     }
 }

@@ -29,6 +29,7 @@
 //!   busy-wait polls or timeout loops.
 
 use super::Tag;
+use crate::codec::Payload;
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -49,7 +50,7 @@ pub enum Stamp {
     Virt { sent_ns: u64, at_ns: u64 },
 }
 
-type Queue = VecDeque<(Stamp, Vec<f32>)>;
+type Queue = VecDeque<(Stamp, Payload)>;
 
 /// One rank's delivery queue set: per-[`Key`] FIFO queues plus the
 /// condvar producers notify.  Shared by both link implementations (the
@@ -75,7 +76,7 @@ impl Mailbox {
     }
 
     /// Producer side: append and wake any parked consumer.
-    pub fn push(&self, key: Key, stamp: Stamp, data: Vec<f32>) {
+    pub fn push(&self, key: Key, stamp: Stamp, data: Payload) {
         {
             let mut q = self.queues.lock().unwrap();
             q.entry(key).or_default().push_back((stamp, data));
@@ -92,7 +93,7 @@ impl Mailbox {
     /// Remove and return the front message on `key`.  Empty per-key
     /// queues are dropped from the map so long runs (whose tags carry
     /// ever-growing round numbers) don't accumulate dead entries.
-    pub fn pop(&self, key: Key) -> Option<(Stamp, Vec<f32>)> {
+    pub fn pop(&self, key: Key) -> Option<(Stamp, Payload)> {
         let mut q = self.queues.lock().unwrap();
         let deque = q.get_mut(&key)?;
         let hit = deque.pop_front();
@@ -123,6 +124,18 @@ impl Mailbox {
         let q = self.queues.lock().unwrap();
         q.values().map(|d| d.len()).sum()
     }
+
+    /// Wire bytes queued and not yet popped — the byte companion of
+    /// [`queued`](Self::queued) for the fabric-drain invariant (a leak
+    /// of one tiny frame and a leak of a whole model both show up in
+    /// frame counts, but only the byte gauge sizes the damage).
+    pub fn queued_bytes(&self) -> usize {
+        let q = self.queues.lock().unwrap();
+        q.values()
+            .flat_map(|d| d.iter())
+            .map(|(_, p)| p.wire_bytes())
+            .sum()
+    }
 }
 
 /// The wire: message delivery between `size()` ranks.  Implementations
@@ -135,14 +148,16 @@ pub trait Link: Send + Sync {
     /// Deliver `data` from `src` to `dst` on `tag`, carrying `stamp`.
     /// Must not block on the consumer (buffered-eager semantics).  A
     /// real-network link may replace the stamp on the receiving side
-    /// (the sender's `Instant`s are meaningless in another process).
-    fn enqueue(&self, src: usize, dst: usize, tag: Tag, stamp: Stamp, data: Vec<f32>);
+    /// (the sender's `Instant`s are meaningless in another process) and
+    /// may re-materialize the payload from frame bytes, but must
+    /// preserve its encoding and wire size.
+    fn enqueue(&self, src: usize, dst: usize, tag: Tag, stamp: Stamp, data: Payload);
 
     /// Stamp of the front message queued for `rank` on `key`.
     fn peek(&self, rank: usize, key: Key) -> Option<Stamp>;
 
     /// Pop the front message queued for `rank` on `key`.
-    fn pop(&self, rank: usize, key: Key) -> Option<(Stamp, Vec<f32>)>;
+    fn pop(&self, rank: usize, key: Key) -> Option<(Stamp, Payload)>;
 
     /// Park `rank`'s consumer thread until a message is queued on `key`
     /// or `timeout` elapses; atomic with respect to `enqueue` (no lost
@@ -155,6 +170,12 @@ pub trait Link: Send + Sync {
     /// invariant (`tests/fabric_drain.rs`) needs every sent-but-never-
     /// harvested payload to be visible here.
     fn in_flight(&self) -> usize;
+
+    /// Wire bytes accepted by the link and not yet popped — the byte
+    /// gauge next to [`in_flight`](Self::in_flight)'s frame count.  The
+    /// drain invariant asserts both hit zero: a run that leaks must be
+    /// caught even if a future refactor made empty frames possible.
+    fn in_flight_bytes(&self) -> usize;
 
     /// Whether this link can carry [`Stamp::Virt`] stamps (deterministic
     /// virtual-clock runs).  Real-network links run on the wall clock
@@ -191,7 +212,7 @@ impl Link for InprocLink {
         self.boxes.len()
     }
 
-    fn enqueue(&self, src: usize, dst: usize, tag: Tag, stamp: Stamp, data: Vec<f32>) {
+    fn enqueue(&self, src: usize, dst: usize, tag: Tag, stamp: Stamp, data: Payload) {
         self.boxes[dst].push((src, tag), stamp, data);
     }
 
@@ -199,7 +220,7 @@ impl Link for InprocLink {
         self.boxes[rank].peek(key)
     }
 
-    fn pop(&self, rank: usize, key: Key) -> Option<(Stamp, Vec<f32>)> {
+    fn pop(&self, rank: usize, key: Key) -> Option<(Stamp, Payload)> {
         self.boxes[rank].pop(key)
     }
 
@@ -209,6 +230,10 @@ impl Link for InprocLink {
 
     fn in_flight(&self) -> usize {
         self.boxes.iter().map(Mailbox::queued).sum()
+    }
+
+    fn in_flight_bytes(&self) -> usize {
+        self.boxes.iter().map(Mailbox::queued_bytes).sum()
     }
 }
 
@@ -227,31 +252,56 @@ mod tests {
     fn fifo_per_key_and_empty_queue_cleanup() {
         let l = InprocLink::new(2);
         for i in 0..4 {
-            l.enqueue(0, 1, Tag::MODEL, wall_now(), vec![i as f32]);
+            l.enqueue(0, 1, Tag::MODEL, wall_now(), Payload::F32(vec![i as f32]));
         }
         assert_eq!(l.in_flight(), 4);
+        assert_eq!(l.in_flight_bytes(), 16, "4 one-float payloads");
         for i in 0..4 {
             let (_, d) = l.pop(1, (0, Tag::MODEL)).unwrap();
-            assert_eq!(d[0], i as f32);
+            assert_eq!(d.decode()[0], i as f32);
         }
         assert!(l.pop(1, (0, Tag::MODEL)).is_none());
         assert_eq!(l.in_flight(), 0);
+        assert_eq!(l.in_flight_bytes(), 0);
     }
 
     #[test]
     fn peek_does_not_consume() {
         let l = InprocLink::new(2);
-        l.enqueue(0, 1, Tag::CTRL, wall_now(), vec![7.0]);
+        l.enqueue(0, 1, Tag::CTRL, wall_now(), Payload::F32(vec![7.0]));
         assert!(l.peek(1, (0, Tag::CTRL)).is_some());
         assert!(l.peek(1, (0, Tag::CTRL)).is_some());
         assert_eq!(l.in_flight(), 1);
+        assert_eq!(l.in_flight_bytes(), 4);
         assert!(l.peek(1, (0, Tag::MODEL)).is_none());
+    }
+
+    #[test]
+    fn byte_gauge_charges_encoded_sizes() {
+        use crate::codec::Encoding;
+        let l = InprocLink::new(2);
+        l.enqueue(0, 1, Tag::MODEL, wall_now(), Payload::F32(vec![0.0; 10]));
+        l.enqueue(
+            0,
+            1,
+            Tag::layer(0),
+            wall_now(),
+            Payload::Bytes {
+                enc: Encoding::Bf16,
+                n: 10,
+                bytes: vec![0u8; 20],
+            },
+        );
+        assert_eq!(l.in_flight(), 2);
+        assert_eq!(l.in_flight_bytes(), 60, "40 dense + 20 compressed");
+        l.pop(1, (0, Tag::layer(0))).unwrap();
+        assert_eq!(l.in_flight_bytes(), 40);
     }
 
     #[test]
     fn park_returns_immediately_when_queued() {
         let l = InprocLink::new(2);
-        l.enqueue(0, 1, Tag::MODEL, wall_now(), vec![1.0]);
+        l.enqueue(0, 1, Tag::MODEL, wall_now(), Payload::F32(vec![1.0]));
         let t0 = Instant::now();
         l.park(1, (0, Tag::MODEL), None);
         assert!(t0.elapsed() < Duration::from_secs(1));
@@ -273,7 +323,7 @@ mod tests {
             }
         });
         thread::sleep(Duration::from_millis(20));
-        l.enqueue(0, 1, Tag::MODEL, wall_now(), vec![3.0]);
+        l.enqueue(0, 1, Tag::MODEL, wall_now(), Payload::F32(vec![3.0]));
         h.join().unwrap();
         assert_eq!(l.in_flight(), 0);
     }

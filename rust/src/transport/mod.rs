@@ -132,6 +132,19 @@ impl Tag {
         Tag((self.0 & !mask) | ((r as u64) << ROUND_SHIFT))
     }
 
+    /// The tag's kind field.  The transport's codec auto-path encodes
+    /// only *payload* kinds (model/reduce/layer/bcast); bookkeeping
+    /// channels (samples/labels/ctrl) always ride dense f32.
+    pub fn kind(self) -> u64 {
+        self.0 >> KIND_SHIFT
+    }
+
+    /// Whether messages on this tag carry model/gradient payloads that
+    /// the wire codec may compress.
+    pub fn is_payload_kind(self) -> bool {
+        matches!(self.kind(), 1 | 4 | 6 | 7)
+    }
+
     /// Intra-collective step separator (ring steps, tree phases).
     pub fn sub(self, s: usize) -> Tag {
         assert!(
@@ -182,6 +195,16 @@ mod tests {
             assert_ne!(Tag::layer(i).round(5), Tag::layer(i).round(6));
         }
         assert_ne!(Tag::layer(256).round(1).sub(2), Tag::layer(257).round(1).sub(2));
+    }
+
+    #[test]
+    fn payload_kinds_are_compressible_bookkeeping_is_not() {
+        for t in [Tag::MODEL, Tag::REDUCE, Tag::layer(3), Tag::BCAST] {
+            assert!(t.round(9).sub(1).is_payload_kind(), "{t:?}");
+        }
+        for t in [Tag::SAMPLES, Tag::LABELS, Tag::CTRL] {
+            assert!(!t.round(9).is_payload_kind(), "{t:?}");
+        }
     }
 
     #[test]

@@ -29,18 +29,26 @@
 //!
 //! ## Frames
 //!
-//! `[payload_bytes: u32 LE][tag: u64 LE][payload: f32 LE × n]`.  The
-//! source rank is implied by the stream (learned at handshake).
+//! `[payload_bytes: u32 LE][tag: u64 LE][enc: u8][n: u32 LE][payload]`
+//! — wire version 2 (docs/wire-codecs.md).  `enc` is the payload's
+//! [`Encoding`] byte, `n` its decoded element count, `payload_bytes`
+//! the *encoded* (possibly compressed) byte length.  Dense f32
+//! payloads are written as raw LE f32s; the source rank is implied by
+//! the stream (learned at handshake).
 //!
 //! ## Delivery & accounting
 //!
 //! Per peer, a writer thread drains an unbounded channel (so `enqueue`
 //! is buffered-eager, like the in-process link) and a reader thread
 //! ingests frames into the local [`Mailbox`], stamping arrival as
-//! `recv_instant + cost.message_time(bytes)` — the α–β model charges on
-//! the receiving side, on top of whatever time the real wire took.
+//! `recv_instant + cost.message_time(bytes)` — the α–β model charges
+//! *encoded* bytes on the receiving side, on top of whatever time the
+//! real wire took.  Frame payloads are kept as raw bytes in the
+//! mailbox (one bulk `read_exact`, no reader-thread conversion) and
+//! decoded once, at harvest, by the accounting layer.
 //! [`Link::in_flight`] counts local mailbox messages plus frames handed
-//! to writers but not yet flushed to the socket; after
+//! to writers but not yet flushed to the socket (with
+//! [`Link::in_flight_bytes`] as its wire-byte companion); after
 //! [`Link::quiesce`] (flush + close writers, drain readers to EOF) only
 //! genuinely leaked messages remain, which is what lets the
 //! fabric-drain invariant extend across processes: the launcher sums
@@ -49,6 +57,7 @@
 use super::link::{Key, Link, Mailbox, Stamp};
 use super::simnet::CostModel;
 use super::Tag;
+use crate::codec::{Encoding, Payload, INT8_CHUNK};
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -59,7 +68,8 @@ use std::time::{Duration, Instant};
 /// First handshake word — rejects strangers speaking other protocols.
 pub const WIRE_MAGIC: u32 = 0x4747_5244; // "GGRD"
 /// Wire-format version; bumped on any frame/handshake change.
-pub const WIRE_VERSION: u32 = 1;
+/// v2: frames carry an encoding byte + element count (wire codecs).
+pub const WIRE_VERSION: u32 = 2;
 
 /// Handshake accepted.
 pub const HS_OK: u32 = 1;
@@ -80,7 +90,7 @@ fn hs_explain(code: u32) -> &'static str {
 }
 
 /// One frame as handed to a writer thread (serialization happens there).
-type FrameSender = mpsc::Sender<(Tag, Vec<f32>)>;
+type FrameSender = mpsc::Sender<(Tag, Payload)>;
 type IoThread = JoinHandle<io::Result<()>>;
 
 fn err(msg: String) -> io::Error {
@@ -335,6 +345,8 @@ pub struct TcpLink {
     writers: Mutex<Vec<Option<FrameSender>>>,
     /// Frames handed to writer threads and not yet flushed to a socket.
     unsent: Arc<AtomicUsize>,
+    /// Wire bytes of those frames — the byte gauge's writer-queue half.
+    unsent_bytes: Arc<AtomicUsize>,
     /// Writer + reader thread handles, joined at quiesce.
     io_threads: Mutex<Vec<IoThread>>,
 }
@@ -349,14 +361,16 @@ impl TcpLink {
     ) -> io::Result<Arc<TcpLink>> {
         let mbox = Arc::new(Mailbox::new());
         let unsent = Arc::new(AtomicUsize::new(0));
+        let unsent_bytes = Arc::new(AtomicUsize::new(0));
         let mut writers: Vec<Option<FrameSender>> = (0..p).map(|_| None).collect();
         let mut io_threads = Vec::with_capacity(2 * (p - 1));
         for (dst, stream) in outbound.into_iter().enumerate() {
             let Some(stream) = stream else { continue };
-            let (tx, rx) = mpsc::channel::<(Tag, Vec<f32>)>();
+            let (tx, rx) = mpsc::channel::<(Tag, Payload)>();
             let unsent = Arc::clone(&unsent);
+            let unsent_bytes = Arc::clone(&unsent_bytes);
             io_threads.push(thread::spawn(move || {
-                let r = write_frames(stream, rx, &unsent);
+                let r = write_frames(stream, rx, &unsent, &unsent_bytes);
                 if let Err(e) = &r {
                     // report at failure time: the training thread only
                     // sees a closed channel (and quiesce may never run
@@ -385,6 +399,7 @@ impl TcpLink {
             mbox,
             writers: Mutex::new(writers),
             unsent,
+            unsent_bytes,
             io_threads: Mutex::new(io_threads),
         }))
     }
@@ -406,27 +421,49 @@ pub const MAX_FRAME_BYTES: usize = 1 << 30;
 /// reader) when the sender half is dropped at quiesce.
 fn write_frames(
     stream: TcpStream,
-    rx: mpsc::Receiver<(Tag, Vec<f32>)>,
+    rx: mpsc::Receiver<(Tag, Payload)>,
     unsent: &AtomicUsize,
+    unsent_bytes: &AtomicUsize,
 ) -> io::Result<()> {
     let mut w = io::BufWriter::new(stream);
-    for (tag, data) in rx {
-        let bytes = data.len() * 4;
+    for (tag, payload) in rx {
+        let bytes = payload.wire_bytes();
         w.write_all(&(bytes as u32).to_le_bytes())?;
         w.write_all(&tag.0.to_le_bytes())?;
-        // straight into the BufWriter — no intermediate payload buffer
-        // (this is the hot path: one model/layer slice per frame)
-        for x in &data {
-            w.write_all(&x.to_le_bytes())?;
+        w.write_all(&[payload.encoding() as u8])?;
+        w.write_all(&(payload.len() as u32).to_le_bytes())?;
+        match &payload {
+            // straight into the BufWriter — no intermediate payload
+            // buffer (this is the hot path: one model/layer slice per
+            // frame)
+            Payload::F32(data) => {
+                for x in data {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+            Payload::Bytes { bytes: b, .. } => w.write_all(b)?,
         }
         w.flush()?;
         // decrement only once the frame is on the socket: between
         // enqueue and here the message is "in flight" and must be
         // visible to the drain invariant
         unsent.fetch_sub(1, Ordering::Relaxed);
+        unsent_bytes.fetch_sub(bytes, Ordering::Relaxed);
     }
     w.flush()?;
     Ok(())
+}
+
+/// Exact encoded length a well-formed frame must carry, or `None` for
+/// TopK, whose pair count varies (validated separately: whole 8-byte
+/// pairs, at most n of them).
+fn expected_frame_bytes(enc: Encoding, n: usize) -> Option<usize> {
+    match enc {
+        Encoding::F32 => Some(4 * n),
+        Encoding::Bf16 => Some(2 * n),
+        Encoding::Int8 => Some(n + 4 * n.div_ceil(INT8_CHUNK)),
+        Encoding::TopK => None,
+    }
 }
 
 /// Reader thread: ingest frames from one peer into the local mailbox
@@ -451,24 +488,47 @@ fn read_frames(
         // validate before trusting the length with an allocation: a
         // desynced or corrupt stream must be a protocol error, not a
         // silently-truncated payload or a 4 GiB alloc
-        if bytes % 4 != 0 || bytes > MAX_FRAME_BYTES {
+        if bytes > MAX_FRAME_BYTES {
             return Err(err(format!(
-                "frame from rank {src}: bad payload length {bytes} \
-                 (not a multiple of 4 or over {MAX_FRAME_BYTES})"
+                "frame from rank {src}: payload length {bytes} over {MAX_FRAME_BYTES}"
             )));
         }
         let mut tag = [0u8; 8];
         r.read_exact(&mut tag)?;
         let tag = Tag(u64::from_le_bytes(tag));
+        let mut hdr = [0u8; 5];
+        r.read_exact(&mut hdr)?;
+        let Some(enc) = Encoding::from_u8(hdr[0]) else {
+            return Err(err(format!(
+                "frame from rank {src}: unknown encoding byte {}",
+                hdr[0]
+            )));
+        };
+        let n = u32::from_le_bytes([hdr[1], hdr[2], hdr[3], hdr[4]]);
+        let consistent = match expected_frame_bytes(enc, n as usize) {
+            Some(want) => bytes == want,
+            // TopK: whole (idx u32, val f32) pairs, at most n of them
+            None => bytes % 8 == 0 && bytes / 8 <= n as usize,
+        };
+        if !consistent {
+            return Err(err(format!(
+                "frame from rank {src}: {bytes} payload bytes inconsistent \
+                 with encoding {enc:?} × {n} elements"
+            )));
+        }
+        // one bulk read straight into the buffer the mailbox keeps —
+        // decoding happens once, at harvest, in the accounting layer
+        // (the old path round-tripped every frame through a second
+        // per-chunk f32 conversion here in the reader thread)
         let mut payload = vec![0u8; bytes];
         r.read_exact(&mut payload)?;
-        let data: Vec<f32> = payload
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
         let now = Instant::now();
         let at = now + Duration::from_secs_f64(cost.message_time(bytes));
-        mbox.push((src, tag), Stamp::Wall { sent: now, at }, data);
+        mbox.push(
+            (src, tag),
+            Stamp::Wall { sent: now, at },
+            Payload::Bytes { enc, n, bytes: payload },
+        );
     }
 }
 
@@ -477,7 +537,7 @@ impl Link for TcpLink {
         self.p
     }
 
-    fn enqueue(&self, src: usize, dst: usize, tag: Tag, stamp: Stamp, data: Vec<f32>) {
+    fn enqueue(&self, src: usize, dst: usize, tag: Tag, stamp: Stamp, data: Payload) {
         assert_eq!(
             src, self.rank,
             "tcp link sends only from its local rank"
@@ -490,6 +550,7 @@ impl Link for TcpLink {
         }
         // count before handing off so in_flight never under-reports
         self.unsent.fetch_add(1, Ordering::Relaxed);
+        self.unsent_bytes.fetch_add(data.wire_bytes(), Ordering::Relaxed);
         let writers = self.writers.lock().unwrap();
         let tx = writers[dst]
             .as_ref()
@@ -502,7 +563,7 @@ impl Link for TcpLink {
         self.mbox.peek(key)
     }
 
-    fn pop(&self, rank: usize, key: Key) -> Option<(Stamp, Vec<f32>)> {
+    fn pop(&self, rank: usize, key: Key) -> Option<(Stamp, Payload)> {
         debug_assert_eq!(rank, self.rank, "tcp link serves its local rank only");
         self.mbox.pop(key)
     }
@@ -514,6 +575,10 @@ impl Link for TcpLink {
 
     fn in_flight(&self) -> usize {
         self.mbox.queued() + self.unsent.load(Ordering::Relaxed)
+    }
+
+    fn in_flight_bytes(&self) -> usize {
+        self.mbox.queued_bytes() + self.unsent_bytes.load(Ordering::Relaxed)
     }
 
     fn supports_virtual(&self) -> bool {
@@ -599,7 +664,7 @@ mod tests {
                 2,
                 Tag::MODEL,
                 Stamp::Wall { sent: t, at: t },
-                vec![i as f32, 0.5],
+                Payload::F32(vec![i as f32, 0.5]),
             );
         }
         let key = (0usize, Tag::MODEL);
@@ -607,25 +672,64 @@ mod tests {
             let (_, data) = crate::util::deadline_poll("tcp frame", || {
                 links[2].pop(2, key)
             });
-            assert_eq!(data, vec![i as f32, 0.5], "fifo order per channel");
+            assert_eq!(data.decode(), vec![i as f32, 0.5], "fifo order per channel");
         }
         quiesce_all(&links);
         for l in &links {
             assert_eq!(l.in_flight(), 0);
+            assert_eq!(l.in_flight_bytes(), 0);
         }
+    }
+
+    #[test]
+    fn compressed_frames_cross_the_wire_intact() {
+        let links = mesh(2, CostModel::zero());
+        let t = Instant::now();
+        // hand-built top-k frame: one pair (idx 3, 2.5) out of n = 8
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&3u32.to_le_bytes());
+        bytes.extend_from_slice(&2.5f32.to_le_bytes());
+        links[0].enqueue(
+            0,
+            1,
+            Tag::MODEL,
+            Stamp::Wall { sent: t, at: t },
+            Payload::Bytes { enc: Encoding::TopK, n: 8, bytes },
+        );
+        let (_, p) = crate::util::deadline_poll("tcp frame", || {
+            links[1].pop(1, (0, Tag::MODEL))
+        });
+        assert_eq!(p.encoding(), Encoding::TopK);
+        assert_eq!(p.wire_bytes(), 8, "compressed size survives the wire");
+        let mut want = vec![0.0f32; 8];
+        want[3] = 2.5;
+        assert_eq!(p.decode(), want);
+        quiesce_all(&links);
     }
 
     #[test]
     fn quiesce_surfaces_leaked_messages() {
         let links = mesh(2, CostModel::zero());
         let t = Instant::now();
-        links[0].enqueue(0, 1, Tag::CTRL, Stamp::Wall { sent: t, at: t }, vec![1.0]);
+        links[0].enqueue(
+            0,
+            1,
+            Tag::CTRL,
+            Stamp::Wall { sent: t, at: t },
+            Payload::F32(vec![1.0]),
+        );
         quiesce_all(&links);
         assert_eq!(links[0].in_flight(), 0, "sender side fully flushed");
+        assert_eq!(links[0].in_flight_bytes(), 0, "no bytes stuck in writer queues");
         assert_eq!(
             links[1].in_flight(),
             1,
             "unharvested frame must count as in flight after quiesce"
+        );
+        assert_eq!(
+            links[1].in_flight_bytes(),
+            4,
+            "leaked frame's wire bytes must show in the byte gauge"
         );
     }
 
@@ -633,9 +737,15 @@ mod tests {
     fn loopback_send_delivers_locally() {
         let links = mesh(2, CostModel::zero());
         let t = Instant::now();
-        links[0].enqueue(0, 0, Tag::MODEL, Stamp::Wall { sent: t, at: t }, vec![9.0]);
+        links[0].enqueue(
+            0,
+            0,
+            Tag::MODEL,
+            Stamp::Wall { sent: t, at: t },
+            Payload::F32(vec![9.0]),
+        );
         let (_, data) = links[0].pop(0, (0, Tag::MODEL)).unwrap();
-        assert_eq!(data, vec![9.0]);
+        assert_eq!(data.decode(), vec![9.0]);
         quiesce_all(&links);
     }
 }

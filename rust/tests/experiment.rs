@@ -58,6 +58,7 @@ fn n_thread_sweep_is_byte_identical_to_single_thread() {
         assert_eq!(report.config, cfg);
         assert_eq!(report.key, cfg.content_hash());
         assert_eq!(report.in_flight_msgs, 0, "fabric must drain");
+        assert_eq!(report.in_flight_bytes, 0, "fabric must drain bytes too");
     }
 }
 

@@ -12,6 +12,11 @@
 //! loopback-TCP link, where `in_flight` additionally counts frames in
 //! writer queues and each rank's post-quiesce mailbox (a frame sent but
 //! never harvested lands in the receiver's count).
+//!
+//! Since the wire-codec layer the invariant is two-sided: zero leaked
+//! *messages* and zero leaked *bytes* (`in_flight_bytes`, the encoded
+//! payload bytes still queued) — a codec bug that dropped a frame but
+//! decremented the count, or vice versa, trips exactly one of the two.
 
 use gossipgrad::config::{Algo, RunConfig, Transport};
 use gossipgrad::coordinator::trainer::run_with_backend;
@@ -57,6 +62,11 @@ fn no_in_flight_messages_after_any_schedule() {
                         "{algo:?} p={p} layerwise={layerwise} \
                          sync_mix={sync_mix}: leaked messages on the fabric"
                     );
+                    assert_eq!(
+                        res.in_flight_bytes, 0,
+                        "{algo:?} p={p} layerwise={layerwise} \
+                         sync_mix={sync_mix}: leaked bytes on the fabric"
+                    );
                 }
             }
         }
@@ -73,6 +83,10 @@ fn no_in_flight_messages_after_comm_thread_agd() {
         assert_eq!(
             res.in_flight_msgs, 0,
             "comm-thread AGD p={p}: leaked collective-internal messages"
+        );
+        assert_eq!(
+            res.in_flight_bytes, 0,
+            "comm-thread AGD p={p}: leaked collective-internal bytes"
         );
     }
 }
@@ -113,6 +127,11 @@ fn no_in_flight_messages_over_the_tcp_link() {
                     "tcp {algo:?} p={p} layerwise={layerwise}: frames \
                      left on the mesh after quiesce"
                 );
+                assert_eq!(
+                    res.in_flight_bytes, 0,
+                    "tcp {algo:?} p={p} layerwise={layerwise}: frame \
+                     bytes left on the mesh after quiesce"
+                );
             }
         }
     }
@@ -135,6 +154,10 @@ fn no_in_flight_messages_for_remaining_gossip_variants() {
                 assert_eq!(
                     res.in_flight_msgs, 0,
                     "{algo:?} p={p} layerwise={layerwise}: leaked messages"
+                );
+                assert_eq!(
+                    res.in_flight_bytes, 0,
+                    "{algo:?} p={p} layerwise={layerwise}: leaked bytes"
                 );
             }
         }

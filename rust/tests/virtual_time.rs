@@ -298,6 +298,7 @@ fn comm_thread_agd_deterministic_at_p256() {
         );
     }
     assert_eq!(a.in_flight_msgs, 0, "comm-thread run left messages queued");
+    assert_eq!(a.in_flight_bytes, 0, "comm-thread run left bytes queued");
 }
 
 // ---- sample-shuffle starvation accounting -----------------------------
@@ -341,6 +342,7 @@ fn shuffle_starvation_is_charged_as_comm_wait() {
         "starvation must dent efficiency"
     );
     assert_eq!(res.in_flight_msgs, 0);
+    assert_eq!(res.in_flight_bytes, 0);
 }
 
 /// Deterministic per-(rank, step) jitter on the measured fabric

@@ -1,0 +1,154 @@
+#!/usr/bin/env python3
+"""Closed-form codec x gossip_period frontier artifact.
+
+Mirrors the gossip arithmetic of rust/src/sim/efficiency.rs
+(step_time_with_codec, Schedule::Gossip) for the codec-frontier grid
+(`gossipgrad sweep --preset codec-frontier-1024`): LeNet3 at device
+speed 4, alpha = 200 us, beta = 1 / 0.5 GB/s, p = 1024, codecs
+{f32, bf16, int8, topk} x gossip periods {1, 2, 4}.
+
+This is the *analytic* frontier committed as
+BENCH_codec_frontier.{json,csv}; the *measured* twin (with real
+numerics, param hashes and eval accuracy) is produced by the CI
+"codec frontier" step from the same preset and must agree on the
+ordering: bf16 > f32 efficiency at every period.  Closed-form rows
+carry no param_hash / accuracy columns on purpose — this model times
+the wire, it does not train.
+
+Run from the repo root:  python3 tools/codec_frontier_closed_form.py
+"""
+
+import csv
+import json
+import math
+import os
+
+# -- fabric + workload constants (codec-frontier preset) ---------------
+P = 1024
+ALPHA = 200e-6          # per-message latency, seconds
+BETA = 1.0 / 0.5e9      # seconds per byte (0.5 GB/s)
+DEVICE_SPEED = 4.0
+PERIODS = [1, 2, 4]
+CODECS = ["f32", "bf16", "int8", "topk"]
+INT8_CHUNK = 256        # codec::INT8_CHUNK
+TOPK_KEEP = 16          # codec::top_k keeps n/16 coordinates
+MIX_BW = 500.0e9        # device-memory mixing pass, bytes/s (2R+1W -> 3x)
+
+# Workload::lenet3(4.0): t = 0.025 / speed, fwd:bwd = 1:2,
+# layer bytes in backprop-completion order (output layer first)
+T_TOTAL = 0.025 / DEVICE_SPEED
+T_FWD = T_TOTAL / 3.0
+T_BWD = 2.0 * T_TOTAL / 3.0
+LAYER_BYTES = [120_000, 1_600_000, 400_000]
+MODEL_BYTES = sum(LAYER_BYTES)
+
+
+def wire_bytes(codec: str, dense_bytes: int) -> int:
+    """Codec::wire_bytes_for on the rank-side Encoder path (gossip)."""
+    n = dense_bytes // 4
+    if codec == "f32":
+        return 4 * n
+    if codec == "bf16":
+        return 2 * n
+    if codec == "int8":
+        return n + 4 * math.ceil(n / INT8_CHUNK)
+    if codec == "topk":
+        return 8 * max(1, n // TOPK_KEEP)
+    raise ValueError(codec)
+
+
+def grad_ready_times():
+    """Workload::grad_ready_times: fwd + prefix sums of bwd slices."""
+    t, out = T_FWD, []
+    for b in LAYER_BYTES:
+        t += T_BWD * b / MODEL_BYTES
+        out.append(t)
+    return out
+
+
+def nic_drain(msgs):
+    """Serialize (ready, wire_time) messages on one NIC."""
+    free = 0.0
+    for ready, wire in sorted(msgs):
+        free = max(free, ready) + wire
+    return free
+
+
+def gossip_step(codec: str):
+    """sim::efficiency step_time_with_codec, Schedule::Gossip."""
+    ready = grad_ready_times()
+    msgs = [
+        (r, ALPHA + wire_bytes(codec, b) * BETA)
+        for r, b in zip(ready, LAYER_BYTES)
+    ]
+    comm_done = nic_drain(msgs)
+    mix = 3.0 * MODEL_BYTES / MIX_BW
+    t_compute = T_FWD + T_BWD
+    return t_compute, max(t_compute, comm_done) + mix
+
+
+def main():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    rows = []
+    for codec in CODECS:
+        for period in PERIODS:
+            t_compute, t_comm_step = gossip_step(codec)
+            # a period-k window: k-1 compute-only steps + 1 exchange step
+            tot_step = (period - 1) * t_compute + t_comm_step
+            tot_comp = period * t_compute
+            rows.append(
+                {
+                    "codec": codec,
+                    "gossip_period": period,
+                    "ranks": P,
+                    "wire_bytes_per_exchange": sum(
+                        wire_bytes(codec, b) for b in LAYER_BYTES
+                    ),
+                    "dense_bytes_per_exchange": MODEL_BYTES,
+                    "mean_step_secs": tot_step / period,
+                    "mean_efficiency_pct": 100.0 * tot_comp / tot_step,
+                    "exposed_comm_secs": max(0.0, tot_step - tot_comp)
+                    / period,
+                }
+            )
+    artifact = {
+        "kind": "closed-form",
+        "note": (
+            "analytic codec x gossip_period frontier from "
+            "sim::efficiency::step_time_with_codec (Schedule::Gossip); "
+            "the measured twin is CI's `sweep --preset "
+            "codec-frontier-1024` artifact — see docs/wire-codecs.md"
+        ),
+        "model": {
+            "workload": "lenet3",
+            "device_speed": DEVICE_SPEED,
+            "alpha_secs": ALPHA,
+            "beta_secs_per_byte": BETA,
+            "ranks": P,
+            "layer_bytes": LAYER_BYTES,
+        },
+        "scenarios": rows,
+    }
+    json_path = os.path.join(root, "BENCH_codec_frontier.json")
+    with open(json_path, "w") as f:
+        json.dump(artifact, f, indent=2)
+        f.write("\n")
+    csv_path = os.path.join(root, "BENCH_codec_frontier.csv")
+    with open(csv_path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    eff = {(r["codec"], r["gossip_period"]): r["mean_efficiency_pct"] for r in rows}
+    for period in PERIODS:
+        assert eff[("bf16", period)] >= eff[("f32", period)], (period, eff)
+    print(f"wrote {json_path} and {csv_path}")
+    for r in rows:
+        print(
+            f"  {r['codec']:>5} period={r['gossip_period']}: "
+            f"{r['mean_efficiency_pct']:.2f}% eff, "
+            f"{r['wire_bytes_per_exchange']} wire B"
+        )
+
+
+if __name__ == "__main__":
+    main()
