@@ -3,14 +3,49 @@
 //! behind the AGD baselines.
 //!
 //!     cargo bench --bench collectives
+//!     cargo bench --bench collectives -- --json [BENCH_collectives.json]
+//!
+//! The timed path is the non-blocking [`IAllreduce`] engine (post /
+//! progress / wait) — the same machinery `--comm-thread` AGD trains
+//! through — with the historical blocking [`Algorithm::run`] kept as an
+//! ablation column.  `--json` additionally emits the CI gate report
+//! (docs/perf.md): effective bus bandwidth per algorithm plus a
+//! deterministic single-threaded pool-allocation count that must stay
+//! at zero.
 
-use gossipgrad::collectives::Algorithm;
+use gossipgrad::collectives::{Algorithm, IAllreduce};
 use gossipgrad::transport::{CostModel, Fabric};
-use gossipgrad::util::bench::{fmt_dur, Table};
+use gossipgrad::util::bench::{fmt_dur, json_out_path, BenchReport, Table};
 use std::thread;
 use std::time::Instant;
 
-fn time_allreduce(alg: Algorithm, p: usize, n: usize, iters: usize) -> f64 {
+/// Engine path: post the collective, pump progress, harvest with wait.
+/// Work buffers cycle through the fabric's pool exactly as training does.
+fn time_engine(alg: Algorithm, p: usize, n: usize, iters: usize) -> f64 {
+    let fabric = Fabric::new(p, CostModel::zero());
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..p)
+        .map(|r| {
+            let ep = fabric.endpoint(r);
+            thread::spawn(move || {
+                let buf = vec![r as f32; n];
+                for it in 0..iters {
+                    let work = ep.pool().copy_f32(&buf);
+                    let out = IAllreduce::post(&ep, alg, work, it).wait(&ep);
+                    ep.pool().put_f32(out);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Historical blocking path (ablation column): dependency-chained
+/// rounds on the caller, via [`Algorithm::run`].
+fn time_blocking(alg: Algorithm, p: usize, n: usize, iters: usize) -> f64 {
     let fabric = Fabric::new(p, CostModel::zero());
     let t0 = Instant::now();
     let handles: Vec<_> = (0..p)
@@ -30,22 +65,92 @@ fn time_allreduce(alg: Algorithm, p: usize, n: usize, iters: usize) -> f64 {
     t0.elapsed().as_secs_f64() / iters as f64
 }
 
+/// Deterministic steady-state allocation count: both ranks of a p = 2
+/// engine all-reduce pumped from one thread, so the pool's counters are
+/// exact.  After warm-up every buffer draw (caller work buffers and the
+/// machine's internal round payloads) must recycle — the CI gate pins
+/// this at zero.
+fn pooled_allocs_p2(n: usize, warm: usize, iters: usize) -> u64 {
+    let fabric = Fabric::new(2, CostModel::zero());
+    let e0 = fabric.endpoint(0);
+    let e1 = fabric.endpoint(1);
+    let pool = e0.pool();
+    let src0 = vec![1.0f32; n];
+    let src1 = vec![3.0f32; n];
+    let cycle = |it: usize| {
+        let mut a =
+            IAllreduce::post(&e0, Algorithm::RecursiveDoubling, pool.copy_f32(&src0), it);
+        let mut b =
+            IAllreduce::post(&e1, Algorithm::RecursiveDoubling, pool.copy_f32(&src1), it);
+        while !(a.progress(&e0) && b.progress(&e1)) {}
+        let ra = a.wait(&e0);
+        let rb = b.wait(&e1);
+        assert_eq!(ra[0], 2.0);
+        pool.put_f32(ra);
+        pool.put_f32(rb);
+    };
+    for it in 0..warm {
+        cycle(it);
+    }
+    let before = pool.stats().allocs;
+    for it in 0..iters {
+        cycle(warm + it);
+    }
+    pool.stats().allocs - before
+}
+
+fn alg_slug(alg: Algorithm) -> &'static str {
+    match alg {
+        Algorithm::RecursiveDoubling => "rec_doubling",
+        Algorithm::BinomialTree => "binomial",
+        Algorithm::Ring => "ring",
+    }
+}
+
 fn main() {
+    let mut report = BenchReport::new("collectives");
     let algs = [
         Algorithm::RecursiveDoubling,
         Algorithm::BinomialTree,
         Algorithm::Ring,
     ];
     for &n in &[4_096usize, 535_818 /* = MLP params */, 4_000_000] {
-        let mut t = Table::new(&["p", "rec-doubling", "binomial", "ring"]);
+        let mut t = Table::new(&[
+            "p",
+            "rec-doubling",
+            "binomial",
+            "ring",
+            "ring (blocking)",
+        ]);
         for p in [2usize, 4, 8] {
             let mut row = vec![p.to_string()];
             for alg in algs {
-                let secs = time_allreduce(alg, p, n, 5);
+                let secs = time_engine(alg, p, n, 5);
                 row.push(fmt_dur(secs));
+                if p == 4 && n == 4_000_000 {
+                    // effective bus bandwidth: 2(p-1)/p · payload / time
+                    let gbs = 2.0 * (p - 1) as f64 / p as f64 * (n as f64 * 4.0)
+                        / secs
+                        / 1e9;
+                    report.entry(
+                        &format!("engine_{}_p4_4m", alg_slug(alg)),
+                        &[("gbs", gbs), ("median_secs", secs)],
+                    );
+                }
             }
+            row.push(fmt_dur(time_blocking(Algorithm::Ring, p, n, 5)));
             t.row(&row);
         }
-        t.print(&format!("all-reduce wall time per call, n = {n} f32"));
+        t.print(&format!(
+            "engine all-reduce wall time per call, n = {n} f32"
+        ));
+    }
+
+    let allocs = pooled_allocs_p2(535_818, 4, 20);
+    println!("\npooled engine all-reduce (p=2, single-thread): {allocs} allocs over 20 calls");
+    report.entry("engine_p2_pooled", &[("allocs", allocs as f64)]);
+
+    if let Some(path) = json_out_path("BENCH_collectives.json") {
+        report.write(&path).expect("write bench json");
     }
 }

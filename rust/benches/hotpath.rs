@@ -1,23 +1,31 @@
 //! L3 hot-path microbenchmarks + the AOT-vs-native mixing ablation.
 //!
 //!     cargo bench --bench hotpath
+//!     cargo bench --bench hotpath -- --json [BENCH_hotpath.json]
 //!
 //! Covers every per-step cost the coordinator adds on top of compute:
-//! * gossip mixing (native SIMD loop vs the Pallas AOT artifact),
+//! * gossip mixing (native chunked kernel vs the Pallas AOT artifact),
 //! * fused momentum-SGD update,
-//! * model slicing + transport round-trip,
+//! * model slicing + transport round-trip (fresh-alloc vs pooled),
 //! * partner-selection (topology) lookups.
 //!
+//! `--json` emits `BENCH_hotpath.json` (or the given path) for the CI
+//! regression gate: `tools/bench_diff.py` hard-fails on `allocs` and
+//! `gbs` regressions against the committed repo-root baseline and
+//! treats timings as advisory (docs/perf.md).
+//!
 //! §Perf targets: mixing at memory bandwidth (GB/s printed below);
-//! coordinator overhead per step ≪ model compute time.
+//! coordinator overhead per step ≪ model compute time; steady-state
+//! pooled transport at ZERO payload allocations per message.
 
 use gossipgrad::nativenet::ops;
 use gossipgrad::topology::{Dissemination, Rotation, Topology};
 use gossipgrad::transport::{CostModel, Fabric, Tag};
-use gossipgrad::util::bench::{bench, Table};
+use gossipgrad::util::bench::{bench, json_out_path, BenchReport, Table};
 use gossipgrad::util::Rng;
 
 fn main() {
+    let mut report = BenchReport::new("hotpath");
     let n = 5_018_112; // transformer param count
     let mut rng = Rng::new(1);
     let mut a: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
@@ -31,8 +39,11 @@ fn main() {
     });
     let gbs = (n as f64 * 4.0 * 3.0) / s.median() / 1e9; // 2R + 1W
     println!("  -> {gbs:.1} GB/s effective (2R+1W)");
+    report.entry("mix_into_5m", &[("gbs", gbs), ("median_secs", s.median())]);
 
     // --- mixing: Pallas AOT artifact (ablation) ------------------------
+    // (kept out of the JSON report: the artifact dir is optional, and
+    // the gate treats missing baseline entries as failures)
     if std::path::Path::new("artifacts/mlp.meta.json").exists() {
         let m = gossipgrad::runtime::PjrtModel::load(
             std::path::Path::new("artifacts"),
@@ -63,26 +74,54 @@ fn main() {
     });
     let gbs = (n as f64 * 4.0 * 5.0) / s.median() / 1e9; // 3R + 2W
     println!("  -> {gbs:.1} GB/s effective (3R+2W)");
+    report.entry(
+        "sgd_momentum_5m",
+        &[("gbs", gbs), ("median_secs", s.median())],
+    );
 
-    // --- transport round trip -------------------------------------------
+    // --- transport round trip: fresh allocation per message -------------
     let fabric = Fabric::new(2, CostModel::zero());
     let e0 = fabric.endpoint(0);
     let e1 = fabric.endpoint(1);
     let payload: Vec<f32> = vec![0.0; 1 << 20];
-    bench("transport send+recv 4 MiB", 3, 50, || {
+    let s = bench("transport send+recv 4 MiB (fresh alloc)", 3, 50, || {
         e0.isend(1, Tag::MODEL, payload.clone());
         let _ = e1.recv(0, Tag::MODEL);
     });
+    report.entry("transport_4mib_fresh", &[("median_secs", s.median())]);
+
+    // --- transport round trip: pooled (the steady-state training path) --
+    // Single-threaded, so the pool's allocation counter is exact: after
+    // warm-up every payload draw must hit a recycled buffer — the
+    // zero-allocation invariant the CI gate pins (allocs must stay 0).
+    let pool = e0.pool();
+    for _ in 0..4 {
+        e0.isend(1, Tag::MODEL, pool.copy_f32(&payload));
+        pool.put_f32(e1.recv(0, Tag::MODEL));
+    }
+    let before = pool.stats();
+    let s = bench("transport send+recv 4 MiB (pooled)", 0, 50, || {
+        e0.isend(1, Tag::MODEL, pool.copy_f32(&payload));
+        pool.put_f32(e1.recv(0, Tag::MODEL));
+    });
+    let allocs = (pool.stats().allocs - before.allocs) as f64;
+    let gbs = (payload.len() as f64 * 4.0) / s.median() / 1e9;
+    println!("  -> {gbs:.1} GB/s wire, {allocs} pool allocs over 50 round trips");
+    report.entry(
+        "transport_4mib_pooled",
+        &[("gbs", gbs), ("allocs", allocs), ("median_secs", s.median())],
+    );
 
     // --- partner selection ------------------------------------------------
     let topo = Rotation::new(Dissemination::new(128), 7);
     let mut acc = 0usize;
-    bench("rotated dissemination exchange() x1e5", 2, 20, || {
+    let s = bench("rotated dissemination exchange() x1e5", 2, 20, || {
         for s in 0..100_000usize {
             acc ^= topo.exchange(s & 127, s).send_to;
         }
     });
     std::hint::black_box(acc);
+    report.entry("partner_lookup_1e5", &[("median_secs", s.median())]);
 
     // --- per-step coordinator overhead summary ---------------------------
     let mut t = Table::new(&["component", "per gossip step (5M model)", "notes"]);
@@ -97,9 +136,18 @@ fn main() {
         "1x per step".into(),
     ]);
     t.row(&[
+        "payload buffers".into(),
+        "0 allocs".into(),
+        "pooled after warm-up".into(),
+    ]);
+    t.row(&[
         "partner lookup".into(),
         "~ns".into(),
         "negligible".into(),
     ]);
     t.print("coordinator overhead inventory");
+
+    if let Some(path) = json_out_path("BENCH_hotpath.json") {
+        report.write(&path).expect("write bench json");
+    }
 }

@@ -53,7 +53,7 @@ impl BinomialTreeMachine {
     fn reduce_step(&mut self, buf: &mut [f32], ctx: &SendCtx) -> Step {
         while self.d < self.p {
             if self.me & self.d != 0 {
-                ctx.send(self.me - self.d, self.tag, buf.to_vec());
+                ctx.send(self.me - self.d, self.tag, buf);
                 return self.enter_bcast(buf, ctx);
             }
             if self.me + self.d < self.p {
@@ -95,7 +95,7 @@ impl BinomialTreeMachine {
         while child_d >= 1 {
             let child = self.me + child_d;
             if child < self.p {
-                ctx.send(child, self.btag, buf.to_vec());
+                ctx.send(child, self.btag, buf);
             }
             child_d >>= 1;
         }

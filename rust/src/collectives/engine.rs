@@ -83,7 +83,11 @@ pub(crate) struct SendCtx<'a> {
 }
 
 impl SendCtx<'_> {
-    pub(crate) fn send(&self, dst: usize, tag: Tag, data: Vec<f32>) {
+    /// Send a copy of `data` drawn from the fabric's buffer pool, so a
+    /// machine round's per-message copy recycles a warm buffer instead
+    /// of allocating.
+    pub(crate) fn send(&self, dst: usize, tag: Tag, data: &[f32]) {
+        let data = self.ep.pool().copy_f32(data);
         if self.virt {
             self.ep.isend_at(dst, tag, data, self.comm_now_ns);
         } else {
@@ -246,6 +250,9 @@ impl IAllreduce {
             virt: self.virt,
         };
         let step = self.machine.deliver(&mut self.buf, &data, &ctx);
+        // the harvested internal payload cycles back to the pool for
+        // the next round's SendCtx copy
+        ep.pool().put_f32(data);
         self.apply_step(ep, step);
     }
 

@@ -48,8 +48,10 @@ impl Algorithm {
         if ep.size() == 1 {
             return; // average of one rank is itself — no traffic, no copies
         }
-        let out = IAllreduce::post_blocking(ep, self, buf.to_vec(), round).wait(ep);
+        let work = ep.pool().copy_f32(buf);
+        let out = IAllreduce::post_blocking(ep, self, work, round).wait(ep);
         buf.copy_from_slice(&out);
+        ep.pool().put_f32(out);
     }
 
     pub fn name(self) -> &'static str {

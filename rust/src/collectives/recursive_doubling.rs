@@ -57,7 +57,7 @@ impl RecursiveDoublingMachine {
         self.dist = 1;
         self.state = RdState::Core;
         let partner = self.me ^ 1;
-        ctx.send(partner, self.tag, buf.to_vec());
+        ctx.send(partner, self.tag, buf);
         Step::Pending(partner, self.tag)
     }
 }
@@ -66,7 +66,7 @@ impl RoundMachine for RecursiveDoublingMachine {
     fn start(&mut self, buf: &mut [f32], ctx: &SendCtx) -> Step {
         if self.me >= self.core {
             // fold phase: park our vector in the core, await the result
-            ctx.send(self.me - self.core, self.tag, buf.to_vec());
+            ctx.send(self.me - self.core, self.tag, buf);
             self.state = RdState::FoldedOut;
             return Step::Pending(self.me - self.core, self.tag);
         }
@@ -92,13 +92,13 @@ impl RoundMachine for RecursiveDoublingMachine {
                 self.dist <<= 1;
                 if self.dist < self.core {
                     let partner = self.me ^ self.dist;
-                    ctx.send(partner, self.tag, buf.to_vec());
+                    ctx.send(partner, self.tag, buf);
                     return Step::Pending(partner, self.tag);
                 }
                 scale(buf, 1.0 / self.p as f32);
                 // unfold phase: hand the result back to the folded rank
                 if self.me < self.rem {
-                    ctx.send(self.me + self.core, self.tag, buf.to_vec());
+                    ctx.send(self.me + self.core, self.tag, buf);
                 }
                 Step::Finished
             }

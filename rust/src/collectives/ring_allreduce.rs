@@ -54,7 +54,7 @@ impl RingMachine {
     /// receive.
     fn rs_round(&mut self, buf: &[f32], ctx: &SendCtx) -> Step {
         let send_c = (self.me + self.p - self.s) % self.p;
-        ctx.send(self.next, self.tag.sub(self.s), self.chunk(buf, send_c).to_vec());
+        ctx.send(self.next, self.tag.sub(self.s), self.chunk(buf, send_c));
         Step::Pending(self.prev, self.tag.sub(self.s))
     }
 
@@ -62,7 +62,7 @@ impl RingMachine {
     fn ag_round(&mut self, buf: &[f32], ctx: &SendCtx) -> Step {
         let send_c = (self.me + 1 + self.p - self.s) % self.p;
         let t = self.tag.sub(self.p + self.s);
-        ctx.send(self.next, t, self.chunk(buf, send_c).to_vec());
+        ctx.send(self.next, t, self.chunk(buf, send_c));
         Step::Pending(self.prev, t)
     }
 }

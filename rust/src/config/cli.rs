@@ -27,6 +27,7 @@ pub const FLAGS: &[&str] = &[
     "layerwise",
     "comm-thread",
     "sync-mix",
+    "no-pool",
     "autotune-period",
     "keep-dir",
 ];
@@ -52,6 +53,7 @@ pub const FLAGS: &[&str] = &[
 /// | `virt_ps_agg_secs` | `--ps-agg-ms` |
 /// | `layerwise`, `comm_thread`, `sync_mix` | flags of the same name |
 /// | `codec` | `--codec f32\|bf16\|int8\|topk` |
+/// | `pool` | `--no-pool` (disable payload buffer recycling) |
 pub fn from_args(args: &Args) -> Result<RunConfig> {
     let mut cfg = match args.get("config") {
         Some(path) => RunConfig::load(path).map_err(anyhow::Error::msg)?,
@@ -115,6 +117,9 @@ pub fn from_args(args: &Args) -> Result<RunConfig> {
     }
     if args.flag("sync-mix") {
         cfg.sync_mix = true;
+    }
+    if args.flag("no-pool") {
+        cfg.pool = false;
     }
     // a comm thread only overlaps collectives posted mid-backprop; the
     // monolithic schedule has nothing left to hide them under
@@ -261,6 +266,12 @@ mod tests {
         assert!(
             from_args(&parse("train --workload lenet3 --noise 0.1")).is_err()
         );
+    }
+
+    #[test]
+    fn no_pool_flag_disables_buffer_recycling() {
+        assert!(from_args(&parse("train")).unwrap().pool);
+        assert!(!from_args(&parse("train --no-pool")).unwrap().pool);
     }
 
     #[test]

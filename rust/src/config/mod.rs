@@ -206,6 +206,12 @@ pub struct RunConfig {
     /// bytes are what the fabric charges, so this axis moves both
     /// measured and closed-form efficiency.
     pub codec: Codec,
+    /// Recycle payload buffers through the fabric's [`crate::pool`]
+    /// (`--no-pool` disables).  Steady-state training then performs
+    /// zero per-message payload allocations; numerics are bit-identical
+    /// either way (the pool only changes where buffers come from, never
+    /// their contents — see docs/perf.md and `tests/pooling.rs`).
+    pub pool: bool,
 }
 
 impl Default for RunConfig {
@@ -243,6 +249,7 @@ impl Default for RunConfig {
             sync_mix: false,
             transport: Transport::Inproc,
             codec: Codec::F32,
+            pool: true,
         }
     }
 }
@@ -329,6 +336,7 @@ impl RunConfig {
             ("allreduce", json::s(self.allreduce.name())),
             ("transport", json::s(self.transport.name())),
             ("codec", json::s(self.codec.name())),
+            ("pool", Json::Bool(self.pool)),
         ];
         if let Some(dir) = &self.resume_from {
             pairs.push(("resume_from", json::s(dir)));
@@ -432,6 +440,9 @@ impl RunConfig {
         }
         if let Some(v) = j.get("codec").and_then(Json::as_str) {
             c.codec = Codec::parse(v)?;
+        }
+        if let Some(v) = j.get("pool").and_then(Json::as_bool) {
+            c.pool = v;
         }
         if let Some(sched) = j.get("lr_step_every").and_then(Json::as_usize) {
             let gamma = j
@@ -578,6 +589,7 @@ mod tests {
         c.sync_mix = true;
         c.transport = Transport::Tcp;
         c.codec = Codec::TopK;
+        c.pool = false;
         let j = c.to_json();
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(back, c, "to_json/from_json must round-trip losslessly");

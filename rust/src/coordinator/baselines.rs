@@ -83,7 +83,7 @@ pub fn run_allreduce(w: &mut Worker, ep: &Endpoint, alg: Algorithm, layerwise: b
                     IAllreduce::post(
                         ep,
                         alg,
-                        grads[off..off + len].to_vec(),
+                        ep.pool().copy_f32(&grads[off..off + len]),
                         step * layers.len() + li,
                     ),
                 ));
@@ -91,6 +91,7 @@ pub fn run_allreduce(w: &mut Worker, ep: &Endpoint, alg: Algorithm, layerwise: b
             for (off, len, h) in posted {
                 let out = h.wait(ep);
                 grads[off..off + len].copy_from_slice(&out);
+                ep.pool().put_f32(out);
             }
             ep.comm_wait_since(&tw)
         } else if pipelined {
@@ -191,12 +192,13 @@ pub fn run_ps_worker(w: &mut Worker, ep: &Endpoint, server: usize) {
                 ep.isend_payload(
                     server,
                     Tag::layer(li).round(step),
-                    enc.encode(server, li, &grads[off..off + len]),
+                    enc.encode_pooled(server, li, &grads[off..off + len], ep.pool()),
                 );
             }
             let tw = ep.mark();
             let fresh = ep.recv(server, Tag::MODEL.round(step));
             w.params.copy_from_slice(&fresh);
+            ep.pool().put_f32(fresh);
             ep.comm_wait_since(&tw)
         } else {
             w.charge_compute(ep, step, w.cfg.virt_compute_secs);
@@ -204,10 +206,11 @@ pub fn run_ps_worker(w: &mut Worker, ep: &Endpoint, server: usize) {
             ep.isend_payload(
                 server,
                 Tag::REDUCE.round(step),
-                enc.encode(server, 0, &grads),
+                enc.encode_pooled(server, 0, &grads, ep.pool()),
             );
             let fresh = ep.recv(server, Tag::MODEL.round(step));
             w.params.copy_from_slice(&fresh);
+            ep.pool().put_f32(fresh);
             ep.comm_wait_since(&tw)
         };
 
@@ -258,10 +261,12 @@ pub fn run_ps_server(
                 for (li, &(off, len)) in layers.iter().enumerate() {
                     let g = ep.recv(src, Tag::layer(li).round(step));
                     ops::add_into(&mut acc[off..off + len], &g);
+                    ep.pool().put_f32(g);
                 }
             } else {
                 let g = ep.recv(src, Tag::REDUCE.round(step));
                 ops::add_into(&mut acc, &g);
+                ep.pool().put_f32(g);
             }
         }
         // server-side aggregation + update compute (virtual clock only)
@@ -284,7 +289,7 @@ pub fn run_ps_server(
                 // by a whole transfer the server can in fact overlap.
                 ep.advance(wire);
             }
-            ep.isend(dst, Tag::MODEL.round(step), params.clone());
+            ep.isend(dst, Tag::MODEL.round(step), ep.pool().copy_f32(&params));
         }
     }
 }

@@ -45,7 +45,7 @@
 //! the exposed communication time.
 
 use super::worker::Worker;
-use crate::codec::{mix_payload_into, Encoder};
+use crate::codec::{mix_payload_recycle, Encoder};
 use crate::config::Algo;
 use crate::topology::{
     Dissemination, Exchange, Hypercube, RandomGossip, Rotation, Topology,
@@ -131,10 +131,12 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
     let sched = w.bwd_schedule(); // (layer, offset, len, slice secs), output first
     let mut pending: Option<PendingModel> = None;
     // wire codec: every outgoing model slice goes through this encoder
-    // (per-destination/per-layer error-feedback residuals under top-k);
-    // incoming slices mix via `mix_payload_into`, which for dense
-    // payloads is bit-identical to `ops::mix_into` on the decoded
-    // vector — `--codec f32` keeps the historical param_hash exactly
+    // (per-destination/per-layer error-feedback residuals under top-k),
+    // with scratch drawn from the fabric's buffer pool; incoming slices
+    // mix via `mix_payload_recycle`, which for dense payloads is
+    // bit-identical to `ops::mix_into` on the decoded vector and hands
+    // the spent buffer back to the pool — `--codec f32` keeps the
+    // historical param_hash exactly
     let mut enc = Encoder::new(w.cfg.codec);
 
     for step in 0..steps {
@@ -178,7 +180,11 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
                         let tw = ep.mark();
                         let data = req.wait_payload();
                         comm_wait += ep.comm_wait_since(&tw);
-                        mix_payload_into(&mut w.params[o2..o2 + data.len()], data);
+                        mix_payload_recycle(
+                            &mut w.params[o2..o2 + data.len()],
+                            data,
+                            ep.pool(),
+                        );
                     }
                 }
                 w.backend.apply_update_slice(
@@ -194,7 +200,12 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
                         ep.isend_payload(
                             ex.send_to,
                             Tag::layer(li).round(step),
-                            enc.encode(ex.send_to, li, &w.params[off..off + len]),
+                            enc.encode_pooled(
+                                ex.send_to,
+                                li,
+                                &w.params[off..off + len],
+                                ep.pool(),
+                            ),
                         );
                         if random_senders.is_none() && !sync_mix {
                             new_reqs[li] = Some((
@@ -222,7 +233,11 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
                 let tw = ep.mark();
                 for (off, req) in pm.reqs.into_iter().flatten() {
                     let data = req.wait_payload();
-                    mix_payload_into(&mut w.params[off..off + data.len()], data);
+                    mix_payload_recycle(
+                        &mut w.params[off..off + data.len()],
+                        data,
+                        ep.pool(),
+                    );
                 }
                 comm_wait += ep.comm_wait_since(&tw);
             }
@@ -238,9 +253,10 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
                         let tw = ep.mark();
                         for (off, req) in pm.reqs.into_iter().flatten() {
                             let data = req.wait_payload();
-                            mix_payload_into(
+                            mix_payload_recycle(
                                 &mut w.params[off..off + data.len()],
                                 data,
+                                ep.pool(),
                             );
                         }
                         comm_wait += ep.comm_wait_since(&tw);
@@ -261,7 +277,11 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
                 let pm = post_recvs(ep, src, step, &layers);
                 for (off, req) in pm.reqs.into_iter().flatten() {
                     let data = req.wait_payload();
-                    mix_payload_into(&mut w.params[off..off + data.len()], data);
+                    mix_payload_recycle(
+                        &mut w.params[off..off + data.len()],
+                        data,
+                        ep.pool(),
+                    );
                 }
             }
             comm_wait += ep.comm_wait_since(&tw);
@@ -274,7 +294,11 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
                     let tw = ep.mark();
                     for (off, req) in pm.reqs.into_iter().flatten() {
                         let data = req.wait_payload();
-                        mix_payload_into(&mut w.params[off..off + data.len()], data);
+                        mix_payload_recycle(
+                            &mut w.params[off..off + data.len()],
+                            data,
+                            ep.pool(),
+                        );
                     }
                     comm_wait += ep.comm_wait_since(&tw);
                 }
@@ -301,7 +325,7 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
     if let Some(pm) = pending.take() {
         for (off, req) in pm.reqs.into_iter().flatten() {
             let (data, _, _) = req.wait_raw_payload();
-            mix_payload_into(&mut w.params[off..off + data.len()], data);
+            mix_payload_recycle(&mut w.params[off..off + data.len()], data, ep.pool());
         }
     }
     // ... and any in-flight sample batches, so the fabric ends clean
@@ -325,7 +349,7 @@ fn send_model(
         ep.isend_payload(
             dst,
             Tag::layer(li).round(step),
-            enc.encode(dst, li, &params[off..off + len]),
+            enc.encode_pooled(dst, li, &params[off..off + len], ep.pool()),
         );
     }
 }

@@ -22,6 +22,7 @@ use crate::config::{Algo, RunConfig, Transport};
 use crate::data::synthetic::{self, Dataset};
 use crate::metrics::RunMetrics;
 use crate::nativenet::NativeMlp;
+use crate::pool::PoolStats;
 use crate::runtime::PjrtModel;
 use crate::transport::{ClockMode, Endpoint, Fabric, Link, TcpLinkBuilder};
 
@@ -45,6 +46,11 @@ pub struct RunResult {
     /// Wire bytes those leaked messages occupy — the byte half of the
     /// drain invariant, also 0 on a clean run.
     pub in_flight_bytes: usize,
+    /// Buffer-pool counters summed over the run's fabric(s): `allocs`
+    /// is the allocation-count hook `tests/pooling.rs` and the bench
+    /// gate assert on — in steady state (after warm-up) it stops
+    /// growing because every payload draw hits a recycled buffer.
+    pub pool_stats: PoolStats,
 }
 
 impl RunResult {
@@ -276,6 +282,7 @@ pub fn run_with_backend(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
     };
     let fabric =
         Fabric::with_clock_codec(fabric_size(cfg), cfg.cost_model(), mode, cfg.codec);
+    fabric.pool().set_enabled(cfg.pool);
 
     let batch = backend.batch();
     let x_len = backend.x_len();
@@ -325,6 +332,7 @@ pub fn run_with_backend(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
         wall_secs: t0.elapsed().as_secs_f64(),
         in_flight_msgs: fabric.in_flight(),
         in_flight_bytes: fabric.in_flight_bytes(),
+        pool_stats: fabric.pool().stats(),
     })
 }
 
@@ -339,6 +347,8 @@ pub struct RankOutcome {
     pub in_flight: usize,
     /// Wire bytes of the leaked messages `in_flight` counts.
     pub in_flight_bytes: usize,
+    /// This rank's fabric buffer-pool counters.
+    pub pool_stats: PoolStats,
 }
 
 /// Run exactly ONE fabric rank over a caller-supplied link — the unit
@@ -362,6 +372,7 @@ pub fn run_rank_with_link(
     anyhow::ensure!(rank < n, "rank {rank} outside fabric of {n}");
     let fabric =
         Fabric::with_link_codec(link, cfg.cost_model(), ClockMode::Wall, cfg.codec);
+    fabric.pool().set_enabled(cfg.pool);
     let ep = fabric.endpoint(rank);
     let p = cfg.ranks;
     let (metrics, params) = if rank < p {
@@ -385,6 +396,7 @@ pub fn run_rank_with_link(
         params,
         in_flight: fabric.in_flight(),
         in_flight_bytes: fabric.in_flight_bytes(),
+        pool_stats: fabric.pool().stats(),
     })
 }
 
@@ -435,6 +447,12 @@ pub fn run_tcp_loopback(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
     outcomes.sort_by_key(|o| o.rank);
     let in_flight_msgs = outcomes.iter().map(|o| o.in_flight).sum();
     let in_flight_bytes = outcomes.iter().map(|o| o.in_flight_bytes).sum();
+    // each rank has its own fabric (and pool) here: sum the counters
+    let pool_stats = outcomes.iter().fold(PoolStats::default(), |a, o| PoolStats {
+        gets: a.gets + o.pool_stats.gets,
+        allocs: a.allocs + o.pool_stats.allocs,
+        returns: a.returns + o.pool_stats.returns,
+    });
     let mut per_rank = Vec::new();
     let mut final_params = Vec::new();
     for o in outcomes {
@@ -454,6 +472,7 @@ pub fn run_tcp_loopback(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
         wall_secs: t0.elapsed().as_secs_f64(),
         in_flight_msgs,
         in_flight_bytes,
+        pool_stats,
     })
 }
 
@@ -536,6 +555,7 @@ mod tests {
             wall_secs: 0.0,
             in_flight_msgs: 0,
             in_flight_bytes: 0,
+            pool_stats: PoolStats::default(),
         }
     }
 

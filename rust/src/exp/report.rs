@@ -172,6 +172,7 @@ mod tests {
             wall_secs: 123.0, // must NOT appear in the report
             in_flight_msgs: 0,
             in_flight_bytes: 0,
+            pool_stats: Default::default(),
         };
         ScenarioReport::from_run(&cfg, &res)
     }

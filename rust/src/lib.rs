@@ -47,6 +47,10 @@
 //!   transport message carries, with f32/bf16/int8/top-k encoders and
 //!   per-destination error-feedback residuals; compressed bytes are
 //!   what the fabric charges (docs/wire-codecs.md).
+//! * [`pool`] — the shared [`pool::BufferPool`] of reusable payload
+//!   buffers behind every hot send/receive path, with the
+//!   allocation-counting hook that gates the steady-state
+//!   zero-allocation property (docs/perf.md).
 //! * [`metrics`], [`config`], [`util`] — supporting infrastructure
 //!   (the offline environment has no clap/serde/criterion/proptest, so
 //!   `util` carries small hand-rolled equivalents).
@@ -59,6 +63,7 @@ pub mod data;
 pub mod exp;
 pub mod metrics;
 pub mod nativenet;
+pub mod pool;
 pub mod runtime;
 pub mod sim;
 pub mod topology;

@@ -1,12 +1,33 @@
-//! Hot-path numerics.  Written as straight slices + chunked loops so the
-//! autovectorizer emits AVX on this target (verified in EXPERIMENTS.md
-//! §Perf via the hotpath bench); no unsafe, no hand intrinsics.
+//! Hot-path numerics.  The streaming kernels (`mix_into`, `mix_to`,
+//! `add_into`, `sgd_momentum`) walk fixed-width [`LANES`]-element
+//! chunks via `chunks_exact`, with each chunk converted to a
+//! fixed-size array reference — the compiler sees a constant trip
+//! count, unrolls the body, and the autovectorizer emits AVX on this
+//! target (measured as effective GB/s by `benches/hotpath.rs`,
+//! regression-gated against `BENCH_hotpath.json` — docs/perf.md); no
+//! unsafe, no hand intrinsics.  Per-element arithmetic is identical to
+//! the plain zip loop (elementwise-independent ops), so `param_hash`
+//! stays bit-identical.
+
+/// Chunk width for the streaming kernels: 8 f32 lanes = one AVX2
+/// register.  Wider chunks would just spill; narrower ones leave the
+/// unroller less to work with.
+const LANES: usize = 8;
 
 /// GossipGraD pairwise mixing: `a <- (a + b) / 2`, in place.
 /// The L3 hot path (runs every gossip step over the full flat model).
 pub fn mix_into(a: &mut [f32], b: &[f32]) {
     assert_eq!(a.len(), b.len());
-    for (x, &y) in a.iter_mut().zip(b) {
+    let mut ac = a.chunks_exact_mut(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for (xs, ys) in ac.by_ref().zip(bc.by_ref()) {
+        let xs: &mut [f32; LANES] = xs.try_into().unwrap();
+        let ys: &[f32; LANES] = ys.try_into().unwrap();
+        for (x, &y) in xs.iter_mut().zip(ys) {
+            *x = (*x + y) * 0.5;
+        }
+    }
+    for (x, &y) in ac.into_remainder().iter_mut().zip(bc.remainder()) {
         *x = (*x + y) * 0.5;
     }
 }
@@ -15,7 +36,23 @@ pub fn mix_into(a: &mut [f32], b: &[f32]) {
 /// allocation-free form).
 pub fn mix_to(out: &mut [f32], a: &[f32], b: &[f32]) {
     assert!(out.len() == a.len() && a.len() == b.len());
-    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for ((os, xs), ys) in oc.by_ref().zip(ac.by_ref()).zip(bc.by_ref()) {
+        let os: &mut [f32; LANES] = os.try_into().unwrap();
+        let xs: &[f32; LANES] = xs.try_into().unwrap();
+        let ys: &[f32; LANES] = ys.try_into().unwrap();
+        for ((o, &x), &y) in os.iter_mut().zip(xs).zip(ys) {
+            *o = (x + y) * 0.5;
+        }
+    }
+    for ((o, &x), &y) in oc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+    {
         *o = (x + y) * 0.5;
     }
 }
@@ -23,7 +60,16 @@ pub fn mix_to(out: &mut [f32], a: &[f32], b: &[f32]) {
 /// `acc += x`.
 pub fn add_into(acc: &mut [f32], x: &[f32]) {
     assert_eq!(acc.len(), x.len());
-    for (a, &b) in acc.iter_mut().zip(x) {
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (accs, xs) in ac.by_ref().zip(xc.by_ref()) {
+        let accs: &mut [f32; LANES] = accs.try_into().unwrap();
+        let xs: &[f32; LANES] = xs.try_into().unwrap();
+        for (a, &b) in accs.iter_mut().zip(xs) {
+            *a += b;
+        }
+    }
+    for (a, &b) in ac.into_remainder().iter_mut().zip(xc.remainder()) {
         *a += b;
     }
 }
@@ -39,7 +85,25 @@ pub fn scale(buf: &mut [f32], k: f32) {
 /// `v = mu*v + g; p -= lr*v` in one pass.
 pub fn sgd_momentum(params: &mut [f32], mom: &mut [f32], grads: &[f32], lr: f32, mu: f32) {
     assert!(params.len() == mom.len() && mom.len() == grads.len());
-    for ((p, v), &g) in params.iter_mut().zip(mom.iter_mut()).zip(grads) {
+    let mut pc = params.chunks_exact_mut(LANES);
+    let mut mc = mom.chunks_exact_mut(LANES);
+    let mut gc = grads.chunks_exact(LANES);
+    for ((ps, vs), gs) in pc.by_ref().zip(mc.by_ref()).zip(gc.by_ref()) {
+        let ps: &mut [f32; LANES] = ps.try_into().unwrap();
+        let vs: &mut [f32; LANES] = vs.try_into().unwrap();
+        let gs: &[f32; LANES] = gs.try_into().unwrap();
+        for ((p, v), &g) in ps.iter_mut().zip(vs.iter_mut()).zip(gs) {
+            let nv = mu * *v + g;
+            *v = nv;
+            *p -= lr * nv;
+        }
+    }
+    for ((p, v), &g) in pc
+        .into_remainder()
+        .iter_mut()
+        .zip(mc.into_remainder().iter_mut())
+        .zip(gc.remainder())
+    {
         let nv = mu * *v + g;
         *v = nv;
         *p -= lr * nv;
@@ -149,6 +213,44 @@ mod tests {
         let mut a = vec![1.0, 2.0, 3.0];
         mix_into(&mut a, &[3.0, 2.0, 1.0]);
         assert_eq!(a, vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn chunked_kernels_match_scalar_reference_bitwise() {
+        // the LANES-chunked bodies must compute exactly what the plain
+        // zip loop computed, at every length class (empty, sub-chunk,
+        // exact multiple, chunk + remainder)
+        let mut rng = Rng::new(3);
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 100] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+
+            let mut got = a.clone();
+            mix_into(&mut got, &b);
+            for (i, (g, (&x, &y))) in got.iter().zip(a.iter().zip(&b)).enumerate() {
+                assert_eq!(g.to_bits(), ((x + y) * 0.5).to_bits(), "mix_into n={n} i={i}");
+            }
+
+            let mut out = vec![0.0; n];
+            mix_to(&mut out, &a, &b);
+            assert_eq!(out, got, "mix_to must match mix_into");
+
+            let mut acc = a.clone();
+            add_into(&mut acc, &b);
+            for (i, (g, (&x, &y))) in acc.iter().zip(a.iter().zip(&b)).enumerate() {
+                assert_eq!(g.to_bits(), (x + y).to_bits(), "add_into n={n} i={i}");
+            }
+
+            let (lr, mu) = (0.05f32, 0.9f32);
+            let mut p = a.clone();
+            let mut v = b.clone();
+            sgd_momentum(&mut p, &mut v, &acc, lr, mu);
+            for i in 0..n {
+                let nv = mu * b[i] + acc[i];
+                assert_eq!(v[i].to_bits(), nv.to_bits(), "sgd mom n={n} i={i}");
+                assert_eq!(p[i].to_bits(), (a[i] - lr * nv).to_bits(), "sgd n={n} i={i}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,380 @@
+//! Reusable payload buffers: the allocation side of the hot-path
+//! throughput pass (docs/perf.md).
+//!
+//! Every message on the fabric used to allocate a fresh `Vec<f32>` (or
+//! `Vec<u8>` for encoded payloads) at the sender and another at the
+//! receiver.  GossipGraD's efficiency argument (paper §1, Fig 10/11)
+//! needs the coordinator's per-step overhead to stay far below compute,
+//! so the steady-state target is **zero payload allocations per step**:
+//! buffers cycle sender → wire → receiver → back to a shared
+//! [`BufferPool`].
+//!
+//! Design:
+//!
+//! * Two shelves (one per element type, `f32` and `u8`), each a
+//!   capacity-keyed `BTreeMap` of free buffers.  [`BufferPool::get_f32`]
+//!   takes the smallest free buffer whose capacity fits (best-fit, so a
+//!   layer-wise run with mixed slice sizes reuses across layers without
+//!   reallocating), or allocates on a miss.
+//! * **Ownership rule**: a buffer drawn from the pool is owned by
+//!   exactly one payload until its consumer returns it with
+//!   [`BufferPool::put_f32`]/[`put_u8`](BufferPool::put_u8) (or
+//!   [`recycle`](BufferPool::recycle)s the whole [`Payload`]).  Returning
+//!   is optional for correctness — a dropped buffer is just a future
+//!   miss — so error paths need no cleanup bookkeeping.
+//! * Three atomic counters are the **allocation-counting test hook**
+//!   (`tests/pooling.rs`, `benches/hotpath.rs`): `gets` (requests),
+//!   `allocs` (misses — fresh heap allocations), `returns`.  After
+//!   warm-up a steady-state training loop must hold `allocs` flat while
+//!   `gets` keeps climbing.
+//! * The pool can be disabled ([`BufferPool::set_enabled`]): every get
+//!   then allocates fresh and every put drops, reproducing the pre-pool
+//!   allocation behaviour for A/B `param_hash` parity runs.
+//!
+//! The pool is shared per fabric ([`crate::transport::Fabric`]) and
+//! handed to the link via [`crate::transport::Link::attach_pool`] so
+//! TCP reader/writer threads draw frame buffers from the same shelves.
+
+use crate::codec::Payload;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Free buffers kept per capacity bucket before further returns of that
+/// capacity are dropped (bounds shelf growth under bursty in-flight).
+const BUCKET_CAP: usize = 64;
+
+/// Snapshot of the pool's counters — the allocation-counting hook.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Buffer requests served (hits + misses).
+    pub gets: u64,
+    /// Requests that missed the shelves and hit the allocator.  The
+    /// steady-state zero-allocation property is "this stops moving".
+    pub allocs: u64,
+    /// Buffers returned to the shelves.
+    pub returns: u64,
+}
+
+struct Shelf<T> {
+    buckets: Mutex<BTreeMap<usize, Vec<Vec<T>>>>,
+}
+
+impl<T> Shelf<T> {
+    fn new() -> Shelf<T> {
+        Shelf {
+            buckets: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Best-fit: smallest free buffer with `capacity >= min_cap`.
+    fn take(&self, min_cap: usize) -> Option<Vec<T>> {
+        let mut b = self.buckets.lock().unwrap();
+        let (&cap, _) = b.range(min_cap..).next()?;
+        let bucket = b.get_mut(&cap).unwrap();
+        let v = bucket.pop().unwrap();
+        if bucket.is_empty() {
+            b.remove(&cap);
+        }
+        Some(v)
+    }
+
+    fn put(&self, v: Vec<T>) {
+        let cap = v.capacity();
+        if cap == 0 {
+            return;
+        }
+        let mut b = self.buckets.lock().unwrap();
+        let bucket = b.entry(cap).or_default();
+        if bucket.len() < BUCKET_CAP {
+            bucket.push(v);
+        }
+    }
+
+    fn free_buffers(&self) -> usize {
+        self.buckets.lock().unwrap().values().map(Vec::len).sum()
+    }
+}
+
+/// Shared pool of reusable `Vec<f32>` / `Vec<u8>` payload buffers.  See
+/// the module docs for the design and ownership rules.
+pub struct BufferPool {
+    f32s: Shelf<f32>,
+    u8s: Shelf<u8>,
+    enabled: AtomicBool,
+    gets: AtomicU64,
+    allocs: AtomicU64,
+    returns: AtomicU64,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        BufferPool::new()
+    }
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool {
+            f32s: Shelf::new(),
+            u8s: Shelf::new(),
+            enabled: AtomicBool::new(true),
+            gets: AtomicU64::new(0),
+            allocs: AtomicU64::new(0),
+            returns: AtomicU64::new(0),
+        }
+    }
+
+    /// Turn pooling off (every get allocates fresh, every put drops) or
+    /// back on.  The A/B switch behind `RunConfig::pool` — numerics
+    /// must be bit-identical either way (`tests/pooling.rs`).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// A zero-filled `f32` buffer of exactly `len` elements.
+    pub fn get_f32(&self, len: usize) -> Vec<f32> {
+        self.gets.fetch_add(1, Ordering::Relaxed);
+        if let Some(mut v) = self.take_f32(len) {
+            v.clear();
+            v.resize(len, 0.0);
+            return v;
+        }
+        self.allocs.fetch_add(1, Ordering::Relaxed);
+        vec![0.0; len]
+    }
+
+    /// A pooled copy of `src` — the steady-state replacement for
+    /// `src.to_vec()` on every send path.
+    pub fn copy_f32(&self, src: &[f32]) -> Vec<f32> {
+        self.gets.fetch_add(1, Ordering::Relaxed);
+        if let Some(mut v) = self.take_f32(src.len()) {
+            v.clear();
+            v.extend_from_slice(src);
+            return v;
+        }
+        self.allocs.fetch_add(1, Ordering::Relaxed);
+        src.to_vec()
+    }
+
+    /// A zero-filled `u8` buffer of exactly `len` bytes (the TCP reader
+    /// overwrites it with `read_exact`).
+    pub fn get_u8(&self, len: usize) -> Vec<u8> {
+        self.gets.fetch_add(1, Ordering::Relaxed);
+        if let Some(mut v) = self.take_u8(len) {
+            v.clear();
+            v.resize(len, 0);
+            return v;
+        }
+        self.allocs.fetch_add(1, Ordering::Relaxed);
+        vec![0; len]
+    }
+
+    /// An *empty* `u8` buffer with `capacity >= cap` — for encoders
+    /// that build their output with `extend`/`push`.
+    pub fn get_u8_empty(&self, cap: usize) -> Vec<u8> {
+        self.gets.fetch_add(1, Ordering::Relaxed);
+        if let Some(mut v) = self.take_u8(cap) {
+            v.clear();
+            return v;
+        }
+        self.allocs.fetch_add(1, Ordering::Relaxed);
+        Vec::with_capacity(cap)
+    }
+
+    pub fn put_f32(&self, v: Vec<f32>) {
+        self.returns.fetch_add(1, Ordering::Relaxed);
+        if self.enabled() {
+            self.f32s.put(v);
+        }
+    }
+
+    pub fn put_u8(&self, v: Vec<u8>) {
+        self.returns.fetch_add(1, Ordering::Relaxed);
+        if self.enabled() {
+            self.u8s.put(v);
+        }
+    }
+
+    /// Return a consumed payload's buffer to the matching shelf.
+    pub fn recycle(&self, p: Payload) {
+        match p {
+            Payload::F32(v) => self.put_f32(v),
+            Payload::Bytes { bytes, .. } => self.put_u8(bytes),
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            gets: self.gets.load(Ordering::Relaxed),
+            allocs: self.allocs.load(Ordering::Relaxed),
+            returns: self.returns.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Free buffers currently shelved (both element types) — test hook.
+    pub fn free_buffers(&self) -> usize {
+        self.f32s.free_buffers() + self.u8s.free_buffers()
+    }
+
+    fn take_f32(&self, min_cap: usize) -> Option<Vec<f32>> {
+        if self.enabled() {
+            self.f32s.take(min_cap)
+        } else {
+            None
+        }
+    }
+
+    fn take_u8(&self, min_cap: usize) -> Option<Vec<u8>> {
+        if self.enabled() {
+            self.u8s.take(min_cap)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::Encoding;
+
+    #[test]
+    fn miss_then_hit_and_counters_track() {
+        let pool = BufferPool::new();
+        let v = pool.get_f32(100);
+        assert_eq!(v.len(), 100);
+        assert!(v.iter().all(|&x| x == 0.0));
+        assert_eq!(
+            pool.stats(),
+            PoolStats {
+                gets: 1,
+                allocs: 1,
+                returns: 0
+            }
+        );
+        pool.put_f32(v);
+        let w = pool.get_f32(100);
+        assert_eq!(w.len(), 100);
+        assert_eq!(
+            pool.stats(),
+            PoolStats {
+                gets: 2,
+                allocs: 1,
+                returns: 1
+            },
+            "second get of the same size must be a hit"
+        );
+    }
+
+    #[test]
+    fn buffers_are_reused_after_warm_up() {
+        let pool = BufferPool::new();
+        let v = pool.get_f32(64);
+        let ptr = v.as_ptr();
+        pool.put_f32(v);
+        let w = pool.get_f32(64);
+        assert_eq!(w.as_ptr(), ptr, "same buffer must come back (best-fit)");
+    }
+
+    #[test]
+    fn outstanding_gets_never_alias() {
+        let pool = BufferPool::new();
+        let a = pool.get_f32(32);
+        pool.put_f32(pool.copy_f32(&a)); // shelve one buffer
+        let b = pool.get_f32(32); // the shelved one
+        let c = pool.get_f32(32); // forced miss
+        assert_ne!(a.as_ptr(), b.as_ptr());
+        assert_ne!(a.as_ptr(), c.as_ptr());
+        assert_ne!(b.as_ptr(), c.as_ptr());
+    }
+
+    #[test]
+    fn best_fit_takes_smallest_adequate_buffer() {
+        let pool = BufferPool::new();
+        let small = pool.get_f32(10);
+        let big = pool.get_f32(1000);
+        let big_ptr = big.as_ptr();
+        pool.put_f32(small);
+        pool.put_f32(big);
+        // asking for 500 must skip the 10-cap buffer and reuse the big one
+        let v = pool.copy_f32(&[1.0; 500]);
+        assert_eq!(v.as_ptr(), big_ptr);
+        assert_eq!(v.len(), 500);
+        assert_eq!(pool.stats().allocs, 2, "no new allocation for the 500-get");
+    }
+
+    #[test]
+    fn copy_f32_matches_to_vec() {
+        let pool = BufferPool::new();
+        let src = vec![1.5f32, -2.25, 0.0, 3.0];
+        let v = pool.copy_f32(&src);
+        assert_eq!(v, src);
+        pool.put_f32(v);
+        let w = pool.copy_f32(&src[..2]);
+        assert_eq!(w, &src[..2], "reused buffer must not leak old tail");
+    }
+
+    #[test]
+    fn recycle_routes_payloads_to_matching_shelves() {
+        let pool = BufferPool::new();
+        pool.recycle(Payload::F32(vec![0.0; 8]));
+        pool.recycle(Payload::Bytes {
+            enc: Encoding::Bf16,
+            n: 4,
+            bytes: vec![0u8; 8],
+        });
+        assert_eq!(pool.free_buffers(), 2);
+        assert_eq!(pool.stats().returns, 2);
+        // and the f32 shelf serves f32 gets only
+        let v = pool.get_f32(8);
+        assert_eq!(pool.stats().allocs, 0, "f32 recycle must serve f32 get");
+        let b = pool.get_u8(8);
+        assert_eq!(pool.stats().allocs, 0, "u8 recycle must serve u8 get");
+        drop((v, b));
+    }
+
+    #[test]
+    fn disabled_pool_always_allocates_and_drops() {
+        let pool = BufferPool::new();
+        pool.set_enabled(false);
+        let v = pool.get_f32(16);
+        pool.put_f32(v);
+        assert_eq!(pool.free_buffers(), 0, "disabled pool must not shelve");
+        let w = pool.get_f32(16);
+        assert_eq!(pool.stats().allocs, 2, "every disabled get is a miss");
+        assert_eq!(pool.stats().gets, 2);
+        assert_eq!(pool.stats().returns, 1);
+        drop(w);
+    }
+
+    #[test]
+    fn steady_state_loop_stops_allocating() {
+        let pool = BufferPool::new();
+        for _ in 0..3 {
+            let v = pool.get_f32(4096);
+            pool.put_f32(v);
+        }
+        let warm = pool.stats().allocs;
+        for _ in 0..100 {
+            let v = pool.copy_f32(&[0.5; 4096]);
+            pool.put_f32(v);
+        }
+        assert_eq!(pool.stats().allocs, warm, "steady state must be alloc-free");
+        assert_eq!(pool.stats().gets, 103);
+    }
+
+    #[test]
+    fn bucket_cap_bounds_shelf_growth() {
+        let pool = BufferPool::new();
+        let bufs: Vec<_> = (0..2 * BUCKET_CAP).map(|_| pool.get_f32(8)).collect();
+        for b in bufs {
+            pool.put_f32(b);
+        }
+        assert!(pool.free_buffers() <= BUCKET_CAP);
+    }
+}

@@ -38,6 +38,7 @@ use super::link::{InprocLink, Key, Link, Stamp};
 use super::simnet::CostModel;
 use super::Tag;
 use crate::codec::{Codec, Payload};
+use crate::pool::BufferPool;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -80,6 +81,12 @@ pub struct Fabric {
     /// ([`Endpoint::isend`]); the traffic counters and the α–β stamps
     /// always charge *compressed* bytes ([`Payload::wire_bytes`]).
     codec: Codec,
+    /// Shared payload-buffer pool: every send/receive hot path draws
+    /// from (and recycles into) these shelves, so steady-state training
+    /// performs zero payload allocations per step (docs/perf.md).  Also
+    /// handed to the link ([`Link::attach_pool`]) so TCP I/O threads
+    /// cycle frame buffers through the same shelves.
+    pool: Arc<BufferPool>,
 }
 
 impl Fabric {
@@ -132,18 +139,27 @@ impl Fabric {
             "this link is wall-clock only (virtual stamps cannot cross it)"
         );
         let p = link.size();
+        let pool = Arc::new(BufferPool::new());
+        link.attach_pool(&pool);
         Arc::new(Fabric {
             link,
             cost,
             counters: (0..p).map(|_| Counters::default()).collect(),
             clock: Clock::new(mode, p),
             codec,
+            pool,
         })
     }
 
     /// The fabric's wire codec.
     pub fn codec(&self) -> Codec {
         self.codec
+    }
+
+    /// The fabric's shared payload-buffer pool (allocation-counting
+    /// hook included — [`BufferPool::stats`]).
+    pub fn pool(&self) -> &Arc<BufferPool> {
+        &self.pool
     }
 
     pub fn size(&self) -> usize {
@@ -293,8 +309,9 @@ impl RecvReq {
     /// thread harvests the whole collective.  On a wall fabric the
     /// stamps degenerate to `(0, wire_ns)`.
     pub fn test_raw(&mut self) -> Option<(Vec<f32>, u64, u64)> {
+        let pool = Arc::clone(&self.fabric.pool);
         self.test_raw_payload()
-            .map(|(p, sent_ns, at_ns)| (p.decode(), sent_ns, at_ns))
+            .map(|(p, sent_ns, at_ns)| (p.decode_pooled(&pool), sent_ns, at_ns))
     }
 
     /// [`test_raw`](Self::test_raw) without the decode: the payload
@@ -329,8 +346,9 @@ impl RecvReq {
     /// is atomic with respect to enqueue (no lost wake-ups), so no
     /// timeout poll is needed in either clock mode.
     pub fn wait_raw(self) -> (Vec<f32>, u64, u64) {
+        let pool = Arc::clone(&self.fabric.pool);
         let (p, sent_ns, at_ns) = self.wait_raw_payload();
-        (p.decode(), sent_ns, at_ns)
+        (p.decode_pooled(&pool), sent_ns, at_ns)
     }
 
     /// [`wait_raw`](Self::wait_raw) without the decode.
@@ -345,9 +363,11 @@ impl RecvReq {
 
     /// Blocking wait (MPI_Wait); returns the decoded payload and
     /// records the exposed communication time in
-    /// `Counters::recv_wait_ns`.
+    /// `Counters::recv_wait_ns`.  The decode is pooled (bit-identical
+    /// values; encoded frame bytes recycle to the fabric pool).
     pub fn wait(self) -> Vec<f32> {
-        self.wait_payload().decode()
+        let pool = Arc::clone(&self.fabric.pool);
+        self.wait_payload().decode_pooled(&pool)
     }
 
     /// [`wait`](Self::wait) without the decode: full clock/ledger
@@ -440,6 +460,13 @@ impl Endpoint {
         &self.fabric
     }
 
+    /// The fabric's shared payload-buffer pool — the hot send paths
+    /// draw their copies here ([`BufferPool::copy_f32`]) and consumers
+    /// return spent buffers.
+    pub fn pool(&self) -> &Arc<BufferPool> {
+        self.fabric.pool()
+    }
+
     /// Charge `secs` of modeled compute time to this rank's virtual
     /// clock.  No-op on a wall-clock fabric, where compute takes real
     /// time.  The coordinator calls this once per step with the
@@ -526,7 +553,9 @@ impl Endpoint {
         // channels (samples/labels/ctrl) always ride dense f32 — class
         // labels and shuffled sample rows must cross bit-exact.
         let payload = if tag.is_payload_kind() {
-            self.fabric.codec.encode_stateless(data)
+            self.fabric
+                .codec
+                .encode_stateless_pooled(data, &self.fabric.pool)
         } else {
             Payload::F32(data)
         };

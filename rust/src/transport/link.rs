@@ -30,8 +30,9 @@
 
 use super::Tag;
 use crate::codec::Payload;
+use crate::pool::BufferPool;
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Channel key: `(source rank, tag)` — mirrors MPI's (source, tag)
@@ -190,6 +191,13 @@ pub trait Link: Send + Sync {
     /// (Self::in_flight) counts only genuinely leaked messages.  No-op
     /// for the in-process link, whose enqueues are synchronous.
     fn quiesce(&self, _rank: usize) {}
+
+    /// Hand the owning fabric's [`BufferPool`] to the link so transport
+    /// threads can draw receive buffers from — and recycle flushed send
+    /// payloads into — the same shelves the coordinator uses.  Default:
+    /// no-op; the in-process link moves payloads by pointer and owns no
+    /// private buffers.
+    fn attach_pool(&self, _pool: &Arc<BufferPool>) {}
 }
 
 /// The in-process link: one [`Mailbox`] per rank, producers push

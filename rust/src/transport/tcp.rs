@@ -58,6 +58,7 @@ use super::link::{Key, Link, Mailbox, Stamp};
 use super::simnet::CostModel;
 use super::Tag;
 use crate::codec::{Encoding, Payload, INT8_CHUNK};
+use crate::pool::BufferPool;
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -349,6 +350,13 @@ pub struct TcpLink {
     unsent_bytes: Arc<AtomicUsize>,
     /// Writer + reader thread handles, joined at quiesce.
     io_threads: Mutex<Vec<IoThread>>,
+    /// The owning fabric's buffer pool, filled in by
+    /// [`Link::attach_pool`] after the io threads are already running
+    /// (the fabric is built around an established link).  Writers
+    /// recycle flushed payload buffers here; readers draw frame buffers
+    /// from it.  `None` until attached — threads fall back to fresh
+    /// allocations.
+    pool: Arc<Mutex<Option<Arc<BufferPool>>>>,
 }
 
 impl TcpLink {
@@ -362,6 +370,7 @@ impl TcpLink {
         let mbox = Arc::new(Mailbox::new());
         let unsent = Arc::new(AtomicUsize::new(0));
         let unsent_bytes = Arc::new(AtomicUsize::new(0));
+        let pool: Arc<Mutex<Option<Arc<BufferPool>>>> = Arc::new(Mutex::new(None));
         let mut writers: Vec<Option<FrameSender>> = (0..p).map(|_| None).collect();
         let mut io_threads = Vec::with_capacity(2 * (p - 1));
         for (dst, stream) in outbound.into_iter().enumerate() {
@@ -369,8 +378,9 @@ impl TcpLink {
             let (tx, rx) = mpsc::channel::<(Tag, Payload)>();
             let unsent = Arc::clone(&unsent);
             let unsent_bytes = Arc::clone(&unsent_bytes);
+            let pool = Arc::clone(&pool);
             io_threads.push(thread::spawn(move || {
-                let r = write_frames(stream, rx, &unsent, &unsent_bytes);
+                let r = write_frames(stream, rx, &unsent, &unsent_bytes, &pool);
                 if let Err(e) = &r {
                     // report at failure time: the training thread only
                     // sees a closed channel (and quiesce may never run
@@ -385,8 +395,9 @@ impl TcpLink {
         for (src, stream) in inbound {
             let mbox = Arc::clone(&mbox);
             let cost = cost.clone();
+            let pool = Arc::clone(&pool);
             io_threads.push(thread::spawn(move || {
-                let r = read_frames(stream, src, &mbox, &cost);
+                let r = read_frames(stream, src, &mbox, &cost, &pool);
                 if let Err(e) = &r {
                     eprintln!("tcp link rank {rank}: reader from rank {src} failed: {e}");
                 }
@@ -401,6 +412,7 @@ impl TcpLink {
             unsent,
             unsent_bytes,
             io_threads: Mutex::new(io_threads),
+            pool,
         }))
     }
 
@@ -424,8 +436,17 @@ fn write_frames(
     rx: mpsc::Receiver<(Tag, Payload)>,
     unsent: &AtomicUsize,
     unsent_bytes: &AtomicUsize,
+    pool: &Mutex<Option<Arc<BufferPool>>>,
 ) -> io::Result<()> {
     let mut w = io::BufWriter::new(stream);
+    // per-writer scratch, reused across every frame this thread ever
+    // sends: a dense payload is bulk-converted to LE bytes here and
+    // hits the socket as ONE write_all (the old path issued one write
+    // per element, re-filling the BufWriter's 8 KiB buffer hundreds of
+    // times per model slice).  `to_le_bytes` is a move on
+    // little-endian targets, so the conversion loop flattens to a copy
+    // there and stays correct (byte-swapping) on big-endian ones.
+    let mut scratch: Vec<u8> = Vec::new();
     for (tag, payload) in rx {
         let bytes = payload.wire_bytes();
         w.write_all(&(bytes as u32).to_le_bytes())?;
@@ -433,13 +454,13 @@ fn write_frames(
         w.write_all(&[payload.encoding() as u8])?;
         w.write_all(&(payload.len() as u32).to_le_bytes())?;
         match &payload {
-            // straight into the BufWriter — no intermediate payload
-            // buffer (this is the hot path: one model/layer slice per
-            // frame)
             Payload::F32(data) => {
+                scratch.clear();
+                scratch.reserve(4 * data.len());
                 for x in data {
-                    w.write_all(&x.to_le_bytes())?;
+                    scratch.extend_from_slice(&x.to_le_bytes());
                 }
+                w.write_all(&scratch)?;
             }
             Payload::Bytes { bytes: b, .. } => w.write_all(b)?,
         }
@@ -449,6 +470,11 @@ fn write_frames(
         // visible to the drain invariant
         unsent.fetch_sub(1, Ordering::Relaxed);
         unsent_bytes.fetch_sub(bytes, Ordering::Relaxed);
+        // the flushed payload's buffer cycles back to the fabric pool
+        // (attached after thread start; None only in link-level tests)
+        if let Some(p) = pool.lock().unwrap().as_ref() {
+            p.recycle(payload);
+        }
     }
     w.flush()?;
     Ok(())
@@ -475,6 +501,7 @@ fn read_frames(
     src: usize,
     mbox: &Mailbox,
     cost: &CostModel,
+    pool: &Mutex<Option<Arc<BufferPool>>>,
 ) -> io::Result<()> {
     let mut r = io::BufReader::new(stream);
     loop {
@@ -519,8 +546,13 @@ fn read_frames(
         // one bulk read straight into the buffer the mailbox keeps —
         // decoding happens once, at harvest, in the accounting layer
         // (the old path round-tripped every frame through a second
-        // per-chunk f32 conversion here in the reader thread)
-        let mut payload = vec![0u8; bytes];
+        // per-chunk f32 conversion here in the reader thread).  The
+        // buffer comes from the fabric pool when attached, so harvest's
+        // decode-in-place recycles it instead of freeing it.
+        let mut payload = match pool.lock().unwrap().as_ref() {
+            Some(p) => p.get_u8(bytes),
+            None => vec![0u8; bytes],
+        };
         r.read_exact(&mut payload)?;
         let now = Instant::now();
         let at = now + Duration::from_secs_f64(cost.message_time(bytes));
@@ -583,6 +615,10 @@ impl Link for TcpLink {
 
     fn supports_virtual(&self) -> bool {
         false
+    }
+
+    fn attach_pool(&self, pool: &Arc<BufferPool>) {
+        *self.pool.lock().unwrap() = Some(Arc::clone(pool));
     }
 
     /// Close this rank's write side (writer threads flush their queues

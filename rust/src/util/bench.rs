@@ -1,9 +1,13 @@
 //! Micro-benchmark harness (criterion stand-in for the offline env).
 //!
 //! `cargo bench` targets use `harness = false` and drive this directly:
-//! warmup, N timed samples, median/mean/p10/p90, throughput helpers, and
-//! paper-style table printing.
+//! warmup, N timed samples, median/mean/p10/p90, throughput helpers,
+//! paper-style table printing, and machine-readable `--json` emission
+//! ([`BenchReport`]) for the CI regression gate (`tools/bench_diff.py`,
+//! docs/perf.md).
 
+use crate::util::json::Json;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 pub struct Sample {
@@ -122,6 +126,71 @@ impl Table {
     }
 }
 
+/// Machine-readable bench output for the CI regression gate.
+///
+/// Entries are named metric sets; `tools/bench_diff.py` hard-gates the
+/// `allocs` (lower is better) and `gbs` (higher is better) keys against
+/// the committed `BENCH_*.json` baseline and treats timing keys
+/// (`median_secs`, …) as advisory — wall timings on shared runners are
+/// too noisy to gate.
+pub struct BenchReport {
+    bench: String,
+    entries: Vec<(String, Vec<(String, f64)>)>,
+}
+
+impl BenchReport {
+    pub fn new(bench: &str) -> BenchReport {
+        BenchReport {
+            bench: bench.to_string(),
+            entries: Vec::new(),
+        }
+    }
+
+    /// Record one entry's metrics (`[("gbs", 12.3), ("allocs", 0.0)]`).
+    pub fn entry(&mut self, name: &str, metrics: &[(&str, f64)]) {
+        self.entries.push((
+            name.to_string(),
+            metrics.iter().map(|&(k, v)| (k.to_string(), v)).collect(),
+        ));
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut entries = BTreeMap::new();
+        for (name, metrics) in &self.entries {
+            let m: BTreeMap<String, Json> = metrics
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                .collect();
+            entries.insert(name.clone(), Json::Obj(m));
+        }
+        let mut top = BTreeMap::new();
+        top.insert("bench".to_string(), Json::Str(self.bench.clone()));
+        top.insert("entries".to_string(), Json::Obj(entries));
+        Json::Obj(top)
+    }
+
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string() + "\n")?;
+        println!("wrote {path}");
+        Ok(())
+    }
+}
+
+/// Parse `--json [PATH]` from the bench binary's argv.  Returns the
+/// output path (the `default` when `--json` has no following path
+/// operand); `None` when `--json` was not passed.  Tolerates the flags
+/// cargo itself forwards to `harness = false` bench binaries
+/// (`--bench`, filter strings, …).
+pub fn json_out_path(default: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter().position(|a| a == "--json").map(|i| {
+        args.get(i + 1)
+            .filter(|s| !s.starts_with('-'))
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,5 +218,26 @@ mod tests {
         let mut t = Table::new(&["p", "eff"]);
         t.row(&["4".into(), "100.0".into()]);
         t.print("test");
+    }
+
+    #[test]
+    fn bench_report_emits_sorted_entries() {
+        let mut r = BenchReport::new("hotpath");
+        r.entry("zeta", &[("gbs", 10.0)]);
+        r.entry("alpha", &[("allocs", 0.0), ("median_secs", 0.5)]);
+        let j = r.to_json();
+        assert_eq!(j.get("bench").and_then(Json::as_str), Some("hotpath"));
+        let e = j.get("entries").unwrap();
+        assert_eq!(
+            e.get("alpha").unwrap().get("allocs").and_then(Json::as_f64),
+            Some(0.0)
+        );
+        assert_eq!(
+            e.get("zeta").unwrap().get("gbs").and_then(Json::as_f64),
+            Some(10.0)
+        );
+        // round-trips through the in-tree JSON codec
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
     }
 }

@@ -1,0 +1,182 @@
+//! Buffer-pool integration: the pooled hot path must be a pure
+//! allocation optimization (docs/perf.md).
+//!
+//! Three guarantees pinned here:
+//!
+//! 1. **A/B parity** — `--no-pool` (fresh allocation per message, the
+//!    pre-pool behaviour) and the default pooled path produce the same
+//!    `param_hash` for gossip/AGD/PS × layerwise over the in-process
+//!    link and the loopback-TCP mesh.  Pooling recycles capacity, never
+//!    bits: `copy_f32` fills exactly like `to_vec`, `decode_pooled`
+//!    like `decode`.
+//! 2. **Zero-allocation steady state** — on a single-threaded 2-rank
+//!    fabric (so the pool counters are exact) the send → recv → return
+//!    cycle and the p = 2 engine all-reduce stop allocating entirely
+//!    after warm-up.  This is the same invariant the CI bench gate pins
+//!    (`BENCH_hotpath.json` / `BENCH_collectives.json` `allocs` = 0).
+//! 3. **Sublinear allocations on real runs** — tripling the step count
+//!    of a multi-threaded training run must far less than triple
+//!    `PoolStats::allocs`: misses are a warm-up phenomenon, not a
+//!    per-step cost.
+
+use gossipgrad::codec::Codec;
+use gossipgrad::collectives::{Algorithm, IAllreduce};
+use gossipgrad::config::{Algo, RunConfig, Transport};
+use gossipgrad::coordinator::trainer::run_with_backend;
+use gossipgrad::nativenet::NativeMlp;
+use gossipgrad::transport::{CostModel, Fabric, Tag};
+use std::sync::Arc;
+
+fn tiny_backend() -> gossipgrad::coordinator::worker::Backend {
+    Arc::new(NativeMlp::new(vec![784, 16, 10], 16, 0))
+}
+
+fn base(algo: Algo) -> RunConfig {
+    RunConfig {
+        model: "mlp".into(),
+        algo,
+        ranks: 4,
+        steps: 4,
+        rows_per_rank: 32,
+        use_artifacts: false,
+        eval_every: 0,
+        seed: 11,
+        codec: Codec::F32,
+        ..Default::default()
+    }
+}
+
+/// Pooled vs `--no-pool` bit parity for every payload-bearing schedule,
+/// over both transports.  The pool recycles buffers through sender,
+/// wire and receiver — none of that may change a single bit.
+#[test]
+fn pooled_and_unpooled_runs_are_bit_identical() {
+    for algo in [Algo::Gossip, Algo::Agd, Algo::ParamServer] {
+        for layerwise in [false, true] {
+            for transport in [Transport::Inproc, Transport::Tcp] {
+                let mut pooled = base(algo);
+                pooled.layerwise = layerwise;
+                pooled.transport = transport;
+                let mut bare = pooled.clone();
+                bare.pool = false;
+                let a = run_with_backend(&pooled, tiny_backend())
+                    .unwrap_or_else(|e| panic!("{algo:?} {transport:?} pooled: {e}"));
+                let b = run_with_backend(&bare, tiny_backend())
+                    .unwrap_or_else(|e| panic!("{algo:?} {transport:?} no-pool: {e}"));
+                assert_eq!(
+                    a.param_hash(),
+                    b.param_hash(),
+                    "{algo:?} layerwise={layerwise} {transport:?}: \
+                     pooling changed numerics"
+                );
+                // drain invariant: recycling must not strand payloads
+                assert_eq!(a.in_flight_msgs, 0);
+                assert_eq!(a.in_flight_bytes, 0);
+                // disabled pool = pre-pool behaviour: every get misses
+                assert_eq!(
+                    b.pool_stats.allocs, b.pool_stats.gets,
+                    "{algo:?} {transport:?}: disabled pool must not recycle"
+                );
+            }
+        }
+    }
+}
+
+/// Steady-state transport cycle on a single-threaded 2-rank fabric:
+/// after warm-up, `copy_f32 → isend → recv → put_f32` must be
+/// allocation-free — the counters are exact here because no other
+/// thread touches the pool.
+#[test]
+fn steady_state_send_recv_cycle_is_allocation_free() {
+    let fabric = Fabric::new(2, CostModel::zero());
+    let e0 = fabric.endpoint(0);
+    let e1 = fabric.endpoint(1);
+    let pool = e0.pool();
+    let payload = vec![1.25f32; 4096];
+    for _ in 0..3 {
+        e0.isend(1, Tag::MODEL, pool.copy_f32(&payload));
+        pool.put_f32(e1.recv(0, Tag::MODEL));
+    }
+    let warm = pool.stats();
+    assert!(warm.allocs > 0, "cold pool must have allocated");
+    for _ in 0..100 {
+        e0.isend(1, Tag::MODEL, pool.copy_f32(&payload));
+        let got = e1.recv(0, Tag::MODEL);
+        assert_eq!(got, payload, "recycled buffer corrupted the payload");
+        pool.put_f32(got);
+    }
+    let after = pool.stats();
+    assert_eq!(
+        after.allocs, warm.allocs,
+        "steady-state transport must not allocate"
+    );
+    assert_eq!(after.gets, warm.gets + 100);
+    assert_eq!(fabric.in_flight(), 0);
+}
+
+/// The engine all-reduce's internal round payloads recycle too: a p = 2
+/// collective pumped from one thread allocates only during warm-up.
+#[test]
+fn steady_state_engine_allreduce_is_allocation_free() {
+    let fabric = Fabric::new(2, CostModel::zero());
+    let e0 = fabric.endpoint(0);
+    let e1 = fabric.endpoint(1);
+    let pool = e0.pool();
+    let src0 = vec![1.0f32; 2048];
+    let src1 = vec![3.0f32; 2048];
+    let cycle = |it: usize| {
+        let mut a =
+            IAllreduce::post(&e0, Algorithm::RecursiveDoubling, pool.copy_f32(&src0), it);
+        let mut b =
+            IAllreduce::post(&e1, Algorithm::RecursiveDoubling, pool.copy_f32(&src1), it);
+        while !(a.progress(&e0) && b.progress(&e1)) {}
+        let ra = a.wait(&e0);
+        let rb = b.wait(&e1);
+        assert!(ra.iter().all(|&x| x == 2.0), "bad reduction: {:?}", &ra[..4]);
+        assert!(rb.iter().all(|&x| x == 2.0), "bad reduction: {:?}", &rb[..4]);
+        pool.put_f32(ra);
+        pool.put_f32(rb);
+    };
+    for it in 0..3 {
+        cycle(it);
+    }
+    let warm = pool.stats().allocs;
+    for it in 0..50 {
+        cycle(3 + it);
+    }
+    assert_eq!(
+        pool.stats().allocs,
+        warm,
+        "steady-state engine all-reduce must not allocate"
+    );
+    assert_eq!(fabric.in_flight(), 0);
+}
+
+/// On a real multi-threaded training run, allocations are a warm-up
+/// cost: tripling the step count must far less than triple the miss
+/// count, and recycling must actually happen (hits and returns > 0).
+#[test]
+fn training_run_allocations_are_sublinear_in_steps() {
+    let run = |steps: usize| {
+        let mut c = base(Algo::Gossip);
+        c.layerwise = true;
+        c.steps = steps;
+        run_with_backend(&c, tiny_backend()).unwrap().pool_stats
+    };
+    let short = run(4);
+    let long = run(12);
+    assert!(
+        short.gets > short.allocs,
+        "pooled gossip run never hit the shelves: {short:?}"
+    );
+    assert!(short.returns > 0, "no buffer ever returned: {short:?}");
+    assert!(
+        long.allocs < 3 * short.allocs,
+        "allocations scaled with steps (no steady state): \
+         {} steps -> {} allocs, {} steps -> {} allocs",
+        4,
+        short.allocs,
+        12,
+        long.allocs
+    );
+}

@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""CI bench regression gate: diff a fresh BENCH_*.json against the
+committed baseline.
+
+Usage:
+    python3 tools/bench_diff.py BASELINE.json CURRENT.json [--threshold 0.25]
+
+Gating policy (docs/perf.md):
+
+* ``allocs``  — hard gate, lower is better.  A baseline of 0 means the
+  zero-allocation steady-state invariant: ANY current allocation fails.
+  A nonzero baseline fails when current exceeds baseline * (1 + threshold).
+* ``gbs``     — hard gate, higher is better.  Fails when current drops
+  below baseline * (1 - threshold).
+* every other metric (``median_secs``, ...) — advisory only: printed,
+  never fails the build.  Wall timings on shared CI runners are too
+  noisy to gate; bandwidth floors are set conservatively low instead.
+
+Entries present in the baseline but missing from the current report fail
+(a silently dropped benchmark is a regression in coverage).  Entries new
+in the current report are reported but pass — commit a refreshed
+baseline to start gating them.
+
+stdlib only; exit code 0 = pass, 1 = regression.
+"""
+
+import argparse
+import json
+import sys
+
+HARD_LOWER_IS_BETTER = ("allocs",)
+HARD_HIGHER_IS_BETTER = ("gbs",)
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if "entries" not in doc:
+        sys.exit(f"bench_diff: {path}: no 'entries' key")
+    return doc
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.25,
+        help="fractional regression allowed on gated metrics (default 0.25)",
+    )
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    cur = load(args.current)
+    if base.get("bench") != cur.get("bench"):
+        sys.exit(
+            f"bench_diff: bench name mismatch: "
+            f"{base.get('bench')!r} vs {cur.get('bench')!r}"
+        )
+
+    failures = []
+    rows = []
+    for entry, bmetrics in sorted(base["entries"].items()):
+        cmetrics = cur["entries"].get(entry)
+        if cmetrics is None:
+            failures.append(f"{entry}: missing from current report")
+            continue
+        for key, bval in sorted(bmetrics.items()):
+            cval = cmetrics.get(key)
+            if cval is None:
+                failures.append(f"{entry}.{key}: metric missing from current report")
+                continue
+            if key in HARD_LOWER_IS_BETTER:
+                limit = bval * (1.0 + args.threshold)
+                ok = cval == 0 if bval == 0 else cval <= limit
+                gate = "GATE"
+            elif key in HARD_HIGHER_IS_BETTER:
+                limit = bval * (1.0 - args.threshold)
+                ok = cval >= limit
+                gate = "GATE"
+            else:
+                ok = True
+                gate = "info"
+            status = "ok" if ok else "FAIL"
+            rows.append((entry, key, gate, bval, cval, status))
+            if not ok:
+                failures.append(
+                    f"{entry}.{key}: baseline {bval:g}, current {cval:g} "
+                    f"(threshold {args.threshold:.0%})"
+                )
+
+    for entry in sorted(set(cur["entries"]) - set(base["entries"])):
+        rows.append((entry, "-", "new", "-", "-", "ungated"))
+
+    w = max((len(r[0]) for r in rows), default=10)
+    print(f"{'entry':<{w}}  {'metric':<12} {'kind':<5} {'baseline':>12} {'current':>12}  status")
+    for entry, key, gate, bval, cval, status in rows:
+        b = f"{bval:.4g}" if isinstance(bval, float) else str(bval)
+        c = f"{cval:.4g}" if isinstance(cval, float) else str(cval)
+        print(f"{entry:<{w}}  {key:<12} {gate:<5} {b:>12} {c:>12}  {status}")
+
+    if failures:
+        print(f"\nbench_diff: {len(failures)} regression(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+    print("\nbench_diff: pass")
+
+
+if __name__ == "__main__":
+    main()
