@@ -54,6 +54,7 @@ pub const FLAGS: &[&str] = &[
 /// | `layerwise`, `comm_thread`, `sync_mix` | flags of the same name |
 /// | `codec` | `--codec f32\|bf16\|int8\|topk` |
 /// | `pool` | `--no-pool` (disable payload buffer recycling) |
+/// | `fault_plan` | `--kill-rank R@S[,..]`, `--join-at-step R@S[,..]`, `--slow-rank R@S:F[,..]`, `--drop-frac F`, `--dup-frac F`, `--fault-seed N` |
 pub fn from_args(args: &Args) -> Result<RunConfig> {
     let mut cfg = match args.get("config") {
         Some(path) => RunConfig::load(path).map_err(anyhow::Error::msg)?,
@@ -183,7 +184,56 @@ pub fn from_args(args: &Args) -> Result<RunConfig> {
     if let Some(d) = args.get("resume") {
         cfg.resume_from = Some(d.to_string());
     }
+    // ---- fault plan (docs/fault-tolerance.md) ------------------------
+    if let Some(v) = args.get("kill-rank") {
+        cfg.fault_plan.kills = parse_rank_steps(v).context("--kill-rank")?;
+    }
+    if let Some(v) = args.get("join-at-step") {
+        cfg.fault_plan.joins = parse_rank_steps(v).context("--join-at-step")?;
+    }
+    if let Some(v) = args.get("slow-rank") {
+        cfg.fault_plan.slows = parse_slows(v).context("--slow-rank")?;
+    }
+    cfg.fault_plan.drop_frac = args.f64_or("drop-frac", cfg.fault_plan.drop_frac);
+    cfg.fault_plan.dup_frac = args.f64_or("dup-frac", cfg.fault_plan.dup_frac);
+    cfg.fault_plan.seed =
+        args.usize_or("fault-seed", cfg.fault_plan.seed as usize) as u64;
     Ok(cfg)
+}
+
+/// Parse `R@S[,R@S...]` lists (`--kill-rank 3@10`, `--join-at-step 7@14`).
+fn parse_rank_steps(v: &str) -> Result<Vec<(usize, usize)>> {
+    v.split(',')
+        .map(|e| {
+            let (r, s) = e
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("expected R@S, got {e:?}"))?;
+            Ok((
+                r.trim().parse().with_context(|| format!("rank in {e:?}"))?,
+                s.trim().parse().with_context(|| format!("step in {e:?}"))?,
+            ))
+        })
+        .collect()
+}
+
+/// Parse `R@S:F[,R@S:F...]` lists (`--slow-rank 2@5:3.0` = rank 2's
+/// frames take 3× wire time from message round 5 on).
+fn parse_slows(v: &str) -> Result<Vec<(usize, usize, f64)>> {
+    v.split(',')
+        .map(|e| {
+            let (rs, f) = e
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("expected R@S:F, got {e:?}"))?;
+            let (r, s) = rs
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("expected R@S:F, got {e:?}"))?;
+            Ok((
+                r.trim().parse().with_context(|| format!("rank in {e:?}"))?,
+                s.trim().parse().with_context(|| format!("step in {e:?}"))?,
+                f.trim().parse().with_context(|| format!("factor in {e:?}"))?,
+            ))
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -266,6 +316,27 @@ mod tests {
         assert!(
             from_args(&parse("train --workload lenet3 --noise 0.1")).is_err()
         );
+    }
+
+    #[test]
+    fn fault_flags_build_the_plan() {
+        let c = from_args(&parse(
+            "train --kill-rank 3@10,5@12 --join-at-step 7@14 \
+             --slow-rank 2@5:3.0 --drop-frac 0.05 --dup-frac 0.01 \
+             --fault-seed 77",
+        ))
+        .unwrap();
+        assert_eq!(c.fault_plan.kills, vec![(3, 10), (5, 12)]);
+        assert_eq!(c.fault_plan.joins, vec![(7, 14)]);
+        assert_eq!(c.fault_plan.slows, vec![(2, 5, 3.0)]);
+        assert!((c.fault_plan.drop_frac - 0.05).abs() < 1e-12);
+        assert!((c.fault_plan.dup_frac - 0.01).abs() < 1e-12);
+        assert_eq!(c.fault_plan.seed, 77);
+        // no fault flags → the default plan (omitted from config JSON)
+        assert!(from_args(&parse("train")).unwrap().fault_plan.is_default());
+        // malformed entries fail loudly
+        assert!(from_args(&parse("train --kill-rank 3-10")).is_err());
+        assert!(from_args(&parse("train --slow-rank 2@5")).is_err());
     }
 
     #[test]

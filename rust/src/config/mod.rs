@@ -7,6 +7,7 @@
 
 use crate::codec::Codec;
 use crate::collectives::Algorithm;
+use crate::membership::FaultPlan;
 use crate::transport::CostModel;
 use crate::util::json::{self, num, obj, Json};
 
@@ -212,6 +213,13 @@ pub struct RunConfig {
     /// either way (the pool only changes where buffers come from, never
     /// their contents — see docs/perf.md and `tests/pooling.rs`).
     pub pool: bool,
+    /// Seeded fault scenario: planned kills/joins/slowdowns and
+    /// frame-level drop/dup fractions (`--kill-rank`, `--join-at-step`,
+    /// `--drop-frac`, …; docs/fault-tolerance.md).  The plan rides in
+    /// the config so every rank derives identical membership views with
+    /// no consensus traffic.  Default = no faults, omitted from the
+    /// JSON so historical content hashes are unchanged.
+    pub fault_plan: FaultPlan,
 }
 
 impl Default for RunConfig {
@@ -250,6 +258,7 @@ impl Default for RunConfig {
             transport: Transport::Inproc,
             codec: Codec::F32,
             pool: true,
+            fault_plan: FaultPlan::default(),
         }
     }
 }
@@ -344,6 +353,9 @@ impl RunConfig {
         if let LrSchedule::Step { every, gamma } = self.lr_schedule {
             pairs.push(("lr_step_every", num(every as f64)));
             pairs.push(("lr_step_gamma", num(gamma)));
+        }
+        if !self.fault_plan.is_default() {
+            pairs.push(("fault_plan", self.fault_plan.to_json()));
         }
         obj(pairs)
     }
@@ -443,6 +455,9 @@ impl RunConfig {
         }
         if let Some(v) = j.get("pool").and_then(Json::as_bool) {
             c.pool = v;
+        }
+        if let Some(v) = j.get("fault_plan") {
+            c.fault_plan = FaultPlan::from_json(v)?;
         }
         if let Some(sched) = j.get("lr_step_every").and_then(Json::as_usize) {
             let gamma = j
@@ -590,6 +605,14 @@ mod tests {
         c.transport = Transport::Tcp;
         c.codec = Codec::TopK;
         c.pool = false;
+        c.fault_plan = FaultPlan {
+            kills: vec![(3, 10)],
+            joins: vec![(5, 7)],
+            slows: vec![(1, 2, 4.0)],
+            drop_frac: 0.05,
+            dup_frac: 0.02,
+            seed: (1u64 << 53) + 9,
+        };
         let j = c.to_json();
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(back, c, "to_json/from_json must round-trip losslessly");
@@ -623,6 +646,13 @@ mod tests {
         // numeric seeds in hand-written presets still parse
         let j = Json::parse(r#"{"seed": 77}"#).unwrap();
         assert_eq!(RunConfig::from_json(&j).unwrap().seed, 77);
+        // the default (empty) fault plan is omitted entirely, so every
+        // pre-existing content hash is unchanged…
+        assert!(RunConfig::default().to_json().get("fault_plan").is_none());
+        // …and a non-default plan reshapes the scenario identity
+        let mut f = RunConfig::default();
+        f.fault_plan.drop_frac = 0.1;
+        assert_ne!(f.content_hash(), RunConfig::default().content_hash());
     }
 
     #[test]

@@ -47,6 +47,7 @@
 use super::worker::Worker;
 use crate::codec::{mix_payload_recycle, Encoder};
 use crate::config::Algo;
+use crate::membership::{collapsed_exchange, FaultPlan, Membership, View};
 use crate::topology::{
     Dissemination, Exchange, Hypercube, RandomGossip, Rotation, Topology,
 };
@@ -94,9 +95,79 @@ impl GossipTopology {
 /// In-flight model receive: the layer-sliced irecvs posted for one
 /// exchange, indexed by backend layer-table position so the pipelined
 /// schedule can drain exactly the layer whose backprop slice just
-/// completed (`None` once consumed).
+/// completed (`None` once consumed — or never posted, when the fault
+/// plan drops that slice's frame on the wire).  `src`/`step` let the
+/// harvest sites recompute each slice's tag, which is what the
+/// duplicate-discard check keys on.
 struct PendingModel {
+    src: usize,
+    step: usize,
     reqs: Vec<Option<(usize, RecvReq)>>, // [layer] -> (offset, request)
+}
+
+/// Does the fault plan drop the `(src → dst, tag)` frame?  The exact
+/// predicate `FaultyLink::enqueue` evaluates on the sender, so the
+/// receiver can decline to post an irecv for a frame that will never
+/// arrive instead of blocking on it.  `None` (fault-free run) is a
+/// constant `false` — the historical path is untouched.
+fn frame_dropped(fp: Option<&FaultPlan>, src: usize, dst: usize, tag: Tag) -> bool {
+    fp.map_or(false, |p| src != dst && p.dropped(src, dst, tag.0))
+}
+
+/// After harvesting a frame the plan delivered twice, pop and recycle
+/// the second copy so the mailbox (and the `in_flight` gauges) drain to
+/// zero.  Mixing the duplicate again would double-count the partner
+/// model; discarding it makes "delivered twice" numerically identical
+/// to "delivered once", which the determinism tests rely on.
+fn discard_dup(ep: &Endpoint, fp: Option<&FaultPlan>, src: usize, tag: Tag) {
+    let me = ep.rank();
+    if fp.map_or(false, |p| src != me && p.duplicated(src, me, tag.0)) {
+        let (dup, _, _) = ep.irecv(src, tag).wait_raw_payload();
+        ep.pool().recycle(dup);
+    }
+}
+
+/// Partner selection through the membership view.  At full view (or in
+/// a fault-free run, where `view` is `None`) this is exactly
+/// `topo.exchange` — bit-identical routing to every pre-membership run.
+/// Under a degraded view the dead slots *collapse*: the rotation
+/// epoch's permutation (or the plain alive ordering) is filtered to
+/// survivors and the dissemination formula reruns over the shorter
+/// list, so every survivor pairs with a live partner at every gossip
+/// step and no exchange ever stalls on a dead rank.
+fn exchange_for(
+    topo: &GossipTopology,
+    view: Option<&View>,
+    rank: usize,
+    gossip_step: usize,
+) -> Exchange {
+    match view {
+        Some(v) if !v.is_full() => {
+            let order: Vec<usize> = match topo {
+                GossipTopology::Rotated(t) => t
+                    .perm(t.epoch(gossip_step))
+                    .iter()
+                    .copied()
+                    .filter(|&r| v.is_alive(r))
+                    .collect(),
+                _ => v.alive_ranks(),
+            };
+            let (send_to, recv_from) = collapsed_exchange(&order, rank, gossip_step);
+            Exchange { send_to, recv_from }
+        }
+        _ => topo.exchange(rank, gossip_step),
+    }
+}
+
+/// FNV-1a over the raw parameter bits — the same digest
+/// `RunResult::param_hash` uses, computed per rank at the bootstrap
+/// handoff so the join-parity test can compare donor and joiner.
+fn params_hash(params: &[f32]) -> u64 {
+    let mut bytes = Vec::with_capacity(params.len() * 4);
+    for x in params {
+        bytes.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+    crate::util::fnv1a64(&bytes)
 }
 
 /// Run GossipGraD on one rank for `cfg.steps` steps.
@@ -139,7 +210,75 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
     // historical param_hash exactly
     let mut enc = Encoder::new(w.cfg.codec);
 
-    for step in 0..steps {
+    // ---- membership (docs/fault-tolerance.md) ------------------------
+    // Every rank holds the same fault plan (it rides in the config), so
+    // view transitions are consensus-free: each rank evaluates
+    // `view_at(step)` locally and they all agree.  Fault-free runs keep
+    // `fp = None` and every fault hook below compiles to the historical
+    // behaviour.
+    let me = w.rank;
+    let member = Membership::new(w.cfg.ranks, w.cfg.fault_plan.clone());
+    let plan = member.plan().clone();
+    let faulty = plan.has_faults();
+    let fp: Option<&FaultPlan> = if faulty { Some(&plan) } else { None };
+    let kill_at = plan.kill_step(me);
+    let join_at = plan.join_step(me);
+    // reroute the sample-shuffle ring whenever the view's epoch changes;
+    // `None` forces a reroute at the first iterated step, which is what
+    // hands a late joiner its real neighbours before its first exchange
+    let mut cur_epoch: Option<usize> = None;
+
+    // ---- late-rank bootstrap ----------------------------------------
+    // A joiner idles until its join step, then blocks for the donor's
+    // parameter snapshot (CTRL rides dense f32 and is exempt from
+    // drop/dup, so the handoff is lossless).  Momentum restarts at zero
+    // — the joiner re-warms it, exactly like a fresh rank.  Both sides
+    // record the snapshot's hash for the join-parity test.
+    let start = if let Some(js) = join_at {
+        let donor = member
+            .donor_for(me, js)
+            .expect("validate guarantees every joiner a donor");
+        w.params = ep.irecv(donor, Tag::CTRL.round(js)).wait();
+        w.metrics.joined_step = Some(js);
+        w.metrics.join_hash = Some(params_hash(&w.params));
+        // align the ring-shuffle step counter so the joiner's first
+        // give_back tags round `js`, matching what its rerouted
+        // neighbours send and expect at that step
+        w.shuffle.sync_step(js);
+        js
+    } else {
+        0
+    };
+
+    for step in start..steps {
+        // a killed rank stops at the *start* of its kill step: it
+        // completed every earlier step (including the sends), so its
+        // partners' already-posted receives all arrive, and the normal
+        // end-of-run drain below leaves the fabric clean
+        if kill_at == Some(step) {
+            w.metrics.death_step = Some(step);
+            break;
+        }
+        let mut view: Option<View> = None;
+        if faulty {
+            let v = member.view_at(step);
+            if cur_epoch != Some(v.epoch) {
+                cur_epoch = Some(v.epoch);
+                let (next, prev) = v.ring_neighbors(me);
+                w.shuffle.reroute(next, prev);
+            }
+            // donor duty: ship the bootstrap snapshot to any rank that
+            // joins at this step (params as of the start of the step —
+            // the joiner proceeds from exactly this state)
+            for &(j, js) in &plan.joins {
+                if step == js && j != me && member.donor_for(j, js) == Some(me) {
+                    ep.isend(j, Tag::CTRL.round(js), w.params.clone());
+                    w.metrics.join_hash = Some(params_hash(&w.params));
+                }
+            }
+            view = Some(v);
+        }
+
         let t0 = ep.mark();
         let lr = w.lr_at(step);
         let batch = w.shuffle.take(ep);
@@ -160,7 +299,7 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
             None
         };
         let exchange = if gossip_now {
-            Some(topo.exchange(w.rank, gossip_step))
+            Some(exchange_for(topo, view.as_ref(), w.rank, gossip_step))
         } else {
             None
         };
@@ -185,6 +324,7 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
                             data,
                             ep.pool(),
                         );
+                        discard_dup(ep, fp, pm.src, Tag::layer(li).round(pm.step));
                     }
                 }
                 w.backend.apply_update_slice(
@@ -208,17 +348,26 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
                             ),
                         );
                         if random_senders.is_none() && !sync_mix {
-                            new_reqs[li] = Some((
-                                off,
-                                ep.irecv(ex.recv_from, Tag::layer(li).round(step)),
-                            ));
+                            let tag = Tag::layer(li).round(step);
+                            // a frame the plan drops never arrives — the
+                            // receiver skips the irecv instead of
+                            // blocking on it (same predicate the sender
+                            // evaluates; see `frame_dropped`)
+                            if !frame_dropped(fp, ex.recv_from, w.rank, tag) {
+                                new_reqs[li] =
+                                    Some((off, ep.irecv(ex.recv_from, tag)));
+                            }
                         }
                     }
                 }
             }
             pending = None;
             if new_reqs.iter().any(Option::is_some) {
-                pending = Some(PendingModel { reqs: new_reqs });
+                pending = Some(PendingModel {
+                    src: exchange.as_ref().map_or(w.rank, |e| e.recv_from),
+                    step,
+                    reqs: new_reqs,
+                });
             }
         } else {
             // ---- monolithic schedule --------------------------------
@@ -230,14 +379,18 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
             // is elementwise-identical to buffering the whole partner
             // model first
             if let Some(pm) = pending.take() {
+                let PendingModel { src, step: sent_step, reqs } = pm;
                 let tw = ep.mark();
-                for (off, req) in pm.reqs.into_iter().flatten() {
-                    let data = req.wait_payload();
-                    mix_payload_recycle(
-                        &mut w.params[off..off + data.len()],
-                        data,
-                        ep.pool(),
-                    );
+                for (li, slot) in reqs.into_iter().enumerate() {
+                    if let Some((off, req)) = slot {
+                        let data = req.wait_payload();
+                        mix_payload_recycle(
+                            &mut w.params[off..off + data.len()],
+                            data,
+                            ep.pool(),
+                        );
+                        discard_dup(ep, fp, src, Tag::layer(li).round(sent_step));
+                    }
                 }
                 comm_wait += ep.comm_wait_since(&tw);
             }
@@ -248,16 +401,25 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
             if let Some(ex) = &exchange {
                 if random_senders.is_none() && ex.send_to != w.rank {
                     send_model(ep, ex.send_to, step, &w.params, &layers, &mut enc);
-                    let pm = post_recvs(ep, ex.recv_from, step, &layers);
+                    let pm = post_recvs(ep, ex.recv_from, step, &layers, fp);
                     if sync_mix {
+                        let PendingModel { src, step: sent_step, reqs } = pm;
                         let tw = ep.mark();
-                        for (off, req) in pm.reqs.into_iter().flatten() {
-                            let data = req.wait_payload();
-                            mix_payload_recycle(
-                                &mut w.params[off..off + data.len()],
-                                data,
-                                ep.pool(),
-                            );
+                        for (li, slot) in reqs.into_iter().enumerate() {
+                            if let Some((off, req)) = slot {
+                                let data = req.wait_payload();
+                                mix_payload_recycle(
+                                    &mut w.params[off..off + data.len()],
+                                    data,
+                                    ep.pool(),
+                                );
+                                discard_dup(
+                                    ep,
+                                    fp,
+                                    src,
+                                    Tag::layer(li).round(sent_step),
+                                );
+                            }
                         }
                         comm_wait += ep.comm_wait_since(&tw);
                     } else {
@@ -274,14 +436,17 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
         if let Some(senders) = random_senders {
             let tw = ep.mark();
             for src in senders {
-                let pm = post_recvs(ep, src, step, &layers);
-                for (off, req) in pm.reqs.into_iter().flatten() {
-                    let data = req.wait_payload();
-                    mix_payload_recycle(
-                        &mut w.params[off..off + data.len()],
-                        data,
-                        ep.pool(),
-                    );
+                let pm = post_recvs(ep, src, step, &layers, fp);
+                for (li, slot) in pm.reqs.into_iter().enumerate() {
+                    if let Some((off, req)) = slot {
+                        let data = req.wait_payload();
+                        mix_payload_recycle(
+                            &mut w.params[off..off + data.len()],
+                            data,
+                            ep.pool(),
+                        );
+                        discard_dup(ep, fp, src, Tag::layer(li).round(step));
+                    }
                 }
             }
             comm_wait += ep.comm_wait_since(&tw);
@@ -290,15 +455,23 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
             // current exchange once all layers are updated and sent
             if let Some(ex) = &exchange {
                 if ex.send_to != w.rank {
-                    let pm = post_recvs(ep, ex.recv_from, step, &layers);
+                    let pm = post_recvs(ep, ex.recv_from, step, &layers, fp);
                     let tw = ep.mark();
-                    for (off, req) in pm.reqs.into_iter().flatten() {
-                        let data = req.wait_payload();
-                        mix_payload_recycle(
-                            &mut w.params[off..off + data.len()],
-                            data,
-                            ep.pool(),
-                        );
+                    for (li, slot) in pm.reqs.into_iter().enumerate() {
+                        if let Some((off, req)) = slot {
+                            let data = req.wait_payload();
+                            mix_payload_recycle(
+                                &mut w.params[off..off + data.len()],
+                                data,
+                                ep.pool(),
+                            );
+                            discard_dup(
+                                ep,
+                                fp,
+                                ex.recv_from,
+                                Tag::layer(li).round(step),
+                            );
+                        }
                     }
                     comm_wait += ep.comm_wait_since(&tw);
                 }
@@ -323,9 +496,17 @@ pub fn run_gossip(w: &mut Worker, ep: &Endpoint, topo: &GossipTopology, sync_mix
     // belongs to no step and must not perturb the overlap ledger
     // (the mix itself still runs: numerics are unchanged)
     if let Some(pm) = pending.take() {
-        for (off, req) in pm.reqs.into_iter().flatten() {
-            let (data, _, _) = req.wait_raw_payload();
-            mix_payload_recycle(&mut w.params[off..off + data.len()], data, ep.pool());
+        let PendingModel { src, step: sent_step, reqs } = pm;
+        for (li, slot) in reqs.into_iter().enumerate() {
+            if let Some((off, req)) = slot {
+                let (data, _, _) = req.wait_raw_payload();
+                mix_payload_recycle(
+                    &mut w.params[off..off + data.len()],
+                    data,
+                    ep.pool(),
+                );
+                discard_dup(ep, fp, src, Tag::layer(li).round(sent_step));
+            }
         }
     }
     // ... and any in-flight sample batches, so the fabric ends clean
@@ -354,19 +535,31 @@ fn send_model(
     }
 }
 
-/// Post per-layer irecvs for the model sent by `src` at `step`.
+/// Post per-layer irecvs for the model sent by `src` at `step`,
+/// skipping any slice the fault plan drops on the wire (that frame was
+/// never enqueued on the sender, so an irecv for it would block
+/// forever).
 fn post_recvs(
     ep: &Endpoint,
     src: usize,
     step: usize,
     layers: &[(usize, usize)],
+    fp: Option<&FaultPlan>,
 ) -> PendingModel {
+    let me = ep.rank();
     PendingModel {
+        src,
+        step,
         reqs: layers
             .iter()
             .enumerate()
             .map(|(li, &(off, _))| {
-                Some((off, ep.irecv(src, Tag::layer(li).round(step))))
+                let tag = Tag::layer(li).round(step);
+                if frame_dropped(fp, src, me, tag) {
+                    None
+                } else {
+                    Some((off, ep.irecv(src, tag)))
+                }
             })
             .collect(),
     }
@@ -375,6 +568,44 @@ fn post_recvs(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn exchange_for_full_view_is_bit_identical_to_topology() {
+        let topo = GossipTopology::build(crate::config::Algo::Gossip, 8, true, 7);
+        let full = View::full(8);
+        for step in 0..40 {
+            for r in 0..8 {
+                assert_eq!(
+                    exchange_for(&topo, Some(&full), r, step),
+                    topo.exchange(r, step)
+                );
+                assert_eq!(exchange_for(&topo, None, r, step), topo.exchange(r, step));
+            }
+        }
+    }
+
+    #[test]
+    fn exchange_for_degraded_view_pairs_survivors_bijectively() {
+        use crate::membership::{FaultPlan, Membership};
+        let topo = GossipTopology::build(crate::config::Algo::Gossip, 8, true, 7);
+        let m = Membership::new(
+            8,
+            FaultPlan { kills: vec![(3, 10)], ..Default::default() },
+        );
+        let v = m.view_at(10);
+        for step in 0..30 {
+            let mut targets = std::collections::HashSet::new();
+            for r in v.alive_ranks() {
+                let ex = exchange_for(&topo, Some(&v), r, step);
+                assert!(v.is_alive(ex.send_to), "never routed to a dead rank");
+                assert!(v.is_alive(ex.recv_from));
+                assert_ne!(ex.send_to, r);
+                assert!(targets.insert(ex.send_to), "send targets form a bijection");
+                let back = exchange_for(&topo, Some(&v), ex.send_to, step);
+                assert_eq!(back.recv_from, r, "recv_from inverts send_to");
+            }
+        }
+    }
 
     #[test]
     fn topology_builder_variants() {

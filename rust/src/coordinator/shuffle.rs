@@ -130,6 +130,28 @@ impl RingShuffle {
         }
     }
 
+    /// Re-point the ring around a membership change: from the next
+    /// `give_back` on, forward to `next` and expect refills from
+    /// `prev`.  In-flight receives already posted against the old
+    /// neighbours stay pending — their senders committed those frames
+    /// before the view transition, so they arrive and are harvested
+    /// normally (batch payloads carry no origin the unpack cares
+    /// about).  Every alive rank performs exactly one `give_back` per
+    /// step, so the internal step counters — and therefore the
+    /// [`Tag::SAMPLES`] rounds — stay rank-synchronized across the
+    /// transition without any extra protocol (docs/fault-tolerance.md).
+    pub fn reroute(&mut self, next: usize, prev: usize) {
+        self.next = next;
+        self.prev = prev;
+    }
+
+    /// Late-joiner bootstrap: align this ring's step counter with the
+    /// cohort's, so the joiner's first `give_back` tags its frames with
+    /// the round the rest of the ring expects.
+    pub fn sync_step(&mut self, step: usize) {
+        self.step = step;
+    }
+
     /// Return a consumed batch: forward it around the ring (if enabled)
     /// and harvest any batches that have arrived meanwhile.
     pub fn give_back(&mut self, ep: &Endpoint, batch: SampleBatch) {
@@ -258,6 +280,42 @@ mod tests {
             );
         }
         assert_eq!(f.in_flight(), 0, "drain left batches on the fabric");
+    }
+
+    #[test]
+    fn ring_reroutes_around_a_departing_rank() {
+        // rank 1 leaves at the start of step 4 (cooperative death, as
+        // the gossip loop does it); ranks 0 and 2 reroute their ring
+        // pointers at that step and keep shuffling as a 2-ring.  All
+        // batches are conserved and the fabric drains clean.
+        let p = 3;
+        let leave_at = 4;
+        let f = Fabric::new(p, CostModel::zero());
+        let handles: Vec<_> = (0..p)
+            .map(|r| {
+                let ep = f.endpoint(r);
+                thread::spawn(move || {
+                    let mut sh =
+                        RingShuffle::new(&ep, p, mk_batches(r, 2, 1, 1), 1, true);
+                    let steps = if r == 1 { leave_at } else { 10 };
+                    for step in 0..steps {
+                        if r != 1 && step == leave_at {
+                            // the healed ring is the 2-cycle {0, 2}
+                            let peer = if r == 0 { 2 } else { 0 };
+                            sh.reroute(peer, peer);
+                        }
+                        let b = sh.take(&ep);
+                        sh.give_back(&ep, b);
+                    }
+                    sh.drain(&ep);
+                    assert!(sh.pending.is_empty());
+                    sh.queue.len()
+                })
+            })
+            .collect();
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, p * 2, "no batch lost across the transition");
+        assert_eq!(f.in_flight(), 0, "ring healed without leaking frames");
     }
 
     #[test]

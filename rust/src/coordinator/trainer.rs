@@ -20,15 +20,22 @@ use super::gossip::{run_gossip, GossipTopology};
 use super::worker::{Backend, Worker};
 use crate::config::{Algo, RunConfig, Transport};
 use crate::data::synthetic::{self, Dataset};
+use crate::membership::Membership;
 use crate::metrics::RunMetrics;
 use crate::nativenet::NativeMlp;
 use crate::pool::PoolStats;
 use crate::runtime::PjrtModel;
-use crate::transport::{ClockMode, Endpoint, Fabric, Link, TcpLinkBuilder};
+use crate::transport::{
+    ClockMode, Endpoint, Fabric, FaultyLink, InprocLink, Link, TcpLinkBuilder,
+};
 
 use anyhow::{Context, Result};
 use std::sync::Arc;
 use std::time::Duration;
+
+/// How long a rank waits at end-of-run quiesce before declaring the
+/// missing peers dead-or-hung (docs/fault-tolerance.md).
+const QUIESCE_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// Outcome of one distributed run.
 pub struct RunResult {
@@ -115,6 +122,16 @@ impl RunResult {
                 .map(|m| m.mean_step_secs())
                 .collect::<Vec<_>>(),
         )
+    }
+
+    /// Ranks that finished the run alive — everyone whose metrics carry
+    /// no `death_step`.  On a fault-free run this is simply `0..ranks`.
+    pub fn survivors(&self) -> Vec<usize> {
+        self.per_rank
+            .iter()
+            .filter(|m| m.death_step.is_none())
+            .map(|m| m.rank)
+            .collect()
     }
 
     /// Mean fraction of received wire time hidden under compute (§5.1
@@ -252,6 +269,63 @@ fn validate(cfg: &RunConfig) -> Result<()> {
         !(cfg.transport == Transport::Tcp && cfg.virtual_clock),
         "the TCP link runs on the wall clock only (docs/transport.md)"
     );
+    let plan = &cfg.fault_plan;
+    if plan.has_faults() {
+        anyhow::ensure!(
+            matches!(
+                cfg.algo,
+                Algo::Gossip | Algo::GossipHypercube | Algo::GossipRandom
+            ),
+            "fault plans only apply to the gossip family — collectives \
+             and the parameter server block forever on a lost frame \
+             (docs/fault-tolerance.md)"
+        );
+        anyhow::ensure!(
+            (plan.kills.is_empty() && plan.joins.is_empty())
+                || cfg.algo == Algo::Gossip,
+            "kills/joins need --algo gossip: only the dissemination \
+             topology has the collapsed-view survivor routing"
+        );
+        anyhow::ensure!(
+            (0.0..1.0).contains(&plan.drop_frac),
+            "drop_frac must be in [0, 1)"
+        );
+        anyhow::ensure!(
+            (0.0..1.0).contains(&plan.dup_frac),
+            "dup_frac must be in [0, 1)"
+        );
+        for &(r, s) in &plan.kills {
+            anyhow::ensure!(r < cfg.ranks, "kill rank {r} outside 0..{}", cfg.ranks);
+            anyhow::ensure!(
+                s >= 1,
+                "kill step for rank {r} must be >= 1 (a rank dead at \
+                 step 0 should just not be launched)"
+            );
+            anyhow::ensure!(
+                plan.join_step(r).is_none(),
+                "rank {r} cannot both join late and be killed"
+            );
+        }
+        let member = Membership::new(cfg.ranks, plan.clone());
+        for &(r, s) in &plan.joins {
+            anyhow::ensure!(r < cfg.ranks, "join rank {r} outside 0..{}", cfg.ranks);
+            anyhow::ensure!(
+                s >= 1 && s < cfg.steps,
+                "join step for rank {r} must be in 1..steps ({}) — the \
+                 joiner blocks on a donor snapshot that is only sent at \
+                 a step the donor actually runs",
+                cfg.steps
+            );
+            anyhow::ensure!(
+                member.donor_for(r, s).is_some(),
+                "joiner {r} has no alive donor at step {s}"
+            );
+        }
+        anyhow::ensure!(
+            member.view_at(cfg.steps).num_alive() >= 1,
+            "the fault plan kills every rank before the run ends"
+        );
+    }
     Ok(())
 }
 
@@ -280,8 +354,16 @@ pub fn run_with_backend(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
     } else {
         ClockMode::Wall
     };
-    let fabric =
-        Fabric::with_clock_codec(fabric_size(cfg), cfg.cost_model(), mode, cfg.codec);
+    let fabric = if cfg.fault_plan.has_faults() {
+        // interpose the fault layer between the ranks and the in-proc
+        // link: drop/dup/slow verdicts are pure functions of the shared
+        // plan, so the run stays deterministic (docs/fault-tolerance.md)
+        let base: Arc<dyn Link> = Arc::new(InprocLink::new(fabric_size(cfg)));
+        let link = FaultyLink::new(base, cfg.fault_plan.clone());
+        Fabric::with_link_codec(link, cfg.cost_model(), mode, cfg.codec)
+    } else {
+        Fabric::with_clock_codec(fabric_size(cfg), cfg.cost_model(), mode, cfg.codec)
+    };
     fabric.pool().set_enabled(cfg.pool);
 
     let batch = backend.batch();
@@ -370,6 +452,15 @@ pub fn run_rank_with_link(
         link.size()
     );
     anyhow::ensure!(rank < n, "rank {rank} outside fabric of {n}");
+    // interpose the fault layer over whatever link the caller built
+    // (in-proc or TCP) — the same plan produces the same drop/dup
+    // verdicts on both, which is what makes fault runs
+    // transport-invariant (tests/failure_injection.rs)
+    let link: Arc<dyn Link> = if cfg.fault_plan.has_faults() {
+        FaultyLink::new(link, cfg.fault_plan.clone())
+    } else {
+        link
+    };
     let fabric =
         Fabric::with_link_codec(link, cfg.cost_model(), ClockMode::Wall, cfg.codec);
     fabric.pool().set_enabled(cfg.pool);
@@ -388,8 +479,14 @@ pub fn run_rank_with_link(
         // extra server ranks (ps_servers > 1) idle, as in-proc
         (None, None)
     };
-    // flush our sends, ingest peer streams to EOF, then count leaks
-    fabric.quiesce(rank);
+    // flush our sends, ingest peer streams to EOF, then count leaks —
+    // bounded so a peer that died *unplanned* (no fault plan) surfaces
+    // as a named error instead of hanging this rank forever.  Generous:
+    // a planned-dead rank quiesces early and legitimately waits here
+    // until the survivors finish their run.
+    if let Err(e) = fabric.quiesce(rank, Some(QUIESCE_TIMEOUT)) {
+        eprintln!("warning: {e}; counting undrained frames as leaks");
+    }
     Ok(RankOutcome {
         rank,
         metrics,

@@ -6,9 +6,9 @@
 //! a `Grid` is "the base scenario, varied along these axes".  Axis
 //! nesting order (outer → inner) is `algo → ranks → gossip_period →
 //! straggler_jitter → layerwise → comm_thread → sync_mix → allreduce →
-//! codec → seed`; scenario index order — and therefore artifact row
-//! order — is a pure function of the declaration, never of execution
-//! timing.
+//! codec → drop_frac → seed`; scenario index order — and therefore
+//! artifact row order — is a pure function of the declaration, never of
+//! execution timing.
 //!
 //! Invalid combinations are skipped, not errored: `comm_thread` without
 //! `layerwise` measures nothing (the collective engine has no backprop
@@ -37,6 +37,9 @@ pub struct Grid {
     sync_mixes: Vec<bool>,
     allreduces: Vec<Algorithm>,
     codecs: Vec<Codec>,
+    /// Frame-drop fractions for the fault axis (the base fault plan's
+    /// other fields — kills, joins, seed — are inherited unchanged).
+    drop_fracs: Vec<f64>,
     seeds: Vec<u64>,
 }
 
@@ -53,6 +56,7 @@ impl Grid {
             sync_mixes: Vec::new(),
             allreduces: Vec::new(),
             codecs: Vec::new(),
+            drop_fracs: Vec::new(),
             seeds: Vec::new(),
         }
     }
@@ -93,6 +97,10 @@ impl Grid {
         self.codecs = v.to_vec();
         self
     }
+    pub fn drop_fracs(mut self, v: &[f64]) -> Self {
+        self.drop_fracs = v.to_vec();
+        self
+    }
     pub fn seeds(mut self, v: &[u64]) -> Self {
         self.seeds = v.to_vec();
         self
@@ -125,6 +133,7 @@ impl Grid {
         let sync_mixes = axis(&self.sync_mixes, self.base.sync_mix);
         let allreduces = axis(&self.allreduces, self.base.allreduce);
         let codecs = axis(&self.codecs, self.base.codec);
+        let drop_fracs = axis(&self.drop_fracs, self.base.fault_plan.drop_frac);
         let seeds = axis(&self.seeds, self.base.seed);
         let mut out = Vec::new();
         for &algo in &algos {
@@ -136,22 +145,39 @@ impl Grid {
                                 for &sm in &sync_mixes {
                                     for &ar in &allreduces {
                                         for &codec in &codecs {
-                                            for &seed in &seeds {
-                                                if ct && !lw {
-                                                    continue;
+                                            for &drop in &drop_fracs {
+                                                for &seed in &seeds {
+                                                    if ct && !lw {
+                                                        continue;
+                                                    }
+                                                    // lost frames are only
+                                                    // survivable on the gossip
+                                                    // family (collectives
+                                                    // block forever on them)
+                                                    if drop > 0.0
+                                                        && !matches!(
+                                                            algo,
+                                                            Algo::Gossip
+                                                                | Algo::GossipHypercube
+                                                                | Algo::GossipRandom
+                                                        )
+                                                    {
+                                                        continue;
+                                                    }
+                                                    let mut c = self.base.clone();
+                                                    c.algo = algo;
+                                                    c.ranks = p;
+                                                    c.gossip_period = period;
+                                                    c.straggler_jitter = jitter;
+                                                    c.layerwise = lw;
+                                                    c.comm_thread = ct;
+                                                    c.sync_mix = sm;
+                                                    c.allreduce = ar;
+                                                    c.codec = codec;
+                                                    c.fault_plan.drop_frac = drop;
+                                                    c.seed = seed;
+                                                    out.push(c);
                                                 }
-                                                let mut c = self.base.clone();
-                                                c.algo = algo;
-                                                c.ranks = p;
-                                                c.gossip_period = period;
-                                                c.straggler_jitter = jitter;
-                                                c.layerwise = lw;
-                                                c.comm_thread = ct;
-                                                c.sync_mix = sm;
-                                                c.allreduce = ar;
-                                                c.codec = codec;
-                                                c.seed = seed;
-                                                out.push(c);
                                             }
                                         }
                                     }
@@ -178,7 +204,7 @@ impl Grid {
     /// `--algo-list`, `--ranks-list`, `--gossip-period-list`,
     /// `--jitter-list`, `--layerwise-list`, `--comm-thread-list`,
     /// `--sync-mix-list`, `--allreduce-list`, `--codec-list`,
-    /// `--seed-list` — all comma-separated.
+    /// `--drop-frac-list`, `--seed-list` — all comma-separated.
     pub fn from_args(base: RunConfig, args: &Args) -> Result<Grid> {
         let mut g = Grid::new(base);
         if let Some(v) = args.get("algo-list") {
@@ -213,6 +239,9 @@ impl Grid {
             g.codecs = split(v)
                 .map(|t| Codec::parse(t).map_err(anyhow::Error::msg))
                 .collect::<Result<_>>()?;
+        }
+        if let Some(v) = args.get("drop-frac-list") {
+            g.drop_fracs = parse_list(v, "--drop-frac-list")?;
         }
         if let Some(v) = args.get("seed-list") {
             g.seeds = parse_list(v, "--seed-list")?;
@@ -413,6 +442,34 @@ mod tests {
         keys.sort();
         keys.dedup();
         assert_eq!(keys.len(), 6, "codec must reshape every scenario key");
+    }
+
+    #[test]
+    fn drop_frac_axis_multiplies_and_skips_non_gossip() {
+        let g = Grid::new(RunConfig::default())
+            .algos(&[Algo::Gossip, Algo::Agd])
+            .drop_fracs(&[0.0, 0.05]);
+        let s = g.scenarios();
+        // gossip gets both corners; AGD only the lossless one
+        assert_eq!(s.len(), 3, "drop > 0 on a collective algo must be skipped");
+        assert!(s
+            .iter()
+            .all(|c| c.fault_plan.drop_frac == 0.0 || c.algo == Algo::Gossip));
+        // the axis reshapes the scenario key
+        let mut keys: Vec<String> = s.iter().map(RunConfig::content_hash).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), 3);
+        // CLI axis parses
+        let args = Args::parse(
+            "sweep --drop-frac-list 0,0.02"
+                .split_whitespace()
+                .map(|t| t.to_string()),
+            &[],
+        )
+        .unwrap();
+        let g = Grid::from_args(RunConfig::default(), &args).unwrap();
+        assert_eq!(g.len(), 2);
     }
 
     #[test]

@@ -51,6 +51,10 @@
 //!   buffers behind every hot send/receive path, with the
 //!   allocation-counting hook that gates the steady-state
 //!   zero-allocation property (docs/perf.md).
+//! * [`membership`] — first-class membership: seeded [`membership::FaultPlan`]s,
+//!   epoch-numbered alive-set [`membership::View`]s with deterministic
+//!   transitions, survivor partner routing and the late-rank bootstrap
+//!   protocol (docs/fault-tolerance.md).
 //! * [`metrics`], [`config`], [`util`] — supporting infrastructure
 //!   (the offline environment has no clap/serde/criterion/proptest, so
 //!   `util` carries small hand-rolled equivalents).
@@ -61,6 +65,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod exp;
+pub mod membership;
 pub mod metrics;
 pub mod nativenet;
 pub mod pool;

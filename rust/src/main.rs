@@ -88,7 +88,10 @@ fn print_usage() {
                   loopback socket mesh, wall clock; docs/transport.md)\n\
                   [--codec f32|bf16|int8|topk]  wire codec for model/\n\
                   gradient payloads, charged in compressed bytes\n\
-                  (docs/wire-codecs.md)\n\
+                  (docs/wire-codecs.md)   fault injection (gossip\n\
+                  only; docs/fault-tolerance.md): [--kill-rank R@S,..]\n\
+                  [--join-at-step R@S,..] [--slow-rank R@S:F,..]\n\
+                  [--drop-frac F] [--dup-frac F] [--fault-seed N]\n\
          launch:  spawn one OS process per rank on localhost over TCP\n\
                   and merge their metrics.  Takes every train flag,\n\
                   plus --port-base P (default 29500) [--keep-dir]\n\
@@ -105,7 +108,8 @@ fn print_usage() {
                   base scenario, plus axes --algo-list --ranks-list\n\
                   --gossip-period-list --jitter-list --layerwise-list\n\
                   --comm-thread-list --sync-mix-list --allreduce-list\n\
-                  --codec-list --seed-list (comma-separated; omitted\n\
+                  --codec-list --drop-frac-list --seed-list\n\
+                  (comma-separated; omitted\n\
                   axes pin at the base value), or --preset\n\
                   period-jitter-1024 | codec-frontier-1024.\n\
                   --sweep-threads N  host worker threads (N-thread and\n\
@@ -172,6 +176,15 @@ fn report(res: &coordinator::RunResult) {
         res.max_disagreement(),
         res.per_rank.iter().map(|m| m.msgs_sent).sum::<u64>(),
     );
+    let deaths: Vec<usize> = res
+        .per_rank
+        .iter()
+        .filter(|m| m.death_step.is_some())
+        .map(|m| m.rank)
+        .collect();
+    if !deaths.is_empty() {
+        println!("deaths {:?} | survivors {:?}", deaths, res.survivors());
+    }
     // numerics fingerprint on its own line so CI can diff a TCP
     // multi-process run against the equivalent threads-as-ranks run
     println!("param_hash {:016x}", res.param_hash());
@@ -436,6 +449,7 @@ const AXIS_KEYS: &[&str] = &[
     "sync-mix-list",
     "allreduce-list",
     "codec-list",
+    "drop-frac-list",
     "seed-list",
 ];
 

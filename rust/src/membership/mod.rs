@@ -1,0 +1,514 @@
+//! First-class membership: the explicit alive-set every layer consults.
+//!
+//! The rest of the stack historically assumed "ranks `0..p`, all alive
+//! forever" — `Topology::size`, the rotation permutations, the fabric's
+//! mailbox array, `quiesce` as an all-ranks barrier.  This module makes
+//! the rank set an explicit, *epoch-numbered* [`View`] derived
+//! deterministically from a seeded [`FaultPlan`]:
+//!
+//! * the plan rides inside `RunConfig` (JSON + content-hash round-trip),
+//!   so **every rank knows the same plan** — view transitions need no
+//!   consensus protocol, no failure detector, and no timeouts on the
+//!   deterministic path.  Every rank evaluates [`Membership::view_at`]
+//!   at every step and gets the identical answer, which is what makes
+//!   survivor routing (and therefore final model bits) reproducible
+//!   run to run and across transports;
+//! * wall/virtual *timeouts* remain the safety net for genuine
+//!   (unplanned) failures: the bounded `Link::quiesce` surfaces a typed
+//!   error naming the missing rank instead of hanging
+//!   (docs/fault-tolerance.md).
+//!
+//! Frame-level faults (drop/duplicate) are pure functions of
+//! `(plan seed, src, dst, tag)` — a stateless hash, mirroring
+//! `sim::jitter_factor` — so the sending `FaultyLink` and the receiving
+//! coordinator independently compute the *same* verdict for every
+//! frame.  That is the whole determinism story: no shared mutable
+//! fault state, no thread-schedule dependence, identical over the
+//! in-process fabric and TCP.
+
+use crate::util::json::{self, arr, num, obj, Json};
+
+/// One seeded, declarative fault scenario.  Default = no faults; the
+/// default plan is omitted from config JSON so every pre-existing
+/// content hash is unchanged.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// `(rank, step)`: rank dies at the *start* of `step` — it never
+    /// executes that step, but completed every earlier one.
+    pub kills: Vec<(usize, usize)>,
+    /// `(rank, step)`: rank is absent (idle) before `step`; at `step`
+    /// it bootstraps from a donor's snapshot and enters the rotation.
+    pub joins: Vec<(usize, usize)>,
+    /// `(rank, step, factor)`: from message round `step` on, frames to
+    /// or from `rank` take `factor`× their modeled wire time.
+    pub slows: Vec<(usize, usize, f64)>,
+    /// Fraction of gossip model frames silently dropped on the wire.
+    pub drop_frac: f64,
+    /// Fraction of gossip model frames delivered twice.
+    pub dup_frac: f64,
+    /// Seed for the per-frame drop/dup hash.
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            kills: Vec::new(),
+            joins: Vec::new(),
+            slows: Vec::new(),
+            drop_frac: 0.0,
+            dup_frac: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+/// splitmix64-style finalizer: avalanche `x` into a uniform u64.
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+impl FaultPlan {
+    pub fn is_default(&self) -> bool {
+        self == &FaultPlan::default()
+    }
+
+    pub fn has_faults(&self) -> bool {
+        !self.is_default()
+    }
+
+    /// Uniform [0, 1) hash of one frame identity.  `salt` separates the
+    /// drop and dup streams so they are independent.
+    fn frame_unit(&self, src: usize, dst: usize, tag_bits: u64, salt: u64) -> f64 {
+        let h = mix64(
+            self.seed
+                ^ salt
+                ^ (src as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (dst as u64).wrapping_mul(0xD1B5_4A32_D192_ED03)
+                ^ tag_bits.wrapping_mul(0xA24B_AED4_963E_E407),
+        );
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Is the frame `(src → dst, tag)` dropped on the wire?  Pure:
+    /// sender and receiver evaluate this independently and agree.
+    pub fn dropped(&self, src: usize, dst: usize, tag_bits: u64) -> bool {
+        self.drop_frac > 0.0
+            && self.frame_unit(src, dst, tag_bits, 0x11) < self.drop_frac
+    }
+
+    /// Is the frame delivered twice?  A dropped frame is never also
+    /// duplicated (drop wins).
+    pub fn duplicated(&self, src: usize, dst: usize, tag_bits: u64) -> bool {
+        self.dup_frac > 0.0
+            && !self.dropped(src, dst, tag_bits)
+            && self.frame_unit(src, dst, tag_bits, 0x22) < self.dup_frac
+    }
+
+    /// Wire-time multiplier for a frame touching `src`/`dst` at message
+    /// round `round` (≥ 1; 1.0 = no slowdown).
+    pub fn slow_factor(&self, src: usize, dst: usize, round: usize) -> f64 {
+        let mut f = 1.0;
+        for &(r, s, factor) in &self.slows {
+            if (r == src || r == dst) && round >= s && factor > f {
+                f = factor;
+            }
+        }
+        f
+    }
+
+    /// The step at which `rank` dies, if the plan kills it.
+    pub fn kill_step(&self, rank: usize) -> Option<usize> {
+        self.kills.iter().find(|&&(r, _)| r == rank).map(|&(_, s)| s)
+    }
+
+    /// The step at which `rank` bootstraps, if it is a late joiner.
+    pub fn join_step(&self, rank: usize) -> Option<usize> {
+        self.joins.iter().find(|&&(r, _)| r == rank).map(|&(_, s)| s)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let pair = |v: &[(usize, usize)]| {
+            arr(v.iter()
+                .map(|&(r, s)| arr(vec![num(r as f64), num(s as f64)]))
+                .collect())
+        };
+        obj(vec![
+            ("kills", pair(&self.kills)),
+            ("joins", pair(&self.joins)),
+            (
+                "slows",
+                arr(self
+                    .slows
+                    .iter()
+                    .map(|&(r, s, f)| {
+                        arr(vec![num(r as f64), num(s as f64), num(f)])
+                    })
+                    .collect()),
+            ),
+            ("drop_frac", num(self.drop_frac)),
+            ("dup_frac", num(self.dup_frac)),
+            // string, like RunConfig::seed: u64 must survive the f64
+            // number path losslessly
+            ("seed", json::s(&self.seed.to_string())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultPlan, String> {
+        let pairs = |k: &str| -> Result<Vec<(usize, usize)>, String> {
+            j.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("fault_plan: missing {k}"))?
+                .iter()
+                .map(|e| {
+                    let r = e.idx(0).and_then(Json::as_usize);
+                    let s = e.idx(1).and_then(Json::as_usize);
+                    match (r, s) {
+                        (Some(r), Some(s)) => Ok((r, s)),
+                        _ => Err(format!("fault_plan: bad {k} entry")),
+                    }
+                })
+                .collect()
+        };
+        let slows = j
+            .get("slows")
+            .and_then(Json::as_arr)
+            .ok_or("fault_plan: missing slows")?
+            .iter()
+            .map(|e| {
+                let r = e.idx(0).and_then(Json::as_usize);
+                let s = e.idx(1).and_then(Json::as_usize);
+                let f = e.idx(2).and_then(Json::as_f64);
+                match (r, s, f) {
+                    (Some(r), Some(s), Some(f)) => Ok((r, s, f)),
+                    _ => Err("fault_plan: bad slows entry".to_string()),
+                }
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let f = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("fault_plan: missing {k}"))
+        };
+        let seed = j
+            .get("seed")
+            .and_then(Json::as_str)
+            .ok_or("fault_plan: missing seed")?
+            .parse::<u64>()
+            .map_err(|e| format!("fault_plan: bad seed: {e}"))?;
+        Ok(FaultPlan {
+            kills: pairs("kills")?,
+            joins: pairs("joins")?,
+            slows,
+            drop_frac: f("drop_frac")?,
+            dup_frac: f("dup_frac")?,
+            seed,
+        })
+    }
+}
+
+/// One epoch of the alive-set.  `epoch` increments at every membership
+/// transition (a kill taking effect, a joiner entering), so two views
+/// compare by epoch alone.
+#[derive(Clone, Debug, PartialEq)]
+pub struct View {
+    pub epoch: usize,
+    pub alive: Vec<bool>,
+}
+
+impl View {
+    /// The epoch-0 view: everyone in `0..world` alive.
+    pub fn full(world: usize) -> View {
+        View { epoch: 0, alive: vec![true; world] }
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.alive.iter().all(|&a| a)
+    }
+
+    pub fn is_alive(&self, rank: usize) -> bool {
+        self.alive[rank]
+    }
+
+    pub fn num_alive(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    /// Alive ranks in ascending rank order — the canonical collapsed
+    /// ordering every layer derives its degraded topology from.
+    pub fn alive_ranks(&self) -> Vec<usize> {
+        (0..self.alive.len()).filter(|&r| self.alive[r]).collect()
+    }
+
+    /// `rank`'s `(next, prev)` neighbours on the sample-shuffle ring
+    /// over this view's alive ordering — how the ring *heals* around a
+    /// dead rank (docs/fault-tolerance.md).  `rank` must be alive; a
+    /// single survivor is its own neighbour (the shuffle then keeps
+    /// batches local, like the disabled path).
+    pub fn ring_neighbors(&self, rank: usize) -> (usize, usize) {
+        let order = self.alive_ranks();
+        let k = order.len();
+        let q = order
+            .iter()
+            .position(|&r| r == rank)
+            .expect("ring neighbour of a rank outside the view");
+        (order[(q + 1) % k], order[(q + k - 1) % k])
+    }
+}
+
+/// The deterministic membership oracle: world size + plan in, the view
+/// at any step out.  Every rank holds an identical copy (the plan is
+/// part of the shared config), so `view_at(step)` is a *consensus-free
+/// agreement*: all survivors route through the same view at the same
+/// step without exchanging a single membership message.
+#[derive(Clone, Debug)]
+pub struct Membership {
+    world: usize,
+    plan: FaultPlan,
+}
+
+impl Membership {
+    pub fn new(world: usize, plan: FaultPlan) -> Membership {
+        Membership { world, plan }
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// The view in force at `step`.  Kills at step `s` exclude the rank
+    /// for every `step >= s`; joins at `s` include it from `s` on.  The
+    /// epoch counts transitions whose trigger step is `<= step`.
+    pub fn view_at(&self, step: usize) -> View {
+        let mut alive = vec![true; self.world];
+        let mut epoch = 0;
+        for &(r, s) in &self.plan.joins {
+            if r < self.world {
+                if step < s {
+                    alive[r] = false;
+                } else {
+                    epoch += 1;
+                }
+            }
+        }
+        for &(r, s) in &self.plan.kills {
+            if r < self.world && step >= s {
+                alive[r] = false;
+                epoch += 1;
+            }
+        }
+        View { epoch, alive }
+    }
+
+    /// The donor a joiner bootstraps from: the smallest rank alive at
+    /// the join step that is not itself joining at that step.  Both
+    /// sides evaluate this; `validate` guarantees it exists.
+    pub fn donor_for(&self, joiner: usize, join_step: usize) -> Option<usize> {
+        let view = self.view_at(join_step);
+        (0..self.world).find(|&r| {
+            r != joiner
+                && view.is_alive(r)
+                && self.plan.join_step(r) != Some(join_step)
+        })
+    }
+}
+
+/// Dissemination partner formula over an arbitrary ordered alive-list:
+/// the degraded-view twin of `topology::Dissemination::exchange`.  At
+/// full view with the identity ordering it reproduces that formula
+/// bit for bit; with members excluded, the dead slots *collapse* (the
+/// list shrinks) rather than leaving holes, so every survivor pairs
+/// with a live partner every gossip step — no step ever stalls on a
+/// dead rank.  Returns `(send_to, recv_from)`; the pairing is a
+/// bijection on the list (`recv_from(send_to(r)) == r`).
+pub fn collapsed_exchange(order: &[usize], rank: usize, step: usize) -> (usize, usize) {
+    let k = order.len();
+    if k <= 1 {
+        return (rank, rank);
+    }
+    let q = order
+        .iter()
+        .position(|&r| r == rank)
+        .expect("rank must be in the alive ordering");
+    let rounds = crate::util::ceil_log2(k).max(1);
+    let mut d = 1usize << (step % rounds);
+    d %= k;
+    if d == 0 {
+        d = 1;
+    }
+    (order[(q + d) % k], order[(q + k - d) % k])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> FaultPlan {
+        FaultPlan {
+            kills: vec![(3, 10)],
+            joins: vec![(7, 14)],
+            slows: vec![(2, 5, 3.0)],
+            drop_frac: 0.25,
+            dup_frac: 0.1,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn default_plan_is_default() {
+        assert!(FaultPlan::default().is_default());
+        assert!(!plan().is_default());
+    }
+
+    #[test]
+    fn plan_roundtrips_through_json() {
+        let p = plan();
+        let j = p.to_json();
+        let back = FaultPlan::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.to_json().to_string(), j.to_string());
+    }
+
+    #[test]
+    fn view_transitions_are_deterministic_and_epoch_numbered() {
+        let m = Membership::new(8, plan());
+        let v0 = m.view_at(0);
+        assert_eq!(v0.epoch, 0);
+        assert!(!v0.is_alive(7), "joiner absent before its join step");
+        assert!(v0.is_alive(3));
+        assert_eq!(v0.num_alive(), 7);
+        let v10 = m.view_at(10);
+        assert_eq!(v10.epoch, 1, "kill at 10 is one transition");
+        assert!(!v10.is_alive(3));
+        assert_eq!(v10.num_alive(), 6);
+        let v14 = m.view_at(14);
+        assert_eq!(v14.epoch, 2, "join at 14 is the second transition");
+        assert!(v14.is_alive(7));
+        assert!(!v14.is_alive(3));
+        assert_eq!(v14.alive_ranks(), vec![0, 1, 2, 4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn no_faults_means_full_view_forever() {
+        let m = Membership::new(4, FaultPlan::default());
+        for step in [0, 1, 100] {
+            let v = m.view_at(step);
+            assert!(v.is_full());
+            assert_eq!(v.epoch, 0);
+        }
+    }
+
+    #[test]
+    fn donor_is_smallest_alive_non_joining_rank() {
+        let m = Membership::new(8, plan());
+        assert_eq!(m.donor_for(7, 14), Some(0));
+        // kill rank 0 early: donor shifts to rank 1
+        let mut p = plan();
+        p.kills.push((0, 2));
+        let m = Membership::new(8, p);
+        assert_eq!(m.donor_for(7, 14), Some(1));
+    }
+
+    #[test]
+    fn drop_dup_hash_is_pure_and_roughly_calibrated() {
+        let p = plan();
+        let mut drops = 0;
+        let mut dups = 0;
+        let n = 10_000;
+        for i in 0..n {
+            let tag = 0xDEAD_0000 + i as u64;
+            // pure: same answer every time
+            assert_eq!(p.dropped(1, 2, tag), p.dropped(1, 2, tag));
+            assert_eq!(p.duplicated(1, 2, tag), p.duplicated(1, 2, tag));
+            // drop wins: never both
+            assert!(!(p.dropped(1, 2, tag) && p.duplicated(1, 2, tag)));
+            drops += p.dropped(1, 2, tag) as usize;
+            dups += p.duplicated(1, 2, tag) as usize;
+        }
+        let drop_rate = drops as f64 / n as f64;
+        assert!((drop_rate - 0.25).abs() < 0.03, "drop rate {drop_rate}");
+        assert!(dups > 0);
+        // different seeds decorrelate
+        let mut p2 = p.clone();
+        p2.seed = 43;
+        let same = (0..n)
+            .filter(|&i| p.dropped(1, 2, i as u64) == p2.dropped(1, 2, i as u64))
+            .count();
+        assert!(same < n, "seed must matter");
+    }
+
+    #[test]
+    fn slow_factor_gates_on_rank_and_round() {
+        let p = plan(); // slow rank 2 from round 5, 3x
+        assert_eq!(p.slow_factor(2, 1, 4), 1.0, "before the slow step");
+        assert_eq!(p.slow_factor(2, 1, 5), 3.0, "src slowed");
+        assert_eq!(p.slow_factor(1, 2, 9), 3.0, "dst slowed");
+        assert_eq!(p.slow_factor(0, 1, 9), 1.0, "uninvolved pair");
+    }
+
+    #[test]
+    fn collapsed_exchange_matches_dissemination_at_full_view() {
+        use crate::topology::{Dissemination, Topology};
+        for p in [2usize, 3, 5, 8] {
+            let t = Dissemination::new(p);
+            let order: Vec<usize> = (0..p).collect();
+            for step in 0..12 {
+                for r in 0..p {
+                    let ex = t.exchange(r, step);
+                    let (s, rx) = collapsed_exchange(&order, r, step);
+                    assert_eq!((s, rx), (ex.send_to, ex.recv_from));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn collapsed_exchange_is_a_consistent_bijection() {
+        // survivors of p=8 with ranks 3 and 6 dead
+        let order = vec![0usize, 1, 2, 4, 5, 7];
+        for step in 0..10 {
+            let mut seen = std::collections::HashSet::new();
+            for &r in &order {
+                let (send, _) = collapsed_exchange(&order, r, step);
+                assert!(order.contains(&send));
+                assert_ne!(send, r, "k >= 2 never self-pairs");
+                assert!(seen.insert(send), "send targets must be a bijection");
+                // if r sends to send, send receives from r
+                let (_, recv) = collapsed_exchange(&order, send, step);
+                assert_eq!(recv, r, "recv_from must invert send_to");
+            }
+        }
+    }
+
+    #[test]
+    fn single_survivor_self_loops() {
+        assert_eq!(collapsed_exchange(&[5], 5, 3), (5, 5));
+    }
+
+    #[test]
+    fn ring_heals_around_dead_ranks() {
+        let m = Membership::new(4, FaultPlan {
+            kills: vec![(2, 6)],
+            ..Default::default()
+        });
+        let before = m.view_at(5);
+        assert_eq!(before.ring_neighbors(1), (2, 0));
+        let after = m.view_at(6);
+        assert_eq!(after.ring_neighbors(1), (3, 0), "next skips the dead rank");
+        assert_eq!(after.ring_neighbors(3), (0, 1), "prev skips the dead rank");
+        // two survivors: a 2-cycle; one survivor: self-loop
+        let m = Membership::new(3, FaultPlan {
+            kills: vec![(0, 1), (1, 1)],
+            ..Default::default()
+        });
+        assert_eq!(m.view_at(1).ring_neighbors(2), (2, 2));
+    }
+}

@@ -31,6 +31,18 @@ pub struct RunMetrics {
     /// comm_hidden_secs` is the rank's total received wire time; the
     /// hidden share is the overlap the layer-wise pipeline wins.
     pub comm_hidden_secs: f64,
+    /// Step at which this rank died under the run's fault plan (the
+    /// rank stopped training at the *start* of this step).  `None` for
+    /// survivors and fault-free runs.
+    pub death_step: Option<usize>,
+    /// Step at which this rank bootstrap-joined a running communicator
+    /// (`None` for founding ranks).
+    pub joined_step: Option<usize>,
+    /// FNV-1a hash of the parameter vector at the join handoff: the
+    /// donor records its hash when it ships the snapshot, the joiner
+    /// records the hash of what it decoded.  Matching values prove a
+    /// lossless bootstrap (tests/failure_injection.rs).
+    pub join_hash: Option<u64>,
 }
 
 impl RunMetrics {
@@ -83,7 +95,7 @@ impl RunMetrics {
     }
 
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("rank", num(self.rank as f64)),
             (
                 "loss",
@@ -109,7 +121,20 @@ impl RunMetrics {
             ("efficiency_pct", num(self.efficiency_pct())),
             ("msgs_sent", num(self.msgs_sent as f64)),
             ("bytes_sent", num(self.bytes_sent as f64)),
-        ])
+        ];
+        // Fault-plan fields only appear on runs that used them, so
+        // fault-free artifacts stay byte-identical to older versions
+        // (`obj` sorts keys, so push order is irrelevant).
+        if let Some(d) = self.death_step {
+            fields.push(("death_step", num(d as f64)));
+        }
+        if let Some(js) = self.joined_step {
+            fields.push(("joined_step", num(js as f64)));
+        }
+        if let Some(h) = self.join_hash {
+            fields.push(("join_hash", crate::util::json::s(&h.to_string())));
+        }
+        obj(fields)
     }
 }
 
@@ -131,6 +156,12 @@ pub struct RankSummary {
     pub msgs_sent: u64,
     pub bytes_sent: u64,
     pub final_loss: Option<f64>,
+    /// See [`RunMetrics::death_step`] / [`RunMetrics::joined_step`] /
+    /// [`RunMetrics::join_hash`].  All three are omitted from the JSON
+    /// when `None` so fault-free reports keep their historical shape.
+    pub death_step: Option<usize>,
+    pub joined_step: Option<usize>,
+    pub join_hash: Option<u64>,
 }
 
 impl RankSummary {
@@ -146,11 +177,14 @@ impl RankSummary {
             msgs_sent: m.msgs_sent,
             bytes_sent: m.bytes_sent,
             final_loss: m.final_loss(),
+            death_step: m.death_step,
+            joined_step: m.joined_step,
+            join_hash: m.join_hash,
         }
     }
 
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("rank", num(self.rank as f64)),
             ("mean_step_secs", num(self.mean_step_secs)),
             ("mean_comm_wait_secs", num(self.mean_comm_wait_secs)),
@@ -164,7 +198,18 @@ impl RankSummary {
                 "final_loss",
                 self.final_loss.map(num).unwrap_or(Json::Null),
             ),
-        ])
+        ];
+        if let Some(d) = self.death_step {
+            fields.push(("death_step", num(d as f64)));
+        }
+        if let Some(js) = self.joined_step {
+            fields.push(("joined_step", num(js as f64)));
+        }
+        if let Some(h) = self.join_hash {
+            // stringified: f64 can't hold all u64 hashes losslessly
+            fields.push(("join_hash", crate::util::json::s(&h.to_string())));
+        }
+        obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<RankSummary, String> {
@@ -184,6 +229,12 @@ impl RankSummary {
             msgs_sent: f("msgs_sent")? as u64,
             bytes_sent: f("bytes_sent")? as u64,
             final_loss: j.get("final_loss").and_then(Json::as_f64),
+            death_step: j.get("death_step").and_then(Json::as_usize),
+            joined_step: j.get("joined_step").and_then(Json::as_usize),
+            join_hash: j
+                .get("join_hash")
+                .and_then(Json::as_str)
+                .and_then(|s| s.parse::<u64>().ok()),
         })
     }
 }
@@ -331,6 +382,25 @@ mod tests {
         assert_eq!(s2.final_loss, None);
         let back2 = RankSummary::from_json(&s2.to_json()).unwrap();
         assert_eq!(back2, s2);
+        // fault-free summaries never emit the fault-plan keys …
+        assert!(s2.to_json().get("death_step").is_none());
+        assert!(s2.to_json().get("join_hash").is_none());
+        // … and fault-run fields round-trip losslessly (join_hash is a
+        // full-width u64, beyond f64's 53-bit mantissa).
+        let mut f = RunMetrics::new(1);
+        f.step_secs = vec![0.01];
+        f.death_step = Some(10);
+        f.joined_step = Some(4);
+        f.join_hash = Some(u64::MAX - 1);
+        let s3 = RankSummary::from_metrics(&f);
+        let j3 = s3.to_json();
+        assert_eq!(
+            j3.get("join_hash").and_then(Json::as_str),
+            Some("18446744073709551614")
+        );
+        let back3 = RankSummary::from_json(&j3).unwrap();
+        assert_eq!(back3, s3);
+        assert_eq!(back3.to_json().to_string(), j3.to_string());
     }
 
     #[test]

@@ -60,6 +60,15 @@ impl<T: Topology> Rotation<T> {
         self.perms.len()
     }
 
+    /// Epoch `e`'s communicator ordering: `perm[v]` is the physical
+    /// rank at virtual position v.  The membership layer rebuilds a
+    /// degraded-view partner formula over this ordering with dead ranks
+    /// filtered out (`membership::collapsed_exchange`), preserving the
+    /// rotation's diffusion pattern among the survivors.
+    pub fn perm(&self, e: usize) -> &[usize] {
+        &self.perms[e]
+    }
+
     pub fn inner(&self) -> &T {
         &self.inner
     }

@@ -1,0 +1,230 @@
+//! Fault-injecting link wrapper: deterministic wire chaos behind the
+//! same [`Link`] trait everything else speaks.
+//!
+//! [`FaultyLink`] wraps any inner link (the in-process mailbox array or
+//! a [`TcpLink`](super::tcp::TcpLink)) and applies a seeded
+//! [`FaultPlan`] at the `enqueue` boundary:
+//!
+//! * **drop** — a gossip model frame whose `(seed, src, dst, tag)`
+//!   hash falls under `drop_frac` never enters the link.  The receiver
+//!   evaluates the *same pure hash* before harvesting and skips the
+//!   wait (`coordinator::gossip`), so nothing blocks and nothing leaks;
+//! * **duplicate** — the frame is enqueued twice with identical
+//!   stamps; the receiver pops and discards the extra copy after the
+//!   accounted harvest of the first;
+//! * **slow** — frames touching a slowed rank (from the plan's trigger
+//!   round on) have their modeled wire time scaled, stretching the
+//!   stamp's send→arrival interval under either clock.
+//!
+//! Only gossip model kinds ([`Tag::is_gossip_model_kind`]) are ever
+//! dropped or duplicated: collective rounds and the sample-shuffle ring
+//! block forever on a missing frame, while gossip mixing tolerates a
+//! lost exchange by construction.  Rank *death* needs no interception
+//! at all — a killed rank exits its step loop deterministically (it
+//! knows the shared plan) and simply stops sending, while survivors
+//! route around it through the same plan-derived view
+//! (`membership::Membership::view_at`).  See docs/fault-tolerance.md.
+
+use super::link::{Key, Link, QuiesceError, Stamp};
+use super::Tag;
+use crate::codec::Payload;
+use crate::membership::FaultPlan;
+use crate::pool::BufferPool;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A [`Link`] that perturbs traffic per a seeded [`FaultPlan`] and
+/// delegates everything else to the wrapped link.
+pub struct FaultyLink {
+    inner: Arc<dyn Link>,
+    plan: FaultPlan,
+}
+
+impl FaultyLink {
+    pub fn new(inner: Arc<dyn Link>, plan: FaultPlan) -> Arc<FaultyLink> {
+        Arc::new(FaultyLink { inner, plan })
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Stretch a stamp's send→arrival interval by `factor` (> 1 slows
+    /// the frame down; the send instant is untouched so the overlap
+    /// ledger still sees the true wire span).
+    fn slow_stamp(stamp: Stamp, factor: f64) -> Stamp {
+        if factor <= 1.0 {
+            return stamp;
+        }
+        match stamp {
+            Stamp::Wall { sent, at } => {
+                let wire = at.saturating_duration_since(sent);
+                Stamp::Wall {
+                    sent,
+                    at: sent + Duration::from_secs_f64(wire.as_secs_f64() * factor),
+                }
+            }
+            Stamp::Virt { sent_ns, at_ns } => {
+                let wire = at_ns.saturating_sub(sent_ns) as f64;
+                Stamp::Virt {
+                    sent_ns,
+                    at_ns: sent_ns + (wire * factor).round() as u64,
+                }
+            }
+        }
+    }
+}
+
+impl Link for FaultyLink {
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+
+    fn enqueue(&self, src: usize, dst: usize, tag: Tag, stamp: Stamp, data: Payload) {
+        let chaos_eligible = tag.is_gossip_model_kind() && src != dst;
+        if chaos_eligible && self.plan.dropped(src, dst, tag.0) {
+            // never enters the link: in_flight stays balanced and the
+            // receiver skips the harvest via the same hash
+            return;
+        }
+        let stamp = Self::slow_stamp(stamp, self.plan.slow_factor(src, dst, tag.round_of()));
+        if chaos_eligible && self.plan.duplicated(src, dst, tag.0) {
+            // original first (FIFO: the accounted harvest gets it),
+            // identical-stamp copy second for the receiver to discard
+            self.inner.enqueue(src, dst, tag, stamp, data.clone());
+        }
+        self.inner.enqueue(src, dst, tag, stamp, data);
+    }
+
+    fn peek(&self, rank: usize, key: Key) -> Option<Stamp> {
+        self.inner.peek(rank, key)
+    }
+
+    fn pop(&self, rank: usize, key: Key) -> Option<(Stamp, Payload)> {
+        self.inner.pop(rank, key)
+    }
+
+    fn park(&self, rank: usize, key: Key, timeout: Option<Duration>) {
+        self.inner.park(rank, key, timeout)
+    }
+
+    fn in_flight(&self) -> usize {
+        self.inner.in_flight()
+    }
+
+    fn in_flight_bytes(&self) -> usize {
+        self.inner.in_flight_bytes()
+    }
+
+    fn supports_virtual(&self) -> bool {
+        self.inner.supports_virtual()
+    }
+
+    fn quiesce(&self, rank: usize, timeout: Option<Duration>) -> Result<(), QuiesceError> {
+        self.inner.quiesce(rank, timeout)
+    }
+
+    fn attach_pool(&self, pool: &Arc<BufferPool>) {
+        self.inner.attach_pool(pool)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::link::InprocLink;
+    use std::time::Instant;
+
+    fn plan(drop: f64, dup: f64) -> FaultPlan {
+        FaultPlan { drop_frac: drop, dup_frac: dup, seed: 9, ..Default::default() }
+    }
+
+    fn wall(ms: u64) -> Stamp {
+        let t = Instant::now();
+        Stamp::Wall { sent: t, at: t + Duration::from_millis(ms) }
+    }
+
+    #[test]
+    fn drops_match_the_plan_hash_exactly() {
+        let p = plan(0.5, 0.0);
+        let l = FaultyLink::new(Arc::new(InprocLink::new(2)), p.clone());
+        let mut delivered = 0;
+        let mut expected = 0;
+        for r in 0..200usize {
+            let tag = Tag::MODEL.round(r);
+            l.enqueue(0, 1, tag, wall(0), Payload::F32(vec![1.0]));
+            expected += !p.dropped(0, 1, tag.0) as usize;
+            delivered += l.pop(1, (0, tag)).is_some() as usize;
+        }
+        assert_eq!(delivered, expected);
+        assert!(delivered > 0 && delivered < 200, "0.5 drop must bite");
+        assert_eq!(l.in_flight(), 0, "dropped frames never enter the link");
+    }
+
+    #[test]
+    fn duplicates_enqueue_two_identical_copies() {
+        let p = plan(0.0, 1.0); // every eligible frame duplicated
+        let l = FaultyLink::new(Arc::new(InprocLink::new(2)), p);
+        let tag = Tag::layer(1).round(4);
+        l.enqueue(0, 1, tag, wall(0), Payload::F32(vec![2.0, 3.0]));
+        let a = l.pop(1, (0, tag)).unwrap();
+        let b = l.pop(1, (0, tag)).unwrap();
+        assert_eq!(a.1.decode(), b.1.decode());
+        assert!(l.pop(1, (0, tag)).is_none());
+    }
+
+    #[test]
+    fn bookkeeping_and_collective_kinds_are_exempt() {
+        let l = FaultyLink::new(Arc::new(InprocLink::new(2)), plan(1.0, 1.0));
+        for tag in [
+            Tag::SAMPLES.round(3),
+            Tag::CTRL.round(3),
+            Tag::REDUCE.round(3),
+            Tag::BCAST.round(3),
+        ] {
+            l.enqueue(0, 1, tag, wall(0), Payload::F32(vec![1.0]));
+            assert!(l.pop(1, (0, tag)).is_some(), "{tag:?} must pass");
+            assert!(l.pop(1, (0, tag)).is_none(), "{tag:?} must not duplicate");
+        }
+        // self-loops are never perturbed either
+        l.enqueue(0, 0, Tag::MODEL.round(1), wall(0), Payload::F32(vec![1.0]));
+        assert!(l.pop(0, (0, Tag::MODEL.round(1))).is_some());
+    }
+
+    #[test]
+    fn slow_stretches_the_wire_interval() {
+        let mut p = FaultPlan::default();
+        p.slows = vec![(1, 2, 4.0)];
+        let l = FaultyLink::new(Arc::new(InprocLink::new(2)), p);
+        // round 1: before the trigger — untouched
+        l.enqueue(0, 1, Tag::MODEL.round(1), wall(10), Payload::F32(vec![0.0]));
+        // round 2: dst slowed 4x
+        l.enqueue(0, 1, Tag::MODEL.round(2), wall(10), Payload::F32(vec![0.0]));
+        let span = |s: Stamp| match s {
+            Stamp::Wall { sent, at } => at.saturating_duration_since(sent),
+            _ => unreachable!(),
+        };
+        let fast = span(l.pop(1, (0, Tag::MODEL.round(1))).unwrap().0);
+        let slow = span(l.pop(1, (0, Tag::MODEL.round(2))).unwrap().0);
+        assert!(
+            slow >= fast * 3 && slow <= fast * 5,
+            "expected ~4x stretch, got {fast:?} vs {slow:?}"
+        );
+    }
+
+    #[test]
+    fn virtual_stamps_stretch_deterministically() {
+        let mut p = FaultPlan::default();
+        p.slows = vec![(0, 0, 2.0)];
+        let l = FaultyLink::new(Arc::new(InprocLink::new(2)), p);
+        let s = Stamp::Virt { sent_ns: 1_000, at_ns: 1_500 };
+        l.enqueue(0, 1, Tag::MODEL.round(1), s, Payload::F32(vec![0.0]));
+        match l.pop(1, (0, Tag::MODEL.round(1))).unwrap().0 {
+            Stamp::Virt { sent_ns, at_ns } => {
+                assert_eq!(sent_ns, 1_000);
+                assert_eq!(at_ns, 2_000, "500ns wire doubled");
+            }
+            _ => unreachable!(),
+        }
+    }
+}

@@ -219,10 +219,16 @@ impl Fabric {
     }
 
     /// End-of-run link barrier for `rank` (flush sends, ingest peer
-    /// streams to EOF); no-op on the in-process link.  See
-    /// [`Link::quiesce`].
-    pub fn quiesce(&self, rank: usize) {
-        self.link.quiesce(rank);
+    /// streams to EOF), bounded by `timeout`: a peer that never closes
+    /// its stream surfaces a typed [`QuiesceError`](super::QuiesceError)
+    /// naming it instead of hanging the barrier forever.  No-op
+    /// (`Ok`) on the in-process link.  See [`Link::quiesce`].
+    pub fn quiesce(
+        &self,
+        rank: usize,
+        timeout: Option<std::time::Duration>,
+    ) -> Result<(), super::QuiesceError> {
+        self.link.quiesce(rank, timeout)
     }
 }
 

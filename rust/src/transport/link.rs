@@ -139,6 +139,31 @@ impl Mailbox {
     }
 }
 
+/// Typed quiesce failure: the end-of-run barrier timed out because one
+/// or more peers never closed their side of the wire.  Naming the
+/// missing ranks (instead of hanging forever, the historical behaviour
+/// when a peer died mid-run) mirrors the handshake policy of erroring
+/// on both sides of a misconfiguration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuiesceError {
+    /// The rank whose quiesce timed out.
+    pub rank: usize,
+    /// Peer ranks whose streams were still open at the deadline.
+    pub missing: Vec<usize>,
+}
+
+impl std::fmt::Display for QuiesceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "rank {}: quiesce timed out waiting on rank(s) {:?} — peer dead or hung?",
+            self.rank, self.missing
+        )
+    }
+}
+
+impl std::error::Error for QuiesceError {}
+
 /// The wire: message delivery between `size()` ranks.  Implementations
 /// must uphold the FIFO-per-key and single-consumer-per-rank contract
 /// documented at module level.
@@ -187,10 +212,16 @@ pub trait Link: Send + Sync {
 
     /// End-of-run barrier for `rank`'s side of the link: flush
     /// everything this rank sent and ingest everything peers sent until
-    /// their streams close.  After it returns, [`in_flight`]
-    /// (Self::in_flight) counts only genuinely leaked messages.  No-op
-    /// for the in-process link, whose enqueues are synchronous.
-    fn quiesce(&self, _rank: usize) {}
+    /// their streams close.  After it returns `Ok`, [`in_flight`]
+    /// (Self::in_flight) counts only genuinely leaked messages.
+    /// `timeout` bounds the barrier: when a peer never closes its
+    /// stream (a dead or hung rank), the implementation must return a
+    /// [`QuiesceError`] naming the missing peer(s) instead of hanging
+    /// forever.  `None` waits unbounded.  No-op for the in-process
+    /// link, whose enqueues are synchronous.
+    fn quiesce(&self, _rank: usize, _timeout: Option<Duration>) -> Result<(), QuiesceError> {
+        Ok(())
+    }
 
     /// Hand the owning fabric's [`BufferPool`] to the link so transport
     /// threads can draw receive buffers from — and recycle flushed send

@@ -60,14 +60,16 @@
 //! hidden/exposed ledger is settled when the collective is harvested.
 
 pub mod clock;
+pub mod fault;
 pub mod inproc;
 pub mod link;
 pub mod simnet;
 pub mod tcp;
 
 pub use clock::{Clock, ClockMode, TimeMark};
+pub use fault::FaultyLink;
 pub use inproc::{Counters, Endpoint, Fabric, RecvReq, SendReq};
-pub use link::{InprocLink, Link, Stamp};
+pub use link::{InprocLink, Link, QuiesceError, Stamp};
 pub use simnet::CostModel;
 pub use tcp::{TcpLink, TcpLinkBuilder};
 
@@ -145,6 +147,22 @@ impl Tag {
         matches!(self.kind(), 1 | 4 | 6 | 7)
     }
 
+    /// Whether messages on this tag are *gossip model* traffic — the
+    /// only kinds the fault layer may drop or duplicate.  Collective
+    /// rounds (`REDUCE`/`BCAST`) and bookkeeping channels block forever
+    /// on a missing frame, so they are exempt; gossip mixing tolerates
+    /// a lost exchange by construction (paper §4.5: no global barrier).
+    pub fn is_gossip_model_kind(self) -> bool {
+        matches!(self.kind(), 1 | 6)
+    }
+
+    /// The tag's round field (the call/step separator set by
+    /// [`round`](Self::round)) — the fault layer keys kill/slow gating
+    /// on it.
+    pub fn round_of(self) -> usize {
+        ((self.0 >> ROUND_SHIFT) & ((1u64 << ROUND_BITS) - 1)) as usize
+    }
+
     /// Intra-collective step separator (ring steps, tree phases).
     pub fn sub(self, s: usize) -> Tag {
         assert!(
@@ -204,6 +222,22 @@ mod tests {
         }
         for t in [Tag::SAMPLES, Tag::LABELS, Tag::CTRL] {
             assert!(!t.round(9).is_payload_kind(), "{t:?}");
+        }
+    }
+
+    #[test]
+    fn round_of_reads_back_the_round_field() {
+        assert_eq!(Tag::MODEL.round(12_345).round_of(), 12_345);
+        assert_eq!(Tag::layer(7).round(99).sub(3).round_of(), 99);
+        assert_eq!(Tag::CTRL.round_of(), 0);
+    }
+
+    #[test]
+    fn gossip_model_kinds_exclude_collectives_and_bookkeeping() {
+        assert!(Tag::MODEL.round(3).is_gossip_model_kind());
+        assert!(Tag::layer(2).round(3).is_gossip_model_kind());
+        for t in [Tag::REDUCE, Tag::BCAST, Tag::SAMPLES, Tag::LABELS, Tag::CTRL] {
+            assert!(!t.round(3).is_gossip_model_kind(), "{t:?}");
         }
     }
 

@@ -53,8 +53,42 @@
 //! genuinely leaked messages remain, which is what lets the
 //! fabric-drain invariant extend across processes: the launcher sums
 //! each rank's post-quiesce count.
+//!
+//! ## Reconnect & peer death
+//!
+//! A writer whose socket breaks mid-run does not take the rank down
+//! with it.  It redials the peer with capped exponential backoff
+//! ([`reconnect_delay`]: 10 ms doubling to a 320 ms cap, at most
+//! [`RECONNECT_MAX_RETRIES`] attempts, each dial bounded by a short
+//! deadline) and resends the frame it was carrying on the fresh
+//! connection.  The listener side keeps accepting after `establish` —
+//! a background acceptor validates re-handshakes and spawns a
+//! replacement reader for the new stream.  Two caveats, both tolerable
+//! to gossip by construction and documented in
+//! docs/fault-tolerance.md: delivery across a reconnect is
+//! *at-least-once* (a frame flushed into a dying socket may be resent),
+//! and frames may *reorder* across the break (the old reader drains its
+//! socket concurrently with the new one).
+//!
+//! When every redial is exhausted the peer is declared **dead**: the
+//! writer marks it in the link's dead-set and then discards everything
+//! else queued for it (decrementing the in-flight gauges, so the drain
+//! invariant still closes), and later `enqueue`s to that peer are
+//! dropped at the door.  Death is an accounting event, not a panic —
+//! the membership layer (`membership::Membership`) is what reroutes the
+//! survivors.
+//!
+//! ## Bounded quiesce
+//!
+//! [`Link::quiesce`] is a cross-rank barrier (every peer must close its
+//! write side before our readers see EOF).  With a `timeout` it waits
+//! on an io-thread registry instead of blind joins: if the deadline
+//! passes it returns a [`QuiesceError`] naming exactly which peer ranks
+//! still have a live writer or reader — "rank 3 is dead or hung"
+//! instead of a forever-hang.  A timed-out quiesce leaves the threads
+//! registered; a later unbounded call can still finish the join.
 
-use super::link::{Key, Link, Mailbox, Stamp};
+use super::link::{Key, Link, Mailbox, QuiesceError, Stamp};
 use super::simnet::CostModel;
 use super::Tag;
 use crate::codec::{Encoding, Payload, INT8_CHUNK};
@@ -62,7 +96,7 @@ use crate::pool::BufferPool;
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
@@ -90,12 +124,117 @@ fn hs_explain(code: u32) -> &'static str {
     }
 }
 
-/// One frame as handed to a writer thread (serialization happens there).
-type FrameSender = mpsc::Sender<(Tag, Payload)>;
+/// Redial attempts before a broken peer is declared dead.
+pub const RECONNECT_MAX_RETRIES: usize = 6;
+/// Per-attempt dial deadline during a redial (the initial `establish`
+/// uses the caller's much larger timeout instead).
+const RECONNECT_DIAL_TIMEOUT: Duration = Duration::from_millis(250);
+
+/// Backoff before redial `attempt` (0-based): 10 ms doubling per
+/// attempt, capped at 320 ms.
+pub fn reconnect_delay(attempt: usize) -> Duration {
+    Duration::from_millis((10u64 << attempt.min(5)).min(320))
+}
+
+/// What a writer thread's channel carries.
+enum Frame {
+    Data(Tag, Payload),
+    /// Test hook: sever the live connection so the next data frame
+    /// exercises the redial path.
+    #[cfg(test)]
+    Break,
+}
+
+type FrameSender = mpsc::Sender<Frame>;
 type IoThread = JoinHandle<io::Result<()>>;
 
 fn err(msg: String) -> io::Error {
     io::Error::other(msg)
+}
+
+/// What an io thread does, for the quiesce-timeout diagnostic.
+#[derive(Clone, Debug)]
+enum IoLabel {
+    Writer(usize),
+    Reader(usize),
+    Acceptor,
+}
+
+/// Registry of live io threads: every writer/reader/acceptor registers
+/// a slot at spawn and marks it done on exit, so a bounded quiesce can
+/// wait on "all done" with a deadline and name the stragglers instead
+/// of block-joining each handle in turn.
+struct IoRegistry {
+    slots: Mutex<Vec<IoSlot>>,
+    cv: Condvar,
+}
+
+struct IoSlot {
+    label: IoLabel,
+    done: bool,
+    handle: Option<IoThread>,
+}
+
+impl IoRegistry {
+    fn new() -> Arc<IoRegistry> {
+        Arc::new(IoRegistry { slots: Mutex::new(Vec::new()), cv: Condvar::new() })
+    }
+
+    /// Register a slot and spawn the thread that fills it.  Errors are
+    /// reported at failure time (the training thread only sees a closed
+    /// channel, so the root cause must not wait to be joined).
+    fn spawn<F>(self: &Arc<Self>, label: IoLabel, rank: usize, f: F)
+    where
+        F: FnOnce() -> io::Result<()> + Send + 'static,
+    {
+        let idx = {
+            let mut slots = self.slots.lock().unwrap();
+            slots.push(IoSlot { label: label.clone(), done: false, handle: None });
+            slots.len() - 1
+        };
+        let reg = Arc::clone(self);
+        let h = thread::spawn(move || {
+            let r = f();
+            if let Err(e) = &r {
+                eprintln!("tcp link rank {rank}: {label:?} failed: {e}");
+            }
+            let mut slots = reg.slots.lock().unwrap();
+            slots[idx].done = true;
+            reg.cv.notify_all();
+            r
+        });
+        // if the thread already finished, the handle lands in a done
+        // slot and is simply never joined — it has nothing left to do
+        self.slots.lock().unwrap()[idx].handle = Some(h);
+    }
+
+    /// Wait until every registered thread (including ones registered
+    /// *while waiting*, e.g. readers the acceptor respawns) is done.
+    /// `None` waits forever; a passed deadline returns the labels of
+    /// the unfinished threads, leaving their handles registered so a
+    /// later unbounded wait can still collect them.
+    fn wait_all(&self, deadline: Option<Instant>) -> Result<Vec<IoThread>, Vec<IoLabel>> {
+        let mut slots = self.slots.lock().unwrap();
+        loop {
+            if slots.iter().all(|s| s.done) {
+                return Ok(slots.iter_mut().filter_map(|s| s.handle.take()).collect());
+            }
+            match deadline {
+                None => slots = self.cv.wait(slots).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Err(slots
+                            .iter()
+                            .filter(|s| !s.done)
+                            .map(|s| s.label.clone())
+                            .collect());
+                    }
+                    slots = self.cv.wait_timeout(slots, d - now).unwrap().0;
+                }
+            }
+        }
+    }
 }
 
 /// Half-constructed [`TcpLink`]: the listener is bound (so the local
@@ -124,7 +263,9 @@ impl TcpLinkBuilder {
     /// `peers[rank]` must be this builder's own address; `peers.len()`
     /// is the world size announced in (and checked against) every
     /// handshake.  Errors instead of hanging on any handshake
-    /// rejection, duplicate rank, or deadline overrun.
+    /// rejection, duplicate rank, or deadline overrun.  The listener
+    /// stays alive afterwards to accept peer *re*-connections (see the
+    /// module docs on reconnect).
     pub fn establish(
         self,
         rank: usize,
@@ -149,7 +290,9 @@ impl TcpLinkBuilder {
             if r.is_err() {
                 fail_flag.store(true, Ordering::Relaxed);
             }
-            r
+            // hand the listener back: it outlives establish so the
+            // link's background acceptor can serve reconnects
+            (r, listener)
         });
 
         // dial every peer; hold the streams until the acceptor confirms
@@ -169,9 +312,9 @@ impl TcpLinkBuilder {
         }
         // always join the acceptor (it exits on success, failure or
         // deadline) so its error — usually the root cause — wins
-        let inbound = match acceptor.join() {
-            Ok(r) => r,
-            Err(_) => Err(err("acceptor thread panicked".into())),
+        let (inbound, listener) = match acceptor.join() {
+            Ok((r, l)) => (r, Some(l)),
+            Err(_) => (Err(err("acceptor thread panicked".into())), None),
         };
         if let Some(e) = dial_err {
             return match inbound {
@@ -182,8 +325,9 @@ impl TcpLinkBuilder {
             };
         }
         let inbound = inbound?;
+        let listener = listener.expect("listener survives a successful accept");
 
-        TcpLink::over_streams(rank, p, outbound, inbound, cost)
+        TcpLink::over_streams(rank, peers.to_vec(), outbound, inbound, cost, listener)
     }
 }
 
@@ -224,12 +368,7 @@ fn accept_peers(
                     // unreadable handshake: stray connection, drop it
                     continue;
                 }
-                let word = |i: usize| {
-                    u32::from_le_bytes([hdr[i], hdr[i + 1], hdr[i + 2], hdr[i + 3]])
-                };
-                let (magic, version, their_p, src) =
-                    (word(0), word(4), word(8), word(12));
-                let src = src as usize;
+                let (magic, version, their_p, src) = parse_handshake(&hdr);
                 if magic != WIRE_MAGIC {
                     // not a gossipgrad peer: answer and keep accepting
                     s.write_all(&HS_BAD_MAGIC.to_le_bytes()).ok();
@@ -271,6 +410,12 @@ fn accept_peers(
         }
     }
     Ok(got)
+}
+
+/// Split the 16 handshake bytes into `(magic, version, p, src_rank)`.
+fn parse_handshake(hdr: &[u8; 16]) -> (u32, u32, u32, usize) {
+    let word = |i: usize| u32::from_le_bytes([hdr[i], hdr[i + 1], hdr[i + 2], hdr[i + 3]]);
+    (word(0), word(4), word(8), word(12) as usize)
 }
 
 /// Dial one peer with connect-retry until `deadline`, send our
@@ -335,8 +480,9 @@ fn remaining(deadline: Instant) -> Duration {
 }
 
 /// The established TCP link for one rank: local mailbox + per-peer
-/// writer/reader threads.  See the module docs for the delivery and
-/// in-flight accounting model.
+/// writer/reader threads + a background reconnect acceptor.  See the
+/// module docs for the delivery, reconnect and in-flight accounting
+/// model.
 pub struct TcpLink {
     rank: usize,
     p: usize,
@@ -348,8 +494,14 @@ pub struct TcpLink {
     unsent: Arc<AtomicUsize>,
     /// Wire bytes of those frames — the byte gauge's writer-queue half.
     unsent_bytes: Arc<AtomicUsize>,
-    /// Writer + reader thread handles, joined at quiesce.
-    io_threads: Mutex<Vec<IoThread>>,
+    /// Live io threads (writers, readers, the reconnect acceptor),
+    /// waited on by the bounded quiesce.
+    io: Arc<IoRegistry>,
+    /// Peers whose redial budget is exhausted: enqueues to them are
+    /// dropped at the door (see module docs on peer death).
+    dead_peers: Arc<Mutex<Vec<bool>>>,
+    /// Tells the background acceptor to exit (set by quiesce).
+    accept_stop: Arc<AtomicBool>,
     /// The owning fabric's buffer pool, filled in by
     /// [`Link::attach_pool`] after the io threads are already running
     /// (the fabric is built around an established link).  Writers
@@ -359,50 +511,70 @@ pub struct TcpLink {
     pool: Arc<Mutex<Option<Arc<BufferPool>>>>,
 }
 
+/// Everything a writer thread needs to run — and to *redial* when its
+/// socket breaks.
+struct WriterCtx {
+    rank: usize,
+    p: usize,
+    dst: usize,
+    addr: String,
+    unsent: Arc<AtomicUsize>,
+    unsent_bytes: Arc<AtomicUsize>,
+    pool: Arc<Mutex<Option<Arc<BufferPool>>>>,
+    dead: Arc<Mutex<Vec<bool>>>,
+}
+
 impl TcpLink {
     fn over_streams(
         rank: usize,
-        p: usize,
+        peers: Vec<String>,
         outbound: Vec<Option<TcpStream>>,
         inbound: Vec<(usize, TcpStream)>,
         cost: CostModel,
+        listener: TcpListener,
     ) -> io::Result<Arc<TcpLink>> {
+        let p = peers.len();
         let mbox = Arc::new(Mailbox::new());
         let unsent = Arc::new(AtomicUsize::new(0));
         let unsent_bytes = Arc::new(AtomicUsize::new(0));
         let pool: Arc<Mutex<Option<Arc<BufferPool>>>> = Arc::new(Mutex::new(None));
+        let dead_peers = Arc::new(Mutex::new(vec![false; p]));
+        let accept_stop = Arc::new(AtomicBool::new(false));
+        let io = IoRegistry::new();
         let mut writers: Vec<Option<FrameSender>> = (0..p).map(|_| None).collect();
-        let mut io_threads = Vec::with_capacity(2 * (p - 1));
         for (dst, stream) in outbound.into_iter().enumerate() {
             let Some(stream) = stream else { continue };
-            let (tx, rx) = mpsc::channel::<(Tag, Payload)>();
-            let unsent = Arc::clone(&unsent);
-            let unsent_bytes = Arc::clone(&unsent_bytes);
-            let pool = Arc::clone(&pool);
-            io_threads.push(thread::spawn(move || {
-                let r = write_frames(stream, rx, &unsent, &unsent_bytes, &pool);
-                if let Err(e) = &r {
-                    // report at failure time: the training thread only
-                    // sees a closed channel (and quiesce may never run
-                    // if it panics on that), so the root cause must not
-                    // wait to be joined
-                    eprintln!("tcp link rank {rank}: writer to rank {dst} failed: {e}");
-                }
-                r
-            }));
+            let (tx, rx) = mpsc::channel::<Frame>();
+            let ctx = WriterCtx {
+                rank,
+                p,
+                dst,
+                addr: peers[dst].clone(),
+                unsent: Arc::clone(&unsent),
+                unsent_bytes: Arc::clone(&unsent_bytes),
+                pool: Arc::clone(&pool),
+                dead: Arc::clone(&dead_peers),
+            };
+            io.spawn(IoLabel::Writer(dst), rank, move || run_writer(ctx, stream, rx));
             writers[dst] = Some(tx);
         }
         for (src, stream) in inbound {
             let mbox = Arc::clone(&mbox);
             let cost = cost.clone();
             let pool = Arc::clone(&pool);
-            io_threads.push(thread::spawn(move || {
-                let r = read_frames(stream, src, &mbox, &cost, &pool);
-                if let Err(e) = &r {
-                    eprintln!("tcp link rank {rank}: reader from rank {src} failed: {e}");
-                }
-                r
-            }));
+            io.spawn(IoLabel::Reader(src), rank, move || {
+                read_frames(stream, src, &mbox, &cost, &pool)
+            });
+        }
+        {
+            let mbox = Arc::clone(&mbox);
+            let pool = Arc::clone(&pool);
+            let io2 = Arc::clone(&io);
+            let stop = Arc::clone(&accept_stop);
+            let cost = cost.clone();
+            io.spawn(IoLabel::Acceptor, rank, move || {
+                run_acceptor(listener, rank, p, mbox, cost, pool, io2, stop)
+            });
         }
         Ok(Arc::new(TcpLink {
             rank,
@@ -411,7 +583,9 @@ impl TcpLink {
             writers: Mutex::new(writers),
             unsent,
             unsent_bytes,
-            io_threads: Mutex::new(io_threads),
+            io,
+            dead_peers,
+            accept_stop,
             pool,
         }))
     }
@@ -419,6 +593,34 @@ impl TcpLink {
     /// The local rank this link serves.
     pub fn rank(&self) -> usize {
         self.rank
+    }
+
+    /// Peers declared dead by exhausted redial (ascending ranks).
+    pub fn dead_peers(&self) -> Vec<usize> {
+        self.dead_peers
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .filter_map(|(r, &d)| d.then_some(r))
+            .collect()
+    }
+
+    #[cfg(test)]
+    fn stop_acceptor(&self) {
+        self.accept_stop.store(true, Ordering::Relaxed);
+    }
+
+    /// Test hook: sever the live connection to `dst` (the writer drops
+    /// its socket and redials on the next data frame).
+    #[cfg(test)]
+    fn inject_writer_break(&self, dst: usize) {
+        let writers = self.writers.lock().unwrap();
+        writers[dst]
+            .as_ref()
+            .expect("break target still has a live writer")
+            .send(Frame::Break)
+            .expect("writer channel open");
     }
 }
 
@@ -428,55 +630,222 @@ impl TcpLink {
 /// of an allocation attempt.
 pub const MAX_FRAME_BYTES: usize = 1 << 30;
 
-/// Writer thread: serialize frames from the channel onto the socket.
-/// Exits (flushing and closing the stream, which EOFs the peer's
-/// reader) when the sender half is dropped at quiesce.
-fn write_frames(
-    stream: TcpStream,
-    rx: mpsc::Receiver<(Tag, Payload)>,
-    unsent: &AtomicUsize,
-    unsent_bytes: &AtomicUsize,
-    pool: &Mutex<Option<Arc<BufferPool>>>,
+/// Serialize one frame onto the socket and flush it.
+///
+/// Per-writer `scratch`, reused across every frame this thread ever
+/// sends: a dense payload is bulk-converted to LE bytes here and hits
+/// the socket as ONE write_all.  `to_le_bytes` is a move on
+/// little-endian targets, so the conversion loop flattens to a copy
+/// there and stays correct (byte-swapping) on big-endian ones.
+fn write_one(
+    w: &mut io::BufWriter<TcpStream>,
+    tag: Tag,
+    payload: &Payload,
+    scratch: &mut Vec<u8>,
 ) -> io::Result<()> {
-    let mut w = io::BufWriter::new(stream);
-    // per-writer scratch, reused across every frame this thread ever
-    // sends: a dense payload is bulk-converted to LE bytes here and
-    // hits the socket as ONE write_all (the old path issued one write
-    // per element, re-filling the BufWriter's 8 KiB buffer hundreds of
-    // times per model slice).  `to_le_bytes` is a move on
-    // little-endian targets, so the conversion loop flattens to a copy
-    // there and stays correct (byte-swapping) on big-endian ones.
-    let mut scratch: Vec<u8> = Vec::new();
-    for (tag, payload) in rx {
-        let bytes = payload.wire_bytes();
-        w.write_all(&(bytes as u32).to_le_bytes())?;
-        w.write_all(&tag.0.to_le_bytes())?;
-        w.write_all(&[payload.encoding() as u8])?;
-        w.write_all(&(payload.len() as u32).to_le_bytes())?;
-        match &payload {
-            Payload::F32(data) => {
-                scratch.clear();
-                scratch.reserve(4 * data.len());
-                for x in data {
-                    scratch.extend_from_slice(&x.to_le_bytes());
-                }
-                w.write_all(&scratch)?;
+    let bytes = payload.wire_bytes();
+    w.write_all(&(bytes as u32).to_le_bytes())?;
+    w.write_all(&tag.0.to_le_bytes())?;
+    w.write_all(&[payload.encoding() as u8])?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    match payload {
+        Payload::F32(data) => {
+            scratch.clear();
+            scratch.reserve(4 * data.len());
+            for x in data {
+                scratch.extend_from_slice(&x.to_le_bytes());
             }
-            Payload::Bytes { bytes: b, .. } => w.write_all(b)?,
+            w.write_all(scratch)?;
         }
-        w.flush()?;
-        // decrement only once the frame is on the socket: between
-        // enqueue and here the message is "in flight" and must be
-        // visible to the drain invariant
-        unsent.fetch_sub(1, Ordering::Relaxed);
-        unsent_bytes.fetch_sub(bytes, Ordering::Relaxed);
-        // the flushed payload's buffer cycles back to the fabric pool
-        // (attached after thread start; None only in link-level tests)
-        if let Some(p) = pool.lock().unwrap().as_ref() {
-            p.recycle(payload);
+        Payload::Bytes { bytes: b, .. } => w.write_all(b)?,
+    }
+    w.flush()
+}
+
+/// Writer thread: serialize frames from the channel onto the socket,
+/// redialing the peer on a broken connection (module docs: reconnect).
+/// Exits when the sender half is dropped at quiesce.  If the redial
+/// budget runs out it marks the peer dead and keeps *discarding*
+/// queued frames (decrementing the gauges) until quiesce — so enqueue
+/// never races a vanished channel and in-flight still drains to zero.
+fn run_writer(
+    ctx: WriterCtx,
+    first: TcpStream,
+    rx: mpsc::Receiver<Frame>,
+) -> io::Result<()> {
+    let mut w = Some(io::BufWriter::new(first));
+    let mut scratch: Vec<u8> = Vec::new();
+    loop {
+        let frame = match rx.recv() {
+            Ok(f) => f,
+            Err(_) => break, // all senders dropped: normal quiesce
+        };
+        let (tag, payload) = match frame {
+            Frame::Data(tag, payload) => (tag, payload),
+            #[cfg(test)]
+            Frame::Break => {
+                w = None; // sever: next data frame redials
+                continue;
+            }
+        };
+        let bytes = payload.wire_bytes();
+        loop {
+            if w.is_none() {
+                match redial(&ctx) {
+                    Some(s) => w = Some(io::BufWriter::new(s)),
+                    None => {
+                        // redial exhausted: the peer is dead.  Account
+                        // for this frame, then discard the rest of the
+                        // queue as it arrives.
+                        ctx.dead.lock().unwrap()[ctx.dst] = true;
+                        eprintln!(
+                            "tcp link rank {}: peer {} declared dead after \
+                             {RECONNECT_MAX_RETRIES} failed redials",
+                            ctx.rank, ctx.dst
+                        );
+                        discard(&ctx, bytes, payload);
+                        discard_until_quiesce(&ctx, &rx);
+                        return Ok(());
+                    }
+                }
+            }
+            match write_one(w.as_mut().expect("connected"), tag, &payload, &mut scratch) {
+                Ok(()) => {
+                    // decrement only once the frame is on the socket:
+                    // between enqueue and here the message is "in
+                    // flight" and must be visible to the drain invariant
+                    discard(&ctx, bytes, payload);
+                    break;
+                }
+                Err(e) => {
+                    eprintln!(
+                        "tcp link rank {}: write to rank {} broke ({e}) — redialing",
+                        ctx.rank, ctx.dst
+                    );
+                    // resend this frame on the fresh connection
+                    // (at-least-once across a reconnect; module docs)
+                    w = None;
+                }
+            }
         }
     }
-    w.flush()?;
+    if let Some(w) = w.as_mut() {
+        w.flush()?;
+    }
+    Ok(())
+}
+
+/// Settle one frame's accounting: off the gauges, buffer to the pool.
+fn discard(ctx: &WriterCtx, bytes: usize, payload: Payload) {
+    ctx.unsent.fetch_sub(1, Ordering::Relaxed);
+    ctx.unsent_bytes.fetch_sub(bytes, Ordering::Relaxed);
+    if let Some(p) = ctx.pool.lock().unwrap().as_ref() {
+        p.recycle(payload);
+    }
+}
+
+/// Dead-peer tail: drain the channel, discarding every frame, until
+/// the senders drop at quiesce.
+fn discard_until_quiesce(ctx: &WriterCtx, rx: &mpsc::Receiver<Frame>) {
+    while let Ok(f) = rx.recv() {
+        match f {
+            Frame::Data(_, payload) => {
+                let bytes = payload.wire_bytes();
+                discard(ctx, bytes, payload);
+            }
+            #[cfg(test)]
+            Frame::Break => {}
+        }
+    }
+}
+
+/// Redial a broken peer: capped exponential backoff, bounded attempts,
+/// short per-dial deadline.  `None` means the budget is exhausted and
+/// the peer should be declared dead.
+fn redial(ctx: &WriterCtx) -> Option<TcpStream> {
+    for attempt in 0..RECONNECT_MAX_RETRIES {
+        thread::sleep(reconnect_delay(attempt));
+        let deadline = Instant::now() + RECONNECT_DIAL_TIMEOUT;
+        let never_failed = AtomicBool::new(false);
+        match dial_peer(ctx.rank, ctx.p, ctx.dst, &ctx.addr, deadline, &never_failed) {
+            Ok(s) => {
+                eprintln!(
+                    "tcp link rank {}: reconnected to rank {} (attempt {})",
+                    ctx.rank,
+                    ctx.dst,
+                    attempt + 1
+                );
+                return Some(s);
+            }
+            Err(_) => continue,
+        }
+    }
+    None
+}
+
+/// Background acceptor: after `establish`, keep the listener alive and
+/// serve peer *re*-handshakes, spawning a replacement reader for each
+/// accepted stream.  Exits when quiesce sets the stop flag.  Unlike
+/// `accept_peers`, duplicate ranks are expected (that is the point),
+/// and a bad handshake is answered and dropped rather than fatal — the
+/// mesh is already up.
+#[allow(clippy::too_many_arguments)]
+fn run_acceptor(
+    listener: TcpListener,
+    rank: usize,
+    p: usize,
+    mbox: Arc<Mailbox>,
+    cost: CostModel,
+    pool: Arc<Mutex<Option<Arc<BufferPool>>>>,
+    io: Arc<IoRegistry>,
+    stop: Arc<AtomicBool>,
+) -> io::Result<()> {
+    // (nonblocking was set by establish; re-assert for safety)
+    listener.set_nonblocking(true)?;
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((mut s, _)) => {
+                if s.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                s.set_read_timeout(Some(Duration::from_secs(1))).ok();
+                let mut hdr = [0u8; 16];
+                if s.read_exact(&mut hdr).is_err() {
+                    continue; // stray
+                }
+                let (magic, version, their_p, src) = parse_handshake(&hdr);
+                if magic != WIRE_MAGIC {
+                    s.write_all(&HS_BAD_MAGIC.to_le_bytes()).ok();
+                    continue;
+                }
+                let status = if version != WIRE_VERSION {
+                    HS_BAD_VERSION
+                } else if their_p as usize != p {
+                    HS_BAD_P
+                } else if src >= p || src == rank {
+                    HS_BAD_RANK
+                } else {
+                    HS_OK
+                };
+                if s.write_all(&status.to_le_bytes()).is_err() || status != HS_OK {
+                    continue;
+                }
+                s.set_read_timeout(None).ok();
+                s.set_nodelay(true).ok();
+                eprintln!("tcp link rank {rank}: accepted reconnect from rank {src}");
+                let mbox = Arc::clone(&mbox);
+                let cost = cost.clone();
+                let pool = Arc::clone(&pool);
+                io.spawn(IoLabel::Reader(src), rank, move || {
+                    read_frames(s, src, &mbox, &cost, &pool)
+                });
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(10));
+            }
+            Err(_) => break,
+        }
+    }
     Ok(())
 }
 
@@ -509,6 +878,18 @@ fn read_frames(
         match r.read_exact(&mut len) {
             Ok(()) => {}
             Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(()),
+            // a severed connection (peer's writer broke/redialed) ends
+            // this reader like an EOF: a replacement reader owns the
+            // new stream, and a mid-frame cut is discarded with the
+            // socket (the peer resends the whole frame)
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::ConnectionReset | io::ErrorKind::ConnectionAborted
+                ) =>
+            {
+                return Ok(())
+            }
             Err(e) => return Err(e),
         }
         let bytes = u32::from_le_bytes(len) as usize;
@@ -580,6 +961,11 @@ impl Link for TcpLink {
             self.mbox.push((src, tag), stamp, data);
             return;
         }
+        if self.dead_peers.lock().unwrap()[dst] {
+            // peer declared dead after exhausted redial: drop at the
+            // door — survivors route around it through the view
+            return;
+        }
         // count before handing off so in_flight never under-reports
         self.unsent.fetch_add(1, Ordering::Relaxed);
         self.unsent_bytes.fetch_add(data.wire_bytes(), Ordering::Relaxed);
@@ -587,7 +973,8 @@ impl Link for TcpLink {
         let tx = writers[dst]
             .as_ref()
             .unwrap_or_else(|| panic!("send to rank {dst} after quiesce"));
-        tx.send((tag, data)).expect("writer thread terminated early");
+        tx.send(Frame::Data(tag, data))
+            .expect("writer thread terminated early");
     }
 
     fn peek(&self, rank: usize, key: Key) -> Option<Stamp> {
@@ -622,27 +1009,52 @@ impl Link for TcpLink {
     }
 
     /// Close this rank's write side (writer threads flush their queues
-    /// and drop their sockets, which EOFs the peers' readers) and join
-    /// every io thread — readers return once each peer has quiesced in
-    /// turn.  Afterwards every frame this process sent is delivered and
-    /// every frame peers sent sits in the local mailbox, so
-    /// [`in_flight`](Link::in_flight) counts only true leaks.
+    /// and drop their sockets, which EOFs the peers' readers), stop the
+    /// reconnect acceptor, and wait for every io thread — readers
+    /// return once each peer has quiesced in turn.  Afterwards every
+    /// frame this process sent is delivered (or charged off against a
+    /// dead peer) and every frame peers sent sits in the local mailbox,
+    /// so [`in_flight`](Link::in_flight) counts only true leaks.
     ///
     /// This is a **cross-rank barrier**: it blocks until every peer has
     /// also closed its write side, so each rank must call it from its
     /// own thread/process (as the trainer does).  Quiescing several
     /// ranks' links sequentially on one thread would deadlock.
-    fn quiesce(&self, rank: usize) {
+    ///
+    /// With a `timeout`, a peer that never closes its side (crashed
+    /// hard, hung) surfaces as a [`QuiesceError`] naming the ranks
+    /// whose io threads are still live, instead of hanging forever.
+    /// The threads stay registered — a later call can finish the wait.
+    fn quiesce(&self, rank: usize, timeout: Option<Duration>) -> Result<(), QuiesceError> {
         debug_assert_eq!(rank, self.rank, "tcp link serves its local rank only");
+        self.accept_stop.store(true, Ordering::Relaxed);
         for w in self.writers.lock().unwrap().iter_mut() {
             w.take();
         }
-        let handles = std::mem::take(&mut *self.io_threads.lock().unwrap());
-        for h in handles {
-            // io errors were already reported by the failing thread
-            // itself, at failure time
-            if h.join().is_err() {
-                eprintln!("tcp link rank {}: io thread panicked", self.rank);
+        let deadline = timeout.map(|t| Instant::now() + t);
+        match self.io.wait_all(deadline) {
+            Ok(handles) => {
+                for h in handles {
+                    // io errors were already reported by the failing
+                    // thread itself, at failure time
+                    if h.join().is_err() {
+                        eprintln!("tcp link rank {}: io thread panicked", self.rank);
+                    }
+                }
+                Ok(())
+            }
+            Err(labels) => {
+                let mut missing: Vec<usize> = labels
+                    .iter()
+                    .filter_map(|l| match l {
+                        IoLabel::Writer(d) => Some(*d),
+                        IoLabel::Reader(s) => Some(*s),
+                        IoLabel::Acceptor => None,
+                    })
+                    .collect();
+                missing.sort_unstable();
+                missing.dedup();
+                Err(QuiesceError { rank: self.rank, missing })
             }
         }
     }
@@ -682,7 +1094,7 @@ mod tests {
             .enumerate()
             .map(|(rank, l)| {
                 let l = Arc::clone(l);
-                thread::spawn(move || l.quiesce(rank))
+                thread::spawn(move || l.quiesce(rank, None).unwrap())
             })
             .collect();
         for h in handles {
@@ -782,6 +1194,79 @@ mod tests {
         );
         let (_, data) = links[0].pop(0, (0, Tag::MODEL)).unwrap();
         assert_eq!(data.decode(), vec![9.0]);
+        quiesce_all(&links);
+    }
+
+    #[test]
+    fn reconnect_backoff_schedule_is_capped() {
+        let ms: Vec<u64> = (0..8)
+            .map(|a| reconnect_delay(a).as_millis() as u64)
+            .collect();
+        assert_eq!(ms, vec![10, 20, 40, 80, 160, 320, 320, 320]);
+    }
+
+    #[test]
+    fn quiesce_timeout_names_the_missing_peer() {
+        let links = mesh(2, CostModel::zero());
+        // rank 1 never quiesces in time: rank 0's reader from 1 stays
+        // live, so the bounded wait must name rank 1 instead of hanging
+        let e = links[0]
+            .quiesce(0, Some(Duration::from_millis(300)))
+            .unwrap_err();
+        assert_eq!(e.rank, 0);
+        assert_eq!(e.missing, vec![1], "the hung peer is named");
+        assert!(e.to_string().contains("rank(s) [1]"), "{e}");
+        // a later unbounded quiesce (both sides this time) still closes
+        quiesce_all(&links);
+        for l in &links {
+            assert_eq!(l.in_flight(), 0);
+        }
+    }
+
+    #[test]
+    fn writer_reconnects_after_transient_break() {
+        let links = mesh(2, CostModel::zero());
+        let t = Instant::now();
+        let stamp = Stamp::Wall { sent: t, at: t };
+        links[0].enqueue(0, 1, Tag::MODEL.round(1), stamp, Payload::F32(vec![1.0]));
+        let (_, a) = crate::util::deadline_poll("pre-break frame", || {
+            links[1].pop(1, (0, Tag::MODEL.round(1)))
+        });
+        assert_eq!(a.decode(), vec![1.0]);
+        // sever the 0→1 socket, then keep sending: the writer must
+        // redial rank 1's live acceptor and deliver on the new stream
+        links[0].inject_writer_break(1);
+        links[0].enqueue(0, 1, Tag::MODEL.round(2), stamp, Payload::F32(vec![2.0]));
+        let (_, b) = crate::util::deadline_poll("post-break frame", || {
+            links[1].pop(1, (0, Tag::MODEL.round(2)))
+        });
+        assert_eq!(b.decode(), vec![2.0], "frame survives the reconnect");
+        quiesce_all(&links);
+        for l in &links {
+            assert_eq!(l.in_flight(), 0);
+            assert_eq!(l.in_flight_bytes(), 0);
+        }
+    }
+
+    #[test]
+    fn exhausted_redial_marks_peer_dead_instead_of_panicking() {
+        let links = mesh(2, CostModel::zero());
+        // kill rank 1's acceptor so every redial is refused, then sever
+        // the live 0→1 socket: the writer must burn its retry budget,
+        // declare rank 1 dead, and settle the gauges — not panic
+        links[1].stop_acceptor();
+        thread::sleep(Duration::from_millis(50)); // listener drops
+        links[0].inject_writer_break(1);
+        let t = Instant::now();
+        let stamp = Stamp::Wall { sent: t, at: t };
+        links[0].enqueue(0, 1, Tag::MODEL.round(1), stamp, Payload::F32(vec![3.0]));
+        crate::util::deadline_poll("dead-peer drain", || {
+            (links[0].in_flight() == 0 && links[0].dead_peers() == vec![1]).then_some(())
+        });
+        assert_eq!(links[0].in_flight_bytes(), 0, "discards settle the byte gauge");
+        // post-death sends are dropped at the door, no panic
+        links[0].enqueue(0, 1, Tag::MODEL.round(2), stamp, Payload::F32(vec![4.0]));
+        assert_eq!(links[0].in_flight(), 0);
         quiesce_all(&links);
     }
 }

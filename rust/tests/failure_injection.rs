@@ -1,8 +1,11 @@
 //! Failure-injection & adversarial-condition tests: slow/noisy networks,
-//! straggler ranks, degenerate configurations.  The coordinator must
-//! stay deadlock-free and correct under all of them.
+//! straggler ranks, degenerate configurations, and planned fault
+//! injection (kills, late joins, frame drop/dup chaos) through the
+//! membership/View layer (docs/fault-tolerance.md).  The coordinator
+//! must stay deadlock-free and correct under all of them, and every
+//! fault run must be a bit-reproducible pure function of the plan.
 
-use gossipgrad::config::{Algo, RunConfig};
+use gossipgrad::config::{Algo, RunConfig, Transport};
 use gossipgrad::coordinator::trainer::run_with_backend;
 use gossipgrad::nativenet::NativeMlp;
 use gossipgrad::transport::{CostModel, Fabric, Tag};
@@ -124,6 +127,148 @@ fn recv_wait_accounts_real_blocking_time() {
     assert!(
         Duration::from_nanos(waited) >= Duration::from_millis(20),
         "recorded wait {waited}ns"
+    );
+}
+
+// ---- planned fault injection (membership/View layer) ----------------
+
+/// The headline fault scenario: p = 8 gossip, rank 3 killed at step 10.
+/// The seven survivors must route around the hole and finish, the run
+/// must drain to zero in-flight frames, and two identical runs must
+/// produce the same parameter bits — deaths are part of the plan, not a
+/// source of nondeterminism.
+#[test]
+fn killed_rank_mid_run_survivors_complete_and_reproduce() {
+    let mut c = cfg(Algo::Gossip, 8, 20);
+    c.fault_plan.kills = vec![(3, 10)];
+    let a = run_with_backend(&c, backend()).unwrap();
+    let b = run_with_backend(&c, backend()).unwrap();
+    assert_eq!(a.survivors(), vec![0, 1, 2, 4, 5, 6, 7]);
+    assert_eq!(a.per_rank[3].death_step, Some(10));
+    assert_eq!(
+        a.param_hash(),
+        b.param_hash(),
+        "a planned kill must be bit-reproducible"
+    );
+    assert_eq!(a.in_flight_msgs, 0, "kill run leaked in-flight frames");
+    assert_eq!(a.in_flight_bytes, 0, "kill run leaked in-flight bytes");
+}
+
+/// The same kill over real loopback sockets: fault verdicts are pure
+/// functions of the shared plan, so the TCP run reproduces the in-proc
+/// run bit for bit AND reproduces itself.
+#[test]
+fn killed_rank_over_loopback_tcp_matches_inproc() {
+    let mut c = cfg(Algo::Gossip, 8, 20);
+    c.fault_plan.kills = vec![(3, 10)];
+    let inproc = run_with_backend(&c, backend()).unwrap();
+    let mut t = c.clone();
+    t.transport = Transport::Tcp;
+    let tcp = run_with_backend(&t, backend()).unwrap();
+    let tcp2 = run_with_backend(&t, backend()).unwrap();
+    assert_eq!(
+        tcp.param_hash(),
+        inproc.param_hash(),
+        "kill run diverged between tcp and in-proc"
+    );
+    assert_eq!(
+        tcp.param_hash(),
+        tcp2.param_hash(),
+        "tcp kill run is not reproducible"
+    );
+    assert_eq!(tcp.survivors(), vec![0, 1, 2, 4, 5, 6, 7]);
+    assert_eq!(tcp.per_rank[3].death_step, Some(10));
+    assert_eq!(tcp.in_flight_msgs, 0);
+    assert_eq!(tcp.in_flight_bytes, 0);
+}
+
+/// Frame chaos (drop + duplicate) keyed on a fixed seed: two runs are
+/// bit-identical, the chaos demonstrably bites (differs from a clean
+/// run), a different seed picks different victims, and the same
+/// verdicts fire over TCP.
+#[test]
+fn drop_and_dup_chaos_is_deterministic_under_a_fixed_seed() {
+    let mut c = cfg(Algo::Gossip, 8, 12);
+    c.fault_plan.drop_frac = 0.2;
+    c.fault_plan.dup_frac = 0.1;
+    c.fault_plan.seed = 42;
+    let a = run_with_backend(&c, backend()).unwrap();
+    let b = run_with_backend(&c, backend()).unwrap();
+    assert_eq!(
+        a.param_hash(),
+        b.param_hash(),
+        "chaos run is not a pure function of the plan"
+    );
+    assert_eq!(a.in_flight_msgs, 0, "dropped/dup'd frames must still drain");
+
+    let clean = run_with_backend(&cfg(Algo::Gossip, 8, 12), backend()).unwrap();
+    assert_ne!(
+        a.param_hash(),
+        clean.param_hash(),
+        "drop_frac=0.2 over ~100 model frames dropped nothing"
+    );
+
+    let mut reseeded = c.clone();
+    reseeded.fault_plan.seed = 43;
+    let s = run_with_backend(&reseeded, backend()).unwrap();
+    assert_ne!(
+        a.param_hash(),
+        s.param_hash(),
+        "fault seed does not select the victim frames"
+    );
+
+    let mut t = c.clone();
+    t.transport = Transport::Tcp;
+    let tcp = run_with_backend(&t, backend()).unwrap();
+    assert_eq!(
+        tcp.param_hash(),
+        a.param_hash(),
+        "chaos verdicts diverged between tcp and in-proc"
+    );
+    assert_eq!(tcp.in_flight_msgs, 0);
+}
+
+/// Late-rank bootstrap: rank 3 joins a p = 4 run at step 8 by fetching
+/// a donor snapshot.  Both sides hash the snapshot at the moment of
+/// transfer — the joiner must proceed from exactly the donor's bits.
+#[test]
+fn late_joiner_bootstraps_from_donor_and_matches_its_snapshot() {
+    let mut c = cfg(Algo::Gossip, 4, 16);
+    c.fault_plan.joins = vec![(3, 8)];
+    let a = run_with_backend(&c, backend()).unwrap();
+    let b = run_with_backend(&c, backend()).unwrap();
+    assert_eq!(
+        a.param_hash(),
+        b.param_hash(),
+        "join run is not bit-reproducible"
+    );
+    assert_eq!(a.per_rank[3].joined_step, Some(8));
+    // the donor is the smallest alive non-joining rank: rank 0
+    let donor_hash = a.per_rank[0]
+        .join_hash
+        .expect("donor recorded no snapshot hash");
+    assert_eq!(
+        a.per_rank[3].join_hash,
+        Some(donor_hash),
+        "joiner's bootstrap params differ from the donor's snapshot"
+    );
+    assert_eq!(a.per_rank[3].death_step, None);
+    assert_eq!(a.in_flight_msgs, 0);
+}
+
+/// A slow rank changes when frames arrive, never what is computed:
+/// every receive is keyed by (src, tag), so the slowed run's parameter
+/// bits equal the clean run's.
+#[test]
+fn slow_links_change_timing_but_not_numerics() {
+    let mut c = cfg(Algo::Gossip, 4, 12);
+    c.fault_plan.slows = vec![(1, 2, 4.0)];
+    let slowed = run_with_backend(&c, backend()).unwrap();
+    let clean = run_with_backend(&cfg(Algo::Gossip, 4, 12), backend()).unwrap();
+    assert_eq!(
+        slowed.param_hash(),
+        clean.param_hash(),
+        "a slow link must not change the numerics"
     );
 }
 
