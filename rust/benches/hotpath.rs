@@ -112,6 +112,34 @@ fn main() {
         &[("gbs", gbs), ("allocs", allocs), ("median_secs", s.median())],
     );
 
+    // --- cost model: deterministic charge path --------------------------
+    // noise_frac = 0 carries no RNG at all, so the per-message charge —
+    // taken once per send on the virtual clock's hot path — is pure
+    // arithmetic.  The noisy twin pays a Mutex lock per call; the gap is
+    // the satellite-1 before/after line in BENCH_hotpath.json.
+    let det = CostModel::new(1.0e-6, 1.0 / 12.0e9, 0.0, 0);
+    let noisy = CostModel::ib_edr(7);
+    let mut acc_t = 0.0f64;
+    let s_det = bench("cost_model message_time x1e6 (deterministic)", 2, 20, || {
+        for b in 0..1_000_000usize {
+            acc_t += det.message_time(b & 0xffff);
+        }
+    });
+    let s_noisy = bench("cost_model message_time x1e6 (5% noise, rng lock)", 2, 20, || {
+        for b in 0..1_000_000usize {
+            acc_t += noisy.message_time(b & 0xffff);
+        }
+    });
+    std::hint::black_box(acc_t);
+    println!(
+        "  -> lock-free deterministic path is {:.1}x faster than the noisy (mutex) path",
+        s_noisy.median() / s_det.median()
+    );
+    report.entry(
+        "cost_model_message_time_det_1e6",
+        &[("median_secs", s_det.median())],
+    );
+
     // --- partner selection ------------------------------------------------
     let topo = Rotation::new(Dissemination::new(128), 7);
     let mut acc = 0usize;

@@ -7,7 +7,7 @@
 //! `--workload NAME` virtualizes onto a calibrated compute model, and
 //! explicit `--compute-ms`/`--fwd-ms` override the workload's numbers.
 
-use super::{Algo, LrSchedule, RunConfig, Transport};
+use super::{Algo, CostModelKind, LrSchedule, RunConfig, Transport};
 use crate::codec::Codec;
 use crate::collectives::Algorithm;
 use crate::sim::Workload;
@@ -54,6 +54,8 @@ pub const FLAGS: &[&str] = &[
 /// | `layerwise`, `comm_thread`, `sync_mix` | flags of the same name |
 /// | `codec` | `--codec f32\|bf16\|int8\|topk` |
 /// | `pool` | `--no-pool` (disable payload buffer recycling) |
+/// | `group_size`, `inter_period` | `--group-size`, `--inter-period` (docs/topology.md) |
+/// | `cost_model` | `--cost-model flat\|hier` |
 /// | `fault_plan` | `--kill-rank R@S[,..]`, `--join-at-step R@S[,..]`, `--slow-rank R@S:F[,..]`, `--drop-frac F`, `--dup-frac F`, `--fault-seed N` |
 pub fn from_args(args: &Args) -> Result<RunConfig> {
     let mut cfg = match args.get("config") {
@@ -178,6 +180,20 @@ pub fn from_args(args: &Args) -> Result<RunConfig> {
              --virtual-clock/--workload (docs/transport.md)"
         );
     }
+    // ---- hierarchical fabric (docs/topology.md) ----------------------
+    cfg.group_size = args.usize_or("group-size", cfg.group_size);
+    cfg.inter_period = args.usize_or("inter-period", cfg.inter_period);
+    if let Some(k) = args.get("cost-model") {
+        cfg.cost_model = CostModelKind::parse(k).map_err(anyhow::Error::msg)?;
+    }
+    if cfg.group_size == 0 {
+        bail!("--group-size must be at least 1");
+    }
+    if cfg.inter_period == 0 {
+        bail!("--inter-period must be at least 1");
+    }
+    // (divisibility, algo and transport compatibility are validated with
+    // the rest of the run shape in coordinator::trainer::validate)
     if let Some(d) = args.get("artifacts-dir") {
         cfg.artifacts_dir = d.to_string();
     }
@@ -337,6 +353,22 @@ mod tests {
         // malformed entries fail loudly
         assert!(from_args(&parse("train --kill-rank 3-10")).is_err());
         assert!(from_args(&parse("train --slow-rank 2@5")).is_err());
+    }
+
+    #[test]
+    fn hier_flags_parse_and_default_flat() {
+        let d = from_args(&parse("train")).unwrap();
+        assert_eq!((d.group_size, d.inter_period), (1, 1));
+        assert_eq!(d.cost_model, CostModelKind::Flat);
+        let c = from_args(&parse(
+            "train --ranks 16 --group-size 4 --inter-period 2 --cost-model hier",
+        ))
+        .unwrap();
+        assert_eq!((c.group_size, c.inter_period), (4, 2));
+        assert_eq!(c.cost_model, CostModelKind::Hier);
+        assert!(from_args(&parse("train --group-size 0")).is_err());
+        assert!(from_args(&parse("train --inter-period 0")).is_err());
+        assert!(from_args(&parse("train --cost-model torus")).is_err());
     }
 
     #[test]

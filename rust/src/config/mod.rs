@@ -8,7 +8,7 @@
 use crate::codec::Codec;
 use crate::collectives::Algorithm;
 use crate::membership::FaultPlan;
-use crate::transport::CostModel;
+use crate::transport::{CostModel, GroupMap, HierCostModel};
 use crate::util::json::{self, num, obj, Json};
 
 pub mod cli;
@@ -86,6 +86,36 @@ impl Transport {
         match self {
             Transport::Inproc => "inproc",
             Transport::Tcp => "tcp",
+        }
+    }
+}
+
+/// Which per-message cost model the virtual/wall fabric charges
+/// (docs/topology.md).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum CostModelKind {
+    /// One α–β pair for every rank pair (the historical model).
+    #[default]
+    Flat,
+    /// Two-tier: NVLink-class costs inside a host group of
+    /// `group_size` consecutive ranks, the configured α–β across
+    /// groups.  In-process fabric only.
+    Hier,
+}
+
+impl CostModelKind {
+    pub fn parse(s: &str) -> Result<CostModelKind, String> {
+        Ok(match s {
+            "flat" => CostModelKind::Flat,
+            "hier" | "hierarchical" => CostModelKind::Hier,
+            other => return Err(format!("unknown cost model {other:?}")),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CostModelKind::Flat => "flat",
+            CostModelKind::Hier => "hier",
         }
     }
 }
@@ -213,6 +243,26 @@ pub struct RunConfig {
     /// either way (the pool only changes where buffers come from, never
     /// their contents — see docs/perf.md and `tests/pooling.rs`).
     pub pool: bool,
+    /// Host-group width: `group_size` consecutive ranks model one node
+    /// (`--group-size`; docs/topology.md).  Must divide `ranks`.  Drives
+    /// three things at once: the two-level gossip schedule (dense
+    /// intra-group dissemination, sparse inter-group partners), the
+    /// hierarchical cost model's tier split, and — under the TCP
+    /// transport — the hybrid link's mailbox/socket split.  1 = flat
+    /// (every rank its own group; bit-identical to the historical
+    /// routing, property-tested).
+    pub group_size: usize,
+    /// Gossip steps between inter-group exchanges in the two-level
+    /// schedule (`--inter-period`).  Dense intra-group mixing runs every
+    /// step; every `inter_period`-th step sends across groups instead.
+    /// Ignored when `group_size` is 1 (or equals `ranks`): the schedule
+    /// is flat.
+    pub inter_period: usize,
+    /// Which per-message cost model the fabric charges
+    /// (`--cost-model flat|hier`).  `hier` splits costs by group
+    /// locality: NVLink-class inside a group, the configured
+    /// `net_alpha`/`net_beta` across groups.
+    pub cost_model: CostModelKind,
     /// Seeded fault scenario: planned kills/joins/slowdowns and
     /// frame-level drop/dup fractions (`--kill-rank`, `--join-at-step`,
     /// `--drop-frac`, …; docs/fault-tolerance.md).  The plan rides in
@@ -258,6 +308,9 @@ impl Default for RunConfig {
             transport: Transport::Inproc,
             codec: Codec::F32,
             pool: true,
+            group_size: 1,
+            inter_period: 1,
+            cost_model: CostModelKind::Flat,
             fault_plan: FaultPlan::default(),
         }
     }
@@ -266,6 +319,21 @@ impl Default for RunConfig {
 impl RunConfig {
     pub fn cost_model(&self) -> CostModel {
         CostModel::new(self.net_alpha, self.net_beta, self.net_noise, self.seed)
+    }
+
+    /// The hierarchical cost model this run charges, or `None` under
+    /// the flat (historical) model.  The configured α–β pair becomes
+    /// the *inter-group* tier; the intra-group tier is NVLink-class
+    /// ([`CostModel::nvlink`]).  With `group_size = 1` every pair is
+    /// inter-group, so the charges match the flat model exactly.
+    pub fn hier_cost_model(&self) -> Option<HierCostModel> {
+        match self.cost_model {
+            CostModelKind::Flat => None,
+            CostModelKind::Hier => Some(HierCostModel::with_inter(
+                self.cost_model(),
+                GroupMap::new(self.ranks, self.group_size),
+            )),
+        }
     }
 
     /// Effective base learning rate for this algorithm at this scale
@@ -349,6 +417,17 @@ impl RunConfig {
         ];
         if let Some(dir) = &self.resume_from {
             pairs.push(("resume_from", json::s(dir)));
+        }
+        // hierarchical-fabric knobs: omitted at their flat defaults so
+        // every pre-existing content hash is unchanged
+        if self.group_size != 1 {
+            pairs.push(("group_size", num(self.group_size as f64)));
+        }
+        if self.inter_period != 1 {
+            pairs.push(("inter_period", num(self.inter_period as f64)));
+        }
+        if self.cost_model != CostModelKind::Flat {
+            pairs.push(("cost_model", json::s(self.cost_model.name())));
         }
         if let LrSchedule::Step { every, gamma } = self.lr_schedule {
             pairs.push(("lr_step_every", num(every as f64)));
@@ -455,6 +534,11 @@ impl RunConfig {
         }
         if let Some(v) = j.get("pool").and_then(Json::as_bool) {
             c.pool = v;
+        }
+        num_field!("group_size", group_size, usize);
+        num_field!("inter_period", inter_period, usize);
+        if let Some(v) = j.get("cost_model").and_then(Json::as_str) {
+            c.cost_model = CostModelKind::parse(v)?;
         }
         if let Some(v) = j.get("fault_plan") {
             c.fault_plan = FaultPlan::from_json(v)?;
@@ -605,6 +689,9 @@ mod tests {
         c.transport = Transport::Tcp;
         c.codec = Codec::TopK;
         c.pool = false;
+        c.group_size = 4;
+        c.inter_period = 3;
+        c.cost_model = CostModelKind::Hier;
         c.fault_plan = FaultPlan {
             kills: vec![(3, 10)],
             joins: vec![(5, 7)],
@@ -688,6 +775,40 @@ mod tests {
         let mut c = RunConfig::default();
         c.codec = Codec::Bf16;
         assert_ne!(c.content_hash(), RunConfig::default().content_hash());
+    }
+
+    #[test]
+    fn hier_fields_default_flat_and_reshape_hash() {
+        let d = RunConfig::default();
+        assert_eq!(d.group_size, 1);
+        assert_eq!(d.inter_period, 1);
+        assert_eq!(d.cost_model, CostModelKind::Flat);
+        // flat defaults are omitted: historical content hashes unchanged
+        assert!(d.to_json().get("group_size").is_none());
+        assert!(d.to_json().get("inter_period").is_none());
+        assert!(d.to_json().get("cost_model").is_none());
+        assert!(d.hier_cost_model().is_none());
+        for (f, want) in [("flat", CostModelKind::Flat), ("hier", CostModelKind::Hier)] {
+            assert_eq!(CostModelKind::parse(f).unwrap(), want);
+        }
+        assert!(CostModelKind::parse("torus").is_err());
+        let mut c = RunConfig::default();
+        c.ranks = 8;
+        c.group_size = 4;
+        c.inter_period = 2;
+        c.cost_model = CostModelKind::Hier;
+        assert_ne!(c.content_hash(), d.content_hash());
+        let back = RunConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        // the configured α–β becomes the inter tier; intra is NVLink
+        let mut h = RunConfig::default();
+        h.ranks = 8;
+        h.group_size = 4;
+        h.cost_model = CostModelKind::Hier;
+        h.net_alpha = 1e-3;
+        let hier = h.hier_cost_model().unwrap();
+        assert!(hier.message_time(0, 4, 0) >= 1e-3, "cross-group pays α");
+        assert!(hier.message_time(0, 1, 0) < 1e-4, "in-group is NVLink-class");
     }
 
     #[test]

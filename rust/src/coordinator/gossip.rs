@@ -49,7 +49,7 @@ use crate::codec::{mix_payload_recycle, Encoder};
 use crate::config::Algo;
 use crate::membership::{collapsed_exchange, FaultPlan, Membership, View};
 use crate::topology::{
-    Dissemination, Exchange, Hypercube, RandomGossip, Rotation, Topology,
+    Dissemination, Exchange, Hypercube, RandomGossip, Rotation, Topology, TwoLevel,
 };
 use crate::transport::{Endpoint, RecvReq, Tag};
 
@@ -59,6 +59,9 @@ pub enum GossipTopology {
     Plain(Dissemination),
     Hyper(Hypercube),
     Random(RandomGossip),
+    /// Hierarchical schedule (docs/topology.md): dense intra-group
+    /// mixing, sparse inter-group partners every `inter_period` steps.
+    TwoLevel(TwoLevel),
 }
 
 impl GossipTopology {
@@ -74,12 +77,39 @@ impl GossipTopology {
         }
     }
 
+    /// [`build`](Self::build) with host-group awareness.  A non-trivial
+    /// `group_size` (1 < g < p, plain gossip only — `validate` rejects
+    /// the rest) selects the two-level schedule; every degenerate case
+    /// routes through the flat builder, so `group_size` 1 and p are
+    /// bit-identical to the historical routing by construction.
+    pub fn build_grouped(
+        algo: Algo,
+        p: usize,
+        rotation: bool,
+        seed: u64,
+        group_size: usize,
+        inter_period: usize,
+    ) -> GossipTopology {
+        if matches!(algo, Algo::Gossip) && group_size > 1 && group_size < p {
+            GossipTopology::TwoLevel(TwoLevel::new(
+                p,
+                group_size,
+                inter_period,
+                rotation,
+                seed,
+            ))
+        } else {
+            GossipTopology::build(algo, p, rotation, seed)
+        }
+    }
+
     pub fn exchange(&self, rank: usize, step: usize) -> Exchange {
         match self {
             GossipTopology::Rotated(t) => t.exchange(rank, step),
             GossipTopology::Plain(t) => t.exchange(rank, step),
             GossipTopology::Hyper(t) => t.exchange(rank, step),
             GossipTopology::Random(t) => t.exchange(rank, step),
+            GossipTopology::TwoLevel(t) => t.exchange(rank, step),
         }
     }
 
@@ -146,6 +176,15 @@ fn exchange_for(
             let order: Vec<usize> = match topo {
                 GossipTopology::Rotated(t) => t
                     .perm(t.epoch(gossip_step))
+                    .iter()
+                    .copied()
+                    .filter(|&r| v.is_alive(r))
+                    .collect(),
+                // under a degraded view the two-level schedule falls
+                // back to its flat rotation's ordering: locality is
+                // best-effort during faults, live pairing is not
+                GossipTopology::TwoLevel(t) if t.rotates() => t
+                    .flat_order(gossip_step)
                     .iter()
                     .copied()
                     .filter(|&r| v.is_alive(r))
@@ -617,5 +656,61 @@ mod tests {
             GossipTopology::build(crate::config::Algo::GossipRandom, 8, true, 1);
         assert!(matches!(t, GossipTopology::Random(_)));
         assert!(t.senders_to(0, 0).is_some());
+    }
+
+    #[test]
+    fn grouped_builder_dispatch() {
+        use crate::config::Algo;
+        // non-trivial group: the two-level schedule
+        let t = GossipTopology::build_grouped(Algo::Gossip, 8, true, 1, 2, 4);
+        assert!(matches!(t, GossipTopology::TwoLevel(_)));
+        // degenerate groups route through the flat builder — the
+        // flat-identity guarantee holds by construction
+        for g in [1usize, 8] {
+            let t = GossipTopology::build_grouped(Algo::Gossip, 8, true, 1, g, 4);
+            assert!(matches!(t, GossipTopology::Rotated(_)), "g={g}");
+            let t = GossipTopology::build_grouped(Algo::Gossip, 8, false, 1, g, 4);
+            assert!(matches!(t, GossipTopology::Plain(_)), "g={g}");
+        }
+        // group-aware flat routing is bit-identical to build()
+        let flat = GossipTopology::build(Algo::Gossip, 8, true, 7);
+        let g1 = GossipTopology::build_grouped(Algo::Gossip, 8, true, 7, 1, 4);
+        for step in 0..40 {
+            for r in 0..8 {
+                assert_eq!(g1.exchange(r, step), flat.exchange(r, step));
+            }
+        }
+    }
+
+    #[test]
+    fn two_level_degraded_view_pairs_survivors() {
+        use crate::membership::{FaultPlan, Membership};
+        // kill one rank inside a group: the collapsed exchange must
+        // still pair every survivor with a live partner, bijectively
+        let topo = GossipTopology::build_grouped(
+            crate::config::Algo::Gossip,
+            8,
+            true,
+            7,
+            4,
+            2,
+        );
+        let m = Membership::new(
+            8,
+            FaultPlan { kills: vec![(2, 10)], ..Default::default() },
+        );
+        let v = m.view_at(10);
+        for step in 0..30 {
+            let mut targets = std::collections::HashSet::new();
+            for r in v.alive_ranks() {
+                let ex = exchange_for(&topo, Some(&v), r, step);
+                assert!(v.is_alive(ex.send_to));
+                assert!(v.is_alive(ex.recv_from));
+                assert_ne!(ex.send_to, r);
+                assert!(targets.insert(ex.send_to));
+                let back = exchange_for(&topo, Some(&v), ex.send_to, step);
+                assert_eq!(back.recv_from, r);
+            }
+        }
     }
 }

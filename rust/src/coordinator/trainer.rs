@@ -18,7 +18,7 @@
 use super::baselines;
 use super::gossip::{run_gossip, GossipTopology};
 use super::worker::{Backend, Worker};
-use crate::config::{Algo, RunConfig, Transport};
+use crate::config::{Algo, CostModelKind, RunConfig, Transport};
 use crate::data::synthetic::{self, Dataset};
 use crate::membership::Membership;
 use crate::metrics::RunMetrics;
@@ -26,7 +26,8 @@ use crate::nativenet::NativeMlp;
 use crate::pool::PoolStats;
 use crate::runtime::PjrtModel;
 use crate::transport::{
-    ClockMode, Endpoint, Fabric, FaultyLink, InprocLink, Link, TcpLinkBuilder,
+    hybrid, ClockMode, Endpoint, Fabric, FaultyLink, GroupMap, HybridLink, InprocLink,
+    Link, TcpLinkBuilder,
 };
 
 use anyhow::{Context, Result};
@@ -245,7 +246,14 @@ fn drive_worker(
     let mut w = build_worker(rank, ep, backend, train, val, cfg);
     match cfg.algo {
         Algo::Gossip | Algo::GossipHypercube | Algo::GossipRandom => {
-            let topo = GossipTopology::build(cfg.algo, p, cfg.rotation, cfg.seed);
+            let topo = GossipTopology::build_grouped(
+                cfg.algo,
+                p,
+                cfg.rotation,
+                cfg.seed,
+                cfg.group_size,
+                cfg.inter_period,
+            );
             run_gossip(&mut w, ep, &topo, cfg.sync_mix);
         }
         Algo::SgdSync => baselines::run_allreduce(&mut w, ep, cfg.allreduce, false),
@@ -268,6 +276,32 @@ fn validate(cfg: &RunConfig) -> Result<()> {
     anyhow::ensure!(
         !(cfg.transport == Transport::Tcp && cfg.virtual_clock),
         "the TCP link runs on the wall clock only (docs/transport.md)"
+    );
+    // ---- hierarchical fabric (docs/topology.md) ----------------------
+    anyhow::ensure!(cfg.group_size >= 1, "group_size must be at least 1");
+    anyhow::ensure!(cfg.inter_period >= 1, "inter_period must be at least 1");
+    anyhow::ensure!(
+        cfg.ranks % cfg.group_size == 0,
+        "group_size {} must divide ranks {}",
+        cfg.group_size,
+        cfg.ranks
+    );
+    if cfg.group_size > 1 {
+        anyhow::ensure!(
+            !matches!(
+                cfg.algo,
+                Algo::GossipHypercube | Algo::GossipRandom | Algo::ParamServer
+            ),
+            "--group-size > 1 needs a grouped schedule: only dissemination \
+             gossip (--algo gossip) defines one, and the collective/PS \
+             baselines ignore the topology entirely (docs/topology.md)"
+        );
+    }
+    anyhow::ensure!(
+        !(cfg.cost_model == CostModelKind::Hier && cfg.transport == Transport::Tcp),
+        "--cost-model hier charges simulated two-tier costs on the \
+         in-process fabric only; the TCP link pays real wire time (use \
+         --group-size for the hybrid mailbox/socket split instead)"
     );
     let plan = &cfg.fault_plan;
     if plan.has_faults() {
@@ -354,16 +388,22 @@ pub fn run_with_backend(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
     } else {
         ClockMode::Wall
     };
-    let fabric = if cfg.fault_plan.has_faults() {
-        // interpose the fault layer between the ranks and the in-proc
-        // link: drop/dup/slow verdicts are pure functions of the shared
-        // plan, so the run stays deterministic (docs/fault-tolerance.md)
+    let link: Arc<dyn Link> = {
         let base: Arc<dyn Link> = Arc::new(InprocLink::new(fabric_size(cfg)));
-        let link = FaultyLink::new(base, cfg.fault_plan.clone());
-        Fabric::with_link_codec(link, cfg.cost_model(), mode, cfg.codec)
-    } else {
-        Fabric::with_clock_codec(fabric_size(cfg), cfg.cost_model(), mode, cfg.codec)
+        if cfg.fault_plan.has_faults() {
+            // interpose the fault layer between the ranks and the
+            // in-proc link: drop/dup/slow verdicts are pure functions of
+            // the shared plan, so the run stays deterministic
+            // (docs/fault-tolerance.md)
+            FaultyLink::new(base, cfg.fault_plan.clone())
+        } else {
+            base
+        }
     };
+    // --cost-model hier swaps the flat α–β charge for the two-tier
+    // (intra/inter host-group) model; None keeps the historical charges
+    let fabric =
+        Fabric::with_link_codec_hier(link, cfg.cost_model(), mode, cfg.codec, cfg.hier_cost_model());
     fabric.pool().set_enabled(cfg.pool);
 
     let batch = backend.batch();
@@ -502,6 +542,12 @@ pub fn run_rank_with_link(
 /// reader/writer threads) without spawning processes.  Used by
 /// `run_with_backend` when `cfg.transport == Tcp` and by the parity and
 /// drain tests.
+///
+/// With `cfg.group_size > 1` each rank's link becomes a
+/// [`HybridLink`]: same-group traffic moves through mailboxes shared by
+/// the group's rank threads, only cross-group traffic touches the
+/// sockets — the in-process analog of `launch --group-size`
+/// (docs/topology.md).
 pub fn run_tcp_loopback(cfg: &RunConfig, backend: Backend) -> Result<RunResult> {
     validate(cfg)?;
     let n = fabric_size(cfg);
@@ -513,16 +559,29 @@ pub fn run_tcp_loopback(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
         .context("binding loopback listeners")?;
     let peers: Vec<String> =
         builders.iter().map(|b| b.local_addr().to_string()).collect();
+    let groups = (cfg.group_size > 1).then(|| GroupMap::new(n, cfg.group_size));
+    let shared: Vec<_> = groups
+        .map(|g| {
+            (0..g.num_groups())
+                .map(|_| hybrid::group_mailboxes(g.group_size()))
+                .collect::<Vec<_>>()
+        })
+        .unwrap_or_default();
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for (rank, b) in builders.into_iter().enumerate() {
         let peers = peers.clone();
         let cfg = cfg.clone();
         let backend = Arc::clone(&backend);
+        let boxes = groups.map(|g| Arc::clone(&shared[g.group_of(rank)]));
         handles.push(std::thread::spawn(move || -> Result<RankOutcome> {
-            let link: Arc<dyn Link> = b
+            let tcp = b
                 .establish(rank, &peers, cfg.cost_model(), Duration::from_secs(60))
                 .with_context(|| format!("rank {rank}: establishing tcp mesh"))?;
+            let link: Arc<dyn Link> = match (groups, boxes) {
+                (Some(g), Some(boxes)) => Arc::new(HybridLink::new(rank, g, boxes, tcp)),
+                _ => tcp,
+            };
             run_rank_with_link(&cfg, backend, rank, link)
         }));
     }

@@ -6,9 +6,9 @@
 //! a `Grid` is "the base scenario, varied along these axes".  Axis
 //! nesting order (outer → inner) is `algo → ranks → gossip_period →
 //! straggler_jitter → layerwise → comm_thread → sync_mix → allreduce →
-//! codec → drop_frac → seed`; scenario index order — and therefore
-//! artifact row order — is a pure function of the declaration, never of
-//! execution timing.
+//! codec → drop_frac → group_size → inter_period → seed`; scenario
+//! index order — and therefore artifact row order — is a pure function
+//! of the declaration, never of execution timing.
 //!
 //! Invalid combinations are skipped, not errored: `comm_thread` without
 //! `layerwise` measures nothing (the collective engine has no backprop
@@ -18,7 +18,7 @@
 
 use crate::codec::Codec;
 use crate::collectives::Algorithm;
-use crate::config::{Algo, RunConfig};
+use crate::config::{Algo, CostModelKind, RunConfig};
 use crate::sim::Workload;
 use crate::util::args::Args;
 
@@ -40,6 +40,15 @@ pub struct Grid {
     /// Frame-drop fractions for the fault axis (the base fault plan's
     /// other fields — kills, joins, seed — are inherited unchanged).
     drop_fracs: Vec<f64>,
+    /// Host-group sizes for the hierarchical fabric axis
+    /// (docs/topology.md).  `1` is the flat fabric; larger values carve
+    /// the ranks into contiguous groups and (on gossip) switch to the
+    /// two-level schedule.
+    group_sizes: Vec<usize>,
+    /// Inter-group exchange cadences for the two-level schedule — only
+    /// meaningful alongside `group_size > 1`, so the product skips the
+    /// redundant `group_size == 1 × inter_period > 1` corners.
+    inter_periods: Vec<usize>,
     seeds: Vec<u64>,
 }
 
@@ -57,6 +66,8 @@ impl Grid {
             allreduces: Vec::new(),
             codecs: Vec::new(),
             drop_fracs: Vec::new(),
+            group_sizes: Vec::new(),
+            inter_periods: Vec::new(),
             seeds: Vec::new(),
         }
     }
@@ -101,6 +112,14 @@ impl Grid {
         self.drop_fracs = v.to_vec();
         self
     }
+    pub fn group_sizes(mut self, v: &[usize]) -> Self {
+        self.group_sizes = v.to_vec();
+        self
+    }
+    pub fn inter_periods(mut self, v: &[usize]) -> Self {
+        self.inter_periods = v.to_vec();
+        self
+    }
     pub fn seeds(mut self, v: &[u64]) -> Self {
         self.seeds = v.to_vec();
         self
@@ -134,6 +153,8 @@ impl Grid {
         let allreduces = axis(&self.allreduces, self.base.allreduce);
         let codecs = axis(&self.codecs, self.base.codec);
         let drop_fracs = axis(&self.drop_fracs, self.base.fault_plan.drop_frac);
+        let group_sizes = axis(&self.group_sizes, self.base.group_size);
+        let inter_periods = axis(&self.inter_periods, self.base.inter_period);
         let seeds = axis(&self.seeds, self.base.seed);
         let mut out = Vec::new();
         for &algo in &algos {
@@ -146,37 +167,68 @@ impl Grid {
                                     for &ar in &allreduces {
                                         for &codec in &codecs {
                                             for &drop in &drop_fracs {
-                                                for &seed in &seeds {
-                                                    if ct && !lw {
-                                                        continue;
+                                                for &gs in &group_sizes {
+                                                    for &ip in &inter_periods {
+                                                        for &seed in &seeds {
+                                                            if ct && !lw {
+                                                                continue;
+                                                            }
+                                                            // lost frames are only
+                                                            // survivable on the gossip
+                                                            // family (collectives
+                                                            // block forever on them)
+                                                            if drop > 0.0
+                                                                && !matches!(
+                                                                    algo,
+                                                                    Algo::Gossip
+                                                                        | Algo::GossipHypercube
+                                                                        | Algo::GossipRandom
+                                                                )
+                                                            {
+                                                                continue;
+                                                            }
+                                                            // groups must tile the
+                                                            // ranks, and only the §4.5.1
+                                                            // rotation schedule (plus the
+                                                            // collective baselines, where
+                                                            // grouping is cost-only) has
+                                                            // a two-level form — mirror
+                                                            // of trainer validate()
+                                                            if gs > 1
+                                                                && (p % gs != 0
+                                                                    || matches!(
+                                                                        algo,
+                                                                        Algo::GossipHypercube
+                                                                            | Algo::GossipRandom
+                                                                            | Algo::ParamServer
+                                                                    ))
+                                                            {
+                                                                continue;
+                                                            }
+                                                            // inter_period is inert on
+                                                            // the flat fabric — the
+                                                            // crossing would duplicate
+                                                            // runs under distinct keys
+                                                            if gs == 1 && ip > 1 {
+                                                                continue;
+                                                            }
+                                                            let mut c = self.base.clone();
+                                                            c.algo = algo;
+                                                            c.ranks = p;
+                                                            c.gossip_period = period;
+                                                            c.straggler_jitter = jitter;
+                                                            c.layerwise = lw;
+                                                            c.comm_thread = ct;
+                                                            c.sync_mix = sm;
+                                                            c.allreduce = ar;
+                                                            c.codec = codec;
+                                                            c.fault_plan.drop_frac = drop;
+                                                            c.group_size = gs;
+                                                            c.inter_period = ip;
+                                                            c.seed = seed;
+                                                            out.push(c);
+                                                        }
                                                     }
-                                                    // lost frames are only
-                                                    // survivable on the gossip
-                                                    // family (collectives
-                                                    // block forever on them)
-                                                    if drop > 0.0
-                                                        && !matches!(
-                                                            algo,
-                                                            Algo::Gossip
-                                                                | Algo::GossipHypercube
-                                                                | Algo::GossipRandom
-                                                        )
-                                                    {
-                                                        continue;
-                                                    }
-                                                    let mut c = self.base.clone();
-                                                    c.algo = algo;
-                                                    c.ranks = p;
-                                                    c.gossip_period = period;
-                                                    c.straggler_jitter = jitter;
-                                                    c.layerwise = lw;
-                                                    c.comm_thread = ct;
-                                                    c.sync_mix = sm;
-                                                    c.allreduce = ar;
-                                                    c.codec = codec;
-                                                    c.fault_plan.drop_frac = drop;
-                                                    c.seed = seed;
-                                                    out.push(c);
                                                 }
                                             }
                                         }
@@ -204,7 +256,8 @@ impl Grid {
     /// `--algo-list`, `--ranks-list`, `--gossip-period-list`,
     /// `--jitter-list`, `--layerwise-list`, `--comm-thread-list`,
     /// `--sync-mix-list`, `--allreduce-list`, `--codec-list`,
-    /// `--drop-frac-list`, `--seed-list` — all comma-separated.
+    /// `--drop-frac-list`, `--group-size-list`, `--inter-period-list`,
+    /// `--seed-list` — all comma-separated.
     pub fn from_args(base: RunConfig, args: &Args) -> Result<Grid> {
         let mut g = Grid::new(base);
         if let Some(v) = args.get("algo-list") {
@@ -243,6 +296,12 @@ impl Grid {
         if let Some(v) = args.get("drop-frac-list") {
             g.drop_fracs = parse_list(v, "--drop-frac-list")?;
         }
+        if let Some(v) = args.get("group-size-list") {
+            g.group_sizes = parse_list(v, "--group-size-list")?;
+        }
+        if let Some(v) = args.get("inter-period-list") {
+            g.inter_periods = parse_list(v, "--inter-period-list")?;
+        }
         if let Some(v) = args.get("seed-list") {
             g.seeds = parse_list(v, "--seed-list")?;
         }
@@ -256,7 +315,11 @@ impl Grid {
     /// stop compensating?); `codec-frontier-<p>` is the wire-codec ×
     /// `gossip_period` product at `p` ranks (the bandwidth/fidelity
     /// frontier: how much wire compression buys once mixing is already
-    /// overlapped, and what it costs in convergence).
+    /// overlapped, and what it costs in convergence); `hier-frontier-<p>`
+    /// is the flat-vs-hierarchical gossip comparison under the two-tier
+    /// cost model at `p` ranks (does the locality-aware schedule beat
+    /// flat rotation once intra-host hops are ~free? — the measured-arm
+    /// counterpart of `sim::avg_gossip_efficiency_with_topology`).
     pub fn preset(name: &str) -> Result<Grid> {
         if let Some(p) = name.strip_prefix("period-jitter-") {
             let p: usize = p.parse().with_context(|| {
@@ -270,7 +333,16 @@ impl Grid {
             })?;
             return Ok(Grid::codec_frontier(p));
         }
-        bail!("unknown preset {name:?} (try period-jitter-1024 or codec-frontier-1024)")
+        if let Some(p) = name.strip_prefix("hier-frontier-") {
+            let p: usize = p.parse().with_context(|| {
+                format!("preset {name:?}: rank count suffix")
+            })?;
+            return Ok(Grid::hier_frontier(p));
+        }
+        bail!(
+            "unknown preset {name:?} (try period-jitter-1024, \
+             codec-frontier-1024 or hier-frontier-1024)"
+        )
     }
 
     /// The ROADMAP `gossip_period × jitter` grid at `p` ranks: gossip
@@ -318,6 +390,46 @@ impl Grid {
         Grid::new(base)
             .codecs(&[Codec::F32, Codec::Bf16, Codec::Int8, Codec::TopK])
             .gossip_periods(&[1, 2, 4])
+    }
+
+    /// The hierarchical-fabric frontier at `p` ranks: gossip on the
+    /// virtual-clock fabric with the two-tier [`HierCostModel`]
+    /// (NVLink-class links inside each 8-rank host group, a slow
+    /// α = 200 µs / 0.5 GB/s tier between groups), swept over
+    /// `group_size × inter_period`.  Three runnable rows:
+    ///
+    /// * `group_size = 1` — flat §4.5.1 rotation, every hop charged at
+    ///   the inter-group tier (the uniform-scatter baseline);
+    /// * `group_size = 8, inter_period = 1` — hierarchical *costs* but
+    ///   a topology-blind cadence (every exchange still crosses hosts);
+    /// * `group_size = 8, inter_period = 4` — the locality-aware
+    ///   two-level schedule (dense intra-group mixing, one inter-group
+    ///   exchange in four).
+    ///
+    /// The BENCH_hier_frontier gate asserts the last row's step time
+    /// beats the first by ≥ 1.5× — and the middle row shows the win
+    /// comes from the *schedule*, not merely from faster local links.
+    /// Device speed 100 keeps compute (0.25 ms) well under the
+    /// inter-tier wire time (~0.6 ms for the ~100 KB mlp-small model)
+    /// so the comparison measures the fabric, not the backprop.
+    ///
+    /// [`HierCostModel`]: crate::transport::HierCostModel
+    pub fn hier_frontier(p: usize) -> Grid {
+        let mut base = RunConfig {
+            model: "mlp-small".into(),
+            algo: Algo::Gossip,
+            ranks: p,
+            steps: 24,
+            use_artifacts: false,
+            rows_per_rank: 32,
+            layerwise: true,
+            cost_model: CostModelKind::Hier,
+            ..Default::default()
+        };
+        base.virtualize(&Workload::lenet3(100.0), 200e-6, 1.0 / 0.5e9);
+        Grid::new(base)
+            .group_sizes(&[1, 8])
+            .inter_periods(&[1, 4])
     }
 }
 
@@ -470,6 +582,55 @@ mod tests {
         .unwrap();
         let g = Grid::from_args(RunConfig::default(), &args).unwrap();
         assert_eq!(g.len(), 2);
+    }
+
+    #[test]
+    fn group_size_axis_skips_unrunnable_corners() {
+        let mut base = RunConfig::default();
+        base.ranks = 8;
+        let g = Grid::new(base.clone())
+            .algos(&[Algo::Gossip, Algo::GossipHypercube])
+            .group_sizes(&[1, 2, 3])
+            .inter_periods(&[1, 4]);
+        let s = g.scenarios();
+        // gossip: (1,1), (2,1), (2,4) — the (1,4) crossing is inert and
+        // 3 doesn't divide 8; hypercube: flat row only
+        assert_eq!(s.len(), 4);
+        assert!(s.iter().all(|c| c.ranks % c.group_size == 0));
+        assert!(s.iter().all(|c| c.group_size == 1 || c.algo == Algo::Gossip));
+        assert!(s.iter().all(|c| c.group_size > 1 || c.inter_period == 1));
+        // the axes reshape the scenario key
+        let mut keys: Vec<String> = s.iter().map(RunConfig::content_hash).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), 4);
+        // CLI axes parse
+        let args = Args::parse(
+            "sweep --group-size-list 1,2 --inter-period-list 1,4"
+                .split_whitespace()
+                .map(|t| t.to_string()),
+            &[],
+        )
+        .unwrap();
+        let g = Grid::from_args(base, &args).unwrap();
+        assert_eq!(g.len(), 3, "(1,1), (2,1), (2,4)");
+    }
+
+    #[test]
+    fn hier_frontier_preset_has_the_three_gate_rows() {
+        let g = Grid::preset("hier-frontier-1024").unwrap();
+        assert_eq!(g.base.ranks, 1024);
+        assert!(g.base.virtual_clock && g.base.layerwise);
+        assert_eq!(g.base.cost_model, CostModelKind::Hier);
+        let s = g.scenarios();
+        let rows: Vec<(usize, usize)> =
+            s.iter().map(|c| (c.group_size, c.inter_period)).collect();
+        assert_eq!(rows, vec![(1, 1), (8, 1), (8, 4)]);
+        // every row passes trainer validation (divisibility, algo, transport)
+        for c in &s {
+            assert_eq!(c.ranks % c.group_size, 0);
+            assert_eq!(c.algo, Algo::Gossip);
+        }
     }
 
     #[test]

@@ -26,14 +26,17 @@ use anyhow::{bail, Context, Result};
 use gossipgrad::collectives::Algorithm;
 use gossipgrad::config::{cli, Transport};
 use gossipgrad::coordinator;
+use gossipgrad::config::RunConfig;
 use gossipgrad::coordinator::trainer::{
-    build_backend, fabric_size, run_rank_with_link,
+    build_backend, fabric_size, run_rank_with_link, RankOutcome,
 };
 use gossipgrad::exp::{autotune, Engine, Grid, Sweep};
 use gossipgrad::metrics::{sparkline, RankSummary};
 use gossipgrad::runtime::artifacts::{default_dir, ArtifactSet};
 use gossipgrad::sim::{self, Schedule, Workload};
-use gossipgrad::transport::{CostModel, Link, TcpLinkBuilder};
+use gossipgrad::transport::{
+    hybrid, CostModel, GroupMap, HybridLink, Link, TcpLinkBuilder,
+};
 use gossipgrad::util::args::Args;
 use gossipgrad::util::bench::Table;
 use gossipgrad::util::json::{self, num, obj, Json};
@@ -92,10 +95,17 @@ fn print_usage() {
                   only; docs/fault-tolerance.md): [--kill-rank R@S,..]\n\
                   [--join-at-step R@S,..] [--slow-rank R@S:F,..]\n\
                   [--drop-frac F] [--dup-frac F] [--fault-seed N]\n\
-         launch:  spawn one OS process per rank on localhost over TCP\n\
-                  and merge their metrics.  Takes every train flag,\n\
-                  plus --port-base P (default 29500) [--keep-dir]\n\
-                  (requires --transport tcp)\n\
+                  hierarchical fabric (docs/topology.md):\n\
+                  [--group-size G]  carve ranks into contiguous\n\
+                  host groups (two-level gossip schedule)\n\
+                  [--inter-period K]  inter-group exchange cadence\n\
+                  [--cost-model flat|hier]  two-tier virtual costs\n\
+         launch:  spawn one OS process per host group (default: per\n\
+                  rank) on localhost over TCP and merge their metrics.\n\
+                  Takes every train flag, plus --port-base P (default\n\
+                  29500) [--keep-dir] (requires --transport tcp);\n\
+                  --group-size G mounts in-proc mailboxes inside each\n\
+                  group and the TCP mesh between groups\n\
          rank:    run ONE rank of a multi-process TCP job:\n\
                   --rank R --peers host:port,...  (one entry per\n\
                   fabric rank, in rank order; entry R is this rank's\n\
@@ -108,10 +118,12 @@ fn print_usage() {
                   base scenario, plus axes --algo-list --ranks-list\n\
                   --gossip-period-list --jitter-list --layerwise-list\n\
                   --comm-thread-list --sync-mix-list --allreduce-list\n\
-                  --codec-list --drop-frac-list --seed-list\n\
+                  --codec-list --drop-frac-list --group-size-list\n\
+                  --inter-period-list --seed-list\n\
                   (comma-separated; omitted\n\
                   axes pin at the base value), or --preset\n\
-                  period-jitter-1024 | codec-frontier-1024.\n\
+                  period-jitter-1024 | codec-frontier-1024 |\n\
+                  hier-frontier-1024.\n\
                   --sweep-threads N  host worker threads (N-thread and\n\
                   1-thread sweeps are byte-identical)   --cache-dir DIR\n\
                   content-hash result cache   --out-dir DIR --out-name S\n\
@@ -227,23 +239,112 @@ fn cmd_rank(args: &Args) -> Result<()> {
     if rank >= n {
         bail!("--rank {rank} outside fabric of {n}");
     }
-    let backend = build_backend(&cfg)?;
-    let builder = TcpLinkBuilder::bind(&peers[rank])
-        .with_context(|| format!("binding {}", peers[rank]))?;
     let timeout = std::time::Duration::from_secs(
         args.usize_or("handshake-timeout-secs", 30) as u64,
     );
+    if cfg.group_size > 1 {
+        // group mode: this process hosts the whole host-group
+        // [rank, rank + group_size) behind a hybrid link
+        return cmd_rank_group(args, &cfg, rank, &peers, timeout);
+    }
+    let backend = build_backend(&cfg)?;
+    let builder = TcpLinkBuilder::bind(&peers[rank])
+        .with_context(|| format!("binding {}", peers[rank]))?;
     let link: std::sync::Arc<dyn Link> = builder
         .establish(rank, &peers, cfg.cost_model(), timeout)
         .context("establishing the tcp mesh")?;
     let out = run_rank_with_link(&cfg, backend, rank, link)?;
+    finish_rank(args, &out)
+}
 
+/// One host-group of a `--group-size G` multi-process job: this process
+/// owns fabric ranks `[base, base + G)` — one thread each — with
+/// in-proc mailboxes between them and the TCP mesh to every other
+/// group (docs/topology.md).  Writes the same `rank_<R>.json` files as
+/// G single-rank processes would, so the launcher's merge loop is
+/// oblivious to grouping.
+fn cmd_rank_group(
+    args: &Args,
+    cfg: &RunConfig,
+    base: usize,
+    peers: &[String],
+    timeout: std::time::Duration,
+) -> Result<()> {
+    let n = fabric_size(cfg);
+    let gsize = cfg.group_size;
+    if base % gsize != 0 {
+        bail!(
+            "--rank {base} must be a group base (a multiple of \
+             --group-size {gsize}) when launching grouped ranks"
+        );
+    }
+    let groups = GroupMap::new(n, gsize);
+    // bind every hosted listener before any establish: the mesh
+    // handshake is a global barrier over all n listen addresses, so a
+    // late bind inside the establish loop would deadlock the job
+    let builders = (base..base + gsize)
+        .map(|r| {
+            TcpLinkBuilder::bind(&peers[r])
+                .with_context(|| format!("binding {}", peers[r]))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let boxes = hybrid::group_mailboxes(gsize);
+    let backend = build_backend(cfg)?;
+    let joined: Vec<Result<RankOutcome>> = std::thread::scope(|s| {
+        let handles: Vec<_> = builders
+            .into_iter()
+            .enumerate()
+            .map(|(i, b)| {
+                let r = base + i;
+                let boxes = std::sync::Arc::clone(&boxes);
+                let backend = std::sync::Arc::clone(&backend);
+                // each rank establishes in its own thread: the
+                // handshake is a cross-rank barrier, serial
+                // establishment would deadlock
+                s.spawn(move || -> Result<RankOutcome> {
+                    let tcp = b
+                        .establish(r, peers, cfg.cost_model(), timeout)
+                        .with_context(|| {
+                            format!("rank {r}: establishing the tcp mesh")
+                        })?;
+                    let link: std::sync::Arc<dyn Link> =
+                        std::sync::Arc::new(HybridLink::new(r, groups, boxes, tcp));
+                    run_rank_with_link(cfg, backend, r, link)
+                })
+            })
+            .collect();
+        // join EVERY hosted rank before surfacing an error, so no rank
+        // thread (with its sockets) outlives the scope
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .map_err(|_| anyhow::anyhow!("rank thread panicked"))
+                    .and_then(|r| r)
+            })
+            .collect()
+    });
+    let mut outs = Vec::with_capacity(gsize);
+    for r in joined {
+        outs.push(r?);
+    }
+    outs.sort_by_key(|o| o.rank);
+    for out in &outs {
+        finish_rank(args, out)?;
+    }
+    Ok(())
+}
+
+/// Shared tail of the `rank` subcommand: persist the outcome for the
+/// launcher, report it, and enforce the per-rank drain invariant.
+fn finish_rank(args: &Args, out: &RankOutcome) -> Result<()> {
+    let rank = out.rank;
     if let Some(dir) = args.get("result-dir") {
         let dir = std::path::Path::new(dir);
         std::fs::create_dir_all(dir)?;
         std::fs::write(
             dir.join(format!("rank_{rank}.json")),
-            rank_result_json(&out).to_string() + "\n",
+            rank_result_json(out).to_string() + "\n",
         )?;
     }
     match &out.metrics {
@@ -308,6 +409,12 @@ fn cmd_launch(args: &Args) -> Result<()> {
     if n == 0 {
         bail!("need at least one rank");
     }
+    // one process per host-group (docs/topology.md); group_size = 1 is
+    // the historical one-process-per-rank launch
+    let gsize = cfg.group_size.max(1);
+    if n % gsize != 0 {
+        bail!("--group-size {gsize} must divide the fabric size {n}");
+    }
     let port_base = args.usize_or("port-base", 29500);
     let peers: Vec<String> =
         (0..n).map(|i| format!("127.0.0.1:{}", port_base + i)).collect();
@@ -318,15 +425,16 @@ fn cmd_launch(args: &Args) -> Result<()> {
     std::fs::write(&cfg_path, cfg.to_json().to_string() + "\n")?;
     let exe = std::env::current_exe()?;
     println!(
-        "launch: transport=tcp algo={} workers={} processes={n} ports {}..{}",
+        "launch: transport=tcp algo={} workers={} processes={} group-size={gsize} ports {}..{}",
         cfg.algo.name(),
         cfg.ranks,
+        n / gsize,
         port_base,
         port_base + n - 1
     );
     let t0 = std::time::Instant::now();
-    let mut children = Vec::with_capacity(n);
-    for rank in 0..n {
+    let mut children = Vec::with_capacity(n / gsize);
+    for base in (0..n).step_by(gsize) {
         let child = std::process::Command::new(&exe)
             .arg("rank")
             .arg("--transport")
@@ -334,21 +442,21 @@ fn cmd_launch(args: &Args) -> Result<()> {
             .arg("--config")
             .arg(&cfg_path)
             .arg("--rank")
-            .arg(rank.to_string())
+            .arg(base.to_string())
             .arg("--peers")
             .arg(peers.join(","))
             .arg("--result-dir")
             .arg(&dir)
             .stdout(std::process::Stdio::null())
             .spawn()
-            .with_context(|| format!("spawning rank {rank}"))?;
-        children.push(child);
+            .with_context(|| format!("spawning group process at rank {base}"))?;
+        children.push((base, child));
     }
     let mut failed = Vec::new();
-    for (rank, mut child) in children.into_iter().enumerate() {
+    for (base, mut child) in children {
         let status = child.wait()?;
         if !status.success() {
-            failed.push(rank);
+            failed.push(base);
         }
     }
     if !failed.is_empty() {
@@ -450,6 +558,8 @@ const AXIS_KEYS: &[&str] = &[
     "allreduce-list",
     "codec-list",
     "drop-frac-list",
+    "group-size-list",
+    "inter-period-list",
     "seed-list",
 ];
 

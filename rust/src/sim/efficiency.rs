@@ -27,7 +27,7 @@
 use super::workload::Workload;
 use crate::codec::Codec;
 use crate::collectives::Algorithm;
-use crate::transport::CostModel;
+use crate::transport::{CostModel, HierCostModel};
 use crate::util::ceil_log2;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -253,6 +253,83 @@ pub fn step_time_with_codec(
         t_compute,
         t_step,
         exposed_comm: (t_step - t_compute).max(0.0),
+    }
+}
+
+/// Closed-form step time of one **two-level gossip** step under the
+/// hierarchical cost model — the analytic twin of the measured
+/// `--group-size G --inter-period k --cost-model hier` run
+/// (docs/topology.md).
+///
+/// The two-level schedule sends each layer to exactly one partner per
+/// step, like flat gossip — what changes is *which tier* the message
+/// crosses: every `inter_period`-th step the partner sits in another
+/// host group (the `hier.inter` α–β pair), every other step it is a
+/// group co-resident (`hier.intra`, NVLink-class).  The degenerate maps
+/// fall out naturally: `group_size = 1` makes every pair inter-group
+/// (the flat curve under the inter tier — the baseline arm of the
+/// hier-frontier gate), `group_size = p` makes every pair intra-group.
+pub fn gossip_step_time_with_topology(
+    w: &Workload,
+    hier: &HierCostModel,
+    inter_period: usize,
+    step_idx: usize,
+    codec: Codec,
+) -> Efficiency {
+    let g = hier.groups.group_size();
+    let p = hier.groups.p();
+    let two_level = g > 1 && g < p;
+    // flat schedules exchange across groups every step (g = 1: every
+    // peer is foreign; g = p: every peer is local)
+    let inter_step = if two_level {
+        step_idx % inter_period.max(1) == 0
+    } else {
+        g == 1
+    };
+    let tier = if inter_step { &hier.inter } else { &hier.intra };
+    let t_compute = w.t_compute();
+    let msgs: Vec<(f64, f64)> = grad_ready_times(w)
+        .iter()
+        .zip(&w.layer_bytes)
+        .map(|(&r, &b)| (r, tier.nominal(coded(codec, b))))
+        .collect();
+    let comm_done = nic_drain(msgs);
+    // same device-memory mixing pass as Schedule::Gossip: decoded f32s,
+    // tier-independent
+    let mix = 3.0 * w.model_bytes() as f64 / 500.0e9;
+    let t_step = t_compute.max(comm_done) + mix;
+    Efficiency {
+        p,
+        t_compute,
+        t_step,
+        exposed_comm: (t_step - t_compute).max(0.0),
+    }
+}
+
+/// [`gossip_step_time_with_topology`] averaged over a window of steps —
+/// the window must cover the inter/intra cadence, so it is rounded up
+/// to a multiple of `inter_period`.
+pub fn avg_gossip_efficiency_with_topology(
+    w: &Workload,
+    hier: &HierCostModel,
+    inter_period: usize,
+    steps: usize,
+    codec: Codec,
+) -> Efficiency {
+    let k = inter_period.max(1);
+    let steps = steps.max(1).div_ceil(k) * k;
+    let mut tot_step = 0.0;
+    let mut tot_comp = 0.0;
+    for s in 0..steps {
+        let e = gossip_step_time_with_topology(w, hier, k, s, codec);
+        tot_step += e.t_step;
+        tot_comp += e.t_compute;
+    }
+    Efficiency {
+        p: hier.groups.p(),
+        t_compute: tot_comp / steps as f64,
+        t_step: tot_step / steps as f64,
+        exposed_comm: ((tot_step - tot_comp) / steps as f64).max(0.0),
     }
 }
 
@@ -584,6 +661,74 @@ mod tests {
             Codec::TopK,
         );
         assert_eq!(a32.t_step.to_bits(), atk.t_step.to_bits());
+    }
+
+    #[test]
+    fn topology_twin_degenerates_to_flat_curves() {
+        use crate::transport::GroupMap;
+        let w = Workload::resnet50_p100();
+        let c = ib();
+        let p = 64;
+        // group_size = 1: every pair is inter-group — bit-identical to
+        // the historical flat gossip curve under the inter tier
+        let flat = step_time(Schedule::Gossip, &w, p, &c, 0);
+        let g1 = gossip_step_time_with_topology(
+            &w,
+            &HierCostModel::with_inter(c.clone(), GroupMap::new(p, 1)),
+            4,
+            0,
+            Codec::F32,
+        );
+        assert_eq!(flat.t_step.to_bits(), g1.t_step.to_bits());
+        // group_size = p: every pair is intra-group — the NVLink curve
+        let gp = gossip_step_time_with_topology(
+            &w,
+            &HierCostModel::with_inter(c.clone(), GroupMap::new(p, p)),
+            4,
+            0,
+            Codec::F32,
+        );
+        let nv = step_time(Schedule::Gossip, &w, p, &CostModel::nvlink(), 0);
+        assert_eq!(nv.t_step.to_bits(), gp.t_step.to_bits());
+    }
+
+    #[test]
+    fn two_level_alternates_tiers_on_the_inter_cadence() {
+        use crate::transport::GroupMap;
+        let w = Workload::lenet3(40.0);
+        let inter = CostModel::new(200e-6, 1.0 / 0.5e9, 0.0, 0);
+        let hier = HierCostModel::with_inter(inter, GroupMap::new(64, 8));
+        let k = 4;
+        let at = |s| gossip_step_time_with_topology(&w, &hier, k, s, Codec::F32).t_step;
+        assert!(at(0) > at(1), "step 0 crosses hosts, step 1 stays inside");
+        assert_eq!(at(1).to_bits(), at(2).to_bits());
+        assert_eq!(at(0).to_bits(), at(4).to_bits(), "cadence repeats every k");
+    }
+
+    #[test]
+    fn hier_frontier_two_level_beats_flat_at_1024() {
+        // the closed-form arm of the CI hier-frontier gate
+        // (tools/hier_frontier_closed_form.py mirrors this setup):
+        // p = 1024 over 128 modeled hosts (group_size 8), LeNet3 analog
+        // at device speed 40, 200 µs / 0.5 GB/s across hosts,
+        // inter-group exchange every 4th step
+        use crate::transport::GroupMap;
+        let w = Workload::lenet3(40.0);
+        let inter = CostModel::new(200e-6, 1.0 / 0.5e9, 0.0, 0);
+        let p = 1024;
+        let hier = HierCostModel::with_inter(inter.clone(), GroupMap::new(p, 8));
+        let flat = HierCostModel::with_inter(inter, GroupMap::new(p, 1));
+        let h = avg_gossip_efficiency_with_topology(&w, &hier, 4, 64, Codec::F32);
+        let f = avg_gossip_efficiency_with_topology(&w, &flat, 4, 64, Codec::F32);
+        let ratio = f.t_step / h.t_step;
+        assert!(
+            ratio >= 1.5,
+            "two-level speedup {ratio:.2}× misses the 1.5× gate \
+             (flat {:.6}s vs hier {:.6}s)",
+            f.t_step,
+            h.t_step
+        );
+        assert!(h.percent() > f.percent());
     }
 
     #[test]

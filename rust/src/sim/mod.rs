@@ -28,6 +28,9 @@ pub mod events;
 pub mod straggler;
 pub mod workload;
 
-pub use efficiency::{step_time, Efficiency, Schedule};
+pub use efficiency::{
+    avg_gossip_efficiency_with_topology, gossip_step_time_with_topology, step_time,
+    Efficiency, Schedule,
+};
 pub use straggler::jitter_factor;
 pub use workload::{split_compute, Workload};

@@ -18,18 +18,24 @@
 //!   imbalance the paper criticises (kept as a comparison point).
 //! * [`rotation`]      — §4.5.1 partner rotation: p seeded shuffles of
 //!   the communicator, advanced every ⌈log₂ p⌉ steps.
+//! * [`twolevel`]      — hierarchical (host-group-aware) schedule: dense
+//!   intra-group dissemination, sparse inter-group partners every
+//!   `inter_period` steps, rotation applied within groups and to the
+//!   group pairings separately (docs/topology.md).
 
 pub mod dissemination;
 pub mod hypercube;
 pub mod random;
 pub mod ring;
 pub mod rotation;
+pub mod twolevel;
 
 pub use dissemination::Dissemination;
 pub use hypercube::Hypercube;
 pub use random::RandomGossip;
 pub use ring::Ring;
 pub use rotation::Rotation;
+pub use twolevel::TwoLevel;
 
 /// The peers a rank exchanges with at one gossip step.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

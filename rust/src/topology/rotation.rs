@@ -2,62 +2,99 @@
 //!
 //! Dissemination exchange repeats its partners every ⌈log₂ p⌉ steps, so
 //! *direct* diffusion is limited to log(p)/p of the ranks.  The paper's
-//! fix: precompute p random shuffles of the communicator at startup;
-//! after every ⌈log₂ p⌉ steps, advance to the next shuffled communicator
-//! and rebuild the virtual dissemination topology on it.  Cost is
-//! amortised to ~0 (all permutations precomputed here, as in the paper).
+//! fix: p random shuffles of the communicator; after every ⌈log₂ p⌉
+//! steps, advance to the next shuffled communicator and rebuild the
+//! virtual dissemination topology on it.
+//!
+//! The eager form of that table is O(p²) integers (p+1 permutations plus
+//! inverses) rebuilt *per rank* — at p = 1024 that is ~8 M usizes per
+//! worker before the first step runs.  Epochs are therefore drawn
+//! lazily: the RNG stream is consumed strictly in epoch order on first
+//! use and each epoch's (perm, inverse) pair is memoised, so the table
+//! is bit-identical to the eager one (pinned by a test below) while a
+//! run of s steps only ever materialises ⌈s/⌈log₂ p⌉⌉ epochs.
 //!
 //! `Rotation` wraps any inner topology: ranks are mapped through the
 //! active permutation before the inner exchange formula is applied.
 
 use super::{Exchange, Topology};
 use crate::util::{ceil_log2, Rng};
+use std::sync::{Mutex, OnceLock};
 
 pub struct Rotation<T: Topology> {
     inner: T,
-    /// perms[e][v] = physical rank at virtual position v, epoch e.
-    perms: Vec<Vec<usize>>,
-    /// inverse: pos[e][r] = virtual position of physical rank r.
-    pos: Vec<Vec<usize>>,
+    /// slots[e] = (perm, pos) for epoch e, drawn on first use.
+    /// perm[v] = physical rank at virtual position v;
+    /// pos[r] = virtual position of physical rank r (the inverse).
+    slots: Vec<OnceLock<Epoch>>,
+    /// The RNG stream + the next epoch index it will draw.  Epochs are
+    /// always drawn in order 0, 1, 2, … regardless of which epoch is
+    /// requested first, so the stream consumption (and hence every
+    /// permutation) matches the historical eager construction exactly.
+    gen: Mutex<Gen>,
     period: usize,
+}
+
+struct Epoch {
+    perm: Vec<usize>,
+    pos: Vec<usize>,
+}
+
+struct Gen {
+    rng: Rng,
+    next: usize,
 }
 
 impl<T: Topology> Rotation<T> {
     pub fn new(inner: T, seed: u64) -> Self {
         let p = inner.size();
-        let mut rng = Rng::new(seed);
-        // epoch 0 is the identity (matches the paper: rotation kicks in
-        // after the first log(p) steps); then p random shuffles.
-        let mut perms = vec![(0..p).collect::<Vec<_>>()];
-        for _ in 0..p {
-            perms.push(rng.permutation(p));
-        }
-        let pos = perms
-            .iter()
-            .map(|perm| {
-                let mut inv = vec![0usize; p];
-                for (v, &r) in perm.iter().enumerate() {
-                    inv[r] = v;
-                }
-                inv
-            })
-            .collect();
         let period = ceil_log2(p).max(1);
         Rotation {
             inner,
-            perms,
-            pos,
+            // epoch 0 is the identity (matches the paper: rotation kicks
+            // in after the first log(p) steps); then p random shuffles
+            slots: (0..p + 1).map(|_| OnceLock::new()).collect(),
+            gen: Mutex::new(Gen {
+                rng: Rng::new(seed),
+                next: 0,
+            }),
             period,
         }
     }
 
     /// Which communicator epoch is active at `step`.
     pub fn epoch(&self, step: usize) -> usize {
-        (step / self.period) % self.perms.len()
+        (step / self.period) % self.slots.len()
     }
 
     pub fn num_epochs(&self) -> usize {
-        self.perms.len()
+        self.slots.len()
+    }
+
+    /// Epoch `e`'s state, drawing any not-yet-materialised epochs up to
+    /// `e` in stream order first.
+    fn epoch_state(&self, e: usize) -> &Epoch {
+        if let Some(s) = self.slots[e].get() {
+            return s;
+        }
+        let p = self.inner.size();
+        let mut gen = self.gen.lock().unwrap();
+        while gen.next <= e {
+            let i = gen.next;
+            let perm: Vec<usize> = if i == 0 {
+                (0..p).collect()
+            } else {
+                gen.rng.permutation(p)
+            };
+            let mut pos = vec![0usize; p];
+            for (v, &r) in perm.iter().enumerate() {
+                pos[r] = v;
+            }
+            // only the holder of the gen lock ever sets a slot
+            let _ = self.slots[i].set(Epoch { perm, pos });
+            gen.next = i + 1;
+        }
+        self.slots[e].get().expect("drawn above")
     }
 
     /// Epoch `e`'s communicator ordering: `perm[v]` is the physical
@@ -66,7 +103,7 @@ impl<T: Topology> Rotation<T> {
     /// filtered out (`membership::collapsed_exchange`), preserving the
     /// rotation's diffusion pattern among the survivors.
     pub fn perm(&self, e: usize) -> &[usize] {
-        &self.perms[e]
+        &self.epoch_state(e).perm
     }
 
     pub fn inner(&self) -> &T {
@@ -80,12 +117,12 @@ impl<T: Topology> Topology for Rotation<T> {
     }
 
     fn exchange(&self, rank: usize, step: usize) -> Exchange {
-        let e = self.epoch(step);
-        let v = self.pos[e][rank];
+        let st = self.epoch_state(self.epoch(step));
+        let v = st.pos[rank];
         let ex = self.inner.exchange(v, step);
         Exchange {
-            send_to: self.perms[e][ex.send_to],
-            recv_from: self.perms[e][ex.recv_from],
+            send_to: st.perm[ex.send_to],
+            recv_from: st.perm[ex.recv_from],
         }
     }
 
@@ -165,9 +202,31 @@ mod tests {
     #[test]
     fn all_perms_are_bijections() {
         let rot = Rotation::new(Dissemination::new(13), 77);
-        for perm in &rot.perms {
-            let s: HashSet<_> = perm.iter().collect();
+        for e in 0..rot.num_epochs() {
+            let s: HashSet<_> = rot.perm(e).iter().collect();
             assert_eq!(s.len(), 13);
+        }
+    }
+
+    #[test]
+    fn lazy_epochs_match_eager_table_bit_for_bit() {
+        // the historical eager construction, replicated inline: identity,
+        // then p permutations drawn from one sequential stream
+        let (p, seed) = (13usize, 77u64);
+        let mut rng = Rng::new(seed);
+        let mut eager = vec![(0..p).collect::<Vec<_>>()];
+        for _ in 0..p {
+            eager.push(rng.permutation(p));
+        }
+        let rot = Rotation::new(Dissemination::new(p), seed);
+        assert_eq!(rot.num_epochs(), p + 1);
+        // request epochs out of order: memoisation must not let access
+        // order perturb the stream
+        for &e in &[5usize, 2, 13, 0, 7, 5, 12, 1] {
+            assert_eq!(rot.perm(e), &eager[e][..], "epoch {e}");
+        }
+        for (e, want) in eager.iter().enumerate() {
+            assert_eq!(rot.perm(e), &want[..], "epoch {e}");
         }
     }
 }

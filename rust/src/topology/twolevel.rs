@@ -1,0 +1,365 @@
+//! Two-level, locality-aware gossip schedule (hierarchical fabric).
+//!
+//! Real clusters are not flat: ranks sharing a host talk over
+//! NVLink/PCIe (~100 GB/s) while hosts talk over IB/Aries.  The flat
+//! rotation (§4.5.1) scatters partners uniformly, so at p = 1024 nearly
+//! every exchange crosses the slow tier.  `TwoLevel` keeps the paper's
+//! balanced-permutation property while concentrating traffic on the fast
+//! tier: **dense intra-group mixing** on most steps (dissemination
+//! *within* each host group) and a **sparse inter-group partner** every
+//! `inter_period`-th gossip step (dissemination *between* groups, with a
+//! per-round offset shift so updates also cross group-local positions).
+//!
+//! Rotation is topology-aware: each epoch (every ⌈log₂ p⌉ steps, same
+//! cadence as the flat [`Rotation`]) draws — from a per-epoch split of
+//! the seed — a fresh shuffle of the virtual positions *within* every
+//! group plus a separate shuffle of the group pairings, so partner
+//! diversity grows without leaving the fast tier on dense steps.
+//!
+//! **Flat-identity guarantee** (property-tested below and pinned
+//! end-to-end by `tests/topology_hier.rs`): with `group_size == 1`
+//! (every rank its own host) or `group_size == p` (one host), the
+//! schedule delegates verbatim to today's flat topology — the rotated
+//! dissemination when rotation is on, plain dissemination otherwise —
+//! so historical runs are bit-identical, `param_hash` included.
+//!
+//! GoSGD and Elastic Gossip (PAPERS.md) show gossip quality survives
+//! restricted/biased partner choice — the license this schedule needs.
+
+use super::{Dissemination, Exchange, Rotation, Topology};
+use crate::transport::GroupMap;
+use crate::util::{ceil_log2, Rng};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Per-epoch rotation state: a shuffle of the group pairings plus a
+/// shuffle of the virtual positions within each group.
+struct Epoch {
+    /// group_perm[v] = group id at virtual group position v.
+    group_perm: Vec<usize>,
+    /// inverse: group_pos[g] = virtual position of group g.
+    group_pos: Vec<usize>,
+    /// within[g][v] = local offset at virtual position v in group g.
+    within: Vec<Vec<usize>>,
+    /// inverse: within_pos[g][o] = virtual position of offset o.
+    within_pos: Vec<Vec<usize>>,
+}
+
+pub struct TwoLevel {
+    groups: GroupMap,
+    inter_period: usize,
+    rotate: bool,
+    seed: u64,
+    /// The flat schedule, delegated to verbatim in the degenerate cases
+    /// (`group_size` 1 or p) and used by the membership layer as the
+    /// survivor ordering when a view degrades.
+    flat: Rotation<Dissemination>,
+    plain: Dissemination,
+    /// Dissemination within one group (over `group_size` positions).
+    intra: Dissemination,
+    /// Dissemination between groups (over `num_groups` positions).
+    glevel: Dissemination,
+    /// Epoch length in gossip steps — ⌈log₂ p⌉, the flat rotation's
+    /// cadence.
+    period: usize,
+    /// Lazily drawn epochs (pure function of (seed, epoch), so access
+    /// order cannot perturb them).
+    epochs: Mutex<HashMap<usize, Arc<Epoch>>>,
+}
+
+impl TwoLevel {
+    /// `p` ranks in groups of `group_size` (must divide `p`), one
+    /// inter-group exchange every `inter_period` gossip steps.
+    pub fn new(
+        p: usize,
+        group_size: usize,
+        inter_period: usize,
+        rotate: bool,
+        seed: u64,
+    ) -> Self {
+        assert!(inter_period >= 1, "inter_period must be >= 1");
+        let groups = GroupMap::new(p, group_size);
+        TwoLevel {
+            groups,
+            inter_period,
+            rotate,
+            seed,
+            flat: Rotation::new(Dissemination::new(p), seed),
+            plain: Dissemination::new(p),
+            intra: Dissemination::new(group_size),
+            glevel: Dissemination::new(groups.num_groups()),
+            period: ceil_log2(p).max(1),
+            epochs: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Degenerate cases route through the flat schedule untouched.
+    fn delegates(&self) -> bool {
+        self.groups.group_size() == 1 || self.groups.group_size() == self.groups.p()
+    }
+
+    pub fn rotates(&self) -> bool {
+        self.rotate
+    }
+
+    pub fn group_map(&self) -> GroupMap {
+        self.groups
+    }
+
+    pub fn inter_period(&self) -> usize {
+        self.inter_period
+    }
+
+    /// Is `step` an inter-group (slow-tier) exchange?
+    pub fn is_inter_step(&self, step: usize) -> bool {
+        !self.delegates() && step % self.inter_period == 0
+    }
+
+    /// The flat rotation's communicator ordering at `step` — the
+    /// survivor ordering the membership layer collapses over when a view
+    /// degrades (locality is best-effort under faults; the collapsed
+    /// schedule's priority is that every survivor pairs with a live
+    /// partner).
+    pub fn flat_order(&self, step: usize) -> &[usize] {
+        self.flat.perm(self.flat.epoch(step))
+    }
+
+    /// Which rotation epoch is active at `step` (0 forever when
+    /// rotation is off).
+    pub fn epoch(&self, step: usize) -> usize {
+        if self.rotate {
+            (step / self.period) % (self.groups.p() + 1)
+        } else {
+            0
+        }
+    }
+
+    fn epoch_state(&self, e: usize) -> Arc<Epoch> {
+        let mut map = self.epochs.lock().unwrap();
+        if let Some(st) = map.get(&e) {
+            return Arc::clone(st);
+        }
+        let st = Arc::new(self.draw_epoch(e));
+        map.insert(e, Arc::clone(&st));
+        st
+    }
+
+    fn draw_epoch(&self, e: usize) -> Epoch {
+        let ng = self.groups.num_groups();
+        let gs = self.groups.group_size();
+        // epoch 0 is the identity, like the flat rotation: the canonical
+        // grouping runs for the first ⌈log₂ p⌉ steps
+        let (group_perm, within) = if e == 0 {
+            (
+                (0..ng).collect::<Vec<_>>(),
+                (0..ng).map(|_| (0..gs).collect()).collect::<Vec<Vec<_>>>(),
+            )
+        } else {
+            // independent stream per epoch — a pure function of
+            // (seed, e), so lazy access order cannot change the draw
+            let mut base = Rng::new(self.seed);
+            let mut rng = base.split(e as u64);
+            let gp = rng.permutation(ng);
+            let w = (0..ng).map(|_| rng.permutation(gs)).collect();
+            (gp, w)
+        };
+        let invert = |perm: &[usize]| {
+            let mut inv = vec![0usize; perm.len()];
+            for (v, &r) in perm.iter().enumerate() {
+                inv[r] = v;
+            }
+            inv
+        };
+        Epoch {
+            group_pos: invert(&group_perm),
+            within_pos: within.iter().map(|w| invert(w)).collect(),
+            group_perm,
+            within,
+        }
+    }
+}
+
+impl Topology for TwoLevel {
+    fn size(&self) -> usize {
+        self.groups.p()
+    }
+
+    fn exchange(&self, rank: usize, step: usize) -> Exchange {
+        if self.delegates() {
+            return if self.rotate {
+                self.flat.exchange(rank, step)
+            } else {
+                self.plain.exchange(rank, step)
+            };
+        }
+        let gs = self.groups.group_size();
+        let a = self.groups.group_of(rank);
+        let base = self.groups.group_base(a);
+        let off = rank - base;
+        let st = self.epoch_state(self.epoch(step));
+        if self.is_inter_step(step) {
+            // inter-group step: groups pair via dissemination over the
+            // epoch's group shuffle; the per-round offset shift `d`
+            // walks the group-local positions so updates cross offsets
+            // even when every step is inter (inter_period == 1)
+            let round = step / self.inter_period;
+            let d = round % gs;
+            let gex = self.glevel.exchange(st.group_pos[a], round);
+            Exchange {
+                send_to: self.groups.group_base(st.group_perm[gex.send_to]) + (off + d) % gs,
+                recv_from: self.groups.group_base(st.group_perm[gex.recv_from])
+                    + (off + gs - d) % gs,
+            }
+        } else {
+            // dense intra-group step: dissemination within the group
+            // over the epoch's within-group shuffle
+            let w = &st.within[a];
+            let v = st.within_pos[a][off];
+            let ex = self.intra.exchange(v, step);
+            Exchange {
+                send_to: base + w[ex.send_to],
+                recv_from: base + w[ex.recv_from],
+            }
+        }
+    }
+
+    fn diffusion_steps(&self) -> usize {
+        if self.delegates() {
+            return self.flat.diffusion_steps();
+        }
+        // intra diffusion within groups + one group-level dissemination
+        // sweep paced at inter_period
+        ceil_log2(self.groups.group_size())
+            + self.inter_period * ceil_log2(self.groups.num_groups())
+    }
+
+    fn name(&self) -> &'static str {
+        "two-level"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{check_balanced, diffusion_time};
+    use super::*;
+
+    #[test]
+    fn stays_balanced_all_step_kinds() {
+        for (p, g, k) in [(8, 2, 1), (8, 2, 4), (8, 4, 2), (16, 4, 4), (12, 3, 3)] {
+            let t = TwoLevel::new(p, g, k, true, 42);
+            for step in 0..6 * t.period {
+                check_balanced(&t, step).unwrap();
+            }
+            let t = TwoLevel::new(p, g, k, false, 42);
+            for step in 0..4 * t.period {
+                check_balanced(&t, step).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn flat_identity_group_size_one_and_p() {
+        // the flat-identity guarantee, at the topology level: group_size
+        // 1 and p delegate bit-for-bit to today's flat schedule
+        let (p, seed) = (16usize, 7u64);
+        let rot = Rotation::new(Dissemination::new(p), seed);
+        let plain = Dissemination::new(p);
+        for g in [1usize, p] {
+            let t = TwoLevel::new(p, g, 4, true, seed);
+            let f = TwoLevel::new(p, g, 4, false, seed);
+            for step in 0..5 * t.period {
+                for r in 0..p {
+                    assert_eq!(t.exchange(r, step), rot.exchange(r, step), "g={g}");
+                    assert_eq!(f.exchange(r, step), plain.exchange(r, step), "g={g}");
+                }
+            }
+            assert_eq!(t.diffusion_steps(), rot.diffusion_steps());
+        }
+    }
+
+    #[test]
+    fn dense_steps_stay_inside_the_group() {
+        let t = TwoLevel::new(16, 4, 4, true, 3);
+        let gm = t.group_map();
+        for step in 0..8 * t.period {
+            for r in 0..16 {
+                let ex = t.exchange(r, step);
+                if t.is_inter_step(step) {
+                    assert!(!gm.same_group(r, ex.send_to), "step {step} rank {r}");
+                    assert!(!gm.same_group(r, ex.recv_from));
+                } else {
+                    assert!(gm.same_group(r, ex.send_to), "step {step} rank {r}");
+                    assert!(gm.same_group(r, ex.recv_from));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inter_cadence_follows_inter_period() {
+        let t = TwoLevel::new(8, 2, 3, true, 1);
+        let inter: Vec<usize> = (0..12).filter(|&s| t.is_inter_step(s)).collect();
+        assert_eq!(inter, vec![0, 3, 6, 9]);
+        // inter_period 1: every step crosses groups
+        let t1 = TwoLevel::new(8, 2, 1, true, 1);
+        assert!((0..12).all(|s| t1.is_inter_step(s)));
+    }
+
+    #[test]
+    fn rotation_reshuffles_across_epochs() {
+        let t = TwoLevel::new(16, 4, 4, true, 9);
+        // same in-epoch step offset, consecutive epochs: at least one
+        // rank's partner must move (the shuffles are fresh draws)
+        let s0 = 1usize; // dense step in epoch 0
+        let s1 = s0 + t.period; // same phase, epoch 1
+        assert_ne!(t.epoch(s0), t.epoch(s1));
+        let moved = (0..16).any(|r| t.exchange(r, s0) != t.exchange(r, s1));
+        assert!(moved, "epoch advance did not reshuffle any partner");
+        // without rotation the schedule is epoch-invariant
+        let f = TwoLevel::new(16, 4, 4, false, 9);
+        for r in 0..16 {
+            assert_eq!(f.exchange(r, s0), f.exchange(r, s1));
+        }
+    }
+
+    #[test]
+    fn epoch_draws_are_access_order_independent() {
+        let a = TwoLevel::new(16, 4, 4, true, 5);
+        let b = TwoLevel::new(16, 4, 4, true, 5);
+        // a touches epochs in forward order, b backwards
+        let horizon = 4 * a.period;
+        let fwd: Vec<Exchange> = (0..horizon).flat_map(|s| (0..16).map(move |r| (r, s)))
+            .map(|(r, s)| a.exchange(r, s))
+            .collect();
+        let bwd: Vec<Exchange> = (0..horizon).rev().flat_map(|s| (0..16).map(move |r| (r, s)))
+            .map(|(r, s)| b.exchange(r, s))
+            .collect();
+        let fwd_rev: Vec<Exchange> = fwd.chunks(16).rev().flatten().copied().collect();
+        assert_eq!(fwd_rev, bwd);
+    }
+
+    #[test]
+    fn updates_diffuse_across_groups_and_offsets() {
+        // the offset shift on inter steps means even inter_period == 1
+        // (no dense steps at all) eventually reaches every rank
+        for (p, g, k) in [(8, 2, 1), (8, 2, 2), (16, 4, 4), (16, 8, 2)] {
+            let t = TwoLevel::new(p, g, k, true, 11);
+            let horizon = 20 * k * ceil_log2(p).max(1);
+            for origin in [0, p / 2, p - 1] {
+                assert!(
+                    diffusion_time(&t, origin, horizon).is_some(),
+                    "p={p} g={g} k={k} origin={origin}: no full diffusion"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn flat_order_matches_flat_rotation() {
+        let t = TwoLevel::new(16, 4, 4, true, 7);
+        let rot = Rotation::new(Dissemination::new(16), 7);
+        for step in [0usize, 3, 4, 9, 40] {
+            assert_eq!(t.flat_order(step), rot.perm(rot.epoch(step)));
+        }
+    }
+}

@@ -1,0 +1,309 @@
+//! Hybrid link: in-process mailboxes inside a host group, TCP across
+//! groups.
+//!
+//! GossipGraD's deployment unit is a *node* hosting several workers:
+//! ranks on the same host exchange over shared memory while only the
+//! inter-host partners touch the NIC.  `--group-size G` reproduces that
+//! shape — `launch` spawns one OS process per group of G consecutive
+//! ranks, and inside each process every rank's link is a [`HybridLink`]:
+//!
+//! * **same-group traffic** (`dst` in `[base, base + G)`) is pushed
+//!   straight into a [`Mailbox`] shared by the co-resident rank threads,
+//!   exactly like [`InprocLink`](super::link::InprocLink) — synchronous,
+//!   caller stamp preserved, no serialization;
+//! * **cross-group traffic** rides the rank's own
+//!   [`TcpLink`](super::tcp::TcpLink), with all of its framing,
+//!   reconnect and quiesce machinery unchanged.
+//!
+//! The TCP mesh is still established over the full `p`-rank peer list
+//! (same-group sockets simply stay idle), so handshake validation,
+//! launch plumbing and `tcp.rs` itself need no group awareness.  Wall
+//! clock only, like any real-network link — hierarchical *virtual*-time
+//! runs use the in-process fabric with a
+//! [`HierCostModel`](super::simnet::HierCostModel) instead
+//! (docs/topology.md).
+//!
+//! ## Accounting
+//!
+//! Each rank's `in_flight` counts its *own* mailbox plus its own TCP
+//! gauges — co-residents share the mailbox `Vec` but each consumes only
+//! its slot, so summing every rank's gauge (what the launcher's drain
+//! check does) counts each message exactly once.
+
+use super::link::{Key, Link, Mailbox, QuiesceError, Stamp};
+use super::simnet::GroupMap;
+use super::tcp::TcpLink;
+use super::Tag;
+use crate::codec::Payload;
+use crate::pool::BufferPool;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Build the mailbox array one group's rank threads share: slot `i`
+/// serves group-local rank `base + i`.
+pub fn group_mailboxes(group_size: usize) -> Arc<Vec<Mailbox>> {
+    Arc::new((0..group_size).map(|_| Mailbox::new()).collect())
+}
+
+/// One rank's hybrid link — see the module docs.
+pub struct HybridLink {
+    rank: usize,
+    groups: GroupMap,
+    /// First rank of this rank's group.
+    base: usize,
+    /// This rank's slot in `boxes` (`rank - base`).
+    local_idx: usize,
+    /// Shared with every co-resident rank in the group.
+    boxes: Arc<Vec<Mailbox>>,
+    /// This rank's own full-mesh TCP link, used for cross-group peers.
+    tcp: Arc<TcpLink>,
+}
+
+impl HybridLink {
+    /// Wrap `rank`'s established TCP link, mounting `boxes` (from
+    /// [`group_mailboxes`], shared across the group's rank threads) for
+    /// same-group delivery.
+    pub fn new(
+        rank: usize,
+        groups: GroupMap,
+        boxes: Arc<Vec<Mailbox>>,
+        tcp: Arc<TcpLink>,
+    ) -> HybridLink {
+        assert_eq!(
+            boxes.len(),
+            groups.group_size(),
+            "one mailbox per group-local rank"
+        );
+        assert_eq!(tcp.size(), groups.p(), "tcp mesh spans the full world");
+        assert_eq!(tcp.rank(), rank, "tcp link belongs to this rank");
+        let base = groups.group_base(groups.group_of(rank));
+        HybridLink {
+            rank,
+            groups,
+            base,
+            local_idx: rank - base,
+            boxes,
+            tcp,
+        }
+    }
+
+    fn local(&self, r: usize) -> bool {
+        self.groups.same_group(self.rank, r)
+    }
+}
+
+impl Link for HybridLink {
+    fn size(&self) -> usize {
+        self.groups.p()
+    }
+
+    fn enqueue(&self, src: usize, dst: usize, tag: Tag, stamp: Stamp, data: Payload) {
+        assert_eq!(src, self.rank, "hybrid link sends only from its local rank");
+        if self.local(dst) {
+            // co-resident peer (or self): straight into its mailbox,
+            // caller stamp preserved — identical to the in-process link
+            self.boxes[dst - self.base].push((src, tag), stamp, data);
+        } else {
+            self.tcp.enqueue(src, dst, tag, stamp, data);
+        }
+    }
+
+    fn peek(&self, rank: usize, key: Key) -> Option<Stamp> {
+        debug_assert_eq!(rank, self.rank, "hybrid link serves its local rank only");
+        if self.local(key.0) {
+            self.boxes[self.local_idx].peek(key)
+        } else {
+            self.tcp.peek(rank, key)
+        }
+    }
+
+    fn pop(&self, rank: usize, key: Key) -> Option<(Stamp, Payload)> {
+        debug_assert_eq!(rank, self.rank, "hybrid link serves its local rank only");
+        if self.local(key.0) {
+            self.boxes[self.local_idx].pop(key)
+        } else {
+            self.tcp.pop(rank, key)
+        }
+    }
+
+    fn park(&self, rank: usize, key: Key, timeout: Option<Duration>) {
+        debug_assert_eq!(rank, self.rank, "hybrid link serves its local rank only");
+        if self.local(key.0) {
+            self.boxes[self.local_idx].park(key, timeout)
+        } else {
+            self.tcp.park(rank, key, timeout)
+        }
+    }
+
+    fn in_flight(&self) -> usize {
+        // own mailbox slot + own tcp gauges only: co-residents share the
+        // mailbox Vec but each rank counts just its slot, so the
+        // launcher's per-rank sum counts every message exactly once
+        self.boxes[self.local_idx].queued() + self.tcp.in_flight()
+    }
+
+    fn in_flight_bytes(&self) -> usize {
+        self.boxes[self.local_idx].queued_bytes() + self.tcp.in_flight_bytes()
+    }
+
+    fn supports_virtual(&self) -> bool {
+        false
+    }
+
+    fn quiesce(&self, rank: usize, timeout: Option<Duration>) -> Result<(), QuiesceError> {
+        // mailbox pushes are synchronous (no drain needed, like the
+        // in-process link); only the TCP half has a barrier to run
+        self.tcp.quiesce(rank, timeout)
+    }
+
+    fn attach_pool(&self, pool: &Arc<BufferPool>) {
+        self.tcp.attach_pool(pool)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tcp::TcpLinkBuilder;
+    use super::super::simnet::CostModel;
+    use super::*;
+    use std::thread;
+    use std::time::Instant;
+
+    /// Full hybrid world on loopback: p ranks, groups of `g`, each rank
+    /// wrapped in a HybridLink sharing its group's mailboxes.
+    fn hybrid_world(p: usize, g: usize) -> Vec<Arc<HybridLink>> {
+        let builders: Vec<TcpLinkBuilder> = (0..p)
+            .map(|_| TcpLinkBuilder::bind("127.0.0.1:0").unwrap())
+            .collect();
+        let peers: Vec<String> =
+            builders.iter().map(|b| b.local_addr().to_string()).collect();
+        let handles: Vec<_> = builders
+            .into_iter()
+            .enumerate()
+            .map(|(rank, b)| {
+                let peers = peers.clone();
+                thread::spawn(move || {
+                    b.establish(rank, &peers, CostModel::zero(), Duration::from_secs(20))
+                        .unwrap()
+                })
+            })
+            .collect();
+        let tcps: Vec<Arc<TcpLink>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let groups = GroupMap::new(p, g);
+        let shared: Vec<Arc<Vec<Mailbox>>> =
+            (0..groups.num_groups()).map(|_| group_mailboxes(g)).collect();
+        tcps.into_iter()
+            .enumerate()
+            .map(|(rank, tcp)| {
+                let boxes = Arc::clone(&shared[groups.group_of(rank)]);
+                Arc::new(HybridLink::new(rank, groups, boxes, tcp))
+            })
+            .collect()
+    }
+
+    fn quiesce_all(links: &[Arc<HybridLink>]) {
+        let handles: Vec<_> = links
+            .iter()
+            .enumerate()
+            .map(|(rank, l)| {
+                let l = Arc::clone(l);
+                thread::spawn(move || l.quiesce(rank, None).unwrap())
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn intra_group_delivery_preserves_caller_stamp() {
+        // ranks 0,1 share a group: the push is synchronous and the
+        // stamp must come back bit-identical (no receiver restamping)
+        let links = hybrid_world(4, 2);
+        let sent = Instant::now();
+        let at = sent + Duration::from_millis(250);
+        links[0].enqueue(0, 1, Tag::MODEL, Stamp::Wall { sent, at }, Payload::F32(vec![7.0]));
+        // synchronous: visible immediately, no polling needed
+        let (stamp, data) = links[1].pop(1, (0, Tag::MODEL)).unwrap();
+        assert_eq!(data.decode(), vec![7.0]);
+        match stamp {
+            Stamp::Wall { sent: s, at: a } => {
+                assert_eq!(s, sent);
+                assert_eq!(a, at, "caller stamp preserved across the mailbox");
+            }
+            Stamp::Virt { .. } => panic!("wall stamp expected"),
+        }
+        quiesce_all(&links);
+    }
+
+    #[test]
+    fn cross_group_delivery_rides_tcp() {
+        let links = hybrid_world(4, 2);
+        let t = Instant::now();
+        links[0].enqueue(
+            0,
+            2,
+            Tag::MODEL,
+            Stamp::Wall { sent: t, at: t },
+            Payload::F32(vec![1.0, 2.0]),
+        );
+        let (_, data) = crate::util::deadline_poll("cross-group frame", || {
+            links[2].pop(2, (0, Tag::MODEL))
+        });
+        assert_eq!(data.decode(), vec![1.0, 2.0]);
+        quiesce_all(&links);
+        for l in &links {
+            assert_eq!(l.in_flight(), 0);
+            assert_eq!(l.in_flight_bytes(), 0);
+        }
+    }
+
+    #[test]
+    fn self_send_is_local() {
+        let links = hybrid_world(2, 1);
+        let t = Instant::now();
+        links[0].enqueue(0, 0, Tag::CTRL, Stamp::Wall { sent: t, at: t }, Payload::F32(vec![3.0]));
+        let (_, data) = links[0].pop(0, (0, Tag::CTRL)).unwrap();
+        assert_eq!(data.decode(), vec![3.0]);
+        quiesce_all(&links);
+    }
+
+    #[test]
+    fn gauges_count_own_slot_only_and_drain_to_zero() {
+        let links = hybrid_world(4, 2);
+        let t = Instant::now();
+        let stamp = Stamp::Wall { sent: t, at: t };
+        // 0 → 1 (intra): shows in rank 1's gauge, not rank 0's
+        links[0].enqueue(0, 1, Tag::MODEL, stamp, Payload::F32(vec![1.0]));
+        assert_eq!(links[0].in_flight(), 0, "producer's own slot untouched");
+        assert_eq!(links[1].in_flight(), 1);
+        assert_eq!(links[1].in_flight_bytes(), 4);
+        links[1].pop(1, (0, Tag::MODEL)).unwrap();
+        // 1 → 3 (inter): charged on rank 1's tcp gauges until flushed,
+        // then on rank 3's mailbox until popped — per-rank sums stay
+        // double-count-free either way
+        links[1].enqueue(1, 3, Tag::MODEL, stamp, Payload::F32(vec![2.0]));
+        crate::util::deadline_poll("inter frame", || links[3].pop(3, (1, Tag::MODEL)));
+        quiesce_all(&links);
+        for l in &links {
+            assert_eq!(l.in_flight(), 0);
+            assert_eq!(l.in_flight_bytes(), 0);
+        }
+    }
+
+    #[test]
+    fn park_covers_both_halves() {
+        let links = hybrid_world(4, 2);
+        let t0 = Instant::now();
+        let t = Instant::now();
+        let stamp = Stamp::Wall { sent: t, at: t };
+        // queued intra message: park returns immediately
+        links[0].enqueue(0, 1, Tag::MODEL, stamp, Payload::F32(vec![1.0]));
+        links[1].park(1, (0, Tag::MODEL), None);
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        links[1].pop(1, (0, Tag::MODEL)).unwrap();
+        // silent inter channel: timed park comes back without traffic
+        links[1].park(1, (2, Tag::MODEL), Some(Duration::from_millis(20)));
+        quiesce_all(&links);
+    }
+}

@@ -35,7 +35,7 @@
 
 use super::clock::{Clock, ClockMode, TimeMark};
 use super::link::{InprocLink, Key, Link, Stamp};
-use super::simnet::CostModel;
+use super::simnet::{CostModel, HierCostModel};
 use super::Tag;
 use crate::codec::{Codec, Payload};
 use crate::pool::BufferPool;
@@ -75,6 +75,11 @@ pub struct Counters {
 pub struct Fabric {
     link: Arc<dyn Link>,
     pub cost: CostModel,
+    /// Optional two-tier topology-aware cost model.  When set, message
+    /// stamps are charged by (src, dst) group locality instead of the
+    /// flat `cost` model (docs/topology.md); `cost` still covers any
+    /// path that has no destination in scope.
+    hier: Option<HierCostModel>,
     counters: Vec<Counters>,
     clock: Clock,
     /// Wire codec for payload-kind tags on the auto-encode path
@@ -134,6 +139,19 @@ impl Fabric {
         mode: ClockMode,
         codec: Codec,
     ) -> Arc<Fabric> {
+        Fabric::with_link_codec_hier(link, cost, mode, codec, None)
+    }
+
+    /// The fully general factory: [`with_link_codec`](Self::with_link_codec)
+    /// plus an optional two-tier [`HierCostModel`] charging messages by
+    /// (src, dst) host-group locality.
+    pub fn with_link_codec_hier(
+        link: Arc<dyn Link>,
+        cost: CostModel,
+        mode: ClockMode,
+        codec: Codec,
+        hier: Option<HierCostModel>,
+    ) -> Arc<Fabric> {
         assert!(
             mode == ClockMode::Wall || link.supports_virtual(),
             "this link is wall-clock only (virtual stamps cannot cross it)"
@@ -144,6 +162,7 @@ impl Fabric {
         Arc::new(Fabric {
             link,
             cost,
+            hier,
             counters: (0..p).map(|_| Counters::default()).collect(),
             clock: Clock::new(mode, p),
             codec,
@@ -589,7 +608,10 @@ impl Endpoint {
         let bytes = payload.wire_bytes();
         let stamp = match self.fabric.clock.mode() {
             ClockMode::Wall => {
-                let delay = self.fabric.cost.message_time(bytes);
+                let delay = match &self.fabric.hier {
+                    Some(h) => h.message_time(self.rank, dst, bytes),
+                    None => self.fabric.cost.message_time(bytes),
+                };
                 let sent = Instant::now();
                 Stamp::Wall {
                     sent,
@@ -597,7 +619,11 @@ impl Endpoint {
                 }
             }
             ClockMode::Virtual => {
-                let cost = Clock::secs_to_ns(self.fabric.cost.nominal(bytes));
+                let secs = match &self.fabric.hier {
+                    Some(h) => h.nominal(self.rank, dst, bytes),
+                    None => self.fabric.cost.nominal(bytes),
+                };
+                let cost = Clock::secs_to_ns(secs);
                 Stamp::Virt {
                     sent_ns: send_ns,
                     at_ns: send_ns + cost,
@@ -1045,6 +1071,30 @@ mod tests {
         assert_eq!(dense.len(), 32);
         assert_eq!(dense[5], 2.5);
         assert_eq!(f.in_flight_bytes(), 0);
+    }
+
+    #[test]
+    fn hier_cost_charges_by_group_locality() {
+        use super::super::simnet::{GroupMap, HierCostModel};
+        // 4 ranks, 2 hosts of 2: intra 1 ms, inter 100 ms (alpha-only)
+        let hier = HierCostModel::new(
+            CostModel::new(1e-3, 0.0, 0.0, 0),
+            CostModel::new(100e-3, 0.0, 0.0, 0),
+            GroupMap::new(4, 2),
+        );
+        let f = Fabric::with_link_codec_hier(
+            Arc::new(InprocLink::new(4)),
+            CostModel::zero(),
+            ClockMode::Virtual,
+            Codec::F32,
+            Some(hier),
+        );
+        f.endpoint(0).isend(1, Tag::MODEL, vec![1.0]); // same host
+        f.endpoint(0).isend(2, Tag::MODEL, vec![1.0]); // cross host
+        let _ = f.endpoint(1).recv(0, Tag::MODEL);
+        let _ = f.endpoint(2).recv(0, Tag::MODEL);
+        assert_eq!(f.clock().now_ns(1), 1_000_000, "intra tier");
+        assert_eq!(f.clock().now_ns(2), 100_000_000, "inter tier");
     }
 
     #[test]

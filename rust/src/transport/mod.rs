@@ -61,6 +61,7 @@
 
 pub mod clock;
 pub mod fault;
+pub mod hybrid;
 pub mod inproc;
 pub mod link;
 pub mod simnet;
@@ -68,9 +69,10 @@ pub mod tcp;
 
 pub use clock::{Clock, ClockMode, TimeMark};
 pub use fault::FaultyLink;
+pub use hybrid::HybridLink;
 pub use inproc::{Counters, Endpoint, Fabric, RecvReq, SendReq};
 pub use link::{InprocLink, Link, QuiesceError, Stamp};
-pub use simnet::CostModel;
+pub use simnet::{CostModel, GroupMap, HierCostModel};
 pub use tcp::{TcpLink, TcpLinkBuilder};
 
 /// Message tags name the logical channel, mirroring MPI tags.

@@ -10,6 +10,12 @@
 //! (~1 µs latency, ~12 GB/s effective) and Aries (~1.2 µs, ~10 GB/s).
 //! `scaled` presets shrink message *time* proportionally for laptop-scale
 //! real runs while preserving the compute:comm ratio.
+//!
+//! Real clusters are not flat: the paper's P100 nodes hold multiple GPUs
+//! behind NVLink/PCIe while nodes talk over IB.  [`HierCostModel`] models
+//! that shape: a [`GroupMap`] partitions ranks into host groups and each
+//! message is charged the intra- or inter-group tier by (src, dst)
+//! (docs/topology.md).
 
 use crate::util::Rng;
 use std::sync::Mutex;
@@ -22,7 +28,10 @@ pub struct CostModel {
     pub beta: f64,
     /// Multiplicative noise amplitude (0.0 = deterministic).
     pub noise_frac: f64,
-    rng: Mutex<Rng>,
+    /// Jitter stream; `None` iff `noise_frac == 0.0`, so the
+    /// deterministic path provably never touches a lock (this sits
+    /// inside every virtual-clock message send).
+    rng: Option<Mutex<Rng>>,
 }
 
 impl Clone for CostModel {
@@ -31,7 +40,10 @@ impl Clone for CostModel {
             alpha: self.alpha,
             beta: self.beta,
             noise_frac: self.noise_frac,
-            rng: Mutex::new(self.rng.lock().unwrap().clone()),
+            rng: self
+                .rng
+                .as_ref()
+                .map(|m| Mutex::new(m.lock().unwrap().clone())),
         }
     }
 }
@@ -42,7 +54,11 @@ impl CostModel {
             alpha,
             beta,
             noise_frac,
-            rng: Mutex::new(Rng::new(seed)),
+            rng: if noise_frac > 0.0 {
+                Some(Mutex::new(Rng::new(seed)))
+            } else {
+                None
+            },
         }
     }
 
@@ -62,15 +78,19 @@ impl CostModel {
         CostModel::new(1.2e-6, 1.0 / 10.0e9, 0.08, seed)
     }
 
+    /// Intra-host preset: NVLink/PCIe-class links between ranks that
+    /// share a host group (~0.5 µs, ~100 GB/s), deterministic.
+    pub fn nvlink() -> Self {
+        CostModel::new(0.5e-6, 1.0 / 100.0e9, 0.0, 0)
+    }
+
     /// The cost in seconds of one message of `bytes` bytes.
     pub fn message_time(&self, bytes: usize) -> f64 {
         let base = self.alpha + bytes as f64 * self.beta;
-        if self.noise_frac > 0.0 {
-            let u = self.rng.lock().unwrap().f64();
+        match &self.rng {
             // one-sided jitter: networks are slower than nominal, not faster
-            base * (1.0 + self.noise_frac * u)
-        } else {
-            base
+            Some(rng) => base * (1.0 + self.noise_frac * rng.lock().unwrap().f64()),
+            None => base,
         }
     }
 
@@ -78,6 +98,104 @@ impl CostModel {
     /// where determinism across sweeps matters.
     pub fn nominal(&self, bytes: usize) -> f64 {
         self.alpha + bytes as f64 * self.beta
+    }
+}
+
+/// Partition of `p` ranks into contiguous host groups of `group_size`.
+///
+/// Group `g` owns ranks `[g·group_size, (g+1)·group_size)`.  The map is
+/// pure arithmetic — cheap to copy into every link/cost-model that needs
+/// locality decisions.  `group_size == 1` degenerates to a flat network
+/// (every pair is inter-group); `group_size == p` is a single host
+/// (every pair is intra-group).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GroupMap {
+    p: usize,
+    group_size: usize,
+}
+
+impl GroupMap {
+    /// Panics unless `group_size >= 1` and `group_size` divides `p`
+    /// (callers validate user input before construction).
+    pub fn new(p: usize, group_size: usize) -> Self {
+        assert!(p >= 1, "GroupMap needs at least one rank");
+        assert!(group_size >= 1, "group_size must be >= 1");
+        assert!(
+            p % group_size == 0,
+            "group_size {group_size} must divide p {p}"
+        );
+        GroupMap { p, group_size }
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.group_size
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.p / self.group_size
+    }
+
+    /// Host group of `rank` (ranks beyond `p` — e.g. PS server ranks —
+    /// extend the same arithmetic rather than panicking).
+    pub fn group_of(&self, rank: usize) -> usize {
+        rank / self.group_size
+    }
+
+    /// First rank of group `g`.
+    pub fn group_base(&self, g: usize) -> usize {
+        g * self.group_size
+    }
+
+    pub fn same_group(&self, a: usize, b: usize) -> bool {
+        self.group_of(a) == self.group_of(b)
+    }
+}
+
+/// Two-tier α–β cost model: messages between ranks in the same host
+/// group pay the fast `intra` tier, everything else pays `inter`.
+#[derive(Clone, Debug)]
+pub struct HierCostModel {
+    pub intra: CostModel,
+    pub inter: CostModel,
+    pub groups: GroupMap,
+}
+
+impl HierCostModel {
+    pub fn new(intra: CostModel, inter: CostModel, groups: GroupMap) -> Self {
+        HierCostModel {
+            intra,
+            inter,
+            groups,
+        }
+    }
+
+    /// Default two-tier preset: NVLink-class within a group, the given
+    /// inter-group model across groups.
+    pub fn with_inter(inter: CostModel, groups: GroupMap) -> Self {
+        HierCostModel::new(CostModel::nvlink(), inter, groups)
+    }
+
+    /// The tier a (src, dst) pair is charged on.
+    pub fn tier(&self, src: usize, dst: usize) -> &CostModel {
+        if self.groups.same_group(src, dst) {
+            &self.intra
+        } else {
+            &self.inter
+        }
+    }
+
+    /// Wall-clock cost (includes the tier's jitter, if any).
+    pub fn message_time(&self, src: usize, dst: usize, bytes: usize) -> f64 {
+        self.tier(src, dst).message_time(bytes)
+    }
+
+    /// Analytic cost — the virtual-clock charge.
+    pub fn nominal(&self, src: usize, dst: usize, bytes: usize) -> f64 {
+        self.tier(src, dst).nominal(bytes)
     }
 }
 
@@ -114,5 +232,67 @@ mod tests {
         let m = CostModel::ib_edr(0);
         let t = m.nominal(100 << 20);
         assert!(t > 5e-3 && t < 20e-3, "t={t}");
+    }
+
+    #[test]
+    fn deterministic_model_has_no_rng() {
+        // the lock-free invariant: noise_frac == 0 means no Mutex exists
+        let m = CostModel::new(1e-6, 1e-9, 0.0, 42);
+        assert!(m.rng.is_none());
+        let c = m.clone();
+        assert!(c.rng.is_none());
+        assert_eq!(m.message_time(4096), c.message_time(4096));
+        // and a noisy model still carries (and clones) its stream
+        let n = CostModel::new(1e-6, 0.0, 0.1, 42);
+        assert!(n.rng.is_some());
+        assert!(n.clone().rng.is_some());
+    }
+
+    #[test]
+    fn noisy_clone_replays_same_jitter() {
+        let a = CostModel::new(1e-6, 0.0, 0.3, 9);
+        let b = a.clone();
+        for _ in 0..32 {
+            assert_eq!(a.message_time(128), b.message_time(128));
+        }
+    }
+
+    #[test]
+    fn group_map_partitions() {
+        let g = GroupMap::new(8, 4);
+        assert_eq!(g.num_groups(), 2);
+        assert_eq!(g.group_of(0), 0);
+        assert_eq!(g.group_of(3), 0);
+        assert_eq!(g.group_of(4), 1);
+        assert!(g.same_group(1, 2));
+        assert!(!g.same_group(3, 4));
+        assert_eq!(g.group_base(1), 4);
+        // degenerate maps
+        assert_eq!(GroupMap::new(4, 1).num_groups(), 4);
+        assert_eq!(GroupMap::new(4, 4).num_groups(), 1);
+        assert!(GroupMap::new(4, 4).same_group(0, 3));
+        assert!(!GroupMap::new(4, 1).same_group(0, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn group_map_rejects_ragged() {
+        GroupMap::new(10, 4);
+    }
+
+    #[test]
+    fn hier_model_selects_tier() {
+        let h =
+            HierCostModel::with_inter(CostModel::new(200e-6, 2e-9, 0.0, 0), GroupMap::new(8, 4));
+        let m = 1 << 20;
+        // intra: ~0.5 µs + 1 MiB / 100 GB/s ≈ 11 µs
+        let intra = h.nominal(0, 3, m);
+        // inter: 200 µs + 1 MiB / 0.5 GB/s ≈ 2.3 ms
+        let inter = h.nominal(0, 4, m);
+        assert!(intra < 2e-5, "intra={intra}");
+        assert!(inter > 1e-3, "inter={inter}");
+        assert_eq!(h.nominal(3, 0, m), intra);
+        assert_eq!(h.message_time(0, 3, m), intra);
+        assert!(h.nominal(5, 6, m) < h.nominal(5, 2, m));
     }
 }

@@ -18,7 +18,7 @@
 //! payload bytes still queued) — a codec bug that dropped a frame but
 //! decremented the count, or vice versa, trips exactly one of the two.
 
-use gossipgrad::config::{Algo, RunConfig, Transport};
+use gossipgrad::config::{Algo, CostModelKind, RunConfig, Transport};
 use gossipgrad::coordinator::trainer::run_with_backend;
 use gossipgrad::nativenet::NativeMlp;
 use gossipgrad::sim::Workload;
@@ -133,6 +133,53 @@ fn no_in_flight_messages_over_the_tcp_link() {
                      bytes left on the mesh after quiesce"
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn no_in_flight_messages_on_the_hierarchical_fabric() {
+    // the group_size axis (docs/topology.md): the two-level schedule
+    // re-routes exchanges between mailbox tiers, so the drain invariant
+    // must hold per tier — a frame stranded in a group mailbox is just
+    // as leaked as one in a socket writer queue
+    for (ranks, group_size) in [(4usize, 2usize), (8, 4)] {
+        for inter_period in [1usize, 2] {
+            // in-proc fabric, two-tier costs charged on the virtual clock
+            let mut c = vcfg(Algo::Gossip, ranks, 4);
+            c.group_size = group_size;
+            c.inter_period = inter_period;
+            c.cost_model = CostModelKind::Hier;
+            let res = run_with_backend(&c, tiny_backend()).unwrap_or_else(|e| {
+                panic!("hier p={ranks} g={group_size} k={inter_period}: {e}")
+            });
+            assert_eq!(
+                res.in_flight_msgs, 0,
+                "hier p={ranks} g={group_size} k={inter_period}: leaked messages"
+            );
+            assert_eq!(
+                res.in_flight_bytes, 0,
+                "hier p={ranks} g={group_size} k={inter_period}: leaked bytes"
+            );
+
+            // hybrid loopback link: in-proc mailboxes inside each group,
+            // real sockets between groups — both halves must drain
+            let mut c = tcpcfg(Algo::Gossip, ranks, 3);
+            c.group_size = group_size;
+            c.inter_period = inter_period;
+            let res = run_with_backend(&c, tiny_backend()).unwrap_or_else(|e| {
+                panic!("hybrid p={ranks} g={group_size} k={inter_period}: {e}")
+            });
+            assert_eq!(
+                res.in_flight_msgs, 0,
+                "hybrid p={ranks} g={group_size} k={inter_period}: frames \
+                 left in a mailbox or writer queue after quiesce"
+            );
+            assert_eq!(
+                res.in_flight_bytes, 0,
+                "hybrid p={ranks} g={group_size} k={inter_period}: frame \
+                 bytes left on the fabric after quiesce"
+            );
         }
     }
 }

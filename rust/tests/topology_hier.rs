@@ -1,0 +1,164 @@
+//! Hierarchical-fabric invariants (docs/topology.md):
+//!
+//! * **Flat identity** — `group_size = 1` and `group_size = p` are the
+//!   degenerate corners of the two-level schedule, and both must
+//!   reproduce the flat §4.5.1 rotation *bit for bit* (`param_hash`),
+//!   across gossip and the AGD collective baseline, over both the
+//!   in-proc fabric and the hybrid loopback-TCP link.  The hierarchy is
+//!   a routing/cost overlay, never a numerics change.
+//! * **Hybrid-link transparency** — on the collective baselines a
+//!   `group_size > 1` hybrid link only swaps the wire under the same
+//!   message schedule, so its parameter bits must equal the plain
+//!   socket mesh's.
+//! * **Membership interplay** — killing a rank *inside* a group leaves
+//!   the survivors' collapsed exchange deadlock-free, drained, and
+//!   bit-reproducible, on both transports.
+
+use gossipgrad::config::{Algo, RunConfig, Transport};
+use gossipgrad::coordinator::trainer::run_with_backend;
+use gossipgrad::nativenet::NativeMlp;
+use std::sync::Arc;
+
+fn backend() -> gossipgrad::coordinator::worker::Backend {
+    Arc::new(NativeMlp::new(vec![784, 16, 10], 16, 0))
+}
+
+fn cfg(algo: Algo, ranks: usize, steps: usize) -> RunConfig {
+    RunConfig {
+        model: "mlp".into(),
+        algo,
+        ranks,
+        steps,
+        rows_per_rank: 32,
+        use_artifacts: false,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn flat_identity_inproc_group_size_one_and_p() {
+    for algo in [Algo::Gossip, Algo::Agd] {
+        let base = run_with_backend(&cfg(algo, 8, 10), backend()).unwrap();
+        for group_size in [1usize, 8] {
+            let mut c = cfg(algo, 8, 10);
+            c.group_size = group_size;
+            let res = run_with_backend(&c, backend())
+                .unwrap_or_else(|e| panic!("{algo:?} g={group_size}: {e}"));
+            assert_eq!(
+                res.param_hash(),
+                base.param_hash(),
+                "{algo:?} group_size={group_size} must be bit-identical \
+                 to the flat fabric"
+            );
+        }
+    }
+}
+
+#[test]
+fn flat_identity_hybrid_loopback_group_size_p() {
+    // group_size = p mounts EVERY pair on the in-proc mailboxes (the
+    // TCP mesh idles); the numerics must still match both the plain
+    // socket mesh and the in-proc fabric
+    for algo in [Algo::Gossip, Algo::Agd] {
+        let inproc = run_with_backend(&cfg(algo, 4, 6), backend()).unwrap();
+        let mut t = cfg(algo, 4, 6);
+        t.transport = Transport::Tcp;
+        let tcp = run_with_backend(&t, backend()).unwrap();
+        let mut h = t.clone();
+        h.group_size = 4;
+        let hybrid = run_with_backend(&h, backend())
+            .unwrap_or_else(|e| panic!("{algo:?} hybrid g=p: {e}"));
+        assert_eq!(tcp.param_hash(), inproc.param_hash(), "{algo:?}");
+        assert_eq!(
+            hybrid.param_hash(),
+            tcp.param_hash(),
+            "{algo:?}: all-mailbox hybrid link diverged from the socket mesh"
+        );
+        assert_eq!(hybrid.in_flight_msgs, 0);
+        assert_eq!(hybrid.in_flight_bytes, 0);
+    }
+}
+
+#[test]
+fn hybrid_link_is_numerically_transparent_on_collectives() {
+    // a true two-group hybrid link (mailboxes inside, sockets between):
+    // AGD's all-reduce schedule is group-oblivious, so the bits must
+    // equal the plain TCP run's
+    let mut t = cfg(Algo::Agd, 4, 6);
+    t.transport = Transport::Tcp;
+    let tcp = run_with_backend(&t, backend()).unwrap();
+    let mut h = t.clone();
+    h.group_size = 2;
+    let hybrid = run_with_backend(&h, backend()).unwrap();
+    assert_eq!(
+        hybrid.param_hash(),
+        tcp.param_hash(),
+        "hybrid transport changed collective numerics"
+    );
+}
+
+#[test]
+fn two_level_schedule_actually_reroutes_gossip() {
+    // 1 < group_size < p is the one region where routing may (and must)
+    // differ from flat rotation — otherwise the locality win of
+    // docs/topology.md would be a no-op
+    let flat = run_with_backend(&cfg(Algo::Gossip, 8, 10), backend()).unwrap();
+    let mut c = cfg(Algo::Gossip, 8, 10);
+    c.group_size = 4;
+    c.inter_period = 2;
+    let two_level = run_with_backend(&c, backend()).unwrap();
+    assert_ne!(
+        two_level.param_hash(),
+        flat.param_hash(),
+        "two-level schedule routed identically to flat rotation"
+    );
+    assert!(
+        two_level.max_disagreement() < 1.0,
+        "two-level mixing failed to keep replicas coupled"
+    );
+}
+
+#[test]
+fn killed_rank_inside_a_group_survivors_reproduce() {
+    // rank 3 dies at step 6 inside group 0 of a p = 8, group_size = 4
+    // two-level run: the collapsed exchange must terminate, drain, and
+    // be a pure function of the plan
+    let mut c = cfg(Algo::Gossip, 8, 16);
+    c.group_size = 4;
+    c.inter_period = 2;
+    c.fault_plan.kills = vec![(3, 6)];
+    let a = run_with_backend(&c, backend()).unwrap();
+    let b = run_with_backend(&c, backend()).unwrap();
+    assert_eq!(a.survivors(), vec![0, 1, 2, 4, 5, 6, 7]);
+    assert_eq!(a.per_rank[3].death_step, Some(6));
+    assert_eq!(
+        a.param_hash(),
+        b.param_hash(),
+        "a planned in-group kill must be bit-reproducible"
+    );
+    assert_eq!(a.in_flight_msgs, 0, "kill run leaked in-flight frames");
+    assert_eq!(a.in_flight_bytes, 0, "kill run leaked in-flight bytes");
+}
+
+#[test]
+fn killed_rank_over_hybrid_loopback_matches_inproc() {
+    // the same in-group kill over the hybrid link: fault verdicts are a
+    // pure function of the plan, so the socket/mailbox run reproduces
+    // the in-proc run bit for bit
+    let mut c = cfg(Algo::Gossip, 4, 10);
+    c.group_size = 2;
+    c.inter_period = 2;
+    c.fault_plan.kills = vec![(1, 4)];
+    let inproc = run_with_backend(&c, backend()).unwrap();
+    let mut t = c.clone();
+    t.transport = Transport::Tcp;
+    let hybrid = run_with_backend(&t, backend()).unwrap();
+    assert_eq!(
+        hybrid.param_hash(),
+        inproc.param_hash(),
+        "in-group kill diverged between hybrid tcp and in-proc"
+    );
+    assert_eq!(hybrid.survivors(), vec![0, 2, 3]);
+    assert_eq!(hybrid.in_flight_msgs, 0);
+    assert_eq!(hybrid.in_flight_bytes, 0);
+}
