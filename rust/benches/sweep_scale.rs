@@ -1,0 +1,180 @@
+//! Rank-scheduler scaling bench: wall time and peak OS thread count for
+//! p ∈ {256, 1024} virtual-clock gossip scenarios, cooperative scheduler
+//! vs the legacy thread-per-rank oracle, plus a 4-point mini-sweep on
+//! the experiment engine.
+//!
+//!     cargo bench --bench sweep_scale
+//!     cargo bench --bench sweep_scale -- --json [BENCH_sweep_scale.json]
+//!
+//! `--json` emits `BENCH_sweep_scale.json` for the CI regression gate
+//! (`tools/bench_diff.py`, docs/perf.md): `threads` and `allocs` are
+//! hard gates, timings advisory.  The committed baseline pins the
+//! headline claims of the scheduler change:
+//!
+//! * peak thread count under the scheduler is bounded by `sim_threads +
+//!   O(1)` (here 4 workers → baseline ceiling 16) while the legacy path
+//!   peaks at ~p threads (baselines 300 / 1100) — the order-of-magnitude
+//!   drop;
+//! * p = 1024 wall time under the scheduler is ≥ 2x faster than
+//!   thread-per-rank (committed `median_secs`, advisory);
+//! * two identical `--sim-threads 1` runs see an identical pool
+//!   allocation count (`alloc_determinism_p256.allocs` = 0, hard gate).
+//!
+//! The sched arms pin `sim_threads = 4` so the thread gate means the
+//! same thing on any host; `--sim-threads 0` (default = cores) is
+//! exercised by `tests/scheduler.rs` instead.
+
+use gossipgrad::codec::Codec;
+use gossipgrad::config::RunConfig;
+use gossipgrad::coordinator;
+use gossipgrad::exp::{Engine, Grid, ScenarioReport};
+use gossipgrad::sim::Workload;
+use gossipgrad::util::bench::{json_out_path, BenchReport};
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The swept scenario: layer-wise gossip on the virtual-clock fabric,
+/// LeNet3 compute model on a slow (α = 200 µs, β = 0.5 GB/s) wire so
+/// communication actually matters.  `sim_threads` is pinned at 4 so the
+/// committed thread baseline is host-independent.
+fn scenario(p: usize, legacy: bool) -> RunConfig {
+    let mut cfg = RunConfig {
+        model: "mlp-small".into(),
+        ranks: p,
+        steps: 8,
+        use_artifacts: false,
+        rows_per_rank: 32,
+        layerwise: true,
+        seed: 7,
+        sim_threads: 4,
+        legacy_ranks: legacy,
+        ..Default::default()
+    };
+    cfg.virtualize(&Workload::lenet3(4.0), 200e-6, 1.0 / 0.5e9);
+    cfg
+}
+
+/// Current OS thread count of this process (`Threads:` from
+/// /proc/self/status).  Returns 1 where procfs is unavailable — the
+/// thread gate only binds on the Linux CI runner.
+fn os_threads() -> usize {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find_map(|l| l.strip_prefix("Threads:").and_then(|v| v.trim().parse().ok()))
+        })
+        .unwrap_or(1)
+}
+
+struct Run {
+    secs: f64,
+    peak_threads: usize,
+    allocs: u64,
+    report: ScenarioReport,
+}
+
+/// Execute one scenario while a monitor thread samples the process
+/// thread count; asserts the fabric drained clean.
+fn timed_run(cfg: &RunConfig) -> Run {
+    let stop = Arc::new(AtomicBool::new(false));
+    let peak = Arc::new(AtomicUsize::new(os_threads()));
+    let monitor = {
+        let (stop, peak) = (Arc::clone(&stop), Arc::clone(&peak));
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                peak.fetch_max(os_threads(), Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        })
+    };
+    let t0 = Instant::now();
+    let res = coordinator::run(cfg).expect("scenario run");
+    let secs = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Relaxed);
+    monitor.join().expect("monitor thread");
+    assert_eq!(res.in_flight_msgs, 0, "fabric not drained (msgs)");
+    assert_eq!(res.in_flight_bytes, 0, "fabric not drained (bytes)");
+    Run {
+        secs,
+        peak_threads: peak.load(Ordering::Relaxed),
+        allocs: res.pool_stats.allocs,
+        report: ScenarioReport::from_run(cfg, &res),
+    }
+}
+
+/// Best-of-two wall time, worst-of-two thread peak.
+fn arm(cfg: &RunConfig) -> Run {
+    let a = timed_run(cfg);
+    let b = timed_run(cfg);
+    Run {
+        secs: a.secs.min(b.secs),
+        peak_threads: a.peak_threads.max(b.peak_threads),
+        allocs: a.allocs,
+        report: b.report,
+    }
+}
+
+fn main() {
+    let mut report = BenchReport::new("sweep_scale");
+
+    // --- scheduler vs thread-per-rank, p = 256 and 1024 -----------------
+    let mut speedup_1024 = 0.0;
+    for p in [256usize, 1024] {
+        let sched = arm(&scenario(p, false));
+        let legacy = arm(&scenario(p, true));
+        assert_eq!(
+            sched.report.param_hash, legacy.report.param_hash,
+            "p={p}: scheduler changed the numerics"
+        );
+        println!(
+            "gossip p={p}: sched {:.2}s / {} threads  vs  legacy {:.2}s / {} threads  ({:.2}x)",
+            sched.secs,
+            sched.peak_threads,
+            legacy.secs,
+            legacy.peak_threads,
+            legacy.secs / sched.secs
+        );
+        if p == 1024 {
+            speedup_1024 = legacy.secs / sched.secs;
+        }
+        report.entry(
+            &format!("gossip_p{p}_sched"),
+            &[("median_secs", sched.secs), ("threads", sched.peak_threads as f64)],
+        );
+        report.entry(
+            &format!("gossip_p{p}_legacy"),
+            &[("median_secs", legacy.secs), ("threads", legacy.peak_threads as f64)],
+        );
+    }
+    println!("  -> p=1024 scheduler speedup over thread-per-rank: {speedup_1024:.2}x");
+
+    // --- determinism: identical 1-worker runs, identical allocations ----
+    let mut det = scenario(256, false);
+    det.sim_threads = 1;
+    let a = timed_run(&det);
+    let b = timed_run(&det);
+    assert_eq!(a.report.param_hash, b.report.param_hash, "repeat run diverged");
+    let delta = a.allocs.abs_diff(b.allocs) as f64;
+    println!("  -> alloc determinism @ sim-threads 1: |Δallocs| = {delta}");
+    report.entry("alloc_determinism_p256", &[("allocs", delta)]);
+
+    // --- 4-point mini-sweep through the experiment engine ----------------
+    // Two engine threads × scheduled scenarios: the global execution
+    // budget keeps the product bounded (docs/perf.md).
+    let grid = Grid::new(scenario(64, false))
+        .gossip_periods(&[1, 2])
+        .codecs(&[Codec::F32, Codec::Bf16]);
+    let t0 = Instant::now();
+    let sweep = Engine::with_threads(2).run(&grid).expect("mini sweep");
+    let secs = t0.elapsed().as_secs_f64();
+    assert_eq!(sweep.reports.len(), 4, "mini-sweep grid shape");
+    println!("  -> 4-point mini-sweep (period x codec, 2 engine threads): {secs:.2}s");
+    report.entry("mini_sweep_4pt", &[("median_secs", secs)]);
+
+    if let Some(path) = json_out_path("BENCH_sweep_scale.json") {
+        report.write(&path).expect("write bench json");
+    }
+}

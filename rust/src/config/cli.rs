@@ -30,6 +30,7 @@ pub const FLAGS: &[&str] = &[
     "no-pool",
     "autotune-period",
     "keep-dir",
+    "legacy-ranks",
 ];
 
 /// Build a [`RunConfig`] from `--config` (optional preset) + CLI
@@ -57,6 +58,8 @@ pub const FLAGS: &[&str] = &[
 /// | `group_size`, `inter_period` | `--group-size`, `--inter-period` (docs/topology.md) |
 /// | `cost_model` | `--cost-model flat\|hier` |
 /// | `fault_plan` | `--kill-rank R@S[,..]`, `--join-at-step R@S[,..]`, `--slow-rank R@S:F[,..]`, `--drop-frac F`, `--dup-frac F`, `--fault-seed N` |
+/// | `sim_threads` | `--sim-threads N` (rank scheduler workers; 0 = cores, docs/perf.md) |
+/// | `legacy_ranks` | `--legacy-ranks` (thread-per-rank oracle path) |
 pub fn from_args(args: &Args) -> Result<RunConfig> {
     let mut cfg = match args.get("config") {
         Some(path) => RunConfig::load(path).map_err(anyhow::Error::msg)?,
@@ -123,6 +126,13 @@ pub fn from_args(args: &Args) -> Result<RunConfig> {
     }
     if args.flag("no-pool") {
         cfg.pool = false;
+    }
+    // rank execution knobs (docs/perf.md, "rank scheduler"): how
+    // virtual-clock rank bodies are driven — results are identical
+    // either way, so neither is part of the scenario content hash
+    cfg.sim_threads = args.usize_or("sim-threads", cfg.sim_threads);
+    if args.flag("legacy-ranks") {
+        cfg.legacy_ranks = true;
     }
     // a comm thread only overlaps collectives posted mid-backprop; the
     // monolithic schedule has nothing left to hide them under
@@ -297,6 +307,16 @@ mod tests {
         assert!((c.straggler_jitter - 0.25).abs() < 1e-12);
         assert!((c.virt_ps_agg_secs - 1.5e-3).abs() < 1e-12);
         assert_eq!(c.codec, Codec::Bf16);
+    }
+
+    #[test]
+    fn scheduler_knobs_parse_and_default_off() {
+        let c = from_args(&parse("train")).unwrap();
+        assert_eq!(c.sim_threads, 0, "0 = one worker per core");
+        assert!(!c.legacy_ranks);
+        let c = from_args(&parse("train --sim-threads 4 --legacy-ranks")).unwrap();
+        assert_eq!(c.sim_threads, 4);
+        assert!(c.legacy_ranks);
     }
 
     #[test]

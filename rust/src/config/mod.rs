@@ -270,6 +270,19 @@ pub struct RunConfig {
     /// no consensus traffic.  Default = no faults, omitted from the
     /// JSON so historical content hashes are unchanged.
     pub fault_plan: FaultPlan,
+    /// Worker threads for the cooperative rank scheduler
+    /// (`--sim-threads`; 0 = one per available core).  Execution-only:
+    /// results are bit-identical at any setting, so this field is
+    /// *excluded* from [`to_json`](Self::to_json) and
+    /// [`content_hash`](Self::content_hash) — sweep cache entries and
+    /// artifacts are shared across thread counts (docs/perf.md).
+    pub sim_threads: usize,
+    /// Run virtual-clock ranks on the legacy one-OS-thread-per-rank
+    /// launcher instead of the cooperative scheduler
+    /// (`--legacy-ranks`).  Kept as the differential-testing oracle
+    /// (tests/scheduler.rs pins bit parity).  Execution-only: excluded
+    /// from the JSON and the content hash like `sim_threads`.
+    pub legacy_ranks: bool,
 }
 
 impl Default for RunConfig {
@@ -312,6 +325,8 @@ impl Default for RunConfig {
             inter_period: 1,
             cost_model: CostModelKind::Flat,
             fault_plan: FaultPlan::default(),
+            sim_threads: 0,
+            legacy_ranks: false,
         }
     }
 }
@@ -740,6 +755,22 @@ mod tests {
         let mut f = RunConfig::default();
         f.fault_plan.drop_frac = 0.1;
         assert_ne!(f.content_hash(), RunConfig::default().content_hash());
+    }
+
+    #[test]
+    fn execution_knobs_do_not_reshape_scenario_identity() {
+        // sim_threads / legacy_ranks pick HOW ranks execute, never what
+        // they compute: results are bit-identical at any setting, so
+        // the knobs stay out of the canonical JSON and the content hash
+        // (sweep caches and artifacts are shared across them)
+        let base = RunConfig::default();
+        let mut c = RunConfig::default();
+        c.sim_threads = 1;
+        c.legacy_ranks = true;
+        assert_eq!(c.to_json().to_string(), base.to_json().to_string());
+        assert_eq!(c.content_hash(), base.content_hash());
+        assert!(c.to_json().get("sim_threads").is_none());
+        assert!(c.to_json().get("legacy_ranks").is_none());
     }
 
     #[test]

@@ -43,6 +43,16 @@
 //! synchronous variant (`sync_mix = true`, used by the convergence
 //! property tests) blocks for the current step's model instead and pays
 //! the exposed communication time.
+//!
+//! ## Execution note
+//! The engine never blocks except through [`Link::park`] (via the
+//! endpoint wait/drain helpers), which is what lets the *same* rank body
+//! run unmodified either on its own OS thread (legacy) or as a coroutine
+//! on the bounded rank scheduler (docs/perf.md): under a
+//! [`SchedLink`](crate::transport::SchedLink) each park becomes a
+//! cooperative yield.
+//!
+//! [`Link::park`]: crate::transport::Link::park
 
 use super::worker::Worker;
 use crate::codec::{mix_payload_recycle, Encoder};

@@ -4,8 +4,11 @@
 //!
 //! Three entry shapes share one per-rank body ([`drive_worker`]):
 //!
-//! * [`run`] / [`run_with_backend`] — the historical threads-as-ranks
-//!   launcher over the in-process link (wall or virtual clock).
+//! * [`run`] / [`run_with_backend`] — in-process ranks over the
+//!   in-process link: cooperative coroutines on `--sim-threads`
+//!   workers for virtual-clock runs (crate::sched, docs/perf.md), or
+//!   the historical thread-per-rank launcher (wall clock, or
+//!   `--legacy-ranks` as the parity oracle).
 //! * [`run_rank_with_link`] — ONE rank over a caller-supplied
 //!   [`Link`]; the unit the `rank` subcommand executes, one process
 //!   per rank over [`TcpLink`](crate::transport::TcpLink).
@@ -27,7 +30,7 @@ use crate::pool::PoolStats;
 use crate::runtime::PjrtModel;
 use crate::transport::{
     hybrid, ClockMode, Endpoint, Fabric, FaultyLink, GroupMap, HybridLink, InprocLink,
-    Link, TcpLinkBuilder,
+    Link, SchedLink, TcpLinkBuilder,
 };
 
 use anyhow::{Context, Result};
@@ -371,8 +374,10 @@ pub fn run(cfg: &RunConfig) -> Result<RunResult> {
 
 /// Like [`run`] but with a caller-provided backend (tests inject the
 /// native backend or tiny models here).  Dispatches on
-/// `cfg.transport`: threads-as-ranks over the in-process link, or one
-/// TCP link per rank on loopback ([`run_tcp_loopback`]).
+/// `cfg.transport`: in-process ranks (cooperative scheduler on the
+/// virtual clock, thread-per-rank on the wall clock or with
+/// `--legacy-ranks`), or one TCP link per rank on loopback
+/// ([`run_tcp_loopback`]).
 pub fn run_with_backend(cfg: &RunConfig, backend: Backend) -> Result<RunResult> {
     validate(cfg)?;
     if cfg.transport == Transport::Tcp {
@@ -400,6 +405,20 @@ pub fn run_with_backend(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
             base
         }
     };
+    // Cooperative rank scheduler (docs/perf.md, "rank scheduler"):
+    // virtual-clock rank bodies become coroutines on `--sim-threads`
+    // workers, with `SchedLink` as the outermost wrapper turning parks
+    // into yields and enqueues into wakes.  `--legacy-ranks` keeps the
+    // historical thread-per-rank launcher as the differential-testing
+    // oracle (tests/scheduler.rs pins bit parity).  Wall-clock runs
+    // always use the legacy path: their waits are real `thread::sleep`s
+    // that must not hold a scheduler worker hostage.
+    let sched = (cfg.virtual_clock && !cfg.legacy_ranks && crate::sched::supported())
+        .then(|| crate::sched::Scheduler::new(cfg.sim_threads));
+    let link: Arc<dyn Link> = match &sched {
+        Some(s) => Arc::new(SchedLink::new(link, s.handle())),
+        None => link,
+    };
     // --cost-model hier swaps the flat α–β charge for the two-tier
     // (intra/inter host-group) model; None keeps the historical charges
     let fabric =
@@ -416,29 +435,85 @@ pub fn run_with_backend(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
     let val = Arc::new(val);
 
     let t0 = std::time::Instant::now();
-    let mut handles = Vec::new();
-    for rank in 0..p {
-        let ep = fabric.endpoint(rank);
-        let backend = Arc::clone(&backend);
-        let train = Arc::clone(&train);
-        let val = Arc::clone(&val);
-        let cfg = cfg.clone();
-        handles.push(std::thread::spawn(move || {
-            drive_worker(rank, &ep, backend, &train, val, &cfg)
-        }));
-    }
-    if cfg.algo == Algo::ParamServer {
-        // dedicate this thread to the (first) server; extra servers are
-        // future work — the paper's critique targets the 1-server case
-        let ep = fabric.endpoint(p);
-        let sb = Arc::clone(&backend);
-        baselines::run_ps_server(&ep, &sb, p, cfg);
-    }
+    let outcomes: Vec<Option<(RunMetrics, Vec<f32>)>> = if let Some(sched) = &sched {
+        // scheduled path: every rank body (and the PS server) is a
+        // coroutine task; task index == fabric rank
+        let mut bodies: Vec<Box<dyn FnOnce() -> Option<(RunMetrics, Vec<f32>)> + Send>> =
+            Vec::with_capacity(p + 1);
+        for rank in 0..p {
+            let ep = fabric.endpoint(rank);
+            let backend = Arc::clone(&backend);
+            let train = Arc::clone(&train);
+            let val = Arc::clone(&val);
+            let cfg = cfg.clone();
+            bodies.push(Box::new(move || {
+                Some(drive_worker(rank, &ep, backend, &train, val, &cfg))
+            }));
+        }
+        if cfg.algo == Algo::ParamServer {
+            // the server is just one more cooperative task, on fabric
+            // rank p (extra server slots stay idle, as on the legacy
+            // path)
+            let ep = fabric.endpoint(p);
+            let sb = Arc::clone(&backend);
+            let scfg = cfg.clone();
+            bodies.push(Box::new(move || {
+                baselines::run_ps_server(&ep, &sb, p, &scfg);
+                None
+            }));
+        }
+        // surface panics/deadlocks the way the legacy join path does,
+        // keeping the scheduler's diagnostic message
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| sched.run(bodies)))
+            .map_err(|e| {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "worker panicked".to_string());
+                anyhow::anyhow!("{msg}")
+            })?
+    } else {
+        // legacy thread-per-rank oracle: named, small-stack threads —
+        // rank bodies keep model state on the heap, so
+        // `sched::RANK_STACK_BYTES` replaces the 8 MiB default that
+        // made p = 1024 cost 8 GiB of stack address space
+        let mut handles = Vec::new();
+        for rank in 0..p {
+            let ep = fabric.endpoint(rank);
+            let backend = Arc::clone(&backend);
+            let train = Arc::clone(&train);
+            let val = Arc::clone(&val);
+            let cfg = cfg.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("rank-{rank}"))
+                    .stack_size(crate::sched::RANK_STACK_BYTES)
+                    .spawn(move || drive_worker(rank, &ep, backend, &train, val, &cfg))
+                    .expect("spawning rank thread"),
+            );
+        }
+        if cfg.algo == Algo::ParamServer {
+            // dedicate this thread to the (first) server; extra servers
+            // are future work — the paper's critique targets the
+            // 1-server case
+            let ep = fabric.endpoint(p);
+            let sb = Arc::clone(&backend);
+            baselines::run_ps_server(&ep, &sb, p, cfg);
+        }
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .map(Some)
+                    .map_err(|_| anyhow::anyhow!("worker panicked"))
+            })
+            .collect::<Result<Vec<_>>>()?
+    };
 
     let mut per_rank = Vec::new();
     let mut final_params = Vec::new();
-    for h in handles {
-        let (m, params) = h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+    for (m, params) in outcomes.into_iter().flatten() {
         per_rank.push(m);
         final_params.push(params);
     }
@@ -574,16 +649,24 @@ pub fn run_tcp_loopback(cfg: &RunConfig, backend: Backend) -> Result<RunResult> 
         let cfg = cfg.clone();
         let backend = Arc::clone(&backend);
         let boxes = groups.map(|g| Arc::clone(&shared[g.group_of(rank)]));
-        handles.push(std::thread::spawn(move || -> Result<RankOutcome> {
-            let tcp = b
-                .establish(rank, &peers, cfg.cost_model(), Duration::from_secs(60))
-                .with_context(|| format!("rank {rank}: establishing tcp mesh"))?;
-            let link: Arc<dyn Link> = match (groups, boxes) {
-                (Some(g), Some(boxes)) => Arc::new(HybridLink::new(rank, g, boxes, tcp)),
-                _ => tcp,
-            };
-            run_rank_with_link(&cfg, backend, rank, link)
-        }));
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("rank-{rank}"))
+                .stack_size(crate::sched::RANK_STACK_BYTES)
+                .spawn(move || -> Result<RankOutcome> {
+                    let tcp = b
+                        .establish(rank, &peers, cfg.cost_model(), Duration::from_secs(60))
+                        .with_context(|| format!("rank {rank}: establishing tcp mesh"))?;
+                    let link: Arc<dyn Link> = match (groups, boxes) {
+                        (Some(g), Some(boxes)) => {
+                            Arc::new(HybridLink::new(rank, g, boxes, tcp))
+                        }
+                        _ => tcp,
+                    };
+                    run_rank_with_link(&cfg, backend, rank, link)
+                })
+                .expect("spawning rank thread"),
+        );
     }
     // join EVERY rank before surfacing an error: returning on the first
     // failure would leak still-running rank threads (sockets, io

@@ -42,9 +42,16 @@ use std::sync::Mutex;
 /// Scenario executor: a work-stealing pool of host threads over a
 /// [`Grid`]'s scenarios, with optional on-disk result caching.
 pub struct Engine {
-    /// Host worker threads.  Each *scenario* additionally spawns one
-    /// thread per rank (the trainer's threads-as-ranks model), so for
-    /// large-p grids a few engine threads saturate the host.
+    /// Host worker threads (`--sweep-threads`): how many *scenarios*
+    /// execute concurrently.  Rank-level parallelism inside each
+    /// scenario is governed separately: virtual-clock scenarios run
+    /// their rank bodies as coroutines on a bounded rank scheduler
+    /// (`--sim-threads`, [`crate::sched`]), and all schedulers in the
+    /// process draw their workers from **one global execution budget**
+    /// of `available_parallelism` permits — so `sweep_threads ×
+    /// sim_threads` (let alone `sweep_threads × p`) can never
+    /// oversubscribe the host.  Engine threads holding no permit simply
+    /// wait; the budget model is documented in `docs/perf.md`.
     pub threads: usize,
     /// Cache directory (`None` disables on-disk caching).
     pub cache_dir: Option<PathBuf>,
@@ -63,8 +70,9 @@ impl Default for Engine {
 }
 
 /// Default engine parallelism: the host's logical CPUs, capped at 8 —
-/// scenarios themselves are multi-threaded (one thread per rank), so
-/// more engine threads than this oversubscribes without speedup.
+/// scenarios are themselves parallel (their rank schedulers compete for
+/// the shared execution budget), so more engine threads than this adds
+/// queueing without speedup.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())

@@ -55,6 +55,10 @@
 //!   epoch-numbered alive-set [`membership::View`]s with deterministic
 //!   transitions, survivor partner routing and the late-rank bootstrap
 //!   protocol (docs/fault-tolerance.md).
+//! * [`sched`] — the cooperative rank scheduler: virtual-clock rank
+//!   bodies as stackful coroutines multiplexed over `--sim-threads`
+//!   worker threads via the transport's park/wake seam, so p = 1024
+//!   scenarios stop costing 1024 OS threads (docs/perf.md).
 //! * [`metrics`], [`config`], [`util`] — supporting infrastructure
 //!   (the offline environment has no clap/serde/criterion/proptest, so
 //!   `util` carries small hand-rolled equivalents).
@@ -70,6 +74,7 @@ pub mod metrics;
 pub mod nativenet;
 pub mod pool;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod topology;
 pub mod transport;

@@ -100,6 +100,9 @@ fn print_usage() {
                   host groups (two-level gossip schedule)\n\
                   [--inter-period K]  inter-group exchange cadence\n\
                   [--cost-model flat|hier]  two-tier virtual costs\n\
+                  [--sim-threads N]  rank-scheduler workers for\n\
+                  virtual-clock runs (0 = cores; docs/perf.md)\n\
+                  [--legacy-ranks]  thread-per-rank oracle path\n\
          launch:  spawn one OS process per host group (default: per\n\
                   rank) on localhost over TCP and merge their metrics.\n\
                   Takes every train flag, plus --port-base P (default\n\
@@ -125,7 +128,9 @@ fn print_usage() {
                   period-jitter-1024 | codec-frontier-1024 |\n\
                   hier-frontier-1024.\n\
                   --sweep-threads N  host worker threads (N-thread and\n\
-                  1-thread sweeps are byte-identical)   --cache-dir DIR\n\
+                  1-thread sweeps are byte-identical; rank bodies\n\
+                  inside scenarios share one global core budget with\n\
+                  --sim-threads — docs/perf.md)   --cache-dir DIR\n\
                   content-hash result cache   --out-dir DIR --out-name S\n\
                   BENCH_<name>.json/.csv artifacts (default bench_out/\n\
                   sweep)   [--autotune-period]  pick the largest gossip\n\

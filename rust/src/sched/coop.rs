@@ -1,0 +1,555 @@
+//! The cooperative rank scheduler (docs/perf.md, "rank scheduler"):
+//! p virtual-clock rank bodies run as stackful coroutines on a bounded
+//! pool of worker threads, so a p = 1024 scenario needs `--sim-threads`
+//! runnable OS threads instead of 1024 mostly-parked ones.
+//!
+//! The integration seam is the transport's park/wake pair: when a rank
+//! would block in `Link::park` on an empty mailbox, `SchedLink` calls
+//! [`SchedHandle::yield_park`] and the coroutine hands its worker to
+//! the next runnable rank; the sender-side `Link::enqueue` calls
+//! [`SchedHandle::wake`] to re-queue the destination.  Results are
+//! bit-identical to the legacy thread-per-rank path because nothing
+//! about the *data* flow changes — the same per-(src, tag) FIFO
+//! mailboxes carry the same virtually-stamped messages, only the
+//! blocking primitive differs (see the determinism argument in
+//! docs/perf.md).
+
+use super::ctx::{self, Context, Stack};
+use std::any::Any;
+use std::cell::{Cell, UnsafeCell};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Lifecycle of one rank task.  Transitions happen only under the
+/// scheduler's shared lock.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum State {
+    /// In the run queue, waiting for a worker.
+    Runnable,
+    /// Claimed by a worker: executing, or about to be.
+    Running,
+    /// Yielded on an empty mailbox; re-queued by the next `wake`.
+    Parked,
+    Finished,
+}
+
+/// Why a coroutine handed control back to its worker.
+enum Reason {
+    /// `yield_park`.  Timed parks are re-queued immediately — no
+    /// guaranteed waker exists for a timeout, and an early return is a
+    /// legal spurious wake (mailbox callers re-poll in a loop) while
+    /// actually parking could sleep forever.
+    Yielded { timed: bool },
+    /// The body returned (payload = the panic it ended with, if any).
+    Finished(Option<Box<dyn Any + Send>>),
+}
+
+struct Shared {
+    state: Vec<State>,
+    /// A `wake` arrived while the task was Running: it may already
+    /// have passed its final mailbox poll of that slice, so re-queue
+    /// it once instead of parking it.  This is the lost-wakeup guard —
+    /// one spurious re-poll is legal, a missed message is a deadlock.
+    notified: Vec<bool>,
+    queue: VecDeque<usize>,
+    /// Tasks currently claimed by workers (Running state count).
+    running: usize,
+    finished: usize,
+    /// First panic payload out of any task; re-raised by `run`.
+    panic: Option<Box<dyn Any + Send>>,
+    /// Stop claiming new work; workers drain and exit.
+    aborting: bool,
+}
+
+struct Inner {
+    shared: Mutex<Shared>,
+    cv: Condvar,
+}
+
+/// One coroutine: its saved context, its guard-paged stack, and (until
+/// first entry) its body.
+struct Task {
+    ctx: Box<Context>,
+    stack: Stack,
+    body: Option<Box<dyn FnOnce() + Send>>,
+    started: bool,
+}
+
+/// Interior-mutable task slot, shared by the worker threads.
+///
+/// Safety: the state machine in [`Shared`] guarantees at most one
+/// thread touches a task's coroutine state at a time — a task is only
+/// accessed by the worker that claimed it (claim and publish both
+/// happen under the shared lock, and the context is fully saved by
+/// `swapcontext` before the publish that lets another worker claim
+/// it).
+struct TaskSlot(UnsafeCell<Task>);
+
+unsafe impl Sync for TaskSlot {}
+
+/// Per-worker block: the worker thread's saved continuation plus what
+/// a coroutine needs to find its way back.  A raw pointer to this is
+/// published in `CURRENT` while a task runs on the thread.
+struct WorkerCtx {
+    /// Identity of the owning scheduler — `yield_park` must only
+    /// capture parks of *this* scheduler's fabric (concurrent sweep
+    /// scenarios each run their own scheduler over their own fabric).
+    sched: *const Inner,
+    worker: Box<Context>,
+    tasks: *const TaskSlot,
+    current: usize,
+    reason: Option<Reason>,
+}
+
+thread_local! {
+    static CURRENT: Cell<*mut WorkerCtx> = const { Cell::new(std::ptr::null_mut()) };
+}
+
+/// Read the calling thread's worker block.  `#[inline(never)]`: a
+/// coroutine may be resumed on a different OS thread than the one it
+/// parked on, so the TLS address must be re-derived on every call and
+/// never cached across a `ctx::swap`.
+#[inline(never)]
+fn current_worker() -> *mut WorkerCtx {
+    CURRENT.with(|c| c.get())
+}
+
+/// Cloneable wake/yield handle, held by `SchedLink` on the fabric.
+#[derive(Clone)]
+pub struct SchedHandle(Arc<Inner>);
+
+impl SchedHandle {
+    /// Sender-side hook: a message for `rank` is now visible — make
+    /// the rank runnable.  Wake ordering is FIFO on the run queue;
+    /// wakes for ranks that are not tasks of the current run (e.g. the
+    /// idle extra PS-server fabric slots) are ignored.
+    pub fn wake(&self, rank: usize) {
+        let mut sh = self.0.shared.lock().unwrap();
+        if rank >= sh.state.len() {
+            return;
+        }
+        match sh.state[rank] {
+            State::Parked => {
+                sh.state[rank] = State::Runnable;
+                sh.queue.push_back(rank);
+                self.0.cv.notify_one();
+            }
+            // mid-slice (also covers a rank sending to itself): flag
+            // for one spurious re-queue so the wake can't be lost in
+            // the window before the park publishes
+            State::Running => sh.notified[rank] = true,
+            // already queued, or done: the message sits in its mailbox
+            State::Runnable | State::Finished => {}
+        }
+    }
+
+    /// Park-side hook: yield the calling coroutine back to its worker.
+    /// Returns `false` when the calling thread is not executing a task
+    /// of *this* scheduler — the caller should fall back to a blocking
+    /// link park — and `true` after the coroutine has yielded and been
+    /// resumed (the caller then re-polls its mailbox, exactly like a
+    /// condvar wakeup).
+    pub fn yield_park(&self, timed: bool) -> bool {
+        let w = current_worker();
+        if w.is_null() || !std::ptr::eq(unsafe { (*w).sched }, Arc::as_ptr(&self.0)) {
+            return false;
+        }
+        unsafe {
+            // Publish nothing yet: the Parked state only becomes
+            // visible after the worker's swap returns, i.e. after
+            // swapcontext has fully saved this continuation.  Flipping
+            // state first would let another worker resume an unsaved
+            // context.
+            (*w).reason = Some(Reason::Yielded { timed });
+            let task = (*(*w).tasks.add((*w).current)).0.get();
+            let from: *mut Context = &mut *(*task).ctx;
+            let to: *const Context = &*(*w).worker;
+            ctx::swap(from, to);
+        }
+        // Resumed — possibly on a different worker thread; nothing
+        // read before the swap (including `w`) may be touched again.
+        true
+    }
+}
+
+/// Bounded-pool coroutine scheduler for one in-process scenario.
+pub struct Scheduler {
+    inner: Arc<Inner>,
+    threads: usize,
+}
+
+impl Scheduler {
+    /// `threads == 0` means one worker per available core.
+    pub fn new(threads: usize) -> Scheduler {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map_or(2, |n| n.get())
+        } else {
+            threads
+        };
+        Scheduler {
+            inner: Arc::new(Inner {
+                shared: Mutex::new(Shared {
+                    state: Vec::new(),
+                    notified: Vec::new(),
+                    queue: VecDeque::new(),
+                    running: 0,
+                    finished: 0,
+                    panic: None,
+                    aborting: false,
+                }),
+                cv: Condvar::new(),
+            }),
+            threads,
+        }
+    }
+
+    pub fn handle(&self) -> SchedHandle {
+        SchedHandle(Arc::clone(&self.inner))
+    }
+
+    /// Run every body to completion as a coroutine (task index == rank)
+    /// and return their results in task order.  Panics in any body (or
+    /// a detected deadlock) are re-raised here after the pool drains.
+    pub fn run<R: Send + 'static>(
+        &self,
+        bodies: Vec<Box<dyn FnOnce() -> R + Send + 'static>>,
+    ) -> Vec<R> {
+        let n = bodies.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let slots: Arc<Vec<Mutex<Option<R>>>> =
+            Arc::new((0..n).map(|_| Mutex::new(None)).collect());
+        let tasks: Vec<TaskSlot> = bodies
+            .into_iter()
+            .enumerate()
+            .map(|(i, body)| {
+                let slots = Arc::clone(&slots);
+                TaskSlot(UnsafeCell::new(Task {
+                    ctx: Context::boxed(),
+                    stack: Stack::new(super::RANK_STACK_BYTES),
+                    body: Some(Box::new(move || {
+                        *slots[i].lock().unwrap() = Some(body());
+                    })),
+                    started: false,
+                }))
+            })
+            .collect();
+        {
+            let mut sh = self.inner.shared.lock().unwrap();
+            sh.state = vec![State::Runnable; n];
+            sh.notified = vec![false; n];
+            sh.queue = (0..n).collect();
+            sh.running = 0;
+            sh.finished = 0;
+            sh.panic = None;
+            sh.aborting = false;
+        }
+        let workers = self.threads.clamp(1, n);
+        std::thread::scope(|s| {
+            for w in 0..workers {
+                let inner = &self.inner;
+                let tasks = &tasks;
+                std::thread::Builder::new()
+                    .name(format!("sim-{w}"))
+                    .spawn_scoped(s, move || worker_loop(inner, tasks))
+                    .expect("spawning scheduler worker");
+            }
+        });
+        if let Some(p) = self.inner.shared.lock().unwrap().panic.take() {
+            resume_unwind(p);
+        }
+        // A clean finish means every body ran and dropped its result
+        // slot handle (the abort paths re-raise above, or panic out of
+        // the scope join), so ours is the only Arc left.
+        drop(tasks);
+        let slots = match Arc::try_unwrap(slots) {
+            Ok(v) => v,
+            Err(_) => unreachable!("workers joined cleanly; no slot refs remain"),
+        };
+        slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .unwrap()
+                    .expect("task finished without a result")
+            })
+            .collect()
+    }
+}
+
+fn worker_loop(inner: &Arc<Inner>, tasks: &[TaskSlot]) {
+    let mut wctx = Box::new(WorkerCtx {
+        sched: Arc::as_ptr(inner),
+        worker: Context::boxed(),
+        tasks: tasks.as_ptr(),
+        current: 0,
+        reason: None,
+    });
+    loop {
+        // -- claim ---------------------------------------------------
+        let claimed = {
+            let mut sh = inner.shared.lock().unwrap();
+            loop {
+                if sh.aborting || sh.finished == sh.state.len() {
+                    break None;
+                }
+                if let Some(i) = sh.queue.pop_front() {
+                    sh.state[i] = State::Running;
+                    sh.running += 1;
+                    break Some(i);
+                }
+                sh = inner.cv.wait(sh).unwrap();
+            }
+        };
+        let Some(i) = claimed else { return };
+        // -- execute one slice ---------------------------------------
+        // The global budget permit is taken with no locks held and
+        // released before re-locking: a worker must never wait for a
+        // permit while holding the shared lock (another worker may
+        // hold the last permit and need the lock to publish/release).
+        budget::acquire();
+        wctx.current = i;
+        CURRENT.with(|c| c.set(&mut *wctx as *mut WorkerCtx));
+        unsafe {
+            let task = tasks[i].0.get();
+            if !(*task).started {
+                (*task).started = true;
+                ctx::init(&mut *(*task).ctx, &(*task).stack, trampoline);
+            }
+            let from: *mut Context = &mut *wctx.worker;
+            let to: *const Context = &*(*task).ctx;
+            ctx::swap(from, to);
+        }
+        CURRENT.with(|c| c.set(std::ptr::null_mut()));
+        budget::release();
+        let reason = wctx.reason.take().expect("coroutine yielded no reason");
+        // -- publish -------------------------------------------------
+        let mut sh = inner.shared.lock().unwrap();
+        sh.running -= 1;
+        match reason {
+            Reason::Finished(payload) => {
+                sh.state[i] = State::Finished;
+                sh.finished += 1;
+                if let Some(p) = payload {
+                    if sh.panic.is_none() {
+                        sh.panic = Some(p);
+                    }
+                    sh.aborting = true;
+                }
+                if sh.finished == sh.state.len() || sh.aborting {
+                    inner.cv.notify_all();
+                }
+            }
+            Reason::Yielded { timed } => {
+                if timed || sh.notified[i] {
+                    sh.notified[i] = false;
+                    sh.state[i] = State::Runnable;
+                    sh.queue.push_back(i);
+                } else {
+                    sh.state[i] = State::Parked;
+                }
+            }
+        }
+        if let Some(msg) = deadlock_msg(&mut sh) {
+            inner.cv.notify_all();
+            drop(sh);
+            panic!("{msg}");
+        }
+    }
+}
+
+/// The virtual fabric is a closed system: every wake source is itself
+/// a task (sends happen inside rank slices), so an empty run queue
+/// with nothing running and tasks still unfinished means no progress
+/// is possible — fail with a diagnostic instead of hanging the run the
+/// way the legacy thread-per-rank path would.
+fn deadlock_msg(sh: &mut Shared) -> Option<String> {
+    if sh.aborting || sh.running > 0 || !sh.queue.is_empty() || sh.finished >= sh.state.len() {
+        return None;
+    }
+    sh.aborting = true;
+    let parked: Vec<usize> = sh
+        .state
+        .iter()
+        .enumerate()
+        .filter(|&(_, s)| *s == State::Parked)
+        .map(|(i, _)| i)
+        .take(16)
+        .collect();
+    Some(format!(
+        "rank scheduler deadlock: {} of {} tasks finished, none runnable; \
+         parked ranks (first 16): {:?}",
+        sh.finished,
+        sh.state.len(),
+        parked
+    ))
+}
+
+/// First instructions of every coroutine, on its own stack.  No
+/// arguments — the task is found through the worker block the resuming
+/// worker published in `CURRENT`.
+extern "C" fn trampoline() {
+    let body = unsafe {
+        let w = current_worker();
+        let task = (*(*w).tasks.add((*w).current)).0.get();
+        (*task).body.take().expect("task entered twice")
+    };
+    let payload = catch_unwind(AssertUnwindSafe(body)).err();
+    finish(payload)
+}
+
+/// Leave the coroutine for good: record the Finished reason and swap
+/// back to the worker.  A separate `#[inline(never)]` fn so the worker
+/// block is re-read *after* the body ran — the task may have parked
+/// and been resumed on a different OS thread since `trampoline`'s
+/// first read.
+#[inline(never)]
+fn finish(payload: Option<Box<dyn Any + Send>>) -> ! {
+    unsafe {
+        let w = current_worker();
+        (*w).reason = Some(Reason::Finished(payload));
+        let task = (*(*w).tasks.add((*w).current)).0.get();
+        let from: *mut Context = &mut *(*task).ctx;
+        let to: *const Context = &*(*w).worker;
+        ctx::swap(from, to);
+    }
+    unreachable!("finished coroutine resumed")
+}
+
+/// Process-global rank-execution budget (the `exp::Engine`
+/// oversubscription fix, docs/experiments.md).  Every worker holds a
+/// permit only while actually executing a task slice, so the number of
+/// rank bodies running at once across ALL concurrent scenarios —
+/// `--sweep-threads` engine workers × their schedulers — is bounded by
+/// the core count instead of `sweep_threads × sim_threads`.
+///
+/// Deadlock-free by construction: permits are never held while waiting
+/// for scheduler work or the shared lock, and every slice ends in a
+/// yield or finish that releases its permit.
+mod budget {
+    use std::sync::{Condvar, Mutex, OnceLock};
+
+    struct Pool {
+        free: Mutex<usize>,
+        cv: Condvar,
+    }
+
+    static POOL: OnceLock<Pool> = OnceLock::new();
+
+    fn pool() -> &'static Pool {
+        POOL.get_or_init(|| {
+            let cores = std::thread::available_parallelism().map_or(2, |n| n.get());
+            Pool {
+                free: Mutex::new(cores),
+                cv: Condvar::new(),
+            }
+        })
+    }
+
+    pub fn acquire() {
+        let p = pool();
+        let mut free = p.free.lock().unwrap();
+        while *free == 0 {
+            free = p.cv.wait(free).unwrap();
+        }
+        *free -= 1;
+    }
+
+    pub fn release() {
+        let p = pool();
+        *p.free.lock().unwrap() += 1;
+        p.cv.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_tasks_and_returns_results_in_order() {
+        let s = Scheduler::new(4);
+        let bodies: Vec<Box<dyn FnOnce() -> usize + Send>> =
+            (0..64).map(|i| Box::new(move || i * 2) as _).collect();
+        assert_eq!(s.run(bodies), (0..64).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn yield_and_wake_round_trip() {
+        let s = Scheduler::new(2);
+        let h = s.handle();
+        let slot = Arc::new(Mutex::new(None::<u64>));
+        let (hp, hc) = (h.clone(), h);
+        let (sp, sc) = (Arc::clone(&slot), slot);
+        let bodies: Vec<Box<dyn FnOnce() -> u64 + Send>> = vec![
+            Box::new(move || {
+                *sp.lock().unwrap() = Some(41);
+                hp.wake(1);
+                0
+            }),
+            Box::new(move || loop {
+                if let Some(v) = sc.lock().unwrap().take() {
+                    return v + 1;
+                }
+                assert!(hc.yield_park(false));
+            }),
+        ];
+        assert_eq!(s.run(bodies), vec![0, 42]);
+    }
+
+    #[test]
+    fn timed_yield_is_requeued_without_a_waker() {
+        let s = Scheduler::new(1);
+        let h = s.handle();
+        let bodies: Vec<Box<dyn FnOnce() -> u32 + Send>> = vec![Box::new(move || {
+            for _ in 0..3 {
+                assert!(h.yield_park(true));
+            }
+            7
+        })];
+        assert_eq!(s.run(bodies), vec![7]);
+    }
+
+    #[test]
+    fn self_wake_before_park_is_not_lost() {
+        let s = Scheduler::new(1);
+        let h = s.handle();
+        let bodies: Vec<Box<dyn FnOnce() -> u32 + Send>> = vec![Box::new(move || {
+            // wake lands while Running: must convert the next untimed
+            // yield into a re-queue instead of a forever-park
+            h.wake(0);
+            assert!(h.yield_park(false));
+            1
+        })];
+        assert_eq!(s.run(bodies), vec![1]);
+    }
+
+    #[test]
+    fn yield_outside_a_task_falls_through() {
+        let s = Scheduler::new(1);
+        assert!(!s.handle().yield_park(false));
+    }
+
+    #[test]
+    #[should_panic(expected = "rank scheduler deadlock")]
+    fn deadlock_is_detected_and_reported() {
+        let s = Scheduler::new(2);
+        let h = s.handle();
+        let bodies: Vec<Box<dyn FnOnce() + Send>> = vec![Box::new(move || loop {
+            h.yield_park(false);
+        })];
+        s.run(bodies);
+    }
+
+    #[test]
+    fn task_panics_propagate_with_payload() {
+        let s = Scheduler::new(2);
+        let bodies: Vec<Box<dyn FnOnce() + Send>> =
+            vec![Box::new(|| panic!("boom in task")), Box::new(|| {})];
+        let err = catch_unwind(AssertUnwindSafe(|| s.run(bodies))).unwrap_err();
+        let msg = err.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert!(msg.contains("boom in task"), "payload: {msg:?}");
+    }
+}

@@ -1,0 +1,170 @@
+//! Stackful coroutine contexts for the cooperative rank scheduler:
+//! glibc `ucontext` (`getcontext`/`makecontext`/`swapcontext`) plus
+//! guard-paged `mmap` stacks.  Linux/glibc on x86_64/aarch64 only —
+//! `super::supported()` gates every caller, and other targets compile
+//! the thread-per-task fallback (`super::threads`) instead.
+//!
+//! Why ucontext instead of hand-rolled assembly: the repo vendors no
+//! crates, and glibc's context switchers are ABI-stable, cover the
+//! FP/SIMD register state, and have carried coroutine runtimes for
+//! decades.  The price is a `rt_sigprocmask` syscall pair per switch
+//! (~100 ns), irrelevant next to the mailbox locking a park already
+//! pays.
+
+use std::ffi::c_void;
+use std::os::raw::c_int;
+
+// glibc's ucontext_t is ~968 bytes on x86_64 and ~4.5 KiB on aarch64;
+// the blob is opaque to us except for the header fields written in
+// `init`, whose offsets are identical on both ABIs: uc_flags u64 @ 0,
+// uc_link ptr @ 8, then stack_t in glibc field order — ss_sp @ 16,
+// ss_flags @ 24, ss_size @ 32.
+const UCTX_BYTES: usize = 8192;
+const UC_LINK: usize = 8;
+const SS_SP: usize = 16;
+const SS_FLAGS: usize = 24;
+const SS_SIZE: usize = 32;
+
+/// One saved execution context (an opaque, oversized `ucontext_t`).
+#[repr(C, align(16))]
+pub struct Context {
+    bytes: [u8; UCTX_BYTES],
+}
+
+impl Context {
+    /// Heap-allocated so its address stays stable across moves of the
+    /// owning task struct (swapcontext keeps raw pointers into it).
+    pub fn boxed() -> Box<Context> {
+        Box::new(Context {
+            bytes: [0; UCTX_BYTES],
+        })
+    }
+}
+
+extern "C" {
+    fn getcontext(ucp: *mut c_void) -> c_int;
+    fn swapcontext(oucp: *mut c_void, ucp: *const c_void) -> c_int;
+    fn makecontext(ucp: *mut c_void, func: extern "C" fn(), argc: c_int, ...);
+    fn mmap(
+        addr: *mut c_void,
+        len: usize,
+        prot: c_int,
+        flags: c_int,
+        fd: c_int,
+        offset: i64,
+    ) -> *mut c_void;
+    fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    fn mprotect(addr: *mut c_void, len: usize, prot: c_int) -> c_int;
+    fn sysconf(name: c_int) -> i64;
+}
+
+const PROT_NONE: c_int = 0;
+const PROT_READ: c_int = 1;
+const PROT_WRITE: c_int = 2;
+const MAP_PRIVATE: c_int = 0x02;
+const MAP_ANONYMOUS: c_int = 0x20;
+const SC_PAGESIZE: c_int = 30;
+
+fn page_size() -> usize {
+    // 4 KiB on x86_64, but aarch64 kernels ship 4/16/64 KiB — ask,
+    // don't assume, or the guard page math below lands mid-page
+    let n = unsafe { sysconf(SC_PAGESIZE) };
+    if n > 0 {
+        n as usize
+    } else {
+        4096
+    }
+}
+
+/// A guard-paged coroutine stack: `size` usable bytes above one
+/// `PROT_NONE` page, so overflow faults loudly instead of silently
+/// corrupting the heap.  Pages are lazily committed by the kernel —
+/// 1024 parked ranks cost virtual address space, not resident memory.
+pub struct Stack {
+    base: *mut u8,
+    len: usize,
+    guard: usize,
+}
+
+// The base pointer is uniquely owned by this struct (mmap'd here,
+// munmap'd in Drop); tasks migrate between worker threads.
+unsafe impl Send for Stack {}
+
+impl Stack {
+    pub fn new(size: usize) -> Stack {
+        let guard = page_size();
+        let size = size.div_ceil(guard) * guard;
+        let len = guard + size;
+        let p = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ | PROT_WRITE,
+                MAP_PRIVATE | MAP_ANONYMOUS,
+                -1,
+                0,
+            )
+        };
+        // MAP_FAILED is -1, not null
+        assert!(
+            !p.is_null() && p as isize != -1,
+            "mmap of a {len}-byte coroutine stack failed"
+        );
+        let rc = unsafe { mprotect(p, guard, PROT_NONE) };
+        assert_eq!(rc, 0, "mprotect on the coroutine stack guard page failed");
+        Stack {
+            base: p as *mut u8,
+            len,
+            guard,
+        }
+    }
+
+    fn sp(&self) -> *mut c_void {
+        unsafe { self.base.add(self.guard) as *mut c_void }
+    }
+
+    fn usable(&self) -> usize {
+        self.len - self.guard
+    }
+}
+
+impl Drop for Stack {
+    fn drop(&mut self) {
+        unsafe { munmap(self.base as *mut c_void, self.len) };
+    }
+}
+
+/// Prepare `ctx` so the first [`swap`] into it enters `entry` on
+/// `stack`.  `entry` takes no arguments (makecontext's variadic args
+/// are `int`-sized — not pointer-safe on LP64): it locates its task
+/// through the scheduler's thread-local worker block instead.  It must
+/// never return — `uc_link` is null, so returning would abort the
+/// process; the scheduler's trampoline always swaps out with a
+/// `Finished` reason instead.
+pub fn init(ctx: &mut Context, stack: &Stack, entry: extern "C" fn()) {
+    let p = ctx as *mut Context as *mut u8;
+    unsafe {
+        let rc = getcontext(p as *mut c_void);
+        assert_eq!(rc, 0, "getcontext failed");
+        *(p.add(UC_LINK) as *mut *mut c_void) = std::ptr::null_mut();
+        *(p.add(SS_SP) as *mut *mut c_void) = stack.sp();
+        *(p.add(SS_FLAGS) as *mut c_int) = 0;
+        *(p.add(SS_SIZE) as *mut usize) = stack.usable();
+        makecontext(p as *mut c_void, entry, 0);
+    }
+}
+
+/// Save the current continuation into `from` and resume `to`.  Returns
+/// when something later swaps back into `from` — possibly on a
+/// *different OS thread*, so callers must not cache thread-local
+/// addresses across this call (see the `#[inline(never)]` accessors in
+/// `super::coop`).
+///
+/// # Safety
+/// `from` and `to` must point to live, distinct contexts; `to` must
+/// hold a continuation from [`init`] or a previous save; nothing else
+/// may resume either context concurrently.
+pub unsafe fn swap(from: *mut Context, to: *const Context) {
+    let rc = swapcontext(from as *mut c_void, to as *const c_void);
+    debug_assert_eq!(rc, 0, "swapcontext failed");
+}

@@ -1,0 +1,71 @@
+//! Cooperative rank scheduler: run p-rank virtual-clock scenarios on a
+//! bounded worker pool instead of p OS threads.
+//!
+//! A p = 1024 in-process scenario used to cost 1024 spawned threads —
+//! almost all of them parked in mailbox condvars — multiplied again by
+//! `--sweep-threads` under the experiment engine.  This module turns
+//! each rank body into a stackful coroutine on a guard-paged 2 MiB
+//! stack and multiplexes all of them over `--sim-threads` workers
+//! (default: available cores): a rank that would block in `Link::park`
+//! yields its worker to the next runnable rank and is re-queued when a
+//! sender's `enqueue` wakes it (`transport::SchedLink` is the hook-up;
+//! docs/perf.md has the yield/wake/determinism write-up).
+//!
+//! Results are bit-identical to the legacy thread-per-rank path —
+//! retained behind `--legacy-ranks` as the differential-testing oracle
+//! (tests/scheduler.rs) — because only the blocking primitive changes,
+//! not the message flow.
+//!
+//! The real implementation (`coop` + `ctx`) needs glibc's ucontext
+//! family and so is gated to Linux/gnu on x86_64/aarch64; elsewhere a
+//! thread-per-task stub keeps the API compiling and [`supported`]
+//! steers the trainer back to the legacy path.
+
+#[cfg(all(
+    target_os = "linux",
+    target_env = "gnu",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+))]
+mod coop;
+#[cfg(all(
+    target_os = "linux",
+    target_env = "gnu",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+))]
+mod ctx;
+#[cfg(all(
+    target_os = "linux",
+    target_env = "gnu",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+))]
+pub use coop::{SchedHandle, Scheduler};
+
+#[cfg(not(all(
+    target_os = "linux",
+    target_env = "gnu",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+)))]
+mod threads;
+#[cfg(not(all(
+    target_os = "linux",
+    target_env = "gnu",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+)))]
+pub use threads::{SchedHandle, Scheduler};
+
+/// Stack budget per rank: the coroutine stacks here, and the legacy
+/// path's `thread::Builder::stack_size` (rank bodies keep model state
+/// on the heap, so 2 MiB replaces the 8 MiB thread default that made
+/// p = 1024 cost 8 GiB of stack address space).
+pub const RANK_STACK_BYTES: usize = 2 * 1024 * 1024;
+
+/// Whether the cooperative scheduler is available on this target.
+/// When false, `Scheduler::run` still works (thread-per-task stub) but
+/// offers no thread-count win, so the trainer uses the legacy path.
+pub fn supported() -> bool {
+    cfg!(all(
+        target_os = "linux",
+        target_env = "gnu",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    ))
+}

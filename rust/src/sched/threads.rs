@@ -1,0 +1,46 @@
+//! Thread-per-task fallback for targets without the glibc ucontext
+//! machinery (non-Linux, musl, uncommon arches).  The public scheduler
+//! API compiles everywhere; [`super::supported`] reports `false`, so
+//! the trainer keeps those targets on the legacy thread-per-rank path
+//! and these stubs exist only so callers that ignore `supported()`
+//! still execute correctly (one OS thread per task).
+
+#[derive(Clone)]
+pub struct SchedHandle;
+
+impl SchedHandle {
+    /// No cooperative tasks exist on this target; nothing to wake.
+    pub fn wake(&self, _rank: usize) {}
+
+    /// Never a scheduler task here — callers park on the inner link.
+    pub fn yield_park(&self, _timed: bool) -> bool {
+        false
+    }
+}
+
+pub struct Scheduler {
+    _threads: usize,
+}
+
+impl Scheduler {
+    pub fn new(threads: usize) -> Scheduler {
+        Scheduler { _threads: threads }
+    }
+
+    pub fn handle(&self) -> SchedHandle {
+        SchedHandle
+    }
+
+    /// Degenerate execution: every body on its own thread, like the
+    /// legacy path.
+    pub fn run<R: Send + 'static>(
+        &self,
+        bodies: Vec<Box<dyn FnOnce() -> R + Send + 'static>>,
+    ) -> Vec<R> {
+        let handles: Vec<_> = bodies.into_iter().map(std::thread::spawn).collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("task panicked"))
+            .collect()
+    }
+}

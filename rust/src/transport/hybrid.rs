@@ -21,7 +21,10 @@
 //! clock only, like any real-network link — hierarchical *virtual*-time
 //! runs use the in-process fabric with a
 //! [`HierCostModel`](super::simnet::HierCostModel) instead
-//! (docs/topology.md).
+//! (docs/topology.md).  Being wall-clock, hybrid runs always execute on
+//! the legacy thread-per-rank path — the cooperative rank scheduler
+//! (docs/perf.md) only takes over virtual-clock fabrics, where parks
+//! never sleep out real time.
 //!
 //! ## Accounting
 //!

@@ -376,7 +376,9 @@ impl RecvReq {
         (p.decode_pooled(&pool), sent_ns, at_ns)
     }
 
-    /// [`wait_raw`](Self::wait_raw) without the decode.
+    /// [`wait_raw`](Self::wait_raw) without the decode.  The untimed
+    /// `park` doubles as the rank scheduler's yield point when the link
+    /// is a [`SchedLink`](super::SchedLink).
     pub fn wait_raw_payload(mut self) -> (Payload, u64, u64) {
         loop {
             if let Some(hit) = self.test_raw_payload() {
@@ -445,6 +447,13 @@ impl RecvReq {
     /// Virtual mode: block (atomic park, no timeout) only until the
     /// payload is queued, then jump this rank's clock to the arrival
     /// instant; the exposed wait is computed, never measured.
+    ///
+    /// The `park` below is the cooperative yield seam: when the fabric
+    /// link is wrapped in a [`SchedLink`](super::SchedLink), parking
+    /// suspends this rank's coroutine and releases its worker thread
+    /// instead of blocking on the condvar (see `docs/perf.md`, "rank
+    /// scheduler").  The loop shape is unchanged either way — a wake
+    /// re-polls `pop`, so spurious wakes are harmless.
     fn wait_virtual(self) -> Payload {
         let link = &self.fabric.link;
         loop {

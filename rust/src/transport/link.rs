@@ -276,6 +276,84 @@ impl Link for InprocLink {
     }
 }
 
+/// Scheduler-integrated link: the outermost wrapper on a cooperative
+/// virtual-clock fabric (docs/perf.md, "rank scheduler").  Two hooks:
+///
+/// * [`enqueue`](Link::enqueue) delivers on the inner link, then tells
+///   the scheduler the destination rank may be runnable — the
+///   sender-side wake that replaces "p threads parked in mailbox
+///   condvars".
+/// * [`park`](Link::park) yields the calling rank's coroutine back to
+///   its worker instead of blocking the OS thread.  Callers that are
+///   not tasks of this scheduler (the legacy path, another scenario's
+///   fabric, a raw test thread) fall through to the inner link's
+///   blocking park, so mixed use stays correct.
+///
+/// Wrapping order matters: `SchedLink` sits *outside*
+/// [`FaultyLink`](super::FaultyLink), so a frame the fault plan drops
+/// still wakes its destination — a harmless spurious wake (parked
+/// consumers always re-poll) — and the no-lost-wakeup argument only
+/// has to cover messages the inner link really delivers.
+pub struct SchedLink {
+    inner: Arc<dyn Link>,
+    sched: crate::sched::SchedHandle,
+}
+
+impl SchedLink {
+    pub fn new(inner: Arc<dyn Link>, sched: crate::sched::SchedHandle) -> SchedLink {
+        SchedLink { inner, sched }
+    }
+}
+
+impl Link for SchedLink {
+    fn size(&self) -> usize {
+        self.inner.size()
+    }
+
+    fn enqueue(&self, src: usize, dst: usize, tag: Tag, stamp: Stamp, data: Payload) {
+        self.inner.enqueue(src, dst, tag, stamp, data);
+        // wake strictly after the message is visible: waking first
+        // would let the rank poll, miss, and park again pre-delivery
+        self.sched.wake(dst);
+    }
+
+    fn peek(&self, rank: usize, key: Key) -> Option<Stamp> {
+        self.inner.peek(rank, key)
+    }
+
+    fn pop(&self, rank: usize, key: Key) -> Option<(Stamp, Payload)> {
+        self.inner.pop(rank, key)
+    }
+
+    fn park(&self, rank: usize, key: Key, timeout: Option<Duration>) {
+        // a timed park becomes a yield-once (re-queued without a
+        // waker); an untimed park stays parked until a wake
+        if !self.sched.yield_park(timeout.is_some()) {
+            self.inner.park(rank, key, timeout);
+        }
+    }
+
+    fn in_flight(&self) -> usize {
+        self.inner.in_flight()
+    }
+
+    fn in_flight_bytes(&self) -> usize {
+        self.inner.in_flight_bytes()
+    }
+
+    fn supports_virtual(&self) -> bool {
+        self.inner.supports_virtual()
+    }
+
+    fn quiesce(&self, rank: usize, timeout: Option<Duration>) -> Result<(), QuiesceError> {
+        self.inner.quiesce(rank, timeout)
+    }
+
+    fn attach_pool(&self, pool: &Arc<BufferPool>) {
+        self.inner.attach_pool(pool)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -71,7 +71,7 @@ pub use clock::{Clock, ClockMode, TimeMark};
 pub use fault::FaultyLink;
 pub use hybrid::HybridLink;
 pub use inproc::{Counters, Endpoint, Fabric, RecvReq, SendReq};
-pub use link::{InprocLink, Link, QuiesceError, Stamp};
+pub use link::{InprocLink, Link, QuiesceError, SchedLink, Stamp};
 pub use simnet::{CostModel, GroupMap, HierCostModel};
 pub use tcp::{TcpLink, TcpLinkBuilder};
 

@@ -1,0 +1,133 @@
+//! Differential tests for the cooperative rank scheduler (docs/perf.md,
+//! "rank scheduler"): scheduled runs must be **bit-identical** to the
+//! legacy thread-per-rank oracle (`--legacy-ranks`) across algorithms,
+//! schedules and fault plans; results must not depend on the worker
+//! count (`--sim-threads`); and every scheduled run must drain the
+//! fabric clean.
+//!
+//! "Bit-identical" is asserted on the canonical sweep-artifact string —
+//! [`ScenarioReport::to_json`] — which covers `param_hash`, every
+//! virtual-time metric (step time, efficiency, overlap), and the
+//! ledger/drain gauges.
+
+use gossipgrad::config::{Algo, CostModelKind, RunConfig};
+use gossipgrad::coordinator;
+use gossipgrad::exp::ScenarioReport;
+use gossipgrad::sim::Workload;
+
+/// Small virtual-clock scenario: p = 8, layer table from LeNet3, slow
+/// wire so communication (and therefore scheduling) actually matters.
+fn base(algo: Algo) -> RunConfig {
+    let mut cfg = RunConfig {
+        model: "mlp-small".into(),
+        algo,
+        ranks: 8,
+        steps: 6,
+        use_artifacts: false,
+        rows_per_rank: 32,
+        ..Default::default()
+    };
+    cfg.virtualize(&Workload::lenet3(4.0), 200e-6, 1.0 / 0.5e9);
+    cfg
+}
+
+/// Canonical deterministic serialization of a run (the same string the
+/// sweep artifacts are built from).
+fn canon(cfg: &RunConfig) -> String {
+    let res = coordinator::run(cfg).expect("run");
+    ScenarioReport::from_run(cfg, &res).to_json().to_string()
+}
+
+/// Scheduled (bounded pool, 4 workers) vs legacy (thread-per-rank) —
+/// the full reports must be byte-equal.
+fn assert_parity(mut cfg: RunConfig) {
+    cfg.legacy_ranks = true;
+    let legacy = canon(&cfg);
+    cfg.legacy_ranks = false;
+    cfg.sim_threads = 4;
+    let sched = canon(&cfg);
+    assert_eq!(sched, legacy, "scheduler diverged from thread-per-rank oracle");
+}
+
+#[test]
+fn gossip_monolithic_matches_legacy() {
+    assert_parity(base(Algo::Gossip));
+}
+
+#[test]
+fn gossip_layerwise_sync_mix_matches_legacy() {
+    let mut c = base(Algo::Gossip);
+    c.layerwise = true;
+    c.sync_mix = true;
+    assert_parity(c);
+}
+
+#[test]
+fn agd_layerwise_comm_thread_matches_legacy() {
+    let mut c = base(Algo::Agd);
+    c.layerwise = true;
+    c.comm_thread = true;
+    assert_parity(c);
+}
+
+#[test]
+fn periodic_agd_matches_legacy() {
+    assert_parity(base(Algo::PeriodicAgd));
+}
+
+#[test]
+fn param_server_layerwise_matches_legacy() {
+    let mut c = base(Algo::ParamServer);
+    c.layerwise = true;
+    assert_parity(c);
+}
+
+#[test]
+fn gossip_kill_fault_plan_matches_legacy() {
+    let mut c = base(Algo::Gossip);
+    c.fault_plan.kills = vec![(1, 3)];
+    assert_parity(c);
+}
+
+#[test]
+fn gossip_drop_dup_chaos_matches_legacy() {
+    let mut c = base(Algo::Gossip);
+    c.fault_plan.drop_frac = 0.05;
+    c.fault_plan.dup_frac = 0.05;
+    c.fault_plan.seed = 11;
+    assert_parity(c);
+}
+
+#[test]
+fn gossip_hierarchical_fabric_matches_legacy() {
+    let mut c = base(Algo::Gossip);
+    c.group_size = 4;
+    c.inter_period = 2;
+    c.cost_model = CostModelKind::Hier;
+    assert_parity(c);
+}
+
+#[test]
+fn worker_count_does_not_change_results() {
+    let mut c = base(Algo::Gossip);
+    c.layerwise = true;
+    c.sim_threads = 1;
+    let one = canon(&c);
+    c.sim_threads = 4;
+    let four = canon(&c);
+    c.sim_threads = 0; // default: available cores
+    let cores = canon(&c);
+    assert_eq!(one, four, "1-worker vs 4-worker runs diverged");
+    assert_eq!(four, cores, "4-worker vs all-cores runs diverged");
+}
+
+#[test]
+fn scheduled_runs_drain_the_fabric() {
+    for algo in [Algo::Gossip, Algo::Agd, Algo::ParamServer] {
+        let mut c = base(algo);
+        c.sim_threads = 2;
+        let res = coordinator::run(&c).expect("run");
+        assert_eq!(res.in_flight_msgs, 0, "{}: leaked messages", algo.name());
+        assert_eq!(res.in_flight_bytes, 0, "{}: leaked bytes", algo.name());
+    }
+}

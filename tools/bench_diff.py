@@ -10,6 +10,9 @@ Gating policy (docs/perf.md):
 * ``allocs``  — hard gate, lower is better.  A baseline of 0 means the
   zero-allocation steady-state invariant: ANY current allocation fails.
   A nonzero baseline fails when current exceeds baseline * (1 + threshold).
+* ``threads`` — hard gate, lower is better (same rule): peak OS thread
+  count of the rank scheduler's bounded pool (BENCH_sweep_scale.json) —
+  a regression here means thread-per-rank execution crept back in.
 * ``gbs``     — hard gate, higher is better.  Fails when current drops
   below baseline * (1 - threshold).
 * every other metric (``median_secs``, ...) — advisory only: printed,
@@ -28,7 +31,7 @@ import argparse
 import json
 import sys
 
-HARD_LOWER_IS_BETTER = ("allocs",)
+HARD_LOWER_IS_BETTER = ("allocs", "threads")
 HARD_HIGHER_IS_BETTER = ("gbs",)
 
 
